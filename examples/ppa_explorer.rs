@@ -1,0 +1,118 @@
+//! PPA exploration: the paper's scalability claim, quantified.
+//!
+//! Sweeps precision, LUT grouping, pipeline depth and cell library;
+//! prints the accuracy-vs-cost Pareto the "easily tuned for different
+//! accuracy and precision requirements" abstract sentence promises.
+//!
+//! ```bash
+//! cargo run --release --example ppa_explorer
+//! ```
+
+use tanh_vf::analysis::exhaustive_error;
+use tanh_vf::gates::CellClass;
+use tanh_vf::synth::ppa::ppa_for;
+use tanh_vf::tanh::{Subtractor, TanhConfig, TanhUnit};
+use tanh_vf::util::table::{sci, Table};
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    // --- sweep 1: precision scaling -------------------------------------
+    println!("== precision scaling (g=4, shuffle, NR3, SVT 2-stage) ==\n");
+    let mut t = Table::new(&[
+        "format", "max err", "lsb", "area um2", "fmax MHz", "levels",
+    ]);
+    for (ii, if_, of, lb, mb, g) in [
+        (2u32, 4u32, 6u32, 9u32, 8u32, 3u32),
+        (3, 5, 7, 10, 9, 3),
+        (3, 7, 9, 12, 11, 3),
+        (3, 9, 11, 14, 12, 4),
+        (3, 12, 15, 18, 16, 4),
+        (4, 13, 17, 20, 18, 4),
+    ] {
+        let cfg = TanhConfig {
+            in_int: ii, in_frac: if_, out_frac: of, lut_bits: lb,
+            mult_bits: mb, lut_group: g, shuffle: true, nr_stages: 3,
+            subtractor: Subtractor::Twos,
+        };
+        let unit = TanhUnit::new(cfg)?;
+        let e = exhaustive_error(&unit);
+        let r = ppa_for(&cfg, CellClass::Svt, 2);
+        t.row(&[
+            format!("s{ii}.{if_}->s.{of}"),
+            sci(e.max_abs),
+            format!("{:.2}", e.max_lsb(cfg.out_format())),
+            format!("{:.0}", r.area_um2),
+            format!("{:.0}", r.fmax_mhz),
+            format!("{}", r.logic_levels),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // --- sweep 2: LUT grouping (multiplier count vs ROM size) -----------
+    println!("== LUT grouping at s3.12 (paper §IV.B.3) ==\n");
+    let mut t = Table::new(&[
+        "group", "LUTs", "chain muls", "ROM bits", "max err", "area um2",
+    ]);
+    for g in 1..=5u32 {
+        let cfg = TanhConfig::s3_12().with_group(g);
+        let unit = TanhUnit::new(cfg)?;
+        let e = exhaustive_error(&unit);
+        let r = ppa_for(&cfg, CellClass::Svt, 2);
+        let rom_bits: u64 = cfg
+            .group_positions()
+            .iter()
+            .map(|p| (1u64 << p.len()) * (cfg.lut_bits as u64 + 1))
+            .sum();
+        t.row(&[
+            format!("{g}"),
+            format!("{}", cfg.num_groups()),
+            format!("{}", cfg.num_groups() - 1),
+            format!("{rom_bits}"),
+            sci(e.max_abs),
+            format!("{:.0}", r.area_um2),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // --- sweep 3: pipeline depth x library ------------------------------
+    println!("== pipeline depth x cell library at s3.12 ==\n");
+    let mut t = Table::new(&[
+        "stages", "SVT MHz", "SVT um2", "SVT uW", "LVT MHz", "LVT um2",
+        "LVT uW",
+    ]);
+    for stages in [1u32, 2, 3, 4, 5, 7, 10] {
+        let s = ppa_for(&TanhConfig::s3_12(), CellClass::Svt, stages);
+        let l = ppa_for(&TanhConfig::s3_12(), CellClass::Lvt, stages);
+        t.row(&[
+            format!("{stages}"),
+            format!("{:.0}", s.fmax_mhz),
+            format!("{:.0}", s.area_um2),
+            format!("{:.2}", s.leakage_uw),
+            format!("{:.0}", l.fmax_mhz),
+            format!("{:.0}", l.area_um2),
+            format!("{:.2}", l.leakage_uw),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // --- sweep 4: throughput per area (the deployment metric) -----------
+    println!("== throughput density (Gtanh/s per mm2, SVT) ==\n");
+    let mut t = Table::new(&["config", "stages", "Gtanh/s", "per mm2"]);
+    for (cfg, name) in [
+        (TanhConfig::s3_5(), "8-bit"),
+        (TanhConfig::s3_12(), "16-bit"),
+    ] {
+        for stages in [1u32, 7] {
+            let r = ppa_for(&cfg, CellClass::Svt, stages);
+            let gops = r.fmax_mhz / 1000.0; // one result per clock
+            let per_mm2 = gops / (r.area_um2 / 1e6);
+            t.row(&[
+                name.to_string(),
+                format!("{stages}"),
+                format!("{gops:.2}"),
+                format!("{per_mm2:.0}"),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    Ok(())
+}

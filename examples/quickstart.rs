@@ -1,0 +1,59 @@
+//! Quickstart: build a tanh unit, evaluate it, inspect accuracy.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use tanh_vf::analysis::{exhaustive_error, region_error, ulp_histogram};
+use tanh_vf::tanh::{TanhConfig, TanhUnit};
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    // 1. The paper's 16-bit operating point: s3.12 in, s.15 out.
+    let cfg = TanhConfig::s3_12();
+    let unit = TanhUnit::new(cfg)?;
+    println!("unit: {}\n", cfg.describe());
+
+    // 2. Evaluate some values through the float convenience API.
+    println!("{:>8} {:>12} {:>12} {:>10}", "x", "unit", "true", "err");
+    for i in -8..=8 {
+        let x = i as f64 * 0.5;
+        let y = unit.eval_f64(x);
+        println!(
+            "{x:>8.2} {y:>12.8} {:>12.8} {:>10.2e}",
+            x.tanh(),
+            (y - x.tanh()).abs()
+        );
+    }
+
+    // 3. Word-level API (what the hardware actually sees).
+    let words: Vec<i64> = vec![0, 1024, 4096, 8192, 22713, 32767];
+    let outs = unit.eval_batch(&words);
+    println!("\nword-level: {words:?} -> {outs:?}");
+
+    // 4. Exhaustive error over all 2^16 input words (Table II headline).
+    let stats = exhaustive_error(&unit);
+    println!(
+        "\nexhaustive max error: {:.3e} ({:.2} output lsb) at word {}",
+        stats.max_abs,
+        stats.max_lsb(cfg.out_format()),
+        stats.argmax
+    );
+
+    // 5. Error by region and ULP histogram.
+    let rep = region_error(&unit);
+    println!(
+        "region max error: pass {:.2e}  processing {:.2e}  saturation {:.2e}",
+        rep.pass.max_abs, rep.processing.max_abs, rep.saturation.max_abs
+    );
+    let unit8 = TanhUnit::new(TanhConfig::s3_5())?;
+    print!("8-bit ULP histogram:");
+    for (ulp, count) in ulp_histogram(&unit8, 3) {
+        print!("  {ulp} ulp: {count}");
+    }
+    println!();
+
+    // 6. Sigmoid comes free (same unit, 1-bit pre-shift).
+    println!("\nsigmoid(1.0) = {:.6} (true {:.6})",
+             unit.sigmoid_f64(1.0), 1.0 / (1.0 + (-1.0f64).exp()));
+    Ok(())
+}

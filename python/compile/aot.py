@@ -1,0 +1,258 @@
+"""AOT compile path: lower every L2 entry point to HLO text artifacts.
+
+Run once at build time (``make artifacts``); the rust runtime loads the
+text with ``HloModuleProto::from_text_file`` and compiles it on the PJRT
+CPU client. HLO *text* (not ``.serialize()``) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 rejects; the text parser reassigns ids and round-trips cleanly.
+
+Also emits:
+  * ``manifest.json``       — entry points, parameter shapes/dtypes, so the
+    rust runtime can validate its buffers before dispatch.
+  * ``golden_vectors.json`` — bit-exact input/output vectors from the numpy
+    oracle, replayed by rust integration tests against (a) the native
+    golden model, (b) the RTL simulator, and (c) the PJRT executable.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .kernels.config import CFG_8BIT, CFG_16BIT, TanhConfig
+from .kernels.ref import max_error, tanh_vf_reference
+from . import model as M
+
+jax.config.update("jax_enable_x64", True)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants is ESSENTIAL: the default printer elides any
+    # constant with more than 8 elements as `{...}`, which the xla 0.5.1
+    # text parser accepts silently and fills with garbage — the velocity
+    # factor LUTs (16 entries) would be destroyed.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _io_entry(name, shape, dtype):
+    return {"name": name, "shape": list(shape), "dtype": str(dtype)}
+
+
+def lower_tanh(cfg: TanhConfig, batch: int):
+    fn = lambda x: (M.tanh_batch(x, cfg, tile=min(256, batch)),)
+    lowered = jax.jit(fn).lower(_spec((batch,), jnp.int32))
+    return to_hlo_text(lowered), {
+        "inputs": [_io_entry("x", (batch,), "s32")],
+        "outputs": [_io_entry("y", (batch,), "s32")],
+        "config": dataclasses.asdict(cfg),
+    }
+
+
+def lower_mlp(cfg: TanhConfig):
+    p = M.mlp_param_spec()
+    fn = lambda x, *params: (M.mlp_forward(x, M.MlpParams(*params), cfg),)
+    x = _spec((M.MLP_BATCH, M.MLP_IN), jnp.float32)
+    lowered = jax.jit(fn).lower(x, *p)
+    ins = [_io_entry("x", x.shape, "f32")] + [
+        _io_entry(n, s.shape, "f32") for n, s in zip(p._fields, p)
+    ]
+    return to_hlo_text(lowered), {
+        "inputs": ins,
+        "outputs": [_io_entry("logits", (M.MLP_BATCH, M.MLP_OUT), "f32")],
+        "config": dataclasses.asdict(cfg),
+    }
+
+
+def lower_lstm_cell(cfg: TanhConfig):
+    p = M.lstm_param_spec()
+    fn = lambda x, h, c, wx, wh, b: M.lstm_cell(
+        x, h, c, M.LstmParams(wx, wh, b), cfg)
+    shapes = {
+        "x": (M.LSTM_BATCH, M.LSTM_IN),
+        "h": (M.LSTM_BATCH, M.LSTM_HIDDEN),
+        "c": (M.LSTM_BATCH, M.LSTM_HIDDEN),
+        "wx": p.wx.shape, "wh": p.wh.shape, "b": p.b.shape,
+    }
+    lowered = jax.jit(fn).lower(
+        *[_spec(s, jnp.float32) for s in shapes.values()])
+    return to_hlo_text(lowered), {
+        "inputs": [_io_entry(n, s, "f32") for n, s in shapes.items()],
+        "outputs": [
+            _io_entry("h_new", (M.LSTM_BATCH, M.LSTM_HIDDEN), "f32"),
+            _io_entry("c_new", (M.LSTM_BATCH, M.LSTM_HIDDEN), "f32"),
+        ],
+        "config": dataclasses.asdict(cfg),
+    }
+
+
+def lower_lstm_seq(cfg: TanhConfig):
+    p = M.lstm_param_spec()
+
+    def fn(xs, h0, c0, wx, wh, b):
+        h, c, hs = M.lstm_seq(xs, h0, c0, M.LstmParams(wx, wh, b), cfg)
+        return h, c, hs
+
+    shapes = {
+        "xs": (M.LSTM_T, M.LSTM_BATCH, M.LSTM_IN),
+        "h0": (M.LSTM_BATCH, M.LSTM_HIDDEN),
+        "c0": (M.LSTM_BATCH, M.LSTM_HIDDEN),
+        "wx": p.wx.shape, "wh": p.wh.shape, "b": p.b.shape,
+    }
+    lowered = jax.jit(fn).lower(
+        *[_spec(s, jnp.float32) for s in shapes.values()])
+    return to_hlo_text(lowered), {
+        "inputs": [_io_entry(n, s, "f32") for n, s in shapes.items()],
+        "outputs": [
+            _io_entry("h", (M.LSTM_BATCH, M.LSTM_HIDDEN), "f32"),
+            _io_entry("c", (M.LSTM_BATCH, M.LSTM_HIDDEN), "f32"),
+            _io_entry("hs", (M.LSTM_T, M.LSTM_BATCH, M.LSTM_HIDDEN), "f32"),
+        ],
+        "config": dataclasses.asdict(cfg),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Golden vectors
+# ---------------------------------------------------------------------------
+
+
+def tanh_edge_words(cfg: TanhConfig, n: int, seed: int = 1234) -> np.ndarray:
+    """Edge cases + deterministic random words, padded to n."""
+    half = 1 << cfg.mag_bits
+    edges = [0, 1, -1, 2, -2, half - 1, -half, -(half - 1),
+             cfg.sat_threshold, cfg.sat_threshold - 1, cfg.sat_threshold + 1,
+             -cfg.sat_threshold, -cfg.sat_threshold + 1]
+    edges += [1 << k for k in range(cfg.mag_bits)]
+    edges += [-(1 << k) for k in range(cfg.mag_bits)]
+    edges += [(1 << k) - 1 for k in range(1, cfg.mag_bits)]
+    rng = np.random.default_rng(seed)
+    rand = rng.integers(-half, half, size=max(0, n - len(edges)))
+    out = np.concatenate([np.asarray(edges, dtype=np.int64), rand])[:n]
+    return out.astype(np.int64)
+
+
+def golden(cfg: TanhConfig, n: int) -> dict:
+    x = tanh_edge_words(cfg, n)
+    y = tanh_vf_reference(x, cfg)
+    stats = max_error(cfg)
+    return {
+        "config": dataclasses.asdict(cfg),
+        "inputs": x.tolist(),
+        "outputs": y.tolist(),
+        "exhaustive_max_error": stats["max_error"],
+        "exhaustive_max_error_lsb": stats["max_error_lsb"],
+    }
+
+
+def golden_mlp(cfg: TanhConfig) -> dict:
+    rng = np.random.default_rng(7)
+    x = rng.normal(size=(M.MLP_BATCH, M.MLP_IN)).astype(np.float32)
+    p = M.MlpParams(
+        w1=(rng.normal(size=(M.MLP_IN, M.MLP_H1)) * 0.3).astype(np.float32),
+        b1=(rng.normal(size=(M.MLP_H1,)) * 0.1).astype(np.float32),
+        w2=(rng.normal(size=(M.MLP_H1, M.MLP_H2)) * 0.3).astype(np.float32),
+        b2=(rng.normal(size=(M.MLP_H2,)) * 0.1).astype(np.float32),
+        w3=(rng.normal(size=(M.MLP_H2, M.MLP_OUT)) * 0.3).astype(np.float32),
+        b3=(rng.normal(size=(M.MLP_OUT,)) * 0.1).astype(np.float32),
+    )
+    logits = np.asarray(M.mlp_forward(jnp.asarray(x), p, cfg))
+    return {
+        "x": x.ravel().tolist(),
+        "params": {n: np.asarray(v).ravel().tolist()
+                   for n, v in zip(p._fields, p)},
+        "logits": logits.ravel().tolist(),
+    }
+
+
+def golden_lstm(cfg: TanhConfig) -> dict:
+    rng = np.random.default_rng(11)
+    x = rng.normal(size=(M.LSTM_BATCH, M.LSTM_IN)).astype(np.float32)
+    h = (rng.normal(size=(M.LSTM_BATCH, M.LSTM_HIDDEN)) * 0.5).astype(np.float32)
+    c = (rng.normal(size=(M.LSTM_BATCH, M.LSTM_HIDDEN)) * 0.5).astype(np.float32)
+    p = M.LstmParams(
+        wx=(rng.normal(size=(M.LSTM_IN, 4 * M.LSTM_HIDDEN)) * 0.2).astype(np.float32),
+        wh=(rng.normal(size=(M.LSTM_HIDDEN, 4 * M.LSTM_HIDDEN)) * 0.2).astype(np.float32),
+        b=(rng.normal(size=(4 * M.LSTM_HIDDEN,)) * 0.1).astype(np.float32),
+    )
+    hn, cn = M.lstm_cell(jnp.asarray(x), jnp.asarray(h), jnp.asarray(c), p, cfg)
+    return {
+        "x": x.ravel().tolist(), "h": h.ravel().tolist(),
+        "c": c.ravel().tolist(),
+        "params": {n: np.asarray(v).ravel().tolist()
+                   for n, v in zip(p._fields, p)},
+        "h_new": np.asarray(hn).ravel().tolist(),
+        "c_new": np.asarray(cn).ravel().tolist(),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifacts directory (or a single .hlo.txt path, "
+                         "in which case its parent is used)")
+    args = ap.parse_args()
+    out_dir = args.out
+    if out_dir.endswith(".txt"):
+        out_dir = os.path.dirname(out_dir) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {"format": "hlo-text", "entries": {}}
+
+    jobs = {
+        "tanh_s3_12": lambda: lower_tanh(CFG_16BIT, M.TANH_BATCH),
+        "tanh_s3_5": lambda: lower_tanh(CFG_8BIT, M.TANH_BATCH),
+        "mlp_b32": lambda: lower_mlp(CFG_16BIT),
+        "lstm_cell_b16": lambda: lower_lstm_cell(CFG_16BIT),
+        "lstm_seq_b16": lambda: lower_lstm_seq(CFG_16BIT),
+    }
+    for name, job in jobs.items():
+        text, meta = job()
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as fh:
+            fh.write(text)
+        meta["file"] = f"{name}.hlo.txt"
+        manifest["entries"][name] = meta
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=1)
+
+    vectors = {
+        "tanh_s3_12": golden(CFG_16BIT, M.TANH_BATCH),
+        "tanh_s3_5": golden(CFG_8BIT, M.TANH_BATCH),
+        "tanh_s3_12_nr2_ones": golden(
+            dataclasses.replace(CFG_16BIT, nr_stages=2, subtractor="ones"),
+            M.TANH_BATCH),
+        "mlp_b32": golden_mlp(CFG_16BIT),
+        "lstm_cell_b16": golden_lstm(CFG_16BIT),
+    }
+    gv = os.path.join(out_dir, "golden_vectors.json")
+    with open(gv, "w") as fh:
+        json.dump(vectors, fh)
+    print(f"wrote {gv}")
+
+    # Compatibility with the Makefile's sentinel target.
+    sentinel = os.path.join(out_dir, "model.hlo.txt")
+    if not os.path.exists(sentinel):
+        with open(os.path.join(out_dir, "tanh_s3_12.hlo.txt")) as src, \
+                open(sentinel, "w") as dst:
+            dst.write(src.read())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,171 @@
+"""Bit-accurate configuration for the velocity-factor tanh datapath.
+
+This module is the *specification*: the Pallas kernel
+(`velocity_tanh.py`), the pure-jnp/numpy oracle (`ref.py`) and the rust
+golden model (`rust/src/tanh/`) all implement exactly the semantics
+defined here, bit for bit.
+
+Paper mapping (Chandra, "A Novel Method for Scalable VLSI Implementation
+of Hyperbolic Tangent Function"):
+
+  * velocity factor  f(a) = (1 - tanh a) / (1 + tanh a) = e^(-2a)   (eq. 9)
+  * tanh a           = (1 - f) / (1 + f)                            (eq. 10)
+  * f(a + b)         = f(a) * f(b)                                  (eq. 6)
+  * per-bit product  f(N * 2^-frac) = prod_k f(2^(k-frac))^(b_k)    (eq. 7)
+  * grouped LUTs store the product for each bit-combination          (Table I)
+  * bit-shuffled addressing mixes place values across groups         (IV.B.3)
+  * (1+f)/2 in (0.5, 1) feeds a Newton-Raphson reciprocal            (eq. 11)
+  * numerator 1-f via 2's complement or the cheaper 1's complement   (IV.B.4)
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+SUB_ONES = "ones"
+SUB_TWOS = "twos"
+
+
+@dataclass(frozen=True)
+class TanhConfig:
+    """Static parameters of one hardware instance of the tanh unit.
+
+    Fixed-point formats:
+      input  : signed s{in_int}.{in_frac}, width 1 + in_int + in_frac bits
+      output : signed s.{out_frac},        width 1 + out_frac bits
+      LUTs   : u0.{lut_bits} velocity factors (always in (0,1], eq. 9)
+      NR path: u·.{mult_bits} (multiplier fractional precision)
+    """
+
+    in_int: int = 3
+    in_frac: int = 12
+    out_frac: int = 15
+    lut_bits: int = 18
+    mult_bits: int = 16
+    lut_group: int = 4
+    shuffle: bool = True
+    nr_stages: int = 3  # 0 => reference float divider (Table II row 0)
+    subtractor: str = SUB_TWOS
+
+    def __post_init__(self) -> None:
+        if self.in_int < 0 or self.in_frac < 1 or self.out_frac < 1:
+            raise ValueError(f"invalid format: {self}")
+        if self.lut_bits < self.mult_bits - 1:
+            raise ValueError("lut_bits must be >= mult_bits - 1 "
+                             "(d = (1+f)/2 is floor-truncated from the LUT domain)")
+        if self.lut_group < 1:
+            raise ValueError("lut_group must be >= 1")
+        if self.nr_stages not in (0, 1, 2, 3, 4):
+            raise ValueError("nr_stages must be in {0..4}")
+        if self.subtractor not in (SUB_ONES, SUB_TWOS):
+            raise ValueError("subtractor must be 'ones' or 'twos'")
+
+    # ---- derived geometry -------------------------------------------------
+
+    @property
+    def mag_bits(self) -> int:
+        """Magnitude bits of the input (sign stripped)."""
+        return self.in_int + self.in_frac
+
+    @property
+    def in_width(self) -> int:
+        return 1 + self.mag_bits
+
+    @property
+    def out_width(self) -> int:
+        return 1 + self.out_frac
+
+    @property
+    def out_max(self) -> int:
+        """Largest representable output word: 1 - 2^-out_frac."""
+        return (1 << self.out_frac) - 1
+
+    @property
+    def num_groups(self) -> int:
+        return (self.mag_bits + self.lut_group - 1) // self.lut_group
+
+    @property
+    def sat_threshold(self) -> int:
+        """Smallest input magnitude word that saturates the output.
+
+        Beyond atanh(1 - 2^-out_frac) the true tanh differs from 1.0 by
+        less than the output lsb (paper §IV): emit out_max directly.
+        """
+        dom = math.atanh(1.0 - 2.0 ** (-self.out_frac))
+        return math.ceil(dom * (1 << self.in_frac))
+
+    # ---- LUT construction -------------------------------------------------
+
+    def group_positions(self) -> List[List[int]]:
+        """Bit positions (lsb=0) addressed by each LUT group.
+
+        shuffle=True deals the sorted positions round-robin so every group
+        mixes small and large place values (paper IV.B.3: LUT0 addressed by
+        {x15, x8, x7, x0} instead of {x3..x0}); shuffle=False packs them
+        consecutively (the "accentuated" precision-loss layout the paper
+        warns about).
+        """
+        n, g = self.mag_bits, self.num_groups
+        if self.shuffle:
+            groups = [[p for p in range(j, n, g)] for j in range(g)]
+        else:
+            groups = [list(range(j * self.lut_group,
+                                 min((j + 1) * self.lut_group, n)))
+                      for j in range(g)]
+        return groups
+
+    def lut_tables(self) -> List[List[int]]:
+        """Velocity-factor LUT contents, one table per group.
+
+        entry[mask] = round(2^L * prod_{j: mask_j=1} e^(-2 * 2^(p_j - in_frac)))
+
+        The product over the group's set bits is evaluated exactly (in
+        float) and rounded once — that is what a ROM stores (Table I).
+        A full-scale f == 1.0 (mask == 0) is stored as 2^L and relies on
+        the table width being lut_bits+1; hardware implements the 0-mask
+        bypass as "no multiply", which is numerically identical.
+        """
+        one = 1 << self.lut_bits
+        tables: List[List[int]] = []
+        for positions in self.group_positions():
+            size = 1 << len(positions)
+            table = []
+            for mask in range(size):
+                a = 0.0
+                for j, p in enumerate(positions):
+                    if (mask >> j) & 1:
+                        a += 2.0 ** (p - self.in_frac)
+                val = int(round(one * math.exp(-2.0 * a)))
+                table.append(min(val, one))
+            tables.append(table)
+        return tables
+
+    # ---- Newton-Raphson constants ------------------------------------
+
+    @property
+    def nr_seed_const(self) -> int:
+        """Seed constant for the linear NR seed x0 = 2.75 - 2d.
+
+        Kornerup & Muller's optimum is 48/17 - 32/17*d (x0 = 2.9142 - 2d
+        after scaling). Hardware instead uses 2.75 = 0b10.11 — a constant
+        with two set bits, so the whole seed is one 3-input add. The seed's
+        relative error is then largest near d = 0.5 (where tanh is large
+        and the error actually shows at the output) and squares per NR
+        stage: NR2 lands at ~2.6e-4 and NR3 at the multiplier-quantization
+        floor ~5e-5 — the exact NR2 vs NR3 profile of the paper's Table II.
+        """
+        return 11 << (self.mult_bits - 2)  # 2.75 * 2^M
+
+    def describe(self) -> str:
+        return (f"s{self.in_int}.{self.in_frac}->s.{self.out_frac} "
+                f"L={self.lut_bits} M={self.mult_bits} g={self.lut_group} "
+                f"{'shuf' if self.shuffle else 'seq'} nr={self.nr_stages} "
+                f"{self.subtractor}")
+
+
+# The paper's two headline operating points.
+CFG_16BIT = TanhConfig()  # s3.12 -> s.15 (Tables II, III)
+CFG_8BIT = TanhConfig(in_int=3, in_frac=5, out_frac=7,
+                      lut_bits=10, mult_bits=9, lut_group=3)  # Table IV

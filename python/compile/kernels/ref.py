@@ -1,0 +1,129 @@
+"""Pure-numpy/jnp oracles for the velocity-factor tanh kernel.
+
+Two references:
+
+  * ``tanh_float_quantized`` — the *mathematical* oracle: float64 tanh of the
+    dequantized input, rounded to the output format. The paper's Table II
+    "Max Error" is measured against this.
+  * ``tanh_vf_reference``   — the *bit-accurate* oracle: a straight-line
+    numpy int64 transcription of the datapath spec in ``config.py``. The
+    Pallas kernel (and the rust golden model) must match this value
+    exactly, word for word.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from .config import SUB_ONES, TanhConfig
+
+
+def quantize(x: np.ndarray, frac_bits: int, width: int) -> np.ndarray:
+    """Round float to a signed fixed-point word, saturating."""
+    lo = -(1 << (width - 1))
+    hi = (1 << (width - 1)) - 1
+    w = np.rint(np.asarray(x, dtype=np.float64) * (1 << frac_bits))
+    return np.clip(w, lo, hi).astype(np.int64)
+
+
+def dequantize(w: np.ndarray, frac_bits: int) -> np.ndarray:
+    return np.asarray(w, dtype=np.float64) / (1 << frac_bits)
+
+
+def tanh_float_quantized(x_word: np.ndarray, cfg: TanhConfig) -> np.ndarray:
+    """Mathematical oracle: float tanh -> output fixed-point word."""
+    x = dequantize(x_word, cfg.in_frac)
+    y = np.tanh(x)
+    return quantize(y, cfg.out_frac, cfg.out_width)
+
+
+def _round_mul(a: np.ndarray, b: np.ndarray, frac: int) -> np.ndarray:
+    """Fixed-point multiply with round-to-nearest (+half then truncate).
+
+    Both operands and the result carry ``frac`` fractional bits.
+    """
+    prod = a.astype(np.int64) * b.astype(np.int64)
+    return (prod + (1 << (frac - 1))) >> frac
+
+
+def newton_raphson_recip(d: np.ndarray, cfg: TanhConfig) -> np.ndarray:
+    """Reciprocal of d in [0.5, 1] (u1.M word) via NR, returning u1.M.
+
+    x0 = 2.9142 - 2d, then nr_stages of x <- x * (2 - d*x), every product
+    rounded to M fractional bits (the paper's fixed multiplier precision).
+    """
+    m = cfg.mult_bits
+    two = np.int64(2 << m)
+    x = np.int64(cfg.nr_seed_const) - (d.astype(np.int64) << 1)
+    for _ in range(cfg.nr_stages):
+        t = _round_mul(d, x, m)
+        x = _round_mul(x, two - t, m)
+    return x
+
+
+def tanh_vf_reference(x_word: np.ndarray, cfg: TanhConfig) -> np.ndarray:
+    """Bit-accurate datapath reference. Input/output are int64 words."""
+    x = np.asarray(x_word, dtype=np.int64)
+    sign = x < 0
+    n = np.abs(x)
+
+    one_l = np.int64(1 << cfg.lut_bits)
+
+    # LUT product chain (eq. 7 with grouped LUTs, Table I).
+    groups = cfg.group_positions()
+    tables = [np.asarray(t, dtype=np.int64) for t in cfg.lut_tables()]
+    f = None
+    for positions, table in zip(groups, tables):
+        addr = np.zeros_like(n)
+        for j, p in enumerate(positions):
+            addr |= ((n >> p) & 1) << j
+        entry = table[addr]
+        f = entry if f is None else _round_mul(f, entry, cfg.lut_bits)
+
+    # Output stage: num = 1 - f, den = 1 + f (bit concat), d = den/2.
+    if cfg.subtractor == SUB_ONES:
+        num = (one_l - 1) - f
+    else:
+        num = one_l - f
+    den = one_l + f
+
+    if cfg.nr_stages == 0:
+        # Reference float divider + fixed-point conversion (Table II row 0).
+        t = np.rint((num.astype(np.float64) / den.astype(np.float64))
+                    * (1 << cfg.out_frac)).astype(np.int64)
+    else:
+        # d = (1+f)/2 truncated to M fractional bits (single right shift +
+        # lsb drop — eq. 11 makes this land in [0.5, 1)).
+        d = den >> (cfg.lut_bits + 1 - cfg.mult_bits)
+        recip = newton_raphson_recip(d, cfg)
+        # tanh = num * recip / 2, rounded to the output format.
+        shift = cfg.lut_bits + cfg.mult_bits + 1 - cfg.out_frac
+        t = (num * recip + (1 << (shift - 1))) >> shift
+
+    t = np.minimum(t, cfg.out_max)
+    t = np.maximum(t, 0)
+
+    # Saturation region (inputs beyond the representable-error domain).
+    t = np.where(n >= cfg.sat_threshold, np.int64(cfg.out_max), t)
+    return np.where(sign, -t, t)
+
+
+def max_error(cfg: TanhConfig, x_words: np.ndarray | None = None) -> dict:
+    """Error statistics of the datapath vs true tanh (Table II metric)."""
+    if x_words is None:
+        half = 1 << cfg.mag_bits
+        x_words = np.arange(-half, half, dtype=np.int64)
+    got = tanh_vf_reference(x_words, cfg)
+    y_true = np.tanh(dequantize(x_words, cfg.in_frac))
+    err = np.abs(dequantize(got, cfg.out_frac) - y_true)
+    i = int(np.argmax(err))
+    return {
+        "max_error": float(err[i]),
+        "mean_error": float(err.mean()),
+        "rms_error": float(math.sqrt(float((err ** 2).mean()))),
+        "argmax_word": int(x_words[i]),
+        "lsb": 2.0 ** (-cfg.out_frac),
+        "max_error_lsb": float(err[i] * (1 << cfg.out_frac)),
+    }

@@ -1,0 +1,202 @@
+"""Layer-1 Pallas kernels: velocity-factor tanh on fixed-point words.
+
+The compute hot-spot of the paper's accelerator: tanh over a batch of
+signed fixed-point words, computed exactly as the hardware datapath does
+(grouped velocity-factor LUTs -> product chain -> 1/2's-complement
+subtract -> Newton-Raphson reciprocal -> recompose), vectorized over the
+batch dimension.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the ASIC's per-bit LUT
+product tree becomes a gather + compile-time-unrolled multiplicative
+reduction over `num_groups` tiny broadcast tables (VPU work); the MXU is
+engaged by the fused `matmul -> quantize -> vf-tanh` kernel used by the
+L2 model. BlockSpec tiles the batch so one VMEM block holds a tile of
+activations plus the (~256 B, grid-broadcast) tables.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret-mode lowering produces plain
+HLO that the rust runtime loads byte-identically.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .config import SUB_ONES, TanhConfig
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _round_mul(a, b, frac: int):
+    """u·.frac x u·.frac -> u·.frac with round-to-nearest, in int64."""
+    return (a * b + (1 << (frac - 1))) >> frac
+
+
+def lut_operands(cfg: TanhConfig):
+    """The grouped velocity-factor tables as jnp arrays (kernel operands).
+
+    Pallas kernels may not capture array constants, so every kernel takes
+    these as explicit (grid-broadcast) inputs.
+    """
+    return tuple(jnp.asarray(t, dtype=jnp.int64) for t in cfg.lut_tables())
+
+
+def vf_tanh_words(x, cfg: TanhConfig, tables):
+    """Core datapath on a jnp int array of input words -> output words.
+
+    Pure jnp int64 ops; used inside the Pallas kernels below and reusable
+    from plain jax code. Matches ``ref.tanh_vf_reference`` bit-for-bit.
+    """
+    x = x.astype(jnp.int64)
+    sign = x < 0
+    n = jnp.abs(x)
+
+    one_l = 1 << cfg.lut_bits
+
+    # Grouped LUT product chain (eq. 7 / Table I).
+    f = None
+    for positions, table in zip(cfg.group_positions(), tables):
+        addr = jnp.zeros_like(n)
+        for j, p in enumerate(positions):
+            addr = addr | (((n >> p) & 1) << j)
+        entry = jnp.take(table, addr)
+        f = entry if f is None else _round_mul(f, entry, cfg.lut_bits)
+
+    # Output stage: num = 1 - f (2's or 1's complement), den = 1 + f.
+    if cfg.subtractor == SUB_ONES:
+        num = (one_l - 1) - f
+    else:
+        num = one_l - f
+    den = one_l + f
+
+    if cfg.nr_stages == 0:
+        # Reference float divider + fixed-point conversion (Table II row 0).
+        q = num.astype(jnp.float64) / den.astype(jnp.float64)
+        t = jnp.rint(q * (1 << cfg.out_frac)).astype(jnp.int64)
+    else:
+        # d = (1+f)/2 truncated to M fractional bits; in [0.5, 1) (eq. 11).
+        d = den >> (cfg.lut_bits + 1 - cfg.mult_bits)
+        m = cfg.mult_bits
+        two = 2 << m
+        xr = cfg.nr_seed_const - (d << 1)
+        for _ in range(cfg.nr_stages):
+            t0 = _round_mul(d, xr, m)
+            xr = _round_mul(xr, two - t0, m)
+        shift = cfg.lut_bits + cfg.mult_bits + 1 - cfg.out_frac
+        t = (num * xr + (1 << (shift - 1))) >> shift
+
+    t = jnp.clip(t, 0, cfg.out_max)
+    t = jnp.where(n >= cfg.sat_threshold, cfg.out_max, t)
+    return jnp.where(sign, -t, t).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernels
+# ---------------------------------------------------------------------------
+
+
+def _tanh_kernel(x_ref, *rest, cfg: TanhConfig):
+    *table_refs, o_ref = rest
+    tables = [t[...] for t in table_refs]
+    o_ref[...] = vf_tanh_words(x_ref[...], cfg, tables)
+
+
+@partial(jax.jit, static_argnames=("cfg", "tile"))
+def tanh_vf(x, cfg: TanhConfig = TanhConfig(), tile: int = 256):
+    """Batched tanh on int32 words via a Pallas kernel.
+
+    ``x``: int32[N] fixed-point words (s{in_int}.{in_frac}); N must be a
+    multiple of ``tile``. Returns int32[N] output words (s.{out_frac}).
+    """
+    n = x.shape[0]
+    if n % tile:
+        raise ValueError(f"batch {n} not a multiple of tile {tile}")
+    tables = lut_operands(cfg)
+    table_specs = [
+        pl.BlockSpec(t.shape, lambda i: (0,)) for t in tables
+    ]
+    return pl.pallas_call(
+        partial(_tanh_kernel, cfg=cfg),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        grid=(n // tile,),
+        in_specs=[pl.BlockSpec((tile,), lambda i: (i,))] + table_specs,
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        interpret=True,
+    )(x, *tables)
+
+
+def quantize_f32(x, frac_bits: int, width: int):
+    """Round-to-nearest f32 -> signed word, saturating (accelerator ADC)."""
+    lo = -(1 << (width - 1))
+    hi = (1 << (width - 1)) - 1
+    w = jnp.rint(x.astype(jnp.float64) * (1 << frac_bits))
+    return jnp.clip(w, lo, hi).astype(jnp.int64)
+
+
+def _fused_dense_kernel(x_ref, w_ref, b_ref, *rest, cfg: TanhConfig,
+                        pre_shift: int):
+    """MXU path: f32 matmul tile, then the int datapath on the result.
+
+    pre_shift=1 halves the pre-activation before quantization, which turns
+    the unit into a sigmoid: sigma(z) = (1 + tanh(z/2)) / 2.
+    """
+    *table_refs, o_ref = rest
+    tables = [t[...] for t in table_refs]
+    z = x_ref[...] @ w_ref[...] + b_ref[...]
+    z = z / (1 << pre_shift)
+    words = quantize_f32(z, cfg.in_frac, cfg.in_width)
+    t = vf_tanh_words(words, cfg, tables).astype(jnp.float32)
+    y = t / (1 << cfg.out_frac)
+    if pre_shift:
+        y = (1.0 + y) * 0.5
+    o_ref[...] = y.astype(jnp.float32)
+
+
+@partial(jax.jit, static_argnames=("cfg", "sigmoid"))
+def fused_dense_vf_tanh(x, w, b, cfg: TanhConfig = TanhConfig(),
+                        sigmoid: bool = False):
+    """y = act(x @ w + b) with the activation through the VF datapath.
+
+    x: f32[B, I], w: f32[I, O], b: f32[O] -> f32[B, O]. Single-block
+    pallas_call (model tiles are small); the activation is bit-exact with
+    the hardware unit, so accelerator-level accuracy studies are faithful.
+    """
+    bdim, odim = x.shape[0], w.shape[1]
+    tables = lut_operands(cfg)
+    return pl.pallas_call(
+        partial(_fused_dense_kernel, cfg=cfg, pre_shift=1 if sigmoid else 0),
+        out_shape=jax.ShapeDtypeStruct((bdim, odim), jnp.float32),
+        interpret=True,
+    )(x, w, b, *tables)
+
+
+def _act_kernel(x_ref, *rest, cfg: TanhConfig, sigmoid: bool):
+    *table_refs, o_ref = rest
+    tables = [t[...] for t in table_refs]
+    z = x_ref[...]
+    if sigmoid:
+        z = z * 0.5
+    words = quantize_f32(z, cfg.in_frac, cfg.in_width)
+    t = vf_tanh_words(words, cfg, tables).astype(jnp.float32)
+    y = t / (1 << cfg.out_frac)
+    if sigmoid:
+        y = (1.0 + y) * 0.5
+    o_ref[...] = y.astype(jnp.float32)
+
+
+@partial(jax.jit, static_argnames=("cfg", "sigmoid"))
+def act_vf(x, cfg: TanhConfig = TanhConfig(), sigmoid: bool = False):
+    """Elementwise activation on an f32 array through the VF datapath."""
+    shape = x.shape
+    flat = x.reshape(-1)
+    tables = lut_operands(cfg)
+    y = pl.pallas_call(
+        partial(_act_kernel, cfg=cfg, sigmoid=sigmoid),
+        out_shape=jax.ShapeDtypeStruct(flat.shape, jnp.float32),
+        interpret=True,
+    )(flat, *tables)
+    return y.reshape(shape)

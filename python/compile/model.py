@@ -1,0 +1,113 @@
+"""Layer-2 JAX model: the accelerator workloads the paper motivates.
+
+The paper (§I) motivates the tanh unit with RNN/LSTM accelerators — tanh
+for cell/candidate activations, sigmoid (= shifted/scaled tanh) for the
+gates. This module defines the forward graphs that the rust coordinator
+serves through PJRT:
+
+  * ``tanh_batch``   — the raw activation unit over a batch of words.
+  * ``mlp_forward``  — 3-layer MLP, hidden activations through the VF unit.
+  * ``lstm_cell``    — a single LSTM step, all five nonlinearities through
+    the VF unit (sigmoid via sigma(z) = (1 + tanh(z/2))/2, the same
+    datapath with a 1-bit pre-shift — "free" in hardware).
+  * ``lstm_seq``     — ``lax.scan`` of the cell over a fixed sequence
+    (scan, not unroll: one compiled step body regardless of T).
+
+Everything here is build-time only; ``aot.py`` lowers each entry point to
+HLO text in ``artifacts/``.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.config import TanhConfig
+from .kernels.velocity_tanh import act_vf, fused_dense_vf_tanh, tanh_vf
+
+jax.config.update("jax_enable_x64", True)
+
+
+def tanh_batch(x, cfg: TanhConfig = TanhConfig(), tile: int = 256):
+    """Raw activation service: int32 words in, int32 words out."""
+    return tanh_vf(x, cfg, tile=tile)
+
+
+class MlpParams(NamedTuple):
+    w1: jax.Array
+    b1: jax.Array
+    w2: jax.Array
+    b2: jax.Array
+    w3: jax.Array
+    b3: jax.Array
+
+
+def mlp_forward(x, p: MlpParams, cfg: TanhConfig = TanhConfig()):
+    """3-layer MLP; hidden layers fused matmul+VF-tanh, linear head."""
+    h1 = fused_dense_vf_tanh(x, p.w1, p.b1, cfg)
+    h2 = fused_dense_vf_tanh(h1, p.w2, p.b2, cfg)
+    return h2 @ p.w3 + p.b3
+
+
+class LstmParams(NamedTuple):
+    wx: jax.Array  # [I, 4H] input kernel,  gate order (i, f, g, o)
+    wh: jax.Array  # [H, 4H] recurrent kernel
+    b: jax.Array   # [4H]
+
+
+def lstm_cell(x, h, c, p: LstmParams, cfg: TanhConfig = TanhConfig()):
+    """One LSTM step with every nonlinearity through the VF datapath."""
+    hidden = h.shape[-1]
+    z = x @ p.wx + h @ p.wh + p.b
+    zi, zf, zg, zo = (z[..., k * hidden:(k + 1) * hidden] for k in range(4))
+    i = act_vf(zi, cfg, sigmoid=True)
+    f = act_vf(zf, cfg, sigmoid=True)
+    g = act_vf(zg, cfg)
+    o = act_vf(zo, cfg, sigmoid=True)
+    c_new = f * c + i * g
+    h_new = o * act_vf(c_new, cfg)
+    return h_new, c_new
+
+
+def lstm_seq(xs, h0, c0, p: LstmParams, cfg: TanhConfig = TanhConfig()):
+    """Scan the cell over xs: f32[T, B, I] -> (h_T, c_T, hs[T, B, H])."""
+
+    def step(carry, x):
+        h, c = carry
+        h, c = lstm_cell(x, h, c, p, cfg)
+        return (h, c), h
+
+    (h, c), hs = jax.lax.scan(step, (h0, c0), xs)
+    return h, c, hs
+
+
+# ---------------------------------------------------------------------------
+# Canonical serving shapes (the rust coordinator pads requests to these).
+# ---------------------------------------------------------------------------
+
+TANH_BATCH = 1024
+MLP_BATCH, MLP_IN, MLP_H1, MLP_H2, MLP_OUT = 32, 64, 64, 32, 10
+LSTM_BATCH, LSTM_IN, LSTM_HIDDEN, LSTM_T = 16, 32, 64, 8
+
+
+def mlp_param_spec():
+    f32 = jnp.float32
+    return MlpParams(
+        w1=jax.ShapeDtypeStruct((MLP_IN, MLP_H1), f32),
+        b1=jax.ShapeDtypeStruct((MLP_H1,), f32),
+        w2=jax.ShapeDtypeStruct((MLP_H1, MLP_H2), f32),
+        b2=jax.ShapeDtypeStruct((MLP_H2,), f32),
+        w3=jax.ShapeDtypeStruct((MLP_H2, MLP_OUT), f32),
+        b3=jax.ShapeDtypeStruct((MLP_OUT,), f32),
+    )
+
+
+def lstm_param_spec():
+    f32 = jnp.float32
+    return LstmParams(
+        wx=jax.ShapeDtypeStruct((LSTM_IN, 4 * LSTM_HIDDEN), f32),
+        wh=jax.ShapeDtypeStruct((LSTM_HIDDEN, 4 * LSTM_HIDDEN), f32),
+        b=jax.ShapeDtypeStruct((4 * LSTM_HIDDEN,), f32),
+    )

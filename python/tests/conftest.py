@@ -1,0 +1,9 @@
+import os
+import sys
+
+# Run as `cd python && pytest tests/` — make the `compile` package importable.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

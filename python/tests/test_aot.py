@@ -1,0 +1,112 @@
+"""AOT-path regression tests — the cross-layer gotchas, pinned.
+
+The expensive one discovered during bring-up: the default HLO text
+printer elides constants with more than 8 elements as `{...}`, and the
+rust side's xla_extension 0.5.1 text parser *silently accepts* that and
+fills the tensor with garbage. The velocity-factor LUTs are 16-entry
+constants, so the whole datapath broke while every python-side test
+passed. These tests make that failure mode impossible to reintroduce.
+"""
+
+import dataclasses
+import re
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.aot import lower_tanh, to_hlo_text, tanh_edge_words
+from compile.kernels.config import CFG_8BIT, CFG_16BIT
+from compile.kernels.ref import tanh_vf_reference
+
+
+class TestHloTextIntegrity:
+    def test_no_elided_constants(self):
+        """`{...}` in HLO text means a constant was dropped — fatal."""
+        for cfg, batch in [(CFG_16BIT, 256), (CFG_8BIT, 256)]:
+            text, _ = lower_tanh(cfg, batch)
+            assert "constant({...})" not in text, (
+                "HLO printer elided a large constant; "
+                "as_hlo_text(print_large_constants=True) regressed"
+            )
+
+    def test_lut_constants_present_verbatim(self):
+        """Every LUT table entry must appear in the HLO text."""
+        text, _ = lower_tanh(CFG_16BIT, 256)
+        for table in CFG_16BIT.lut_tables():
+            # Spot-check distinctive (non-trivial) entries.
+            for v in [table[1], table[-1]]:
+                if v in (0, 1):
+                    continue
+                assert re.search(rf"\b{v}\b", text), f"LUT entry {v} missing"
+
+    def test_entry_computation_present(self):
+        text, meta = lower_tanh(CFG_16BIT, 512)
+        assert "ENTRY" in text
+        assert meta["inputs"][0]["shape"] == [512]
+        assert meta["outputs"][0]["dtype"] == "s32"
+
+    def test_roundtrip_is_deterministic(self):
+        a, _ = lower_tanh(CFG_16BIT, 128)
+        b, _ = lower_tanh(CFG_16BIT, 128)
+        assert a == b
+
+
+class TestGoldenVectors:
+    def test_edge_words_cover_boundaries(self):
+        cfg = CFG_16BIT
+        xs = tanh_edge_words(cfg, 1024)
+        assert len(xs) == 1024
+        for must in [0, 1, -1, (1 << 15) - 1, -(1 << 15),
+                     cfg.sat_threshold, cfg.sat_threshold - 1]:
+            assert must in xs, f"edge word {must} missing"
+        # All words must fit the input format.
+        assert (xs >= -(1 << 15)).all() and (xs < (1 << 15)).all()
+
+    def test_edge_words_deterministic(self):
+        a = tanh_edge_words(CFG_16BIT, 512)
+        b = tanh_edge_words(CFG_16BIT, 512)
+        np.testing.assert_array_equal(a, b)
+
+    @given(st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=20, deadline=None)
+    def test_reference_defined_on_all_words(self, seed):
+        # The oracle must be total over the input domain for any config
+        # flavour used in golden vectors.
+        rng = np.random.default_rng(seed)
+        cfg = dataclasses.replace(
+            CFG_16BIT,
+            nr_stages=int(rng.integers(0, 4)),
+            subtractor=["ones", "twos"][int(rng.integers(0, 2))],
+        )
+        x = rng.integers(-(1 << 15), 1 << 15, size=64)
+        y = tanh_vf_reference(x, cfg)
+        assert (np.abs(y) <= cfg.out_max).all()
+
+
+class TestManifestSchema:
+    def test_manifest_fields(self):
+        import json
+        import os
+        path = os.path.join(os.path.dirname(__file__), "..", "..",
+                            "artifacts", "manifest.json")
+        if not os.path.exists(path):
+            pytest.skip("artifacts not built")
+        man = json.load(open(path))
+        for name, entry in man["entries"].items():
+            assert entry["file"].endswith(".hlo.txt"), name
+            for io in entry["inputs"] + entry["outputs"]:
+                assert set(io) == {"name", "shape", "dtype"}
+                assert io["dtype"] in ("f32", "s32")
+                assert all(isinstance(d, int) and d > 0 for d in io["shape"])
+
+    def test_artifact_files_have_full_constants(self):
+        import os
+        art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+        if not os.path.isdir(art):
+            pytest.skip("artifacts not built")
+        for f in os.listdir(art):
+            if f.endswith(".hlo.txt"):
+                text = open(os.path.join(art, f)).read()
+                assert "constant({...})" not in text, f

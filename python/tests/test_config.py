@@ -1,0 +1,123 @@
+"""Unit tests for the datapath configuration / LUT construction."""
+
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels.config import CFG_8BIT, CFG_16BIT, TanhConfig
+
+
+class TestGeometry:
+    def test_canonical_16bit(self):
+        cfg = CFG_16BIT
+        assert cfg.mag_bits == 15
+        assert cfg.in_width == 16
+        assert cfg.out_width == 16
+        assert cfg.out_max == (1 << 15) - 1
+        assert cfg.num_groups == 4
+
+    def test_canonical_8bit(self):
+        cfg = CFG_8BIT
+        assert cfg.mag_bits == 8
+        assert cfg.in_width == 9
+        assert cfg.out_width == 8
+        assert cfg.num_groups == 3
+
+    def test_sat_threshold_matches_paper_domain(self):
+        # Paper §IV: domain for s.15 output is ±5.55, for s.7 is ±2.77.
+        assert CFG_16BIT.sat_threshold / (1 << 12) == pytest.approx(5.55, abs=0.01)
+        assert CFG_8BIT.sat_threshold / (1 << 5) == pytest.approx(2.78, abs=0.03)
+
+    def test_invalid_configs_rejected(self):
+        with pytest.raises(ValueError):
+            TanhConfig(in_frac=0)
+        with pytest.raises(ValueError):
+            TanhConfig(lut_bits=10, mult_bits=16)
+        with pytest.raises(ValueError):
+            TanhConfig(nr_stages=7)
+        with pytest.raises(ValueError):
+            TanhConfig(subtractor="threes")
+        with pytest.raises(ValueError):
+            TanhConfig(lut_group=0)
+
+
+class TestGroupPositions:
+    def test_shuffle_partitions_all_bits(self):
+        for cfg in (CFG_16BIT, CFG_8BIT):
+            flat = sorted(p for g in cfg.group_positions() for p in g)
+            assert flat == list(range(cfg.mag_bits))
+
+    def test_sequential_partitions_all_bits(self):
+        cfg = dataclasses.replace(CFG_16BIT, shuffle=False)
+        flat = sorted(p for g in cfg.group_positions() for p in g)
+        assert flat == list(range(cfg.mag_bits))
+        # consecutive packing
+        assert cfg.group_positions()[0] == [0, 1, 2, 3]
+
+    def test_shuffle_mixes_magnitudes(self):
+        # Every group must contain at least one "low" and one "high" bit
+        # (the paper's IV.B.3 precision argument).
+        cfg = CFG_16BIT
+        for g in cfg.group_positions():
+            assert min(g) < cfg.mag_bits // 2
+            assert max(g) >= cfg.mag_bits // 2
+
+    @given(st.integers(1, 6), st.integers(4, 16), st.booleans())
+    @settings(max_examples=50, deadline=None)
+    def test_partition_property(self, group, mag, shuffle):
+        cfg = TanhConfig(in_int=3, in_frac=mag - 3, out_frac=15,
+                         lut_group=group, shuffle=shuffle)
+        flat = sorted(p for g in cfg.group_positions() for p in g)
+        assert flat == list(range(cfg.mag_bits))
+        assert all(len(g) <= group for g in cfg.group_positions())
+
+
+class TestLutTables:
+    def test_entry_zero_is_one(self):
+        # mask 0 => f = 1.0 (no angle contribution).
+        for t in CFG_16BIT.lut_tables():
+            assert t[0] == 1 << CFG_16BIT.lut_bits
+
+    def test_entries_monotone_decreasing_in_angle(self):
+        # Larger angle => smaller velocity factor (f = e^-2a).
+        cfg = CFG_16BIT
+        for positions, table in zip(cfg.group_positions(), cfg.lut_tables()):
+            angles = []
+            for mask in range(len(table)):
+                a = sum(2.0 ** (p - cfg.in_frac)
+                        for j, p in enumerate(positions) if (mask >> j) & 1)
+                angles.append(a)
+            order = np.argsort(angles)
+            vals = np.asarray(table)[order]
+            assert (np.diff(vals) <= 0).all()
+
+    def test_entries_match_exp_identity(self):
+        cfg = CFG_16BIT
+        one = 1 << cfg.lut_bits
+        for positions, table in zip(cfg.group_positions(), cfg.lut_tables()):
+            for mask in (1, 3, len(table) - 1):
+                a = sum(2.0 ** (p - cfg.in_frac)
+                        for j, p in enumerate(positions) if (mask >> j) & 1)
+                assert table[mask] == round(one * math.exp(-2 * a))
+
+    def test_table_sizes(self):
+        sizes = [len(t) for t in CFG_16BIT.lut_tables()]
+        assert sizes == [16, 16, 16, 8]  # 15 bits in groups of 4
+
+    def test_multi_bit_entry_is_product_table1(self):
+        # Paper Table I: entry(11) = vf(lsb) * vf(msb) up to rounding.
+        cfg = dataclasses.replace(CFG_16BIT, lut_group=2, shuffle=False)
+        for positions, table in zip(cfg.group_positions(), cfg.lut_tables()):
+            if len(positions) < 2:
+                continue
+            one = 1 << cfg.lut_bits
+            approx = table[1] * table[2] / one
+            assert abs(table[3] - approx) <= 2
+
+    def test_nr_seed_const(self):
+        assert CFG_16BIT.nr_seed_const == int(2.75 * 2 ** 16)
+        assert CFG_8BIT.nr_seed_const == int(2.75 * 2 ** 9)

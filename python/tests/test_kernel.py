@@ -1,0 +1,189 @@
+"""Pallas kernel vs oracle: the core L1 correctness signal.
+
+Bit-exactness against the numpy datapath reference, accuracy against the
+float oracle (Table II bands), and hypothesis sweeps over shapes, dtypes
+and datapath configurations.
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import ref
+from compile.kernels.config import CFG_8BIT, CFG_16BIT, TanhConfig
+from compile.kernels.velocity_tanh import (act_vf, fused_dense_vf_tanh,
+                                           tanh_vf)
+
+RNG = np.random.default_rng(42)
+
+
+def words(cfg, n):
+    half = 1 << cfg.mag_bits
+    return RNG.integers(-half, half, size=n).astype(np.int32)
+
+
+class TestBitExactness:
+    @pytest.mark.parametrize("nr", [0, 1, 2, 3])
+    @pytest.mark.parametrize("sub", ["ones", "twos"])
+    def test_16bit_matches_reference(self, nr, sub):
+        cfg = dataclasses.replace(CFG_16BIT, nr_stages=nr, subtractor=sub)
+        x = words(cfg, 1024)
+        got = np.asarray(tanh_vf(jnp.asarray(x), cfg))
+        want = ref.tanh_vf_reference(x, cfg)
+        np.testing.assert_array_equal(got, want)
+
+    def test_8bit_exhaustive(self):
+        cfg = CFG_8BIT
+        half = 1 << cfg.mag_bits
+        x = np.arange(-half, half, dtype=np.int32)
+        got = np.asarray(tanh_vf(jnp.asarray(x), cfg, tile=128))
+        want = ref.tanh_vf_reference(x, cfg)
+        np.testing.assert_array_equal(got, want)
+
+    def test_tile_independence(self):
+        cfg = CFG_16BIT
+        x = words(cfg, 1024)
+        a = np.asarray(tanh_vf(jnp.asarray(x), cfg, tile=128))
+        b = np.asarray(tanh_vf(jnp.asarray(x), cfg, tile=512))
+        np.testing.assert_array_equal(a, b)
+
+    def test_bad_batch_rejected(self):
+        with pytest.raises(ValueError):
+            tanh_vf(jnp.zeros((1000,), jnp.int32), CFG_16BIT, tile=256)
+
+    @given(st.integers(1, 3), st.booleans(), st.integers(2, 5),
+           st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=20, deadline=None)
+    def test_config_sweep_matches_reference(self, nr, shuffle, group, seed):
+        cfg = TanhConfig(nr_stages=nr, shuffle=shuffle, lut_group=group)
+        rng = np.random.default_rng(seed)
+        x = rng.integers(-(1 << 15), 1 << 15, size=256).astype(np.int32)
+        got = np.asarray(tanh_vf(jnp.asarray(x), cfg))
+        want = ref.tanh_vf_reference(x, cfg)
+        np.testing.assert_array_equal(got, want)
+
+    @given(st.sampled_from([(3, 5, 7, 10, 9, 3), (3, 12, 15, 18, 16, 4),
+                            (2, 9, 11, 14, 12, 3), (4, 10, 14, 17, 15, 4)]))
+    @settings(max_examples=8, deadline=None)
+    def test_precision_scaling(self, fmt):
+        ii, if_, of, lb, mb, g = fmt
+        cfg = TanhConfig(in_int=ii, in_frac=if_, out_frac=of,
+                         lut_bits=lb, mult_bits=mb, lut_group=g)
+        x = words(cfg, 256)
+        got = np.asarray(tanh_vf(jnp.asarray(x), cfg))
+        want = ref.tanh_vf_reference(x, cfg)
+        np.testing.assert_array_equal(got, want)
+
+
+class TestMathematicalProperties:
+    def test_odd_symmetry(self):
+        cfg = CFG_16BIT
+        x = words(cfg, 512)
+        x = x[x != -(1 << 15)]  # negation overflows for the min word
+        pos = np.asarray(tanh_vf(jnp.asarray(np.abs(x).astype(np.int32)),
+                                 cfg, tile=1))
+        neg = np.asarray(tanh_vf(jnp.asarray((-np.abs(x)).astype(np.int32)),
+                                 cfg, tile=1))
+        np.testing.assert_array_equal(pos, -neg)
+
+    def test_zero_maps_to_zero(self):
+        got = np.asarray(tanh_vf(jnp.zeros((256,), jnp.int32), CFG_16BIT))
+        assert (got == 0).all()
+
+    def test_saturation_region(self):
+        cfg = CFG_16BIT
+        x = np.full(256, cfg.sat_threshold + 5, dtype=np.int32)
+        got = np.asarray(tanh_vf(jnp.asarray(x), cfg))
+        assert (got == cfg.out_max).all()
+
+    def test_monotone_nondecreasing(self):
+        cfg = CFG_16BIT
+        x = np.sort(words(cfg, 1024))
+        got = np.asarray(tanh_vf(jnp.asarray(np.ascontiguousarray(x)), cfg))
+        # Datapath is not strictly monotone at lsb level, but violations
+        # must stay within 2 output lsb (quantization noise only).
+        assert (np.diff(got) >= -2).all()
+
+    def test_output_range(self):
+        cfg = CFG_16BIT
+        half = 1 << cfg.mag_bits
+        x = RNG.integers(-half, half, size=4096).astype(np.int32)
+        got = np.asarray(tanh_vf(jnp.asarray(x), cfg))
+        assert (np.abs(got) <= cfg.out_max).all()
+
+
+class TestAccuracy:
+    def test_table2_band_nr3(self):
+        cfg = dataclasses.replace(CFG_16BIT, nr_stages=3)
+        stats = ref.max_error(cfg)
+        # Paper Table II: 4.44e-5. Same band: < 2.5 lsb.
+        assert stats["max_error"] < 7.7e-5
+
+    def test_table2_band_nr2_worse(self):
+        e2 = ref.max_error(dataclasses.replace(CFG_16BIT, nr_stages=2))
+        e3 = ref.max_error(dataclasses.replace(CFG_16BIT, nr_stages=3))
+        # Paper: 2.56e-4 vs 4.44e-5 — NR2 is several x worse.
+        assert e2["max_error"] > 2.5 * e3["max_error"]
+        assert 1e-4 < e2["max_error"] < 6e-4
+
+    def test_ones_vs_twos_marginal(self):
+        e1 = ref.max_error(dataclasses.replace(
+            CFG_16BIT, nr_stages=3, subtractor="ones"))
+        e2 = ref.max_error(dataclasses.replace(
+            CFG_16BIT, nr_stages=3, subtractor="twos"))
+        assert abs(e1["max_error"] - e2["max_error"]) < 5e-5
+
+    def test_8bit_error_within_lsb(self):
+        stats = ref.max_error(CFG_8BIT)
+        assert stats["max_error"] <= stats["lsb"] * 1.01
+
+    def test_kernel_accuracy_vs_float(self):
+        cfg = CFG_16BIT
+        x = words(cfg, 4096)
+        got = np.asarray(tanh_vf(jnp.asarray(x), cfg))
+        want = np.tanh(x.astype(np.float64) / (1 << cfg.in_frac))
+        err = np.abs(got / (1 << cfg.out_frac) - want)
+        assert err.max() < 7.7e-5
+
+
+class TestFusedKernels:
+    @given(st.integers(1, 8), st.integers(1, 24), st.integers(1, 12),
+           st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=15, deadline=None)
+    def test_fused_dense_close_to_float(self, b, i, o, seed):
+        rng = np.random.default_rng(seed)
+        x = rng.normal(size=(b, i)).astype(np.float32)
+        w = (rng.normal(size=(i, o)) * 0.4).astype(np.float32)
+        bias = (rng.normal(size=(o,)) * 0.1).astype(np.float32)
+        y = np.asarray(fused_dense_vf_tanh(
+            jnp.asarray(x), jnp.asarray(w), jnp.asarray(bias)))
+        want = np.tanh(x @ w + bias)
+        # input quantization (2^-13) + datapath error + output lsb
+        assert np.abs(y - want).max() < 3e-4
+
+    def test_sigmoid_identity(self):
+        rng = np.random.default_rng(3)
+        x = rng.normal(size=(4, 8)).astype(np.float32)
+        w = np.eye(8, dtype=np.float32)
+        b = np.zeros(8, dtype=np.float32)
+        y = np.asarray(fused_dense_vf_tanh(
+            jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), sigmoid=True))
+        want = 1.0 / (1.0 + np.exp(-x))
+        assert np.abs(y - want).max() < 3e-4
+
+    def test_act_vf_shapes(self):
+        for shape in [(16,), (4, 8), (2, 3, 5)]:
+            x = RNG.normal(size=shape).astype(np.float32)
+            y = np.asarray(act_vf(jnp.asarray(x)))
+            assert y.shape == shape
+            assert np.abs(y - np.tanh(x)).max() < 3e-4
+
+    def test_act_vf_saturates(self):
+        x = np.asarray([100.0, -100.0], dtype=np.float32)
+        y = np.asarray(act_vf(jnp.asarray(x)))
+        lsb = 2.0 ** -15
+        np.testing.assert_allclose(y, [1 - lsb, -(1 - lsb)], atol=1e-9)

@@ -1,0 +1,135 @@
+"""L2 model tests: shapes, numerics vs float references, scan semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels.config import CFG_16BIT
+
+RNG = np.random.default_rng(5)
+
+
+def mk_mlp_params(scale=0.3):
+    return M.MlpParams(
+        w1=jnp.asarray(RNG.normal(size=(M.MLP_IN, M.MLP_H1)) * scale, jnp.float32),
+        b1=jnp.asarray(RNG.normal(size=(M.MLP_H1,)) * 0.1, jnp.float32),
+        w2=jnp.asarray(RNG.normal(size=(M.MLP_H1, M.MLP_H2)) * scale, jnp.float32),
+        b2=jnp.asarray(RNG.normal(size=(M.MLP_H2,)) * 0.1, jnp.float32),
+        w3=jnp.asarray(RNG.normal(size=(M.MLP_H2, M.MLP_OUT)) * scale, jnp.float32),
+        b3=jnp.asarray(RNG.normal(size=(M.MLP_OUT,)) * 0.1, jnp.float32),
+    )
+
+
+def mk_lstm_params(scale=0.2):
+    return M.LstmParams(
+        wx=jnp.asarray(RNG.normal(size=(M.LSTM_IN, 4 * M.LSTM_HIDDEN)) * scale,
+                       jnp.float32),
+        wh=jnp.asarray(RNG.normal(size=(M.LSTM_HIDDEN, 4 * M.LSTM_HIDDEN)) * scale,
+                       jnp.float32),
+        b=jnp.asarray(RNG.normal(size=(4 * M.LSTM_HIDDEN,)) * 0.1, jnp.float32),
+    )
+
+
+def float_lstm_cell(x, h, c, p):
+    hidden = h.shape[-1]
+    z = x @ np.asarray(p.wx) + h @ np.asarray(p.wh) + np.asarray(p.b)
+    zi, zf, zg, zo = (z[..., k * hidden:(k + 1) * hidden] for k in range(4))
+    sig = lambda v: 1.0 / (1.0 + np.exp(-v))
+    c_new = sig(zf) * c + sig(zi) * np.tanh(zg)
+    h_new = sig(zo) * np.tanh(c_new)
+    return h_new, c_new
+
+
+class TestMlp:
+    def test_shapes(self):
+        x = jnp.asarray(RNG.normal(size=(M.MLP_BATCH, M.MLP_IN)), jnp.float32)
+        y = M.mlp_forward(x, mk_mlp_params())
+        assert y.shape == (M.MLP_BATCH, M.MLP_OUT)
+
+    def test_close_to_float_mlp(self):
+        x = RNG.normal(size=(M.MLP_BATCH, M.MLP_IN)).astype(np.float32)
+        p = mk_mlp_params()
+        y = np.asarray(M.mlp_forward(jnp.asarray(x), p))
+        h1 = np.tanh(x @ np.asarray(p.w1) + np.asarray(p.b1))
+        h2 = np.tanh(h1 @ np.asarray(p.w2) + np.asarray(p.b2))
+        want = h2 @ np.asarray(p.w3) + np.asarray(p.b3)
+        # activation error compounds over two hidden layers but stays small
+        assert np.abs(y - want).max() < 5e-3
+
+    def test_hidden_activations_bounded(self):
+        # The VF unit can never emit |y| >= 1.
+        x = jnp.asarray(RNG.normal(size=(4, M.MLP_IN)) * 50, jnp.float32)
+        p = mk_mlp_params(scale=5.0)
+        from compile.kernels.velocity_tanh import fused_dense_vf_tanh
+        h1 = np.asarray(fused_dense_vf_tanh(x, p.w1, p.b1, CFG_16BIT))
+        assert (np.abs(h1) < 1.0).all()
+
+
+class TestLstm:
+    def test_cell_shapes(self):
+        x = jnp.asarray(RNG.normal(size=(M.LSTM_BATCH, M.LSTM_IN)), jnp.float32)
+        h = jnp.zeros((M.LSTM_BATCH, M.LSTM_HIDDEN), jnp.float32)
+        c = jnp.zeros((M.LSTM_BATCH, M.LSTM_HIDDEN), jnp.float32)
+        hn, cn = M.lstm_cell(x, h, c, mk_lstm_params())
+        assert hn.shape == (M.LSTM_BATCH, M.LSTM_HIDDEN)
+        assert cn.shape == (M.LSTM_BATCH, M.LSTM_HIDDEN)
+
+    def test_cell_close_to_float(self):
+        x = RNG.normal(size=(M.LSTM_BATCH, M.LSTM_IN)).astype(np.float32)
+        h = (RNG.normal(size=(M.LSTM_BATCH, M.LSTM_HIDDEN)) * 0.5).astype(np.float32)
+        c = (RNG.normal(size=(M.LSTM_BATCH, M.LSTM_HIDDEN)) * 0.5).astype(np.float32)
+        p = mk_lstm_params()
+        hn, cn = M.lstm_cell(jnp.asarray(x), jnp.asarray(h), jnp.asarray(c), p)
+        hf, cf = float_lstm_cell(x, h, c, p)
+        assert np.abs(np.asarray(hn) - hf).max() < 2e-3
+        assert np.abs(np.asarray(cn) - cf).max() < 2e-3
+
+    def test_seq_matches_repeated_cell(self):
+        T = 4
+        xs = (RNG.normal(size=(T, M.LSTM_BATCH, M.LSTM_IN))).astype(np.float32)
+        h = np.zeros((M.LSTM_BATCH, M.LSTM_HIDDEN), np.float32)
+        c = np.zeros((M.LSTM_BATCH, M.LSTM_HIDDEN), np.float32)
+        p = mk_lstm_params()
+        hs_, cs_ = jnp.asarray(h), jnp.asarray(c)
+        outs = []
+        for t in range(T):
+            hs_, cs_ = M.lstm_cell(jnp.asarray(xs[t]), hs_, cs_, p)
+            outs.append(np.asarray(hs_))
+        hT, cT, hs = M.lstm_seq(jnp.asarray(xs), jnp.asarray(h), jnp.asarray(c), p)
+        np.testing.assert_allclose(np.asarray(hT), outs[-1], rtol=0, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(hs)[-1], outs[-1], atol=1e-6)
+
+    def test_gate_saturation_keeps_state_bounded(self):
+        # Huge inputs: sigmoid gates pin to ~{0,1}, tanh to ±(1-lsb);
+        # state stays bounded (hardware never overflows).
+        x = jnp.asarray(np.full((M.LSTM_BATCH, M.LSTM_IN), 100.0), jnp.float32)
+        h = jnp.zeros((M.LSTM_BATCH, M.LSTM_HIDDEN), jnp.float32)
+        c = jnp.asarray(np.full((M.LSTM_BATCH, M.LSTM_HIDDEN), 0.9), jnp.float32)
+        hn, cn = M.lstm_cell(x, h, c, mk_lstm_params(scale=1.0))
+        assert np.isfinite(np.asarray(hn)).all()
+        assert (np.abs(np.asarray(cn)) < 2.0).all()
+        assert (np.abs(np.asarray(hn)) < 1.0).all()
+
+
+class TestAotLowering:
+    def test_tanh_lowering_roundtrip(self):
+        from compile.aot import lower_tanh
+        text, meta = lower_tanh(CFG_16BIT, 256)
+        assert "ENTRY" in text
+        assert meta["inputs"][0]["shape"] == [256]
+
+    def test_manifest_entries_complete(self):
+        import json
+        import os
+        path = os.path.join(os.path.dirname(__file__), "..", "..",
+                            "artifacts", "manifest.json")
+        if not os.path.exists(path):
+            pytest.skip("artifacts not built")
+        man = json.load(open(path))
+        assert set(man["entries"]) >= {
+            "tanh_s3_12", "tanh_s3_5", "mlp_b32", "lstm_cell_b16",
+            "lstm_seq_b16"}
+        for e in man["entries"].values():
+            assert os.path.exists(os.path.join(os.path.dirname(path), e["file"]))

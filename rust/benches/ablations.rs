@@ -1,0 +1,137 @@
+//! Ablations over the paper's design choices (§IV.B), plus the §II/§V
+//! baseline comparison:
+//!
+//!  1. published method (fig. 3, eq. 3 residual) vs optimized datapath
+//!  2. bit-shuffled vs sequential LUT addressing
+//!  3. LUT group size (registers vs grouped ROMs)
+//!  4. NR seed constant choice
+//!  5. LUT precision scaling ("18-bit precision is enough")
+//!  6. baseline accuracy-vs-cost table
+//!  7. datapath PPA vs a same-accuracy pure-LUT design
+
+use tanh_vf::analysis::{exhaustive_error, TanhImpl};
+use tanh_vf::baselines;
+use tanh_vf::gates::CellClass;
+use tanh_vf::synth::ppa::ppa_for;
+use tanh_vf::tanh::published::{published_max_error, PublishedConfig};
+use tanh_vf::tanh::{Subtractor, TanhConfig, TanhUnit};
+use tanh_vf::util::table::{sci, Table};
+
+fn err_of(cfg: TanhConfig) -> f64 {
+    exhaustive_error(&TanhUnit::new(cfg).unwrap()).max_abs
+}
+
+fn main() {
+    // --- 1. published vs optimized (the §IV.B.1 improvement) -----------
+    println!("== ablation 1: published method (eq. 3 tail) vs optimized ==\n");
+    let mut t = Table::new(&["variant", "max error", "last-stage muls"]);
+    for thr in [5, 7, 9] {
+        let pc = PublishedConfig { base: TanhConfig::s3_12(), threshold_exp: thr };
+        t.row(&[
+            format!("published, registers >= 2^-{thr} ({})", pc.register_count()),
+            sci(published_max_error(&pc)),
+            "2 extra".into(),
+        ]);
+    }
+    t.row(&[
+        "optimized (all bits exact, fig. 5)".into(),
+        sci(err_of(TanhConfig::s3_12())),
+        "0 extra".into(),
+    ]);
+    println!("{}", t.render());
+
+    // --- 2. shuffle vs sequential addressing ---------------------------
+    println!("== ablation 2: bit-shuffled vs sequential LUT addressing ==\n");
+    let mut t = Table::new(&["addressing", "L=18 err", "L=16 err", "L=14 err"]);
+    for (name, shuffle) in [("shuffled (paper)", true), ("sequential", false)] {
+        let mut row = vec![name.to_string()];
+        for l in [18u32, 16, 14] {
+            let mut cfg = TanhConfig::s3_12().with_shuffle(shuffle);
+            cfg.lut_bits = l;
+            cfg.mult_bits = cfg.mult_bits.min(l + 1).min(16);
+            row.push(sci(err_of(cfg)));
+        }
+        t.row(&row);
+    }
+    println!("{}", t.render());
+    println!("(shuffling matters more as LUT precision shrinks — §IV.B.3)\n");
+
+    // --- 3. group size --------------------------------------------------
+    println!("== ablation 3: LUT group size (muls vs ROM bits) ==\n");
+    let mut t = Table::new(&[
+        "group", "chain muls", "ROM bits", "max err", "SVT area um2",
+    ]);
+    for g in 1..=5u32 {
+        let cfg = TanhConfig::s3_12().with_group(g);
+        let rom: u64 = cfg
+            .group_positions()
+            .iter()
+            .map(|p| (1u64 << p.len()) * 19)
+            .sum();
+        t.row(&[
+            format!("{g}"),
+            format!("{}", cfg.num_groups() - 1),
+            format!("{rom}"),
+            sci(err_of(cfg)),
+            format!("{:.0}", ppa_for(&cfg, CellClass::Svt, 2).area_um2),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // --- 4. NR stages beyond the paper ----------------------------------
+    println!("== ablation 4: NR stage count ==\n");
+    let mut t = Table::new(&["NR stages", "max err", "levels (1-stage)"]);
+    for nr in [1u32, 2, 3, 4] {
+        let cfg = TanhConfig::s3_12().with_nr(nr);
+        t.row(&[
+            format!("{nr}"),
+            sci(err_of(cfg)),
+            format!("{}", ppa_for(&cfg, CellClass::Svt, 1).logic_levels),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // --- 5. LUT precision ("18 bits is enough for 1-bit error") --------
+    println!("== ablation 5: LUT precision L at s3.12 -> s.15 ==\n");
+    let mut t = Table::new(&["L", "max err", "err (lsb)"]);
+    for l in [15u32, 16, 17, 18, 20, 22] {
+        let mut cfg = TanhConfig::s3_12();
+        cfg.lut_bits = l;
+        let e = err_of(cfg);
+        t.row(&[
+            format!("{l}"),
+            sci(e),
+            format!("{:.2}", e / 2f64.powi(-15)),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // --- 6. baselines ----------------------------------------------------
+    println!("== baseline comparison (§II / §V), 16-bit point ==\n");
+    let mut t = Table::new(&[
+        "implementation", "max err", "LUT bits", "muls", "adders",
+    ]);
+    let unit = TanhUnit::new(TanhConfig::s3_12()).unwrap();
+    let mut impls: Vec<Box<dyn TanhImpl>> = baselines::suite16();
+    impls.insert(0, Box::new(unit));
+    for imp in &impls {
+        let e = exhaustive_error(imp.as_ref());
+        let c = imp.cost();
+        t.row(&[
+            imp.name(),
+            sci(e.max_abs),
+            format!("{}", c.lut_bits),
+            format!("{}", c.multipliers),
+            format!("{}", c.adders),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // --- 7. sanity assertions on the ablation shapes --------------------
+    let e_opt = err_of(TanhConfig::s3_12());
+    let e_pub = published_max_error(&PublishedConfig::default());
+    assert!(e_opt < e_pub, "optimized must beat published");
+    let e_ones = err_of(TanhConfig::s3_12().with_subtractor(Subtractor::Ones));
+    assert!((e_ones - e_opt).abs() < 5e-5, "1's vs 2's must be marginal");
+    println!("ablation shape assertions passed.");
+}

@@ -1,0 +1,47 @@
+//! Regenerates the paper's fig. 1: tanh and its piecewise-linear
+//! approximation. Emits the series as CSV (for plotting) and prints a
+//! coarse ASCII rendering plus the approximation-gap summary.
+
+use tanh_vf::baselines::pwl::fig1_series;
+
+fn main() {
+    let segments = 8;
+    let series = fig1_series(segments, 161);
+
+    // CSV artifact for plotting.
+    let out = tanh_vf::util::repo_path("target/fig1_tanh_pwl.csv");
+    let mut csv = String::from("x,tanh,pwl\n");
+    for (x, t, p) in &series {
+        csv.push_str(&format!("{x:.4},{t:.6},{p:.6}\n"));
+    }
+    std::fs::create_dir_all(out.parent().unwrap()).unwrap();
+    std::fs::write(&out, &csv).unwrap();
+    println!("wrote {} ({} points)\n", out.display(), series.len());
+
+    // ASCII rendering (paper fig. 1's visual).
+    println!("fig. 1 — tanh (*) and {segments}-segment PWL (o), x in [-4, 4]:\n");
+    let height = 21;
+    for row in 0..height {
+        let y = 1.0 - 2.0 * row as f64 / (height - 1) as f64;
+        let mut line: Vec<char> = vec![' '; 81];
+        for (i, &(_, t, p)) in series.iter().enumerate().step_by(2) {
+            let col = i / 2;
+            if (p - y).abs() < 0.05 {
+                line[col] = 'o';
+            }
+            if (t - y).abs() < 0.05 {
+                line[col] = '*';
+            }
+        }
+        let axis = if (y).abs() < 0.026 { '-' } else { '|' };
+        println!("{y:+.2} {axis} {}", line.iter().collect::<String>());
+    }
+
+    // Gap summary: where PWL deviates most (the knee).
+    let (wx, gap) = series
+        .iter()
+        .map(|&(x, t, p)| (x, (t - p).abs()))
+        .fold((0.0, 0.0), |acc, v| if v.1 > acc.1 { v } else { acc });
+    println!("\nmax |tanh - PWL| = {gap:.4} at x = {wx:+.3} (knee region)");
+    assert!(gap < 0.1, "PWL gap out of expected band");
+}

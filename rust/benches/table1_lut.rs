@@ -1,0 +1,42 @@
+//! Regenerates the paper's Table I: multi-bit lookup for velocity
+//! factors (the 2-bit grouped LUT contents), plus the production 4-bit
+//! grouped tables, and times LUT construction.
+
+use tanh_vf::bench::Bench;
+use tanh_vf::tanh::lut::{lut_tables, table1_rows};
+use tanh_vf::tanh::TanhConfig;
+use tanh_vf::util::table::Table;
+
+fn main() {
+    println!("=== Table I: multi-bit lookup for velocity factors ===");
+    println!("(2-bit grouping; '11' rows are products of the '01'/'10' rows)\n");
+    let rows = table1_rows(&TanhConfig::s3_12());
+    let mut t = Table::new(&["entry", "stored word (u0.18)", "value"]);
+    for (name, word, value) in rows.iter().take(12) {
+        t.row(&[name.clone(), format!("{word}"), format!("{value:.9}")]);
+    }
+    t.row(&["...".into(), "...".into(), "...".into()]);
+    println!("{}", t.render());
+    println!("({} total entries across all 2-bit groups)\n", rows.len());
+
+    println!("=== production 4-bit grouped tables (fig. 5 datapath) ===\n");
+    let cfg = TanhConfig::s3_12();
+    let tables = lut_tables(&cfg);
+    let mut t = Table::new(&["group", "addressed bits", "entries", "ROM bits"]);
+    for (g, (pos, table)) in
+        cfg.group_positions().iter().zip(&tables).enumerate()
+    {
+        t.row(&[
+            format!("LUT{g}"),
+            format!("{pos:?}"),
+            format!("{}", table.len()),
+            format!("{}", table.len() * (cfg.lut_bits as usize + 1)),
+        ]);
+    }
+    println!("{}", t.render());
+
+    println!("--- timing: LUT construction (build-time cost) ---");
+    let mut b = Bench::default();
+    b.run("lut_tables_s3_12", || lut_tables(&TanhConfig::s3_12()));
+    b.run("lut_tables_s3_5", || lut_tables(&TanhConfig::s3_5()));
+}

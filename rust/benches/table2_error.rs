@@ -1,0 +1,54 @@
+//! Regenerates the paper's Table II (error analysis for arithmetic
+//! approximations) and times the exhaustive sweep that produces it.
+
+use tanh_vf::analysis::exhaustive_error;
+use tanh_vf::bench::Bench;
+use tanh_vf::tanh::{Subtractor, TanhConfig, TanhUnit};
+use tanh_vf::util::table::{sci, Table};
+
+fn main() {
+    println!("=== Table II: error analysis (s3.12 -> s.15, exhaustive 2^16) ===\n");
+    let mut t = Table::new(&[
+        "NR Stages", "Subtractor", "Max Error (measured)", "lsb",
+        "Max Error (paper)",
+    ]);
+    let rows: &[(u32, Subtractor, &str)] = &[
+        (0, Subtractor::Twos, "4.44e-5 (float div ref)"),
+        (2, Subtractor::Ones, "2.77e-4"),
+        (2, Subtractor::Twos, "2.56e-4"),
+        (3, Subtractor::Ones, "4.32e-5"),
+        (3, Subtractor::Twos, "4.44e-5"),
+    ];
+    for &(nr, sub, paper) in rows {
+        let cfg = TanhConfig::s3_12().with_nr(nr).with_subtractor(sub);
+        let unit = TanhUnit::new(cfg).unwrap();
+        let stats = exhaustive_error(&unit);
+        t.row(&[
+            if nr == 0 { "0 (ref)".into() } else { format!("{nr}") },
+            sub.name().to_string(),
+            sci(stats.max_abs),
+            format!("{:.2}", stats.max_lsb(cfg.out_format())),
+            paper.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // §V sentence: 1's complement drop for the (1-f) subtractor.
+    let e_ones = exhaustive_error(
+        &TanhUnit::new(TanhConfig::s3_12().with_subtractor(Subtractor::Ones))
+            .unwrap(),
+    );
+    let e_twos = exhaustive_error(&TanhUnit::new(TanhConfig::s3_12()).unwrap());
+    println!(
+        "1's vs 2's complement subtractor (NR3): {} vs {}  (paper: 5.87e-5 vs 4.32e-5 band)\n",
+        sci(e_ones.max_abs),
+        sci(e_twos.max_abs)
+    );
+
+    println!("--- timing of the exhaustive error sweep ---");
+    let unit = TanhUnit::new(TanhConfig::s3_12()).unwrap();
+    let mut b = Bench::default();
+    b.run_elems("exhaustive_error_sweep_2^16", 65536, || {
+        exhaustive_error(&unit).max_abs
+    });
+}

@@ -1,0 +1,60 @@
+//! Regenerates the paper's Table III (PPA for the 16-bit flavours) from
+//! the synthesis model, printed side by side with the paper's numbers,
+//! and times the synthesis-model evaluation itself.
+
+use tanh_vf::bench::Bench;
+use tanh_vf::gates::CellClass;
+use tanh_vf::synth::ppa::ppa_for;
+use tanh_vf::tanh::TanhConfig;
+use tanh_vf::util::table::Table;
+
+// Paper Table III rows: (cells, latency, area, leak uW, fmax MHz, levels)
+const PAPER: &[(&str, u32, f64, f64, f64, u32)] = &[
+    ("SVT", 1, 3748.28, 4.20, 188.0, 135),
+    ("LVT", 1, 2600.34, 119.33, 302.0, 111),
+    ("SVT", 2, 3400.43, 3.53, 258.0, 95),
+    ("LVT", 2, 3367.16, 180.67, 511.0, 86),
+    ("SVT", 7, 3688.98, 3.92, 1176.0, 25),
+    ("LVT", 7, 3147.68, 146.67, 2134.0, 17),
+];
+
+fn main() {
+    println!("=== Table III: PPA, s3.12 -> s.15 (modelled vs paper) ===\n");
+    let cfg = TanhConfig::s3_12();
+    let mut t = Table::new(&[
+        "Cells", "Clk", "Area um2 (model|paper)", "Leak uW (model|paper)",
+        "Fmax MHz (model|paper)", "Levels (model|paper)",
+    ]);
+    for &(cells, clk, p_area, p_leak, p_fmax, p_lvl) in PAPER {
+        let class = if cells == "SVT" { CellClass::Svt } else { CellClass::Lvt };
+        let r = ppa_for(&cfg, class, clk);
+        t.row(&[
+            cells.to_string(),
+            format!("{clk}"),
+            format!("{:.0} | {:.0}", r.area_um2, p_area),
+            format!("{:.2} | {:.2}", r.leakage_uw, p_leak),
+            format!("{:.0} | {:.0}", r.fmax_mhz, p_fmax),
+            format!("{} | {}", r.logic_levels, p_lvl),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // Shape checks the model must reproduce (reported, then asserted).
+    let f = |c, s| ppa_for(&cfg, c, s).fmax_mhz;
+    let ratio17 = f(CellClass::Svt, 7) / f(CellClass::Svt, 1);
+    println!("fmax 1->7 stage ratio: {:.2}x (paper: 6.25x)", ratio17);
+    let lvt_leak = ppa_for(&cfg, CellClass::Lvt, 1).leakage_uw
+        / ppa_for(&cfg, CellClass::Svt, 1).leakage_uw;
+    println!("LVT/SVT leakage ratio: {:.0}x (paper: ~28x)", lvt_leak);
+    assert!(ratio17 > 3.5 && lvt_leak > 20.0, "PPA shape violated");
+
+    println!("\n--- timing of the synthesis model ---");
+    let mut b = Bench::default();
+    b.run("ppa_model_full_table", || {
+        for clk in [1u32, 2, 7] {
+            for class in [CellClass::Svt, CellClass::Lvt] {
+                std::hint::black_box(ppa_for(&cfg, class, clk));
+            }
+        }
+    });
+}

@@ -1,0 +1,49 @@
+//! Regenerates the paper's Table IV (PPA for the 8-bit flavours: s3.5
+//! input, s.7 output) from the synthesis model.
+
+use tanh_vf::gates::CellClass;
+use tanh_vf::synth::ppa::ppa_for;
+use tanh_vf::tanh::TanhConfig;
+use tanh_vf::util::table::Table;
+
+// Paper Table IV rows: (cells, latency, area, leak uW, fmax MHz, levels)
+const PAPER: &[(&str, u32, f64, f64, f64, u32)] = &[
+    ("SVT", 1, 764.37, 0.81, 254.0, 97),
+    ("LVT", 1, 568.99, 24.19, 303.0, 95),
+    ("SVT", 2, 885.29, 0.99, 364.0, 74),
+    ("LVT", 2, 877.82, 51.67, 715.0, 70),
+    ("SVT", 7, 995.60, 1.08, 1532.0, 14),
+    ("LVT", 7, 934.82, 49.04, 2985.0, 13),
+];
+
+fn main() {
+    println!("=== Table IV: PPA, s3.5 -> s.7 (modelled vs paper) ===\n");
+    let cfg = TanhConfig::s3_5();
+    let mut t = Table::new(&[
+        "Cells", "Clk", "Area um2 (model|paper)", "Leak uW (model|paper)",
+        "Fmax MHz (model|paper)", "Levels (model|paper)",
+    ]);
+    for &(cells, clk, p_area, p_leak, p_fmax, p_lvl) in PAPER {
+        let class = if cells == "SVT" { CellClass::Svt } else { CellClass::Lvt };
+        let r = ppa_for(&cfg, class, clk);
+        t.row(&[
+            cells.to_string(),
+            format!("{clk}"),
+            format!("{:.0} | {:.0}", r.area_um2, p_area),
+            format!("{:.2} | {:.2}", r.leakage_uw, p_leak),
+            format!("{:.0} | {:.0}", r.fmax_mhz, p_fmax),
+            format!("{} | {}", r.logic_levels, p_lvl),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // The headline cross-table shape: 8-bit is several times smaller
+    // than 16-bit at the same stage count.
+    let a16 = ppa_for(&TanhConfig::s3_12(), CellClass::Svt, 1).area_um2;
+    let a8 = ppa_for(&cfg, CellClass::Svt, 1).area_um2;
+    println!(
+        "16-bit/8-bit area ratio (SVT, 1 stage): {:.1}x (paper: 4.9x)",
+        a16 / a8
+    );
+    assert!(a16 / a8 > 2.5, "scalability shape violated");
+}

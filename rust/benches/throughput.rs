@@ -1,0 +1,104 @@
+//! Serving-path throughput: golden model vs optimized unit vs memoized
+//! unit vs RTL simulation vs PJRT executable vs the full coordinator.
+//! This is the §Perf benchmark of EXPERIMENTS.md.
+
+use std::time::Duration;
+
+use tanh_vf::bench::{black_box, Bench};
+use tanh_vf::coordinator::{native_factory, Config, Coordinator};
+use tanh_vf::rtl::RtlSim;
+use tanh_vf::runtime::{artifacts_dir, Runtime, Tensor};
+use tanh_vf::synth::datapath::build_tanh_datapath;
+use tanh_vf::synth::pipeline::assign_stages;
+use tanh_vf::tanh::golden::tanh_golden_batch;
+use tanh_vf::tanh::{TanhConfig, TanhUnit};
+use tanh_vf::util::rng::Rng;
+
+fn main() {
+    let cfg = TanhConfig::s3_12();
+    let mut rng = Rng::new(99);
+    let n = 1024usize;
+    let words: Vec<i64> =
+        (0..n).map(|_| rng.range_i64(-32768, 32768)).collect();
+    let words32: Vec<i32> = words.iter().map(|&w| w as i32).collect();
+
+    let mut b = Bench::default();
+
+    // 1. Golden model (rebuilds tables per batch — the readable spec).
+    b.run_elems("golden_model_batch_1k", n as u64, || {
+        black_box(tanh_golden_batch(&words, &cfg))
+    });
+
+    // 2. Optimized unit, live datapath.
+    let unit = TanhUnit::new(cfg).unwrap();
+    let mut out = vec![0i64; n];
+    b.run_elems("tanh_unit_live_batch_1k", n as u64, || {
+        unit.eval_batch_into(&words, &mut out);
+        black_box(out[0])
+    });
+
+    // 3. Fully memoized unit (ROM-compiled shape).
+    let mut memo = TanhUnit::new(cfg).unwrap();
+    memo.precompute_all();
+    b.run_elems("tanh_unit_memo_batch_1k", n as u64, || {
+        memo.eval_batch_into(&words, &mut out);
+        black_box(out[0])
+    });
+
+    // 4. Cycle-accurate RTL simulation (7-stage pipeline).
+    let net = build_tanh_datapath(&cfg);
+    let pipe = assign_stages(&net, 7);
+    b.run_elems("rtl_sim_7stage_batch_1k", n as u64, || {
+        let mut sim = RtlSim::new(&net, &pipe);
+        black_box(sim.run_batch(&words).0.len())
+    });
+
+    // 5. PJRT executable (the Pallas kernel, AOT-compiled).
+    if artifacts_dir().join("manifest.json").exists() {
+        let rt = Runtime::new(&artifacts_dir()).unwrap();
+        rt.ensure_compiled("tanh_s3_12").unwrap();
+        let input = Tensor::I32(words32.clone());
+        b.run_elems("pjrt_pallas_batch_1k", n as u64, || {
+            black_box(rt.execute("tanh_s3_12", &[input.clone()]).unwrap())
+        });
+    } else {
+        println!("(skipping PJRT rows: run `make artifacts`)");
+    }
+
+    // 6. Full coordinator path (batching + dispatch + scatter).
+    let c = Coordinator::start(
+        Config {
+            batch_capacity: 1024,
+            max_wait: Duration::from_micros(200),
+            workers: 2,
+            queue_limit: 8192,
+        },
+        native_factory(cfg, true),
+    );
+    b.run_elems("coordinator_roundtrip_256w", 256, || {
+        black_box(c.eval_blocking(words32[..256].to_vec()).unwrap())
+    });
+
+    // Perf summary vs targets (DESIGN.md §9).
+    println!("\n--- perf targets ---");
+    if let Some(m) = b.get("tanh_unit_memo_batch_1k") {
+        let tp = m.throughput().unwrap();
+        println!(
+            "memoized unit: {:.2e} tanh/s (target >= 1e8): {}",
+            tp,
+            if tp >= 1e8 { "MET" } else { "MISSED" }
+        );
+    }
+    if let (Some(unit_m), Some(coord)) = (
+        b.get("tanh_unit_memo_batch_1k"),
+        b.get("coordinator_roundtrip_256w"),
+    ) {
+        let per_word_unit = unit_m.mean_ns / 1024.0;
+        let per_word_coord = coord.mean_ns / 256.0;
+        println!(
+            "coordinator overhead: {:.1} ns/word vs {:.2} ns/word raw \
+             (batching window dominates at low load — see EXPERIMENTS.md)",
+            per_word_coord, per_word_unit
+        );
+    }
+}

@@ -1,0 +1,355 @@
+//! Fixed-point neural-accelerator simulator.
+//!
+//! The paper's motivation (§I): the tanh unit sits next to the MAC array
+//! in DNN/RNN accelerators, and the *accuracy of the activation function
+//! impacts the accuracy of the network*. This module provides the
+//! substrate to measure that end to end:
+//!
+//! * [`MacArray`]   — integer multiply-accumulate with configurable
+//!   weight/activation precision (the accelerator datapath).
+//! * [`DenseNet`]   — quantized-inference MLP whose activations route
+//!   through any [`crate::analysis::TanhImpl`].
+//! * [`LstmCellFx`] — fixed-point LSTM step (tanh + sigmoid via the
+//!   same unit, 1-bit pre-shift).
+//! * [`trainer`]    — a small float MLP trainer (SGD + backprop) so
+//!   accuracy experiments run on an actually-trained network, not random
+//!   weights.
+
+pub mod trainer;
+
+use crate::analysis::TanhImpl;
+use crate::fixed::{QFormat, Round};
+
+/// Integer MAC array: y = W·x + b with product accumulation in i64.
+///
+/// Weights are quantized to `w_fmt`, activations arrive as `a_fmt`
+/// words; the accumulator carries `w_frac + a_frac` fractional bits and
+/// is rescaled to `a_fmt` on the way out (the accelerator's requantize).
+pub struct MacArray {
+    pub w_fmt: QFormat,
+    pub a_fmt: QFormat,
+}
+
+impl MacArray {
+    pub fn new(w_fmt: QFormat, a_fmt: QFormat) -> Self {
+        MacArray { w_fmt, a_fmt }
+    }
+
+    /// One output row: dot(w_row, x) + b, requantized to `a_fmt`.
+    pub fn mac_row(&self, w_row: &[i64], x: &[i64], b: i64) -> i64 {
+        debug_assert_eq!(w_row.len(), x.len());
+        let mut acc: i64 = 0;
+        for (&w, &a) in w_row.iter().zip(x) {
+            acc += w * a;
+        }
+        // b arrives in a_fmt; align to the accumulator scale.
+        acc += b << self.w_fmt.frac_bits;
+        // Requantize: round from (w_frac + a_frac) down to a_frac.
+        let shift = self.w_fmt.frac_bits;
+        let y = (acc + (1i64 << (shift - 1))) >> shift;
+        y.clamp(self.a_fmt.min_word(), self.a_fmt.max_word())
+    }
+
+    /// Full layer: `w` is row-major `[out][in]`.
+    pub fn matvec(&self, w: &[Vec<i64>], x: &[i64], b: &[i64]) -> Vec<i64> {
+        w.iter()
+            .zip(b)
+            .map(|(row, &bb)| self.mac_row(row, x, bb))
+            .collect()
+    }
+}
+
+/// A quantized dense network with pluggable activation hardware.
+pub struct DenseNet<'a> {
+    pub mac: MacArray,
+    /// Per-layer quantized weights `[out][in]` and biases (a_fmt words).
+    pub weights: Vec<Vec<Vec<i64>>>,
+    pub biases: Vec<Vec<i64>>,
+    /// Activation unit used between layers (not after the last).
+    pub act: &'a dyn TanhImpl,
+}
+
+impl<'a> DenseNet<'a> {
+    /// Quantize a float network for this accelerator.
+    pub fn from_float(
+        layers: &[(Vec<Vec<f64>>, Vec<f64>)],
+        w_fmt: QFormat,
+        a_fmt: QFormat,
+        act: &'a dyn TanhImpl,
+    ) -> Self {
+        let weights = layers
+            .iter()
+            .map(|(w, _)| {
+                w.iter()
+                    .map(|row| {
+                        row.iter()
+                            .map(|&v| w_fmt.quantize(v, Round::Nearest))
+                            .collect()
+                    })
+                    .collect()
+            })
+            .collect();
+        let biases = layers
+            .iter()
+            .map(|(_, b)| {
+                b.iter().map(|&v| a_fmt.quantize(v, Round::Nearest)).collect()
+            })
+            .collect();
+        DenseNet { mac: MacArray::new(w_fmt, a_fmt), weights, biases, act }
+    }
+
+    /// Forward one input vector (float in, float logits out).
+    pub fn forward(&self, x: &[f64]) -> Vec<f64> {
+        let a_fmt = self.mac.a_fmt;
+        let mut act_words: Vec<i64> = x
+            .iter()
+            .map(|&v| a_fmt.quantize(v, Round::Nearest))
+            .collect();
+        let last = self.weights.len() - 1;
+        for (li, (w, b)) in self.weights.iter().zip(&self.biases).enumerate() {
+            let z = self.mac.matvec(w, &act_words, b);
+            if li == last {
+                return z.iter().map(|&v| a_fmt.dequantize(v)).collect();
+            }
+            // Activation hardware: a_fmt word in, out_format word out,
+            // then realign to a_fmt for the next MAC.
+            act_words = z
+                .iter()
+                .map(|&v| {
+                    let t = self.act.eval_word(self.to_act_in(v));
+                    self.from_act_out(t)
+                })
+                .collect();
+        }
+        unreachable!()
+    }
+
+    fn to_act_in(&self, v: i64) -> i64 {
+        let a = self.mac.a_fmt;
+        let i = self.act.in_format();
+        let d = i.frac_bits as i32 - a.frac_bits as i32;
+        let w = if d >= 0 { v << d } else { v >> -d };
+        w.clamp(i.min_word(), i.max_word())
+    }
+
+    fn from_act_out(&self, t: i64) -> i64 {
+        let o = self.act.out_format();
+        let a = self.mac.a_fmt;
+        let d = o.frac_bits as i32 - a.frac_bits as i32;
+        if d >= 0 {
+            t >> d
+        } else {
+            t << -d
+        }
+    }
+
+    /// Classification accuracy over a dataset.
+    pub fn accuracy(&self, xs: &[Vec<f64>], labels: &[usize]) -> f64 {
+        let mut correct = 0usize;
+        for (x, &l) in xs.iter().zip(labels) {
+            let logits = self.forward(x);
+            let pred = argmax(&logits);
+            if pred == l {
+                correct += 1;
+            }
+        }
+        correct as f64 / xs.len() as f64
+    }
+}
+
+pub fn argmax(v: &[f64]) -> usize {
+    v.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap()
+}
+
+/// Fixed-point LSTM cell using the tanh unit for all nonlinearities.
+pub struct LstmCellFx<'a> {
+    pub mac: MacArray,
+    /// `[4H][I]` input kernel, gate order (i, f, g, o).
+    pub wx: Vec<Vec<i64>>,
+    /// `[4H][H]` recurrent kernel.
+    pub wh: Vec<Vec<i64>>,
+    pub b: Vec<i64>,
+    pub act: &'a dyn TanhImpl,
+    pub hidden: usize,
+}
+
+impl<'a> LstmCellFx<'a> {
+    /// One step. `x`, `h`, `c` are a_fmt word vectors; returns (h', c').
+    pub fn step(&self, x: &[i64], h: &[i64], c: &[i64]) -> (Vec<i64>, Vec<i64>) {
+        let hid = self.hidden;
+        let a_fmt = self.mac.a_fmt;
+        let zx = self.mac.matvec(&self.wx, x, &vec![0; 4 * hid]);
+        let zh = self.mac.matvec(&self.wh, h, &self.b);
+        let z: Vec<i64> = zx.iter().zip(&zh).map(|(a, b)| a + b).collect();
+
+        let sig = |v: i64| -> i64 {
+            // sigma(z) = (1 + tanh(z/2)) / 2 : pre-shift 1 bit, post
+            // average with 1.0 — all shifts in hardware.
+            let t = self.act_eval(v >> 1);
+            ((1i64 << a_fmt.frac_bits) + t) >> 1
+        };
+        let mut h_new = Vec::with_capacity(hid);
+        let mut c_new = Vec::with_capacity(hid);
+        for j in 0..hid {
+            let i_g = sig(z[j]);
+            let f_g = sig(z[hid + j]);
+            let g_g = self.act_eval(z[2 * hid + j]);
+            let o_g = sig(z[3 * hid + j]);
+            let f_frac = a_fmt.frac_bits;
+            let c1 = (f_g * c[j] + (1 << (f_frac - 1))) >> f_frac;
+            let c2 = (i_g * g_g + (1 << (f_frac - 1))) >> f_frac;
+            let cj = (c1 + c2).clamp(a_fmt.min_word(), a_fmt.max_word());
+            let hj = (o_g * self.act_eval(cj) + (1 << (f_frac - 1))) >> f_frac;
+            c_new.push(cj);
+            h_new.push(hj.clamp(a_fmt.min_word(), a_fmt.max_word()));
+        }
+        (h_new, c_new)
+    }
+
+    /// Activation through the hardware unit, realigned to a_fmt.
+    fn act_eval(&self, v: i64) -> i64 {
+        let a = self.mac.a_fmt;
+        let i = self.act.in_format();
+        let o = self.act.out_format();
+        let di = i.frac_bits as i32 - a.frac_bits as i32;
+        let w = if di >= 0 { v << di } else { v >> -di };
+        let t = self.act.eval_word(w.clamp(i.min_word(), i.max_word()));
+        let do_ = o.frac_bits as i32 - a.frac_bits as i32;
+        if do_ >= 0 {
+            t >> do_
+        } else {
+            t << -do_
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tanh::{TanhConfig, TanhUnit};
+
+    fn unit() -> TanhUnit {
+        TanhUnit::new(TanhConfig::s3_12()).unwrap()
+    }
+
+    #[test]
+    fn mac_row_basic() {
+        let mac = MacArray::new(QFormat::new(1, 8), QFormat::new(3, 12));
+        // w = 0.5 (128 at Q1.8), x = 1.0 (4096 at Q3.12), b = 0.25.
+        let y = mac.mac_row(&[128], &[4096], 1024);
+        // 0.5*1.0 + 0.25 = 0.75 -> 3072.
+        assert_eq!(y, 3072);
+    }
+
+    #[test]
+    fn mac_saturates() {
+        let mac = MacArray::new(QFormat::new(1, 8), QFormat::new(3, 12));
+        let big = vec![256i64; 64]; // 1.0 each
+        let x = vec![32767i64; 64]; // ~8.0 each
+        let y = mac.mac_row(&big, &x, 0);
+        assert_eq!(y, QFormat::new(3, 12).max_word());
+    }
+
+    #[test]
+    fn dense_net_matches_float_closely() {
+        // A hand-built 2-2-2 float net; quantized inference must track it.
+        let u = unit();
+        let layers = vec![
+            (
+                vec![vec![0.5, -0.25], vec![0.75, 0.5]],
+                vec![0.1, -0.1],
+            ),
+            (
+                vec![vec![1.0, -0.5], vec![0.25, 0.75]],
+                vec![0.0, 0.2],
+            ),
+        ];
+        let net = DenseNet::from_float(
+            &layers,
+            QFormat::new(1, 10),
+            QFormat::new(3, 12),
+            &u,
+        );
+        let x = [0.3, -0.7];
+        let got = net.forward(&x);
+        // float reference
+        let h0 = (0.5f64 * 0.3 - 0.25 * -0.7 + 0.1).tanh();
+        let h1 = (0.75f64 * 0.3 + 0.5 * -0.7 - 0.1).tanh();
+        let want = [h0 - 0.5 * h1, 0.25 * h0 + 0.75 * h1 + 0.2];
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 2e-3, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn lstm_cell_tracks_float() {
+        let u = unit();
+        let hid = 4usize;
+        let input = 3usize;
+        let mut rng = crate::util::rng::Rng::new(99);
+        let wfmt = QFormat::new(1, 10);
+        let afmt = QFormat::new(3, 12);
+        let fw =
+            |r: &mut crate::util::rng::Rng| r.normal() * 0.3;
+        let wx_f: Vec<Vec<f64>> = (0..4 * hid)
+            .map(|_| (0..input).map(|_| fw(&mut rng)).collect())
+            .collect();
+        let wh_f: Vec<Vec<f64>> = (0..4 * hid)
+            .map(|_| (0..hid).map(|_| fw(&mut rng)).collect())
+            .collect();
+        let b_f: Vec<f64> = (0..4 * hid).map(|_| fw(&mut rng)).collect();
+
+        let q = |m: &Vec<Vec<f64>>| -> Vec<Vec<i64>> {
+            m.iter()
+                .map(|r| r.iter().map(|&v| wfmt.quantize(v, Round::Nearest)).collect())
+                .collect()
+        };
+        let cell = LstmCellFx {
+            mac: MacArray::new(wfmt, afmt),
+            wx: q(&wx_f),
+            wh: q(&wh_f),
+            b: b_f.iter().map(|&v| afmt.quantize(v, Round::Nearest)).collect(),
+            act: &u,
+            hidden: hid,
+        };
+        let x_f: Vec<f64> = (0..input).map(|_| rng.normal() * 0.5).collect();
+        let h_f = vec![0.0; hid];
+        let c_f = vec![0.0; hid];
+        let x_w: Vec<i64> =
+            x_f.iter().map(|&v| afmt.quantize(v, Round::Nearest)).collect();
+        let (h_new, c_new) =
+            cell.step(&x_w, &vec![0; hid], &vec![0; hid]);
+
+        // Float reference.
+        let sig = |v: f64| 1.0 / (1.0 + (-v).exp());
+        for j in 0..hid {
+            let zi: f64 = (0..input).map(|k| wx_f[j][k] * x_f[k]).sum::<f64>() + b_f[j];
+            let zf: f64 =
+                (0..input).map(|k| wx_f[hid + j][k] * x_f[k]).sum::<f64>() + b_f[hid + j];
+            let zg: f64 =
+                (0..input).map(|k| wx_f[2 * hid + j][k] * x_f[k]).sum::<f64>() + b_f[2 * hid + j];
+            let zo: f64 =
+                (0..input).map(|k| wx_f[3 * hid + j][k] * x_f[k]).sum::<f64>() + b_f[3 * hid + j];
+            let c_ref = sig(zf) * c_f[j] + sig(zi) * zg.tanh();
+            let h_ref = sig(zo) * c_ref.tanh();
+            let _ = h_f;
+            assert!(
+                (afmt.dequantize(c_new[j]) - c_ref).abs() < 5e-3,
+                "c[{j}]"
+            );
+            assert!(
+                (afmt.dequantize(h_new[j]) - h_ref).abs() < 5e-3,
+                "h[{j}]"
+            );
+        }
+    }
+
+    #[test]
+    fn argmax_works() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.3]), 1);
+    }
+}

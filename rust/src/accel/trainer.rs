@@ -1,0 +1,228 @@
+//! Minimal float MLP trainer (SGD + backprop) and synthetic datasets.
+//!
+//! Accuracy experiments need a *trained* network: the paper's §I claim
+//! ("the accuracy of the activation function impacts the performance
+//! ... of the neural networks") only shows up when the weights encode a
+//! real decision boundary. No ML framework is available offline, so this
+//! is a small, dependency-free trainer for tanh MLP classifiers.
+
+use crate::util::rng::Rng;
+
+/// A float MLP: weights `[layer][out][in]`, biases `[layer][out]`.
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    pub weights: Vec<Vec<Vec<f64>>>,
+    pub biases: Vec<Vec<f64>>,
+}
+
+impl Mlp {
+    /// He/Xavier-ish init for `sizes = [in, h1, ..., out]`.
+    pub fn new(sizes: &[usize], rng: &mut Rng) -> Mlp {
+        let mut weights = Vec::new();
+        let mut biases = Vec::new();
+        for w in sizes.windows(2) {
+            let (fan_in, fan_out) = (w[0], w[1]);
+            let scale = (1.0 / fan_in as f64).sqrt();
+            weights.push(
+                (0..fan_out)
+                    .map(|_| (0..fan_in).map(|_| rng.normal() * scale).collect())
+                    .collect(),
+            );
+            biases.push(vec![0.0; fan_out]);
+        }
+        Mlp { weights, biases }
+    }
+
+    /// Forward pass storing post-activation values per layer.
+    fn forward_trace(&self, x: &[f64]) -> Vec<Vec<f64>> {
+        let mut acts = vec![x.to_vec()];
+        let last = self.weights.len() - 1;
+        for (li, (w, b)) in self.weights.iter().zip(&self.biases).enumerate() {
+            let prev = acts.last().unwrap();
+            let mut z: Vec<f64> = w
+                .iter()
+                .zip(b)
+                .map(|(row, &bb)| {
+                    row.iter().zip(prev).map(|(a, b)| a * b).sum::<f64>() + bb
+                })
+                .collect();
+            if li != last {
+                for v in z.iter_mut() {
+                    *v = v.tanh();
+                }
+            }
+            acts.push(z);
+        }
+        acts
+    }
+
+    pub fn forward(&self, x: &[f64]) -> Vec<f64> {
+        self.forward_trace(x).pop().unwrap()
+    }
+
+    /// One SGD step on a single example (cross-entropy over softmax).
+    /// Returns the loss.
+    pub fn sgd_step(&mut self, x: &[f64], label: usize, lr: f64) -> f64 {
+        let acts = self.forward_trace(x);
+        let logits = acts.last().unwrap();
+        let probs = softmax(logits);
+        let loss = -(probs[label].max(1e-12)).ln();
+
+        // dL/dz for the output layer.
+        let mut delta: Vec<f64> = probs
+            .iter()
+            .enumerate()
+            .map(|(i, &p)| p - if i == label { 1.0 } else { 0.0 })
+            .collect();
+
+        for li in (0..self.weights.len()).rev() {
+            let a_prev = &acts[li];
+            // Gradients + next delta (before this layer's activation).
+            let mut delta_prev = vec![0.0; a_prev.len()];
+            for (o, d) in delta.iter().enumerate() {
+                for (i, &a) in a_prev.iter().enumerate() {
+                    delta_prev[i] += self.weights[li][o][i] * d;
+                    self.weights[li][o][i] -= lr * d * a;
+                }
+                self.biases[li][o] -= lr * d;
+            }
+            if li > 0 {
+                // Backprop through tanh of the previous layer's output.
+                for (i, dp) in delta_prev.iter_mut().enumerate() {
+                    let a = acts[li][i];
+                    *dp *= 1.0 - a * a;
+                }
+                delta = delta_prev;
+            }
+        }
+        loss
+    }
+
+    /// Train for `epochs` passes; returns final train accuracy.
+    pub fn train(
+        &mut self,
+        xs: &[Vec<f64>],
+        labels: &[usize],
+        epochs: usize,
+        lr: f64,
+        rng: &mut Rng,
+    ) -> f64 {
+        let mut order: Vec<usize> = (0..xs.len()).collect();
+        for _ in 0..epochs {
+            rng.shuffle(&mut order);
+            for &i in &order {
+                self.sgd_step(&xs[i], labels[i], lr);
+            }
+        }
+        self.accuracy(xs, labels)
+    }
+
+    pub fn accuracy(&self, xs: &[Vec<f64>], labels: &[usize]) -> f64 {
+        let mut ok = 0;
+        for (x, &l) in xs.iter().zip(labels) {
+            if super::argmax(&self.forward(x)) == l {
+                ok += 1;
+            }
+        }
+        ok as f64 / xs.len() as f64
+    }
+
+    /// Export as the layer list `DenseNet::from_float` consumes.
+    pub fn layers(&self) -> Vec<(Vec<Vec<f64>>, Vec<f64>)> {
+        self.weights
+            .iter()
+            .cloned()
+            .zip(self.biases.iter().cloned())
+            .collect()
+    }
+}
+
+fn softmax(v: &[f64]) -> Vec<f64> {
+    let m = v.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    let exps: Vec<f64> = v.iter().map(|&x| (x - m).exp()).collect();
+    let s: f64 = exps.iter().sum();
+    exps.into_iter().map(|e| e / s).collect()
+}
+
+/// Synthetic two-spiral dataset (the classic nonlinear benchmark).
+pub fn spirals(n_per_class: usize, noise: f64, rng: &mut Rng) -> (Vec<Vec<f64>>, Vec<usize>) {
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for class in 0..2usize {
+        for i in 0..n_per_class {
+            let t = 0.5 + 3.0 * i as f64 / n_per_class as f64; // radius-ish
+            let ang = t * 2.6 + class as f64 * std::f64::consts::PI;
+            xs.push(vec![
+                t * ang.cos() * 0.5 + rng.normal() * noise,
+                t * ang.sin() * 0.5 + rng.normal() * noise,
+            ]);
+            ys.push(class);
+        }
+    }
+    (xs, ys)
+}
+
+/// Gaussian blobs, `k` classes in 2D.
+pub fn blobs(k: usize, n_per_class: usize, rng: &mut Rng) -> (Vec<Vec<f64>>, Vec<usize>) {
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for class in 0..k {
+        let ang = class as f64 / k as f64 * std::f64::consts::TAU;
+        let (cx, cy) = (1.4 * ang.cos(), 1.4 * ang.sin());
+        for _ in 0..n_per_class {
+            xs.push(vec![cx + rng.normal() * 0.35, cy + rng.normal() * 0.35]);
+            ys.push(class);
+        }
+    }
+    (xs, ys)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trains_blobs_to_high_accuracy() {
+        let mut rng = Rng::new(7);
+        let (xs, ys) = blobs(3, 60, &mut rng);
+        let mut net = Mlp::new(&[2, 16, 3], &mut rng);
+        let acc = net.train(&xs, &ys, 30, 0.05, &mut rng);
+        assert!(acc > 0.95, "train accuracy {acc}");
+    }
+
+    #[test]
+    fn trains_spirals_above_chance() {
+        let mut rng = Rng::new(8);
+        let (xs, ys) = spirals(120, 0.03, &mut rng);
+        let mut net = Mlp::new(&[2, 24, 2], &mut rng);
+        let acc = net.train(&xs, &ys, 80, 0.03, &mut rng);
+        assert!(acc > 0.85, "train accuracy {acc}");
+    }
+
+    #[test]
+    fn loss_decreases() {
+        let mut rng = Rng::new(9);
+        let (xs, ys) = blobs(2, 40, &mut rng);
+        let mut net = Mlp::new(&[2, 8, 2], &mut rng);
+        let mut first = 0.0;
+        let mut last = 0.0;
+        for e in 0..20 {
+            let mut total = 0.0;
+            for (x, &y) in xs.iter().zip(&ys) {
+                total += net.sgd_step(x, y, 0.05);
+            }
+            if e == 0 {
+                first = total;
+            }
+            last = total;
+        }
+        assert!(last < first * 0.5, "loss {first} -> {last}");
+    }
+
+    #[test]
+    fn softmax_normalizes() {
+        let p = softmax(&[1.0, 2.0, 3.0]);
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+}

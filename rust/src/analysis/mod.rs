@@ -1,0 +1,180 @@
+//! Error-analysis harness: exhaustive/sampled accuracy sweeps over any
+//! fixed-point tanh implementation (the Table II engine, also used for
+//! baseline comparisons and ablations).
+
+use crate::fixed::{ErrorStats, QFormat};
+
+/// Any fixed-point tanh implementation: input word -> output word.
+pub trait TanhImpl {
+    fn eval_word(&self, x: i64) -> i64;
+    fn in_format(&self) -> QFormat;
+    fn out_format(&self) -> QFormat;
+    fn name(&self) -> String;
+
+    /// Hardware cost summary for comparison tables (optional).
+    fn cost(&self) -> Cost {
+        Cost::default()
+    }
+}
+
+/// Coarse hardware cost descriptors for baseline comparison tables.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Cost {
+    /// Bits of ROM/LUT storage.
+    pub lut_bits: u64,
+    /// Number of multipliers on the critical path datapath.
+    pub multipliers: u32,
+    /// Number of adders/subtractors.
+    pub adders: u32,
+    /// Rough comparator/mux count (range selection logic).
+    pub comparators: u32,
+}
+
+impl TanhImpl for crate::tanh::TanhUnit {
+    fn eval_word(&self, x: i64) -> i64 {
+        self.eval(x)
+    }
+
+    fn in_format(&self) -> QFormat {
+        self.config().in_format()
+    }
+
+    fn out_format(&self) -> QFormat {
+        self.config().out_format()
+    }
+
+    fn name(&self) -> String {
+        format!("velocity-factor ({})", self.config().describe())
+    }
+
+    fn cost(&self) -> Cost {
+        let cfg = self.config();
+        let lut_bits: u64 = cfg
+            .group_positions()
+            .iter()
+            .map(|g| (1u64 << g.len()) * (cfg.lut_bits as u64 + 1))
+            .sum();
+        Cost {
+            lut_bits,
+            // (groups-1) chain multipliers + 2 per NR stage + recompose.
+            multipliers: cfg.num_groups() - 1 + 2 * cfg.nr_stages + 1,
+            adders: 2 + cfg.nr_stages, // num, seed, 2-d*x per stage
+            comparators: 1,            // saturation compare
+        }
+    }
+}
+
+/// Exhaustive sweep over the full input domain of `imp`.
+pub fn exhaustive_error(imp: &dyn TanhImpl) -> ErrorStats {
+    let w = imp.in_format().width();
+    let half = 1i64 << (w - 1);
+    sweep_error(imp, (-half..half).collect::<Vec<_>>().as_slice())
+}
+
+/// Error sweep over explicit input words.
+pub fn sweep_error(imp: &dyn TanhImpl, xs: &[i64]) -> ErrorStats {
+    let inf = imp.in_format();
+    let outf = imp.out_format();
+    ErrorStats::collect(xs.iter().map(|&x| {
+        let got = outf.dequantize(imp.eval_word(x));
+        let want = inf.dequantize(x).tanh();
+        (x, got, want)
+    }))
+}
+
+/// Per-region error breakdown (pass / processing / saturation, after
+/// Zamanlooy's region taxonomy which the paper's §II discusses).
+#[derive(Debug, Clone)]
+pub struct RegionReport {
+    pub pass: ErrorStats,
+    pub processing: ErrorStats,
+    pub saturation: ErrorStats,
+}
+
+pub fn region_error(imp: &dyn TanhImpl) -> RegionReport {
+    let inf = imp.in_format();
+    let w = inf.width();
+    let half = 1i64 << (w - 1);
+    // Pass region |x| < 0.25 (tanh x ~ x within 0.52%), saturation where
+    // |tanh| > 0.996 (|x| > 3.1), processing between.
+    let lo = inf.quantize(0.25, crate::fixed::Round::Nearest);
+    let hi = inf.quantize(3.1, crate::fixed::Round::Nearest).min(half - 1);
+    let (mut pass, mut proc, mut sat) = (vec![], vec![], vec![]);
+    for x in -half..half {
+        let a = x.abs();
+        if a < lo {
+            pass.push(x);
+        } else if a <= hi {
+            proc.push(x);
+        } else {
+            sat.push(x);
+        }
+    }
+    RegionReport {
+        pass: sweep_error(imp, &pass),
+        processing: sweep_error(imp, &proc),
+        saturation: sweep_error(imp, &sat),
+    }
+}
+
+/// ULP-level histogram of output error (how many words are exact, off by
+/// one lsb, etc.) — a sharper view than max error alone.
+pub fn ulp_histogram(imp: &dyn TanhImpl, cap: i64) -> Vec<(i64, u64)> {
+    let inf = imp.in_format();
+    let outf = imp.out_format();
+    let w = inf.width();
+    let half = 1i64 << (w - 1);
+    let mut counts: std::collections::BTreeMap<i64, u64> = Default::default();
+    for x in -half..half {
+        let got = imp.eval_word(x);
+        let want = outf.quantize(inf.dequantize(x).tanh(), crate::fixed::Round::Nearest);
+        let ulp = (got - want).abs().min(cap);
+        *counts.entry(ulp).or_default() += 1;
+    }
+    counts.into_iter().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tanh::{TanhConfig, TanhUnit};
+
+    #[test]
+    fn exhaustive_16bit_matches_table2_band() {
+        let unit = TanhUnit::new(TanhConfig::s3_12()).unwrap();
+        let stats = exhaustive_error(&unit);
+        assert!(stats.max_abs < 7.7e-5, "{}", stats.max_abs);
+        assert!(stats.count == 65536);
+    }
+
+    #[test]
+    fn region_errors_ordered() {
+        let unit = TanhUnit::new(TanhConfig::s3_5()).unwrap();
+        let rep = region_error(&unit);
+        // Saturation region error bounded by ~1 lsb by construction.
+        assert!(rep.saturation.max_abs <= unit.out_format().lsb() * 1.01);
+        assert!(rep.pass.count > 0 && rep.processing.count > 0);
+    }
+
+    #[test]
+    fn ulp_histogram_mostly_exact() {
+        let unit = TanhUnit::new(TanhConfig::s3_5()).unwrap();
+        let hist = ulp_histogram(&unit, 4);
+        let total: u64 = hist.iter().map(|(_, c)| c).sum();
+        let exact = hist.iter().find(|(u, _)| *u == 0).map(|(_, c)| *c).unwrap_or(0);
+        let within1: u64 = hist.iter().filter(|(u, _)| *u <= 1).map(|(_, c)| *c).sum();
+        assert_eq!(total, 512);
+        assert!(exact * 10 >= total * 6, "exact {exact}/{total}"); // >= 60%
+        assert!(within1 * 100 >= total * 95, "within1 {within1}/{total}");
+    }
+
+    #[test]
+    fn cost_model_16bit() {
+        let unit = TanhUnit::new(TanhConfig::s3_12()).unwrap();
+        let c = unit.cost();
+        // 4 LUTs: 16+16+16+8 entries * 19 bits.
+        assert_eq!(c.lut_bits, (16 + 16 + 16 + 8) * 19);
+        // 3 chain + 6 NR + 1 recompose = 10.
+        assert_eq!(c.multipliers, 10);
+    }
+}

@@ -1,0 +1,208 @@
+//! Hyperbolic CORDIC: rotate through `artanh(2^-i)` micro-angles to
+//! accumulate `sinh x` and `cosh x`, then divide. Classic iterations
+//! with the mandatory repeats at i = 4, 13, 40 for convergence. High
+//! accuracy but one full adder-stage of latency *per iteration* — the
+//! "higher latency" family the paper's §V contrasts against.
+
+use crate::analysis::{Cost, TanhImpl};
+use crate::fixed::QFormat;
+
+/// Hyperbolic-mode CORDIC tanh.
+pub struct Cordic {
+    fi: QFormat,
+    fo: QFormat,
+    iters: u32,
+    work_frac: u32,
+    /// artanh(2^-i) angles at work_frac bits, with repeats.
+    angles: Vec<(u32, i64)>,
+    /// 1/K_h gain correction at work_frac bits.
+    inv_gain: i64,
+}
+
+impl Cordic {
+    pub fn new(fi: QFormat, fo: QFormat, iters: u32) -> Self {
+        let work_frac = 28u32.min(fo.frac_bits + 13);
+        let one = 1i64 << work_frac;
+        let mut angles = Vec::new();
+        let mut gain = 1.0f64;
+        let mut i = 1u32;
+        let mut count = 0;
+        let mut next_repeat = 4u32;
+        while count < iters {
+            let a = ((2f64).powi(-(i as i32))).atanh();
+            angles.push((i, (a * one as f64).round() as i64));
+            gain *= (1.0 - (2f64).powi(-2 * (i as i32))).sqrt();
+            count += 1;
+            if i == next_repeat && count < iters {
+                // repeat this i once for convergence
+                angles.push((i, (a * one as f64).round() as i64));
+                gain *= (1.0 - (2f64).powi(-2 * (i as i32))).sqrt();
+                count += 1;
+                next_repeat = next_repeat * 3 + 1; // 4, 13, 40...
+            }
+            i += 1;
+        }
+        Cordic {
+            fi,
+            fo,
+            iters,
+            work_frac,
+            angles,
+            inv_gain: ((1.0 / gain) * one as f64).round() as i64,
+        }
+    }
+
+    /// Max convergence angle Σ artanh(2^-i) (≈ 1.118 for standard set).
+    pub fn max_angle(&self) -> f64 {
+        self.angles.iter().map(|&(_, a)| a as f64).sum::<f64>()
+            / (1i64 << self.work_frac) as f64
+    }
+}
+
+impl TanhImpl for Cordic {
+    fn eval_word(&self, x: i64) -> i64 {
+        if x == 0 {
+            return 0; // zero-detect keeps exact oddness
+        }
+        let neg = x < 0;
+        let n = x.unsigned_abs() as i64;
+        let wf = self.work_frac;
+        let one = 1i64 << wf;
+
+        // Range reduction: tanh(x) for x > max_angle via
+        // tanh(a + k·ln2) identity is complex; hardware typically pairs
+        // CORDIC with a saturation region — convergence limit ~1.118, and
+        // for x > 1.118 we use tanh(x) = (tanh(x/2)·2)/(1+tanh²(x/2))
+        // applied recursively (halving shifts only).
+        let xw = n << (wf - self.fi.frac_bits);
+        let t = self.tanh_core(xw);
+        let t_out = ((t + (1i64 << (wf - self.fo.frac_bits - 1)))
+            >> (wf - self.fo.frac_bits))
+            .clamp(0, self.fo.max_word());
+        let _ = one;
+        if neg {
+            -t_out
+        } else {
+            t_out
+        }
+    }
+
+    fn in_format(&self) -> QFormat {
+        self.fi
+    }
+
+    fn out_format(&self) -> QFormat {
+        self.fo
+    }
+
+    fn name(&self) -> String {
+        format!("CORDIC[{} iters]", self.iters)
+    }
+
+    fn cost(&self) -> Cost {
+        Cost {
+            lut_bits: self.angles.len() as u64 * (self.work_frac as u64 + 2),
+            multipliers: 1, // final sinh/cosh divide (NR) amortized
+            adders: 3 * self.angles.len() as u32, // x, y, z updates / iter
+            comparators: self.angles.len() as u32,
+        }
+    }
+}
+
+impl Cordic {
+    /// tanh of a u·.work_frac word via doubling-reduction + CORDIC core.
+    fn tanh_core(&self, xw: i64) -> i64 {
+        let wf = self.work_frac;
+        let one = 1i64 << wf;
+        let limit = ((self.max_angle() - 0.05) * one as f64) as i64;
+        if xw > limit {
+            // tanh(2a) = 2 tanh a / (1 + tanh² a)
+            let th = self.tanh_core(xw >> 1);
+            let th2 = (th * th + (one >> 1)) >> wf;
+            let den = one + th2; // in [1, 2)
+            // Divide 2·th by den with a 3-stage NR on den/2 ∈ [0.5, 1).
+            let d = den >> 1;
+            let mut r = (11i64 << (wf - 2)) - (d << 1);
+            for _ in 0..3 {
+                let t0 = (d * r + (one >> 1)) >> wf;
+                r = (r * ((2 * one) - t0) + (one >> 1)) >> wf;
+            }
+            // 2·th / den = th · r / 2^wf   (since den = 2d)
+            return (th * r + (one >> 1)) >> wf;
+        }
+        // Rotation mode: drive z -> 0, accumulating (cosh, sinh).
+        let mut cx = self.inv_gain; // cosh accumulator (pre-scaled by 1/K)
+        let mut sy = 0i64; // sinh accumulator
+        let mut z = xw;
+        for &(i, a) in &self.angles {
+            let (dx, dy) = (sy >> i, cx >> i);
+            if z >= 0 {
+                cx += dx;
+                sy += dy;
+                z -= a;
+            } else {
+                cx -= dx;
+                sy -= dy;
+                z += a;
+            }
+        }
+        // tanh = sinh/cosh, cosh ∈ [1, ~1.7): NR on cosh/2.
+        let d = cx >> 1;
+        let mut r = (11i64 << (wf - 2)) - (d << 1);
+        for _ in 0..3 {
+            let t0 = (d * r + (one >> 1)) >> wf;
+            r = (r * ((2 * one) - t0) + (one >> 1)) >> wf;
+        }
+        ((sy >> 1) * r + (one >> 1)) >> wf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::exhaustive_error;
+    use crate::baselines::fmt16;
+
+    #[test]
+    fn angles_include_repeat_at_4() {
+        let (fi, fo) = fmt16();
+        let c = Cordic::new(fi, fo, 15);
+        let count4 = c.angles.iter().filter(|&&(i, _)| i == 4).count();
+        assert_eq!(count4, 2, "iteration 4 must repeat");
+        let count13 = c.angles.iter().filter(|&&(i, _)| i == 13).count();
+        assert_eq!(count13, 2, "iteration 13 must repeat");
+    }
+
+    #[test]
+    fn convergence_range() {
+        let (fi, fo) = fmt16();
+        let c = Cordic::new(fi, fo, 15);
+        assert!(c.max_angle() > 1.0 && c.max_angle() < 1.2);
+    }
+
+    #[test]
+    fn accurate_in_core_range(){
+        let (fi, fo) = fmt16();
+        let c = Cordic::new(fi, fo, 15);
+        let xs: Vec<i64> = (-4000..4000).collect(); // |x| < 0.98
+        let e = crate::analysis::sweep_error(&c, &xs);
+        assert!(e.max_abs < 3e-4, "{}", e.max_abs);
+    }
+
+    #[test]
+    fn doubling_extension_covers_full_domain() {
+        let (fi, fo) = fmt16();
+        let c = Cordic::new(fi, fo, 15);
+        let e = exhaustive_error(&c);
+        assert!(e.max_abs < 1e-3, "{}", e.max_abs);
+    }
+
+    #[test]
+    fn more_iterations_more_accurate() {
+        let (fi, fo) = fmt16();
+        let xs: Vec<i64> = (-4000..4000).step_by(7).collect();
+        let e8 = crate::analysis::sweep_error(&Cordic::new(fi, fo, 8), &xs).max_abs;
+        let e16 = crate::analysis::sweep_error(&Cordic::new(fi, fo, 16), &xs).max_abs;
+        assert!(e16 < e8, "e16 {e16} vs e8 {e8}");
+    }
+}

@@ -1,0 +1,193 @@
+//! DCT interpolation filter (Abdelsalam et al. [6]): between uniformly
+//! spaced samples of tanh, interpolate with an N-tap filter whose
+//! coefficients derive from the DCT basis (the DCTIF of HEVC motion
+//! interpolation). Achieves the highest accuracy of the published
+//! methods, at the cost of a large coefficient memory — the trade-off
+//! the paper's §II and §V call out.
+//!
+//! For each fractional phase `p` (sub-sample position), the filter
+//! coefficients `w_k(p)` are precomputed; evaluation is
+//! `y = Σ_k w_k(p) · tanh(x_i + k·step)` — `taps` multipliers plus an
+//! adder tree, with coefficients stored per phase.
+
+use crate::analysis::{Cost, TanhImpl};
+use crate::fixed::{QFormat, Round};
+
+/// DCT-based interpolation filter over uniform tanh samples.
+pub struct Dctif {
+    fi: QFormat,
+    fo: QFormat,
+    taps: usize,
+    phases: usize,
+    samples: Vec<i64>,
+    /// coeff[phase][tap], at `coeff_frac` fractional bits.
+    coeff: Vec<Vec<i64>>,
+    coeff_frac: u32,
+    step_shift: u32,
+}
+
+/// Ideal DCT-II interpolation weights for fractional offset `alpha` in
+/// [0,1) with `taps` symmetric taps.
+fn dct_weights(taps: usize, alpha: f64) -> Vec<f64> {
+    // Interpolate f(alpha) from samples at integer offsets
+    // j - taps/2 + 1 .. using the DCT-II basis over the tap window.
+    let n = taps as f64;
+    let centre = taps as f64 / 2.0 - 1.0 + alpha;
+    (0..taps)
+        .map(|j| {
+            // w_j = (1/N)(1 + 2 Σ_k cos(πk(2j+1)/2N) cos(πk(2c+1)/2N))
+            let mut w = 1.0 / n;
+            for k in 1..taps {
+                let kk = k as f64;
+                w += 2.0 / n
+                    * ((std::f64::consts::PI * kk * (2.0 * j as f64 + 1.0))
+                        / (2.0 * n))
+                        .cos()
+                    * ((std::f64::consts::PI * kk * (2.0 * centre + 1.0))
+                        / (2.0 * n))
+                        .cos();
+            }
+            w
+        })
+        .collect()
+}
+
+impl Dctif {
+    /// `taps`: filter length (4 in [6]); `samples_pow2`: number of tanh
+    /// samples over the positive domain (power of two).
+    pub fn new(fi: QFormat, fo: QFormat, taps: usize, samples_pow2: usize) -> Self {
+        assert!(samples_pow2.is_power_of_two() && taps >= 2);
+        let half = 1i64 << (fi.width() - 1);
+        let step_shift = (half as u64 / samples_pow2 as u64).trailing_zeros();
+        let step = 1i64 << step_shift;
+        // Extra guard samples at both ends for the filter window.
+        let guard = taps as i64;
+        let samples: Vec<i64> = (-guard..samples_pow2 as i64 + guard)
+            .map(|k| fo.quantize(fi.dequantize(k * step).tanh(), Round::Nearest))
+            .collect();
+        // Phase resolution: 128 fractional phases keeps the phase
+        // quantization below the filter's own error (this is exactly the
+        // "huge memory for storing the coefficients" cost of [6]).
+        let phases = 128usize;
+        let coeff_frac = 14u32;
+        let coeff = (0..phases)
+            .map(|p| {
+                dct_weights(taps, p as f64 / phases as f64)
+                    .into_iter()
+                    .map(|w| (w * (1i64 << coeff_frac) as f64).round() as i64)
+                    .collect()
+            })
+            .collect();
+        Dctif { fi, fo, taps, phases, samples, coeff, coeff_frac, step_shift }
+    }
+
+    pub fn coefficient_bits(&self) -> u64 {
+        (self.phases * self.taps) as u64 * (self.coeff_frac as u64 + 2)
+            + self.samples.len() as u64 * self.fo.width() as u64
+    }
+}
+
+impl TanhImpl for Dctif {
+    fn eval_word(&self, x: i64) -> i64 {
+        let neg = x < 0;
+        let n = x.unsigned_abs() as i64;
+        let guard = self.taps as i64;
+        let idx = n >> self.step_shift;
+        let frac = n & ((1i64 << self.step_shift) - 1);
+        let phase = ((frac * self.phases as i64) >> self.step_shift) as usize;
+        let w = &self.coeff[phase];
+        // Window starts at idx - taps/2 + 1.
+        let base = idx - self.taps as i64 / 2 + 1 + guard;
+        let mut acc = 0i64;
+        for (k, &wk) in w.iter().enumerate() {
+            let s = self
+                .samples
+                .get((base + k as i64) as usize)
+                .copied()
+                .unwrap_or(self.fo.max_word());
+            acc += wk * s;
+        }
+        let t = ((acc + (1i64 << (self.coeff_frac - 1))) >> self.coeff_frac)
+            .clamp(0, self.fo.max_word());
+        if neg {
+            -t
+        } else {
+            t
+        }
+    }
+
+    fn in_format(&self) -> QFormat {
+        self.fi
+    }
+
+    fn out_format(&self) -> QFormat {
+        self.fo
+    }
+
+    fn name(&self) -> String {
+        format!("DCTIF[{} taps, {} samples]", self.taps,
+                self.samples.len() - 2 * self.taps)
+    }
+
+    fn cost(&self) -> Cost {
+        Cost {
+            lut_bits: self.coefficient_bits(),
+            multipliers: self.taps as u32,
+            adders: self.taps as u32,
+            comparators: 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::exhaustive_error;
+    use crate::baselines::fmt16;
+    use crate::baselines::pwl::Pwl;
+
+    #[test]
+    fn weights_sum_to_one() {
+        for alpha in [0.0, 0.25, 0.5, 0.75] {
+            let w = dct_weights(4, alpha);
+            let s: f64 = w.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9, "alpha={alpha}: sum {s}");
+        }
+    }
+
+    #[test]
+    fn integer_phase_reproduces_sample() {
+        let w = dct_weights(4, 0.0);
+        // At alpha=0 the filter should (nearly) select the centre sample.
+        assert!(w[1] > 0.9, "{w:?}");
+    }
+
+    #[test]
+    fn beats_pwl_at_same_sample_count() {
+        // [6]'s claim: higher accuracy than interpolation baselines.
+        let (fi, fo) = fmt16();
+        let d = Dctif::new(fi, fo, 4, 64);
+        let p = Pwl::new(fi, fo, 64);
+        let ed = exhaustive_error(&d).max_abs;
+        let ep = exhaustive_error(&p).max_abs;
+        assert!(ed < ep, "dctif {ed} vs pwl {ep}");
+    }
+
+    #[test]
+    fn large_memory_cost() {
+        // ... but it pays in coefficient/sample storage (paper §V).
+        let (fi, fo) = fmt16();
+        let d = Dctif::new(fi, fo, 4, 64);
+        let p = Pwl::new(fi, fo, 64);
+        assert!(d.cost().lut_bits > 2 * p.cost().lut_bits);
+    }
+
+    #[test]
+    fn odd() {
+        let (fi, fo) = fmt16();
+        let d = Dctif::new(fi, fo, 4, 64);
+        for x in [3i64, 777, 10000, 32767] {
+            assert_eq!(d.eval_word(x), -d.eval_word(-x));
+        }
+    }
+}

@@ -1,0 +1,110 @@
+//! Uniform lookup table: the simplest published implementation — store
+//! `tanh` at equally spaced points over the positive domain and return
+//! the nearest entry. The paper's §II notes the accuracy/area tension:
+//! the flat saturation tail wastes entries that the steep origin needs.
+
+use crate::analysis::{Cost, TanhImpl};
+use crate::fixed::{QFormat, Round};
+
+/// Nearest-entry uniform LUT over `[0, max_input]`.
+pub struct UniformLut {
+    fi: QFormat,
+    fo: QFormat,
+    entries: Vec<i64>,
+    /// Input words per LUT step (power of two).
+    step_shift: u32,
+}
+
+impl UniformLut {
+    /// `size` must be a power of two covering the positive input domain.
+    pub fn new(fi: QFormat, fo: QFormat, size: usize) -> Self {
+        assert!(size.is_power_of_two());
+        let half = 1i64 << (fi.width() - 1);
+        let step_shift = (half as u64 / size as u64).trailing_zeros();
+        let step = 1i64 << step_shift;
+        // Entry k covers [k*step, (k+1)*step); sample the interval centre
+        // (halves the worst-case error vs sampling the left edge).
+        let entries = (0..size as i64)
+            .map(|k| {
+                let centre = k * step + step / 2;
+                fo.quantize(fi.dequantize(centre).tanh(), Round::Nearest)
+            })
+            .collect();
+        UniformLut { fi, fo, entries, step_shift }
+    }
+
+    pub fn size(&self) -> usize {
+        self.entries.len()
+    }
+}
+
+impl TanhImpl for UniformLut {
+    fn eval_word(&self, x: i64) -> i64 {
+        if x == 0 {
+            return 0; // keep tanh(0) = 0 exactly (oddness)
+        }
+        let neg = x < 0;
+        let n = x.unsigned_abs() as i64;
+        let idx = ((n >> self.step_shift) as usize).min(self.entries.len() - 1);
+        let t = self.entries[idx];
+        if neg {
+            -t
+        } else {
+            t
+        }
+    }
+
+    fn in_format(&self) -> QFormat {
+        self.fi
+    }
+
+    fn out_format(&self) -> QFormat {
+        self.fo
+    }
+
+    fn name(&self) -> String {
+        format!("uniform-LUT[{}]", self.entries.len())
+    }
+
+    fn cost(&self) -> Cost {
+        Cost {
+            lut_bits: self.entries.len() as u64 * self.fo.width() as u64,
+            multipliers: 0,
+            adders: 0,
+            comparators: 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::exhaustive_error;
+    use crate::baselines::{fmt16, fmt8};
+
+    #[test]
+    fn error_scales_inversely_with_size() {
+        let (fi, fo) = fmt16();
+        let e64 = exhaustive_error(&UniformLut::new(fi, fo, 64)).max_abs;
+        let e512 = exhaustive_error(&UniformLut::new(fi, fo, 512)).max_abs;
+        // 8x entries ~> ~8x lower max error (linear in step size).
+        assert!(e512 < e64 / 4.0, "e64={e64} e512={e512}");
+    }
+
+    #[test]
+    fn centre_sampling_beats_half_step() {
+        let (fi, fo) = fmt16();
+        let lut = UniformLut::new(fi, fo, 256);
+        let e = exhaustive_error(&lut);
+        // step = 8/256 = 1/32 in x; max slope 1 -> err <= step/2 + lsb.
+        assert!(e.max_abs <= 1.0 / 64.0 + 2.0 * fo.lsb(), "{}", e.max_abs);
+    }
+
+    #[test]
+    fn odd_and_saturating() {
+        let (fi, fo) = fmt8();
+        let lut = UniformLut::new(fi, fo, 64);
+        assert_eq!(lut.eval_word(-100), -lut.eval_word(100));
+        assert!(fo.dequantize(lut.eval_word(255)) > 0.98);
+    }
+}

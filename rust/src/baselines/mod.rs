@@ -1,0 +1,89 @@
+//! Baseline tanh implementations from the paper's literature review
+//! (§II), all in fixed point against the same [`crate::analysis::TanhImpl`]
+//! interface so the comparison benches can sweep accuracy vs hardware
+//! cost uniformly:
+//!
+//! | module      | reference                  | idea                                |
+//! |-------------|----------------------------|-------------------------------------|
+//! | [`lut`]     | classic                    | uniform nearest-entry lookup        |
+//! | [`ralut`]   | Leboeuf et al. [1]         | range-addressable (variable-step) LUT |
+//! | [`twostep`] | Namin et al. [2]           | coarse linear+saturation, fine LUT  |
+//! | [`zamanlooy`]| Zamanlooy & Mirhassani [3]| pass / processing / saturation regions |
+//! | [`pwl`]     | Lin & Wang [4]             | piecewise-linear interpolation      |
+//! | [`taylor`]  | Adnan et al. [5]           | truncated Taylor series             |
+//! | [`dctif`]   | Abdelsalam et al. [6]      | DCT interpolation filter            |
+//! | [`pade`]    | Hajduk [7]                 | Padé rational approximant + divider |
+//! | [`cordic`]  | classic                    | hyperbolic CORDIC (sinh/cosh + div) |
+//!
+//! All of them target the paper's canonical formats (s3.12 -> s.15 and
+//! s3.5 -> s.7) but are parameterized over [`crate::fixed::QFormat`].
+
+pub mod cordic;
+pub mod dctif;
+pub mod lut;
+pub mod pade;
+pub mod pwl;
+pub mod ralut;
+pub mod taylor;
+pub mod twostep;
+pub mod zamanlooy;
+
+use crate::analysis::TanhImpl;
+use crate::fixed::QFormat;
+
+/// The standard 16-bit evaluation formats used across baselines.
+pub fn fmt16() -> (QFormat, QFormat) {
+    (QFormat::new(3, 12), QFormat::new(0, 15))
+}
+
+/// The standard 8-bit evaluation formats.
+pub fn fmt8() -> (QFormat, QFormat) {
+    (QFormat::new(3, 5), QFormat::new(0, 7))
+}
+
+/// Construct the full baseline suite at comparable (16-bit) operating
+/// points, for the comparison bench.
+pub fn suite16() -> Vec<Box<dyn TanhImpl>> {
+    let (fi, fo) = fmt16();
+    vec![
+        Box::new(lut::UniformLut::new(fi, fo, 256)),
+        Box::new(ralut::RangeLut::new(fi, fo, 6)),
+        Box::new(twostep::TwoStep::new(fi, fo, 64)),
+        Box::new(zamanlooy::Zamanlooy::new(fi, fo, 7)),
+        Box::new(pwl::Pwl::new(fi, fo, 32)),
+        Box::new(taylor::Taylor::new(fi, fo, 3)),
+        Box::new(taylor::Taylor::new(fi, fo, 4)),
+        Box::new(dctif::Dctif::new(fi, fo, 4, 64)),
+        Box::new(pade::Pade::new(fi, fo, 3)),
+        Box::new(cordic::Cordic::new(fi, fo, 15)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::sweep_error;
+
+    #[test]
+    fn suite_all_odd_and_bounded() {
+        for imp in suite16() {
+            for x in [0i64, 3, 700, 4096, 12000, 32767] {
+                let y = imp.eval_word(x);
+                let yn = imp.eval_word(-x);
+                assert_eq!(y, -yn, "{} not odd at {x}", imp.name());
+                assert!(y.abs() < 1 << 15, "{} out of range", imp.name());
+            }
+        }
+    }
+
+    #[test]
+    fn suite_sane_accuracy() {
+        // Every baseline must be a plausible tanh (max err < 0.06 —
+        // even the crudest LUT at 256 entries).
+        let xs: Vec<i64> = (-32768..32768).step_by(37).collect();
+        for imp in suite16() {
+            let e = sweep_error(imp.as_ref(), &xs);
+            assert!(e.max_abs < 0.06, "{}: {}", imp.name(), e.max_abs);
+        }
+    }
+}

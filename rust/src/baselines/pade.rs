@@ -1,0 +1,152 @@
+//! Padé approximant (Hajduk [7]): rational approximation
+//!
+//! * order 2: `tanh x ≈ x(15 + x²) / (15 + 6x²)`      ([3/2] Padé)
+//! * order 3: `tanh x ≈ x(105 + 10x²) / (105 + 45x² + x⁴)` ([5/4] Padé)
+//!
+//! evaluated in fixed point, with the same Newton-Raphson reciprocal the
+//! velocity-factor unit uses for its divider. The rational form is very
+//! accurate near 0 and degrades past |x| ≈ 2–3, where it hands over to
+//! saturation. The paper's §V: "higher accuracy implementations, such as
+//! using Padé approximants ... have higher latencies" — the divider sits
+//! on the critical path here with *wide* operands, unlike the VF method
+//! where it only sees the final (0,1) fraction.
+
+use crate::analysis::{Cost, TanhImpl};
+use crate::fixed::{round_mul, QFormat, Round};
+
+/// Fixed-point Padé tanh with an NR divider (3 stages).
+pub struct Pade {
+    fi: QFormat,
+    fo: QFormat,
+    order: u32,
+    work_frac: u32,
+    sat_word: i64,
+}
+
+impl Pade {
+    /// `order`: 2 -> [3/2], 3 -> [5/4].
+    pub fn new(fi: QFormat, fo: QFormat, order: u32) -> Self {
+        assert!((2..=3).contains(&order));
+        // Saturation handover where the approximant's error crosses ~lsb
+        // of a 16-bit output: |x| ~ 2.1 for [3/2], 3.3 for [5/4].
+        let sat_x = if order == 2 { 2.1 } else { 3.3 };
+        Pade {
+            fi,
+            fo,
+            order,
+            work_frac: 20,
+            sat_word: fi.quantize(sat_x, Round::Nearest),
+        }
+    }
+}
+
+impl TanhImpl for Pade {
+    fn eval_word(&self, x: i64) -> i64 {
+        let neg = x < 0;
+        let n = x.unsigned_abs() as i64;
+        let wf = self.work_frac;
+        let one = 1i64 << wf;
+
+        let t = if n >= self.sat_word {
+            self.fo.max_word()
+        } else {
+            let xw = n << (wf - self.fi.frac_bits);
+            let x2 = round_mul(xw, xw, wf);
+            // Numerator / denominator scaled by 1/105 (or 1/15) so both
+            // stay in a narrow fixed-point range.
+            let (num, den) = if self.order == 2 {
+                // x(15 + x²)/15 over (15 + 6x²)/15
+                let num = round_mul(xw, one + x2 / 15, wf);
+                let den = one + (2 * x2) / 5;
+                (num, den)
+            } else {
+                let x4 = round_mul(x2, x2, wf);
+                let num = round_mul(xw, one + (2 * x2) / 21, wf);
+                let den = one + (3 * x2) / 7 + x4 / 105;
+                (num, den)
+            };
+            // NR reciprocal of den ∈ [1, ~5): normalize to [0.5, 1).
+            let shift = 64 - (den as u64).leading_zeros() - 1; // msb position
+            let dn = (den << wf) >> (shift + 1); // u0.wf in [0.5, 1)
+            let mut r = (11i64 << (wf - 2)) - (dn << 1); // 2.75 - 2d
+            for _ in 0..3 {
+                let t0 = round_mul(dn, r, wf);
+                r = round_mul(r, (2i64 << wf) - t0, wf);
+            }
+            // num/den = num * r / 2^(shift - wf + 1)... : den = dn * 2^(shift-wf+1)
+            let q = round_mul(num, r, wf); // num / dn
+            let down = shift as i32 - wf as i32 + 1;
+            let q = if down >= 0 { q >> down } else { q << -down };
+            ((q + (1i64 << (wf - self.fo.frac_bits - 1)))
+                >> (wf - self.fo.frac_bits))
+                .clamp(0, self.fo.max_word())
+        };
+        if neg {
+            -t
+        } else {
+            t
+        }
+    }
+
+    fn in_format(&self) -> QFormat {
+        self.fi
+    }
+
+    fn out_format(&self) -> QFormat {
+        self.fo
+    }
+
+    fn name(&self) -> String {
+        format!("Pade[{}]", if self.order == 2 { "3/2" } else { "5/4" })
+    }
+
+    fn cost(&self) -> Cost {
+        Cost {
+            lut_bits: 64,
+            // x², (x⁴), num, den muls + 2/NR stage + quotient.
+            multipliers: 2 + self.order + 6 + 1,
+            adders: 4,
+            comparators: 2, // saturation + normalization
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::{exhaustive_error, sweep_error};
+    use crate::baselines::fmt16;
+
+    #[test]
+    fn very_accurate_core_region() {
+        let (fi, fo) = fmt16();
+        let p = Pade::new(fi, fo, 3);
+        let core: Vec<i64> = (-6000..6000).collect(); // |x| < 1.47
+        let e = sweep_error(&p, &core);
+        assert!(e.max_abs < 1e-3, "{}", e.max_abs);
+    }
+
+    #[test]
+    fn order3_beats_order2() {
+        let (fi, fo) = fmt16();
+        let e2 = exhaustive_error(&Pade::new(fi, fo, 2)).max_abs;
+        let e3 = exhaustive_error(&Pade::new(fi, fo, 3)).max_abs;
+        assert!(e3 < e2, "order3 {e3} vs order2 {e2}");
+    }
+
+    #[test]
+    fn odd() {
+        let (fi, fo) = fmt16();
+        let p = Pade::new(fi, fo, 3);
+        for x in [1i64, 99, 5000, 20000] {
+            assert_eq!(p.eval_word(x), -p.eval_word(-x));
+        }
+    }
+
+    #[test]
+    fn overall_error_bounded() {
+        let (fi, fo) = fmt16();
+        let e = exhaustive_error(&Pade::new(fi, fo, 3));
+        assert!(e.max_abs < 0.01, "{}", e.max_abs);
+    }
+}

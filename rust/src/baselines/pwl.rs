@@ -1,0 +1,131 @@
+//! Piecewise-linear interpolation (Lin & Wang [4], and the curve in the
+//! paper's fig. 1): store `tanh` at uniformly spaced knots; between
+//! knots, interpolate linearly with one multiplier.
+
+use crate::analysis::{Cost, TanhImpl};
+use crate::fixed::{QFormat, Round};
+
+/// Uniform-knot PWL interpolator over the positive domain.
+pub struct Pwl {
+    fi: QFormat,
+    fo: QFormat,
+    /// Knot values tanh(k * step), k = 0..=segments.
+    knots: Vec<i64>,
+    /// Input words per segment (power of two).
+    step_shift: u32,
+}
+
+impl Pwl {
+    pub fn new(fi: QFormat, fo: QFormat, segments: usize) -> Self {
+        assert!(segments.is_power_of_two());
+        let half = 1i64 << (fi.width() - 1);
+        let step_shift = (half as u64 / segments as u64).trailing_zeros();
+        let step = 1i64 << step_shift;
+        let knots = (0..=segments as i64)
+            .map(|k| fo.quantize(fi.dequantize(k * step).tanh(), Round::Nearest))
+            .collect();
+        Pwl { fi, fo, knots, step_shift }
+    }
+
+    pub fn segments(&self) -> usize {
+        self.knots.len() - 1
+    }
+}
+
+impl TanhImpl for Pwl {
+    fn eval_word(&self, x: i64) -> i64 {
+        let neg = x < 0;
+        let n = x.unsigned_abs() as i64;
+        let idx = ((n >> self.step_shift) as usize).min(self.segments() - 1);
+        let frac = n & ((1i64 << self.step_shift) - 1);
+        let (y0, y1) = (self.knots[idx], self.knots[idx + 1]);
+        // y = y0 + (y1-y0) * frac / step  (one multiplier, one shift)
+        let t = y0
+            + (((y1 - y0) * frac + (1i64 << (self.step_shift - 1)))
+                >> self.step_shift);
+        if neg {
+            -t
+        } else {
+            t
+        }
+    }
+
+    fn in_format(&self) -> QFormat {
+        self.fi
+    }
+
+    fn out_format(&self) -> QFormat {
+        self.fo
+    }
+
+    fn name(&self) -> String {
+        format!("PWL[{}]", self.segments())
+    }
+
+    fn cost(&self) -> Cost {
+        Cost {
+            lut_bits: self.knots.len() as u64 * self.fo.width() as u64,
+            multipliers: 1,
+            adders: 2,
+            comparators: 1,
+        }
+    }
+}
+
+/// Generate the fig. 1 series: true tanh and its PWL approximation over
+/// a uniform x grid (for the `fig1_pwl` bench artifact).
+pub fn fig1_series(segments: usize, points: usize) -> Vec<(f64, f64, f64)> {
+    let (fi, fo) = (QFormat::new(3, 12), QFormat::new(0, 15));
+    let pwl = Pwl::new(fi, fo, segments);
+    (0..points)
+        .map(|i| {
+            let x = -4.0 + 8.0 * i as f64 / (points - 1) as f64;
+            let w = fi.quantize(x, Round::Nearest);
+            (x, x.tanh(), fo.dequantize(pwl.eval_word(w)))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::exhaustive_error;
+    use crate::baselines::fmt16;
+
+    #[test]
+    fn interpolation_quadratic_convergence() {
+        // PWL error ~ step^2 * max|f''|/8: 2x segments -> ~4x lower error.
+        let (fi, fo) = fmt16();
+        let e16 = exhaustive_error(&Pwl::new(fi, fo, 16)).max_abs;
+        let e64 = exhaustive_error(&Pwl::new(fi, fo, 64)).max_abs;
+        assert!(e64 < e16 / 6.0, "e16={e16} e64={e64}");
+    }
+
+    #[test]
+    fn exact_at_knots() {
+        let (fi, fo) = fmt16();
+        let pwl = Pwl::new(fi, fo, 32);
+        let step = 1i64 << pwl.step_shift;
+        for k in 0..8 {
+            let x = k * step;
+            let want = fo.quantize(fi.dequantize(x).tanh(), Round::Nearest);
+            assert_eq!(pwl.eval_word(x), want);
+        }
+    }
+
+    #[test]
+    fn fig1_series_shape() {
+        let series = fig1_series(8, 101);
+        assert_eq!(series.len(), 101);
+        // Approximation stays within the coarse-PWL band of the true curve
+        // (8 segments over [0,8): first-segment chord error of tanh peaks
+        // at 0.082 near x=0.555 — the visible gap in the paper's fig. 1).
+        for (x, t, p) in &series {
+            assert!((t - p).abs() < 0.09, "x={x}: {t} vs {p}");
+        }
+        // Odd-ish symmetry of the sampled series.
+        let (_, t0, p0) = series[0];
+        let (_, t1, p1) = series[100];
+        assert!((t0 + t1).abs() < 1e-9 && (p0 + p1).abs() < 1e-3);
+    }
+}

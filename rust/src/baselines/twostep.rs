@@ -1,0 +1,115 @@
+//! Two-step approximation (Namin et al. [2]): a *coarse* stage made of
+//! a limited slope-1 pass-through plus saturation (no memory at all),
+//! refined by a small LUT holding the residual `tanh(x) - coarse(x)`.
+
+use crate::analysis::{Cost, TanhImpl};
+use crate::fixed::{QFormat, Round};
+
+/// Coarse linear+saturation stage with a fine residual LUT.
+pub struct TwoStep {
+    fi: QFormat,
+    fo: QFormat,
+    /// residual[k] = tanh(centre_k) - coarse(centre_k).
+    residual: Vec<i64>,
+    step_shift: u32,
+}
+
+fn coarse(x: f64) -> f64 {
+    // min(x, 1): the crude linear+saturation estimate of [2].
+    x.min(1.0)
+}
+
+impl TwoStep {
+    pub fn new(fi: QFormat, fo: QFormat, size: usize) -> Self {
+        assert!(size.is_power_of_two());
+        let half = 1i64 << (fi.width() - 1);
+        let step_shift = (half as u64 / size as u64).trailing_zeros();
+        let step = 1i64 << step_shift;
+        let residual = (0..size as i64)
+            .map(|k| {
+                let centre = fi.dequantize(k * step + step / 2);
+                fo.quantize(centre.tanh() - coarse(centre), Round::Nearest)
+            })
+            .collect();
+        TwoStep { fi, fo, residual, step_shift }
+    }
+}
+
+impl TanhImpl for TwoStep {
+    fn eval_word(&self, x: i64) -> i64 {
+        let neg = x < 0;
+        let n = x.unsigned_abs() as i64;
+        // Coarse: min(x, 1) in output format — a shift and a clamp.
+        let shift = self.fo.frac_bits as i32 - self.fi.frac_bits as i32;
+        let lin = if shift >= 0 { n << shift } else { n >> -shift };
+        let c = lin.min(1i64 << self.fo.frac_bits);
+        // Fine: residual LUT on the high bits.
+        let idx = ((n >> self.step_shift) as usize).min(self.residual.len() - 1);
+        let t = (c + self.residual[idx]).clamp(0, self.fo.max_word());
+        if neg {
+            -t
+        } else {
+            t
+        }
+    }
+
+    fn in_format(&self) -> QFormat {
+        self.fi
+    }
+
+    fn out_format(&self) -> QFormat {
+        self.fo
+    }
+
+    fn name(&self) -> String {
+        format!("two-step[{}]", self.residual.len())
+    }
+
+    fn cost(&self) -> Cost {
+        Cost {
+            lut_bits: self.residual.len() as u64 * self.fo.width() as u64,
+            multipliers: 0,
+            adders: 1,
+            comparators: 2,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::exhaustive_error;
+    use crate::baselines::fmt16;
+    use crate::baselines::lut::UniformLut;
+
+    #[test]
+    fn beats_plain_lut_at_equal_size() {
+        // Residual has far smaller dynamic range than tanh itself, so the
+        // same entry count quantizes it better.
+        let (fi, fo) = fmt16();
+        let ts = TwoStep::new(fi, fo, 64);
+        let uni = UniformLut::new(fi, fo, 64);
+        let e_ts = exhaustive_error(&ts).max_abs;
+        let e_uni = exhaustive_error(&uni).max_abs;
+        assert!(e_ts < e_uni, "two-step {e_ts} vs uniform {e_uni}");
+    }
+
+    #[test]
+    fn near_zero_is_linear_dominated() {
+        let (fi, fo) = fmt16();
+        let ts = TwoStep::new(fi, fo, 64);
+        // In |x| < 0.2 the pass-through carries the signal; error small.
+        let near: Vec<i64> = (-800..800).collect();
+        let e = crate::analysis::sweep_error(&ts, &near);
+        assert!(e.max_abs < 6e-3, "{}", e.max_abs);
+    }
+
+    #[test]
+    fn odd() {
+        let (fi, fo) = fmt16();
+        let ts = TwoStep::new(fi, fo, 64);
+        for x in [1i64, 50, 4096, 30000] {
+            assert_eq!(ts.eval_word(x), -ts.eval_word(-x));
+        }
+    }
+}

@@ -1,0 +1,141 @@
+//! Three-region implementation (Zamanlooy & Mirhassani [3]): exploit the
+//! odd symmetry and split the positive domain into
+//!
+//! * **pass region** `x < a`: `tanh x ≈ x` (pure wiring / shift),
+//! * **processing region** `a <= x < b`: a small LUT ("bit-level
+//!   mapping" — combinational logic synthesized from the truth table),
+//! * **saturation region** `x >= b`: constant `1 - lsb`.
+
+use crate::analysis::{Cost, TanhImpl};
+use crate::fixed::{QFormat, Round};
+
+/// Three-region tanh with a `2^proc_bits`-entry processing-region map.
+pub struct Zamanlooy {
+    fi: QFormat,
+    fo: QFormat,
+    /// Pass-region upper bound (input word).
+    pass_end: i64,
+    /// Saturation-region lower bound (input word).
+    sat_start: i64,
+    proc: Vec<i64>,
+    proc_shift: u32,
+}
+
+impl Zamanlooy {
+    /// `proc_bits`: log2 of the processing-region table size.
+    pub fn new(fi: QFormat, fo: QFormat, proc_bits: u32) -> Self {
+        // Region boundaries from [3]: pass while |tanh x - x| < lsb/2;
+        // saturate when 1 - tanh x < lsb/2.
+        let lsb = fo.lsb();
+        // tanh x ~ x - x^3/3: |err| = x^3/3 < lsb/2 -> a = (1.5 lsb)^(1/3)
+        let a = (1.5 * lsb).cbrt();
+        let b = (2.0 / lsb).ln() / 2.0 + 0.25; // from 1 - tanh ~ 2e^-2x
+        let pass_end = fi.quantize(a, Round::Floor).max(1);
+        let sat_start = fi.quantize(b, Round::Floor);
+        let span = (sat_start - pass_end).max(1) as u64;
+        let entries = 1usize << proc_bits;
+        let proc_shift = (span.next_power_of_two() / entries as u64)
+            .max(1)
+            .trailing_zeros();
+        let proc = (0..entries as i64)
+            .map(|k| {
+                let centre = pass_end + (k << proc_shift) + (1i64 << proc_shift) / 2;
+                fo.quantize(fi.dequantize(centre).tanh(), Round::Nearest)
+            })
+            .collect();
+        Zamanlooy { fi, fo, pass_end, sat_start, proc, proc_shift }
+    }
+}
+
+impl TanhImpl for Zamanlooy {
+    fn eval_word(&self, x: i64) -> i64 {
+        let neg = x < 0;
+        let n = x.unsigned_abs() as i64;
+        let t = if n < self.pass_end {
+            // Pass region: output = input (rescaled by wiring).
+            let shift = self.fo.frac_bits as i32 - self.fi.frac_bits as i32;
+            if shift >= 0 {
+                n << shift
+            } else {
+                n >> -shift
+            }
+        } else if n >= self.sat_start {
+            self.fo.max_word()
+        } else {
+            let idx = (((n - self.pass_end) >> self.proc_shift) as usize)
+                .min(self.proc.len() - 1);
+            self.proc[idx]
+        };
+        let t = t.min(self.fo.max_word());
+        if neg {
+            -t
+        } else {
+            t
+        }
+    }
+
+    fn in_format(&self) -> QFormat {
+        self.fi
+    }
+
+    fn out_format(&self) -> QFormat {
+        self.fo
+    }
+
+    fn name(&self) -> String {
+        format!("zamanlooy[pass<{}, sat>={}, {} proc]",
+                self.pass_end, self.sat_start, self.proc.len())
+    }
+
+    fn cost(&self) -> Cost {
+        Cost {
+            lut_bits: self.proc.len() as u64 * self.fo.width() as u64,
+            multipliers: 0,
+            adders: 1,
+            comparators: 2,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::{exhaustive_error, region_error};
+    use crate::baselines::fmt16;
+
+    #[test]
+    fn regions_ordered() {
+        let (fi, fo) = fmt16();
+        let z = Zamanlooy::new(fi, fo, 7);
+        assert!(0 < z.pass_end && z.pass_end < z.sat_start);
+        assert!(z.sat_start < 1 << 15);
+    }
+
+    #[test]
+    fn pass_region_is_identity() {
+        let (fi, fo) = fmt16();
+        let z = Zamanlooy::new(fi, fo, 7);
+        for n in 0..z.pass_end {
+            assert_eq!(z.eval_word(n), n << 3); // 12 -> 15 frac bits
+        }
+    }
+
+    #[test]
+    fn saturation_is_constant() {
+        let (fi, fo) = fmt16();
+        let z = Zamanlooy::new(fi, fo, 7);
+        assert_eq!(z.eval_word(z.sat_start), fo.max_word());
+        assert_eq!(z.eval_word(32767), fo.max_word());
+    }
+
+    #[test]
+    fn overall_error_reasonable() {
+        let (fi, fo) = fmt16();
+        let z = Zamanlooy::new(fi, fo, 7);
+        let e = exhaustive_error(&z);
+        assert!(e.max_abs < 0.04, "{}", e.max_abs);
+        // Error concentrates in the processing region by construction.
+        let rep = region_error(&z);
+        assert!(rep.processing.max_abs >= rep.saturation.max_abs);
+    }
+}

@@ -1,0 +1,195 @@
+//! Criterion-style micro/throughput benchmark harness.
+//!
+//! The offline crate set has no `criterion`; `cargo bench` targets use
+//! this instead (`harness = false`). It provides warmup, calibrated
+//! iteration counts, robust statistics (mean/p50/p99), throughput
+//! reporting, and a `black_box` to defeat constant folding.
+
+use std::hint::black_box as std_black_box;
+use std::time::{Duration, Instant};
+
+/// Re-exported opaque-value barrier.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    /// Nanoseconds per iteration.
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub std_ns: f64,
+    pub iters: u64,
+    /// Optional elements-per-iteration for throughput reporting.
+    pub elems: Option<u64>,
+}
+
+impl Measurement {
+    pub fn throughput(&self) -> Option<f64> {
+        self.elems.map(|e| e as f64 / (self.mean_ns * 1e-9))
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = format!(
+            "{:<44} {:>12} /iter  p50 {:>10}  p99 {:>10}  ({} iters)",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p99_ns),
+            self.iters
+        );
+        if let Some(tp) = self.throughput() {
+            s.push_str(&format!("  {:.3e} elem/s", tp));
+        }
+        s
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner with shared config.
+pub struct Bench {
+    warmup: Duration,
+    measure: Duration,
+    min_samples: usize,
+    pub results: Vec<Measurement>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(800),
+            min_samples: 10,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(200),
+            min_samples: 5,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`, which performs one logical iteration per call.
+    pub fn run<R>(&mut self, name: &str, mut f: impl FnMut() -> R) -> &Measurement {
+        self.run_with_elems(name, None, &mut f)
+    }
+
+    /// Time `f` and report elements/second based on `elems` per iter.
+    pub fn run_elems<R>(
+        &mut self,
+        name: &str,
+        elems: u64,
+        mut f: impl FnMut() -> R,
+    ) -> &Measurement {
+        self.run_with_elems(name, Some(elems), &mut f)
+    }
+
+    fn run_with_elems<R>(
+        &mut self,
+        name: &str,
+        elems: Option<u64>,
+        f: &mut dyn FnMut() -> R,
+    ) -> &Measurement {
+        // Warmup + estimate per-iter cost.
+        let warm_start = Instant::now();
+        let mut warm_iters = 0u64;
+        while warm_start.elapsed() < self.warmup || warm_iters < 3 {
+            black_box(f());
+            warm_iters += 1;
+            if warm_iters > 1_000_000 {
+                break;
+            }
+        }
+        let per_iter = warm_start.elapsed().as_nanos() as f64 / warm_iters as f64;
+
+        // Sample in batches sized for ~1ms per sample.
+        let batch = ((1e6 / per_iter.max(1.0)).ceil() as u64).max(1);
+        let mut samples: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.measure || samples.len() < self.min_samples {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                black_box(f());
+            }
+            samples.push(t0.elapsed().as_nanos() as f64 / batch as f64);
+            if samples.len() > 100_000 {
+                break;
+            }
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>()
+            / n as f64;
+        let m = Measurement {
+            name: name.to_string(),
+            mean_ns: mean,
+            p50_ns: samples[n / 2],
+            p99_ns: samples[((n * 99) / 100).min(n - 1)],
+            std_ns: var.sqrt(),
+            iters: n as u64 * batch,
+            elems,
+        };
+        println!("{}", m.report());
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    /// Find a measurement by name.
+    pub fn get(&self, name: &str) -> Option<&Measurement> {
+        self.results.iter().find(|m| m.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let mut b = Bench::quick();
+        let m = b.run("noop-ish", || black_box(1u64 + black_box(2))).clone();
+        assert!(m.mean_ns > 0.0);
+        assert!(m.p50_ns <= m.p99_ns * 1.0001);
+    }
+
+    #[test]
+    fn throughput_computed() {
+        let mut b = Bench::quick();
+        let v: Vec<u64> = (0..1024).collect();
+        let m = b
+            .run_elems("sum-1k", 1024, || v.iter().sum::<u64>())
+            .clone();
+        let tp = m.throughput().unwrap();
+        assert!(tp > 1e6, "sum throughput {tp}");
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(12.0).contains("ns"));
+        assert!(fmt_ns(12_000.0).contains("µs"));
+        assert!(fmt_ns(12_000_000.0).contains("ms"));
+        assert!(fmt_ns(2e9).contains(" s"));
+    }
+}

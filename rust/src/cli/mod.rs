@@ -1,0 +1,176 @@
+//! Hand-rolled command-line parser (clap is unavailable offline).
+//!
+//! Supports `binary <subcommand> [--flag] [--key value] [positional...]`
+//! with typed accessors, defaults, required-argument errors and an
+//! auto-generated usage string.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Parsed arguments for one invocation.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+impl Args {
+    /// Parse from an iterator of tokens (usually `std::env::args().skip(1)`).
+    ///
+    /// The first non-flag token becomes the subcommand; `--key value` and
+    /// `--key=value` both bind; bare `--flag` binds to `"true"`.
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Result<Args, CliError> {
+        let mut out = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if stripped.is_empty() {
+                    // `--` terminator: rest is positional.
+                    out.positional.extend(it.by_ref());
+                    break;
+                }
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // Peek: next token is a value unless it's another flag.
+                    let is_value = it
+                        .peek()
+                        .map(|n| !n.starts_with("--"))
+                        .unwrap_or(false);
+                    if is_value {
+                        out.flags.insert(stripped.to_string(), it.next().unwrap());
+                    } else {
+                        out.flags.insert(stripped.to_string(), "true".to_string());
+                    }
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args, CliError> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.str_opt(key).unwrap_or(default)
+    }
+
+    pub fn required(&self, key: &str) -> Result<&str, CliError> {
+        self.str_opt(key)
+            .ok_or_else(|| CliError(format!("missing required --{key}")))
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64, CliError> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| CliError(format!("--{key}: expected integer, got '{s}'"))),
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, CliError> {
+        self.u64_or(key, default as u64).map(|v| v as usize)
+    }
+
+    pub fn i64_or(&self, key: &str, default: i64) -> Result<i64, CliError> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| CliError(format!("--{key}: expected integer, got '{s}'"))),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64, CliError> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| CliError(format!("--{key}: expected float, got '{s}'"))),
+        }
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.str_opt(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+/// Declarative usage text for a set of subcommands.
+pub fn usage(bin: &str, subcommands: &[(&str, &str)]) -> String {
+    let mut s = format!("usage: {bin} <subcommand> [options]\n\nsubcommands:\n");
+    for (name, desc) in subcommands {
+        s.push_str(&format!("  {name:<18} {desc}\n"));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(tokens: &[&str]) -> Args {
+        Args::parse(tokens.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse(&["serve", "--port", "8080", "--verbose", "--rate=2.5"]);
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.u64_or("port", 0).unwrap(), 8080);
+        assert!(a.bool("verbose"));
+        assert_eq!(a.f64_or("rate", 0.0).unwrap(), 2.5);
+    }
+
+    #[test]
+    fn positional_after_subcommand() {
+        let a = parse(&["run", "file1", "file2"]);
+        assert_eq!(a.positional, vec!["file1", "file2"]);
+    }
+
+    #[test]
+    fn double_dash_terminator() {
+        let a = parse(&["run", "--", "--not-a-flag"]);
+        assert_eq!(a.positional, vec!["--not-a-flag"]);
+    }
+
+    #[test]
+    fn missing_required_is_error() {
+        let a = parse(&["serve"]);
+        assert!(a.required("port").is_err());
+    }
+
+    #[test]
+    fn bad_int_is_error() {
+        let a = parse(&["x", "--n", "abc"]);
+        assert!(a.u64_or("n", 3).is_err());
+    }
+
+    #[test]
+    fn bare_flag_before_value_flag() {
+        let a = parse(&["x", "--fast", "--n", "4"]);
+        assert!(a.bool("fast"));
+        assert_eq!(a.u64_or("n", 0).unwrap(), 4);
+    }
+}

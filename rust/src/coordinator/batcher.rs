@@ -1,0 +1,126 @@
+//! Dynamic batcher: packs variable-size activation requests into the
+//! fixed-shape batches the compiled executables (and the hardware unit)
+//! accept, padding the remainder, and scatters results back per request.
+//!
+//! Pure packing logic lives here (thread-free, fully unit-tested); the
+//! serving loop in [`super`] drives it.
+
+/// One pending request's words and its slot in the batch.
+#[derive(Clone, Debug)]
+pub struct Packed {
+    /// (request index, offset in batch, length) per request.
+    pub slots: Vec<(usize, usize, usize)>,
+    /// The padded batch (len == capacity).
+    pub batch: Vec<i32>,
+    /// Words actually used.
+    pub used: usize,
+}
+
+/// Greedy first-fit packer: fills up to `capacity` words from the queue
+/// front; requests larger than `capacity` must be pre-split by the
+/// caller (the coordinator enforces a max request size).
+pub fn pack(requests: &[Vec<i32>], capacity: usize, pad_word: i32) -> (Packed, usize) {
+    let mut batch = Vec::with_capacity(capacity);
+    let mut slots = Vec::new();
+    let mut taken = 0usize;
+    for (i, words) in requests.iter().enumerate() {
+        assert!(
+            words.len() <= capacity,
+            "request of {} words exceeds batch capacity {capacity}",
+            words.len()
+        );
+        if batch.len() + words.len() > capacity {
+            break;
+        }
+        slots.push((i, batch.len(), words.len()));
+        batch.extend_from_slice(words);
+        taken = i + 1;
+    }
+    let used = batch.len();
+    batch.resize(capacity, pad_word);
+    (Packed { slots, batch, used }, taken)
+}
+
+/// Scatter a batch result back into per-request vectors.
+pub fn unpack(packed: &Packed, result: &[i32]) -> Vec<(usize, Vec<i32>)> {
+    packed
+        .slots
+        .iter()
+        .map(|&(req, off, len)| (req, result[off..off + len].to_vec()))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::{self, vec_of, int};
+
+    #[test]
+    fn packs_until_capacity() {
+        let reqs = vec![vec![1i32; 400], vec![2; 400], vec![3; 400]];
+        let (p, taken) = pack(&reqs, 1024, 0);
+        assert_eq!(taken, 2);
+        assert_eq!(p.used, 800);
+        assert_eq!(p.batch.len(), 1024);
+        assert_eq!(p.batch[799], 2);
+        assert_eq!(p.batch[800], 0); // padding
+    }
+
+    #[test]
+    fn unpack_restores_requests() {
+        let reqs = vec![vec![5i32, 6], vec![7, 8, 9]];
+        let (p, taken) = pack(&reqs, 8, 0);
+        assert_eq!(taken, 2);
+        // Simulate an identity backend.
+        let out = unpack(&p, &p.batch);
+        assert_eq!(out[0], (0, vec![5, 6]));
+        assert_eq!(out[1], (1, vec![7, 8, 9]));
+    }
+
+    #[test]
+    fn empty_queue() {
+        let (p, taken) = pack(&[], 16, 0);
+        assert_eq!(taken, 0);
+        assert_eq!(p.used, 0);
+        assert!(p.slots.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds batch capacity")]
+    fn oversize_request_rejected() {
+        let _ = pack(&[vec![0i32; 2000]], 1024, 0);
+    }
+
+    #[test]
+    fn property_pack_unpack_roundtrip() {
+        // For arbitrary request shapes, packing then unpacking an
+        // identity result returns every packed request verbatim.
+        let g = vec_of(int(1, 64), 12);
+        proptest::assert_prop("pack/unpack", 11, 300, &g, |lens| {
+            let reqs: Vec<Vec<i32>> = lens
+                .iter()
+                .enumerate()
+                .map(|(i, &l)| vec![i as i32; l as usize])
+                .collect();
+            let (p, taken) = pack(&reqs, 128, -1);
+            let out = unpack(&p, &p.batch);
+            if out.len() != p.slots.len() {
+                return Err("slot count".into());
+            }
+            for (req_idx, words) in out {
+                if words != reqs[req_idx] {
+                    return Err(format!("request {req_idx} corrupted"));
+                }
+            }
+            if taken < reqs.len() {
+                let packed_words: usize =
+                    reqs[..taken].iter().map(Vec::len).sum();
+                let next = reqs[taken].len();
+                if packed_words + next <= 128 {
+                    return Err("should have packed more".into());
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,114 @@
+//! Serving metrics: counters + latency/batch-fill statistics.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Lock-light metrics sink shared by the coordinator's threads.
+#[derive(Default)]
+pub struct Metrics {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub rejected: AtomicU64,
+    pub batches: AtomicU64,
+    /// Sum of words packed into batches (for mean fill).
+    pub batched_words: AtomicU64,
+    /// Sum of padded capacity across batches.
+    pub batch_capacity: AtomicU64,
+    latencies_us: Mutex<Vec<u64>>,
+}
+
+/// A point-in-time summary.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub batches: u64,
+    pub mean_batch_fill: f64,
+    pub p50_latency_us: u64,
+    pub p99_latency_us: u64,
+    pub max_latency_us: u64,
+}
+
+impl Metrics {
+    pub fn record_latency(&self, d: Duration) {
+        let mut v = self.latencies_us.lock().unwrap();
+        // Bounded reservoir: keep the newest 100k samples.
+        if v.len() >= 100_000 {
+            v.drain(..50_000);
+        }
+        v.push(d.as_micros() as u64);
+    }
+
+    pub fn record_batch(&self, words: u64, capacity: u64) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_words.fetch_add(words, Ordering::Relaxed);
+        self.batch_capacity.fetch_add(capacity, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let mut lats = self.latencies_us.lock().unwrap().clone();
+        lats.sort_unstable();
+        let pick = |q: f64| -> u64 {
+            if lats.is_empty() {
+                0
+            } else {
+                lats[((lats.len() - 1) as f64 * q) as usize]
+            }
+        };
+        let cap = self.batch_capacity.load(Ordering::Relaxed);
+        Snapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            mean_batch_fill: if cap == 0 {
+                0.0
+            } else {
+                self.batched_words.load(Ordering::Relaxed) as f64 / cap as f64
+            },
+            p50_latency_us: pick(0.50),
+            p99_latency_us: pick(0.99),
+            max_latency_us: lats.last().copied().unwrap_or(0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_percentiles() {
+        let m = Metrics::default();
+        for us in [10u64, 20, 30, 40, 1000] {
+            m.record_latency(Duration::from_micros(us));
+        }
+        let s = m.snapshot();
+        assert_eq!(s.p50_latency_us, 30);
+        assert_eq!(s.max_latency_us, 1000);
+        assert!(s.p99_latency_us >= 40);
+    }
+
+    #[test]
+    fn batch_fill() {
+        let m = Metrics::default();
+        m.record_batch(512, 1024);
+        m.record_batch(1024, 1024);
+        let s = m.snapshot();
+        assert!((s.mean_batch_fill - 0.75).abs() < 1e-9);
+        assert_eq!(s.batches, 2);
+    }
+
+    #[test]
+    fn reservoir_bounded() {
+        let m = Metrics::default();
+        for i in 0..120_000u64 {
+            m.record_latency(Duration::from_micros(i % 997));
+        }
+        // Should not blow past the bound.
+        let s = m.snapshot();
+        assert!(s.max_latency_us <= 996);
+    }
+}

@@ -1,0 +1,493 @@
+//! Layer-3 serving coordinator.
+//!
+//! An activation/inference service in the shape of a serving-system
+//! router: clients submit variable-size tanh requests; a leader thread
+//! packs them into the fixed batch shapes of the compiled backends and
+//! hands batches to worker threads; each worker owns a private backend
+//! instance (PJRT executables are thread-affine) and scatters results
+//! back to per-request completion handles. Python is never on this path.
+//!
+//! Components:
+//! * [`batcher`] — pure batch packing/scattering logic.
+//! * [`metrics`] — counters + latency percentiles + batch fill.
+//! * [`Coordinator`] — request queue, leader loop, worker pool,
+//!   backpressure, lifecycle.
+
+pub mod batcher;
+pub mod metrics;
+pub mod router;
+
+use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::exec::{oneshot, Receiver, Sender};
+use crate::runtime::{Runtime, Tensor};
+use crate::tanh::{TanhConfig, TanhUnit};
+
+pub use metrics::{Metrics, Snapshot};
+
+/// A per-worker execution engine for packed tanh batches.
+pub enum Backend {
+    /// The optimized native unit (bit-identical to the artifacts).
+    Native(TanhUnit),
+    /// A PJRT executable by artifact entry name (one client per worker:
+    /// `xla::PjRtClient` is thread-affine).
+    Pjrt { runtime: Runtime, entry: String },
+}
+
+impl Backend {
+    fn run(&self, batch: &[i32]) -> Result<Vec<i32>, String> {
+        match self {
+            Backend::Native(unit) => Ok(unit.eval_batch_i32(batch)),
+            Backend::Pjrt { runtime, entry } => {
+                let out = runtime
+                    .execute(entry, &[Tensor::I32(batch.to_vec())])
+                    .map_err(|e| format!("pjrt: {e:#}"))?;
+                out[0]
+                    .as_i32()
+                    .map(<[i32]>::to_vec)
+                    .ok_or_else(|| "pjrt: wrong output dtype".to_string())
+            }
+        }
+    }
+}
+
+/// Constructs a worker's backend on the worker's own thread.
+pub type BackendFactory = Arc<dyn Fn() -> Result<Backend, String> + Send + Sync>;
+
+/// Factory for the native bit-accurate unit (optionally fully memoized).
+pub fn native_factory(cfg: TanhConfig, memoize: bool) -> BackendFactory {
+    Arc::new(move || {
+        let mut unit = TanhUnit::new(cfg).map_err(|e| e.to_string())?;
+        if memoize {
+            unit.precompute_all();
+        }
+        Ok(Backend::Native(unit))
+    })
+}
+
+/// Factory for a PJRT-backed worker executing `entry` from `dir`.
+pub fn pjrt_factory(dir: PathBuf, entry: String) -> BackendFactory {
+    Arc::new(move || {
+        let runtime = Runtime::new(&dir).map_err(|e| format!("{e:#}"))?;
+        runtime.ensure_compiled(&entry).map_err(|e| format!("{e:#}"))?;
+        Ok(Backend::Pjrt { runtime, entry: entry.clone() })
+    })
+}
+
+/// Coordinator configuration.
+#[derive(Clone)]
+pub struct Config {
+    /// Fixed batch capacity (must match the artifact's shape for PJRT).
+    pub batch_capacity: usize,
+    /// Max time a request may wait for co-batching.
+    pub max_wait: Duration,
+    /// Worker threads executing batches (each owns a backend instance).
+    pub workers: usize,
+    /// Bound on queued requests before rejection (backpressure).
+    pub queue_limit: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            batch_capacity: 1024,
+            max_wait: Duration::from_millis(2),
+            workers: 2,
+            queue_limit: 4096,
+        }
+    }
+}
+
+struct PendingReq {
+    words: Vec<i32>,
+    resp: Sender<Result<Vec<i32>, String>>,
+    enqueued: Instant,
+}
+
+/// A packed batch travelling from the leader to a worker.
+struct Batch {
+    packed: batcher::Packed,
+    reqs: Vec<Option<PendingReq>>,
+}
+
+#[derive(Default)]
+struct Queues {
+    requests: VecDeque<PendingReq>,
+    batches: VecDeque<Batch>,
+}
+
+struct Shared {
+    q: Mutex<Queues>,
+    req_ready: Condvar,
+    batch_ready: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// The serving coordinator. Dropping it drains in-flight work and joins
+/// every thread.
+pub struct Coordinator {
+    shared: Arc<Shared>,
+    pub metrics: Arc<Metrics>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+    cfg: Config,
+}
+
+impl Coordinator {
+    /// Start the leader loop + `cfg.workers` backend workers.
+    pub fn start(cfg: Config, factory: BackendFactory) -> Coordinator {
+        let shared = Arc::new(Shared {
+            q: Mutex::new(Queues::default()),
+            req_ready: Condvar::new(),
+            batch_ready: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let metrics = Arc::new(Metrics::default());
+        let mut threads = Vec::new();
+
+        // Leader: packs requests into batches.
+        {
+            let s = shared.clone();
+            let m = metrics.clone();
+            let c = cfg.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name("tanhvf-leader".into())
+                    .spawn(move || leader_loop(&s, &m, &c))
+                    .expect("spawn leader"),
+            );
+        }
+        // Workers: execute batches on private backends.
+        for i in 0..cfg.workers.max(1) {
+            let s = shared.clone();
+            let m = metrics.clone();
+            let f = factory.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("tanhvf-worker-{i}"))
+                    .spawn(move || worker_loop(&s, &m, &f))
+                    .expect("spawn worker"),
+            );
+        }
+
+        Coordinator { shared, metrics, threads, cfg }
+    }
+
+    /// Submit a tanh request (input fixed-point words). Returns a
+    /// completion handle resolving to the output words.
+    pub fn submit(&self, words: Vec<i32>) -> Receiver<Result<Vec<i32>, String>> {
+        let (tx, rx) = oneshot();
+        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        if words.is_empty() || words.len() > self.cfg.batch_capacity {
+            self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            tx.send(Err(format!(
+                "request size {} outside 1..={}",
+                words.len(),
+                self.cfg.batch_capacity
+            )));
+            return rx;
+        }
+        {
+            let mut q = self.shared.q.lock().unwrap();
+            if q.requests.len() >= self.cfg.queue_limit {
+                drop(q);
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                tx.send(Err("queue full (backpressure)".into()));
+                return rx;
+            }
+            q.requests.push_back(PendingReq {
+                words,
+                resp: tx,
+                enqueued: Instant::now(),
+            });
+        }
+        self.shared.req_ready.notify_one();
+        rx
+    }
+
+    /// Convenience: blocking evaluation through the service.
+    pub fn eval_blocking(&self, words: Vec<i32>) -> Result<Vec<i32>, String> {
+        self.submit(words)
+            .recv()
+            .unwrap_or_else(|| Err("coordinator dropped".into()))
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        self.metrics.snapshot()
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.req_ready.notify_all();
+        self.shared.batch_ready.notify_all();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+fn leader_loop(shared: &Arc<Shared>, metrics: &Arc<Metrics>, cfg: &Config) {
+    let capacity = cfg.batch_capacity;
+    loop {
+        let taken: Vec<PendingReq> = {
+            let mut q = shared.q.lock().unwrap();
+            loop {
+                if shared.shutdown.load(Ordering::SeqCst)
+                    && q.requests.is_empty()
+                {
+                    return;
+                }
+                if let Some(front) = q.requests.front() {
+                    let filled: usize =
+                        q.requests.iter().map(|r| r.words.len()).sum();
+                    let deadline_hit =
+                        front.enqueued.elapsed() >= cfg.max_wait;
+                    if filled >= capacity
+                        || deadline_hit
+                        || shared.shutdown.load(Ordering::SeqCst)
+                    {
+                        let mut used = 0usize;
+                        let mut out = Vec::new();
+                        while let Some(r) = q.requests.front() {
+                            if used + r.words.len() > capacity {
+                                break;
+                            }
+                            used += r.words.len();
+                            out.push(q.requests.pop_front().unwrap());
+                        }
+                        break out;
+                    }
+                    let wait = cfg.max_wait.saturating_sub(front.enqueued.elapsed());
+                    let (guard, _) = shared
+                        .req_ready
+                        .wait_timeout(q, wait.max(Duration::from_micros(50)))
+                        .unwrap();
+                    q = guard;
+                } else {
+                    let (guard, _) = shared
+                        .req_ready
+                        .wait_timeout(q, Duration::from_millis(20))
+                        .unwrap();
+                    q = guard;
+                }
+            }
+        };
+        if taken.is_empty() {
+            continue;
+        }
+
+        let words: Vec<Vec<i32>> =
+            taken.iter().map(|r| r.words.clone()).collect();
+        let (packed, n) = batcher::pack(&words, capacity, 0);
+        debug_assert_eq!(n, words.len());
+        metrics.record_batch(packed.used as u64, capacity as u64);
+
+        {
+            let mut q = shared.q.lock().unwrap();
+            q.batches.push_back(Batch {
+                packed,
+                reqs: taken.into_iter().map(Some).collect(),
+            });
+        }
+        shared.batch_ready.notify_one();
+    }
+}
+
+fn worker_loop(
+    shared: &Arc<Shared>,
+    metrics: &Arc<Metrics>,
+    factory: &BackendFactory,
+) {
+    let backend = match factory() {
+        Ok(b) => b,
+        Err(e) => {
+            // Stay alive in failing mode: drain batches with an error so
+            // no request is ever stranded (other workers may be healthy
+            // and will race us for batches; liveness is preserved either
+            // way).
+            eprintln!("tanh-vf worker: backend construction failed: {e}");
+            loop {
+                let batch = {
+                    let mut q = shared.q.lock().unwrap();
+                    loop {
+                        if let Some(b) = q.batches.pop_front() {
+                            break Some(b);
+                        }
+                        if shared.shutdown.load(Ordering::SeqCst) {
+                            break None;
+                        }
+                        let (guard, _) = shared
+                            .batch_ready
+                            .wait_timeout(q, Duration::from_millis(20))
+                            .unwrap();
+                        q = guard;
+                    }
+                };
+                let Some(Batch { mut reqs, .. }) = batch else { return };
+                for slot in reqs.iter_mut() {
+                    if let Some(req) = slot.take() {
+                        metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                        req.resp.send(Err(format!("backend unavailable: {e}")));
+                    }
+                }
+            }
+        }
+    };
+    loop {
+        let batch = {
+            let mut q = shared.q.lock().unwrap();
+            loop {
+                if let Some(b) = q.batches.pop_front() {
+                    break b;
+                }
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                let (guard, _) = shared
+                    .batch_ready
+                    .wait_timeout(q, Duration::from_millis(20))
+                    .unwrap();
+                q = guard;
+            }
+        };
+        let Batch { packed, mut reqs } = batch;
+        match backend.run(&packed.batch) {
+            Ok(out) => {
+                for (idx, words) in batcher::unpack(&packed, &out) {
+                    let req = reqs[idx].take().expect("slot used once");
+                    metrics.record_latency(req.enqueued.elapsed());
+                    metrics.completed.fetch_add(1, Ordering::Relaxed);
+                    req.resp.send(Ok(words));
+                }
+            }
+            Err(e) => {
+                for slot in reqs.iter_mut() {
+                    if let Some(req) = slot.take() {
+                        req.resp.send(Err(e.clone()));
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tanh::golden::tanh_golden_batch;
+
+    fn native_coordinator(capacity: usize) -> Coordinator {
+        Coordinator::start(
+            Config {
+                batch_capacity: capacity,
+                max_wait: Duration::from_millis(1),
+                workers: 2,
+                queue_limit: 64,
+            },
+            native_factory(TanhConfig::s3_12(), true),
+        )
+    }
+
+    #[test]
+    fn serves_single_request_correctly() {
+        let c = native_coordinator(256);
+        let words: Vec<i32> = (-50..50).map(|i| i * 100).collect();
+        let got = c.eval_blocking(words.clone()).unwrap();
+        let want = tanh_golden_batch(
+            &words.iter().map(|&w| w as i64).collect::<Vec<_>>(),
+            &TanhConfig::s3_12(),
+        );
+        assert_eq!(got.iter().map(|&v| v as i64).collect::<Vec<_>>(), want);
+    }
+
+    #[test]
+    fn batches_multiple_concurrent_requests() {
+        let c = native_coordinator(1024);
+        let handles: Vec<_> = (0..16)
+            .map(|k| c.submit(vec![k as i32 * 37; 57]))
+            .collect();
+        for (k, h) in handles.into_iter().enumerate() {
+            let out = h.recv().unwrap().unwrap();
+            assert_eq!(out.len(), 57);
+            let want = crate::tanh::tanh_golden(
+                (k as i64) * 37,
+                &TanhConfig::s3_12(),
+            );
+            assert!(out.iter().all(|&v| v as i64 == want));
+        }
+        let s = c.snapshot();
+        assert_eq!(s.completed, 16);
+        // Co-batching must have happened (fewer batches than requests).
+        assert!(s.batches < 16, "batches {}", s.batches);
+        assert!(s.mean_batch_fill > 0.0);
+    }
+
+    #[test]
+    fn rejects_oversize_and_empty() {
+        let c = native_coordinator(128);
+        assert!(c.eval_blocking(vec![0; 129]).is_err());
+        assert!(c.eval_blocking(vec![]).is_err());
+        assert_eq!(c.snapshot().rejected, 2);
+    }
+
+    #[test]
+    fn order_and_values_preserved_under_flood() {
+        let c = native_coordinator(512);
+        let reqs: Vec<Vec<i32>> = (0..40)
+            .map(|k| (0..11).map(|j| (k * 991 + j * 7) as i32 % 30000).collect())
+            .collect();
+        let handles: Vec<_> =
+            reqs.iter().map(|r| c.submit(r.clone())).collect();
+        for (r, h) in reqs.iter().zip(handles) {
+            let got = h.recv().unwrap().unwrap();
+            let want = tanh_golden_batch(
+                &r.iter().map(|&w| w as i64).collect::<Vec<_>>(),
+                &TanhConfig::s3_12(),
+            );
+            assert_eq!(
+                got.iter().map(|&v| v as i64).collect::<Vec<_>>(),
+                want
+            );
+        }
+    }
+
+    #[test]
+    fn clean_shutdown_under_load() {
+        let c = native_coordinator(256);
+        let mut handles = Vec::new();
+        for k in 0..32 {
+            handles.push(c.submit(vec![k; 16]));
+        }
+        drop(c); // must not hang; pending handles resolve or close
+        for h in handles {
+            let _ = h.recv_timeout(Duration::from_secs(2));
+        }
+    }
+
+    #[test]
+    fn backpressure_rejects_when_flooded() {
+        // Tiny queue limit, long batching window -> floods reject.
+        let c = Coordinator::start(
+            Config {
+                batch_capacity: 1024,
+                max_wait: Duration::from_millis(50),
+                workers: 1,
+                queue_limit: 4,
+            },
+            native_factory(TanhConfig::s3_12(), false),
+        );
+        let handles: Vec<_> = (0..64).map(|_| c.submit(vec![1; 8])).collect();
+        let mut rejected = 0;
+        for h in handles {
+            if h.recv().unwrap().is_err() {
+                rejected += 1;
+            }
+        }
+        assert!(rejected > 0, "expected backpressure rejections");
+    }
+}

@@ -1,0 +1,206 @@
+//! Multi-model router: one coordinator instance per served model /
+//! precision, with name-based routing — the front door of the
+//! activation service (a vLLM-router-shaped shim over [`Coordinator`]).
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::time::Duration;
+
+use crate::exec::Receiver;
+use crate::tanh::TanhConfig;
+
+use super::{native_factory, pjrt_factory, BackendFactory, Config, Coordinator,
+            Snapshot};
+
+/// Which engine a route uses.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RouteBackend {
+    /// Native bit-accurate unit for `cfg` (memoized if `memo`).
+    Native { cfg: TanhConfig, memo: bool },
+    /// A PJRT artifact entry from `dir`.
+    Pjrt { dir: PathBuf, entry: String },
+}
+
+/// Declarative route table entry.
+#[derive(Clone, Debug)]
+pub struct Route {
+    pub name: String,
+    pub backend: RouteBackend,
+    pub batch_capacity: usize,
+    pub max_wait: Duration,
+    pub workers: usize,
+}
+
+impl Route {
+    pub fn native(name: &str, cfg: TanhConfig) -> Route {
+        Route {
+            name: name.to_string(),
+            backend: RouteBackend::Native { cfg, memo: true },
+            batch_capacity: 1024,
+            max_wait: Duration::from_millis(2),
+            workers: 2,
+        }
+    }
+
+    pub fn pjrt(name: &str, dir: PathBuf, entry: &str, capacity: usize) -> Route {
+        Route {
+            name: name.to_string(),
+            backend: RouteBackend::Pjrt { dir, entry: entry.to_string() },
+            batch_capacity: capacity,
+            max_wait: Duration::from_millis(2),
+            workers: 1,
+        }
+    }
+
+    fn factory(&self) -> BackendFactory {
+        match &self.backend {
+            RouteBackend::Native { cfg, memo } => native_factory(*cfg, *memo),
+            RouteBackend::Pjrt { dir, entry } => {
+                pjrt_factory(dir.clone(), entry.clone())
+            }
+        }
+    }
+}
+
+/// The router: owns one coordinator per route.
+pub struct Router {
+    routes: BTreeMap<String, Coordinator>,
+}
+
+impl Router {
+    /// Start coordinators for every route. Duplicate names are an error.
+    pub fn start(routes: Vec<Route>) -> Result<Router, String> {
+        let mut map = BTreeMap::new();
+        for r in routes {
+            if map.contains_key(&r.name) {
+                return Err(format!("duplicate route '{}'", r.name));
+            }
+            let coord = Coordinator::start(
+                Config {
+                    batch_capacity: r.batch_capacity,
+                    max_wait: r.max_wait,
+                    workers: r.workers,
+                    queue_limit: 8192,
+                },
+                r.factory(),
+            );
+            map.insert(r.name.clone(), coord);
+        }
+        Ok(Router { routes: map })
+    }
+
+    pub fn route_names(&self) -> Vec<&str> {
+        self.routes.keys().map(String::as_str).collect()
+    }
+
+    /// Submit to a named route.
+    pub fn submit(
+        &self,
+        route: &str,
+        words: Vec<i32>,
+    ) -> Result<Receiver<Result<Vec<i32>, String>>, String> {
+        self.routes
+            .get(route)
+            .map(|c| c.submit(words))
+            .ok_or_else(|| format!("unknown route '{route}'"))
+    }
+
+    /// Blocking convenience.
+    pub fn eval_blocking(
+        &self,
+        route: &str,
+        words: Vec<i32>,
+    ) -> Result<Vec<i32>, String> {
+        self.submit(route, words)?
+            .recv()
+            .unwrap_or_else(|| Err("router dropped".into()))
+    }
+
+    /// Per-route metrics.
+    pub fn snapshots(&self) -> BTreeMap<String, Snapshot> {
+        self.routes
+            .iter()
+            .map(|(k, c)| (k.clone(), c.snapshot()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tanh::golden::tanh_golden_batch;
+
+    fn two_precision_router() -> Router {
+        Router::start(vec![
+            Route::native("tanh16", TanhConfig::s3_12()),
+            Route::native("tanh8", TanhConfig::s3_5()),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn routes_by_precision() {
+        let r = two_precision_router();
+        let w16 = vec![4096i32, -4096, 12000];
+        let w8 = vec![32i32, -32, 100];
+        let got16 = r.eval_blocking("tanh16", w16.clone()).unwrap();
+        let got8 = r.eval_blocking("tanh8", w8.clone()).unwrap();
+        let want16 = tanh_golden_batch(
+            &w16.iter().map(|&v| v as i64).collect::<Vec<_>>(),
+            &TanhConfig::s3_12(),
+        );
+        let want8 = tanh_golden_batch(
+            &w8.iter().map(|&v| v as i64).collect::<Vec<_>>(),
+            &TanhConfig::s3_5(),
+        );
+        assert_eq!(got16.iter().map(|&v| v as i64).collect::<Vec<_>>(), want16);
+        assert_eq!(got8.iter().map(|&v| v as i64).collect::<Vec<_>>(), want8);
+    }
+
+    #[test]
+    fn unknown_route_rejected() {
+        let r = two_precision_router();
+        assert!(r.eval_blocking("nope", vec![1]).is_err());
+    }
+
+    #[test]
+    fn duplicate_route_rejected() {
+        let err = Router::start(vec![
+            Route::native("a", TanhConfig::s3_12()),
+            Route::native("a", TanhConfig::s3_5()),
+        ]);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn per_route_metrics_isolated() {
+        let r = two_precision_router();
+        for _ in 0..5 {
+            r.eval_blocking("tanh16", vec![100; 8]).unwrap();
+        }
+        let snaps = r.snapshots();
+        assert_eq!(snaps["tanh16"].completed, 5);
+        assert_eq!(snaps["tanh8"].completed, 0);
+    }
+
+    #[test]
+    fn failed_backend_drains_with_errors_not_hangs() {
+        // A PJRT route pointing at a nonexistent artifact directory must
+        // answer requests with errors (liveness), not strand them.
+        let r = Router::start(vec![Route::pjrt(
+            "broken",
+            PathBuf::from("/nonexistent/artifacts"),
+            "tanh_s3_12",
+            1024,
+        )])
+        .unwrap();
+        let res = r
+            .submit("broken", vec![1, 2, 3])
+            .unwrap()
+            .recv_timeout(Duration::from_secs(5));
+        match res {
+            Some(Err(_)) | None => {} // error or closed — both are live
+            Some(Ok(_)) => panic!("broken backend returned Ok"),
+        }
+    }
+}

@@ -1,0 +1,272 @@
+//! Minimal concurrency runtime: thread pool + oneshot futures + timers.
+//!
+//! tokio is unavailable in the offline crate set, and the coordinator's
+//! needs are modest: a fixed worker pool with a shared injector queue,
+//! oneshot completion handles, and deadline helpers. Everything is built
+//! on `std::thread` + `std::sync::mpsc`/`Condvar`.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct PoolShared {
+    queue: Mutex<VecDeque<Job>>,
+    available: Condvar,
+    shutdown: AtomicBool,
+    executed: AtomicU64,
+}
+
+/// Fixed-size worker pool with a shared FIFO injector.
+pub struct ThreadPool {
+    shared: Arc<PoolShared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> Self {
+        assert!(threads > 0);
+        let shared = Arc::new(PoolShared {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            executed: AtomicU64::new(0),
+        });
+        let workers = (0..threads)
+            .map(|i| {
+                let sh = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("tanhvf-worker-{i}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { shared, workers }
+    }
+
+    /// Number of jobs fully executed so far.
+    pub fn executed(&self) -> u64 {
+        self.shared.executed.load(Ordering::Relaxed)
+    }
+
+    /// Enqueue a fire-and-forget job.
+    pub fn spawn(&self, job: impl FnOnce() + Send + 'static) {
+        let mut q = self.shared.queue.lock().unwrap();
+        q.push_back(Box::new(job));
+        drop(q);
+        self.shared.available.notify_one();
+    }
+
+    /// Enqueue a job and get a [`Receiver`] for its result.
+    pub fn submit<T: Send + 'static>(
+        &self,
+        job: impl FnOnce() -> T + Send + 'static,
+    ) -> Receiver<T> {
+        let (tx, rx) = oneshot();
+        self.spawn(move || {
+            tx.send(job());
+        });
+        rx
+    }
+
+    /// Run `jobs` to completion, returning results in order.
+    pub fn map<T: Send + 'static>(
+        &self,
+        jobs: Vec<Box<dyn FnOnce() -> T + Send + 'static>>,
+    ) -> Vec<T> {
+        let handles: Vec<Receiver<T>> = jobs
+            .into_iter()
+            .map(|j| self.submit(move || j()))
+            .collect();
+        handles.into_iter().map(|h| h.recv().expect("worker died")).collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.available.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<PoolShared>) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.pop_front() {
+                    break job;
+                }
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                q = shared.available.wait(q).unwrap();
+            }
+        };
+        job();
+        shared.executed.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Oneshot channel
+// ---------------------------------------------------------------------------
+
+struct OneshotShared<T> {
+    slot: Mutex<(Option<T>, bool)>, // (value, closed)
+    ready: Condvar,
+}
+
+/// Sending half of a oneshot channel.
+pub struct Sender<T> {
+    shared: Arc<OneshotShared<T>>,
+}
+
+/// Receiving half of a oneshot channel.
+pub struct Receiver<T> {
+    shared: Arc<OneshotShared<T>>,
+}
+
+/// Create a oneshot completion channel.
+pub fn oneshot<T>() -> (Sender<T>, Receiver<T>) {
+    let shared = Arc::new(OneshotShared {
+        slot: Mutex::new((None, false)),
+        ready: Condvar::new(),
+    });
+    (Sender { shared: shared.clone() }, Receiver { shared })
+}
+
+impl<T> Sender<T> {
+    pub fn send(self, value: T) {
+        let mut s = self.shared.slot.lock().unwrap();
+        s.0 = Some(value);
+        drop(s);
+        self.shared.ready.notify_all();
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        let mut s = self.shared.slot.lock().unwrap();
+        s.1 = true;
+        drop(s);
+        self.shared.ready.notify_all();
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Block until the value arrives; `None` if the sender was dropped.
+    pub fn recv(self) -> Option<T> {
+        let mut s = self.shared.slot.lock().unwrap();
+        loop {
+            if let Some(v) = s.0.take() {
+                return Some(v);
+            }
+            if s.1 {
+                return None;
+            }
+            s = self.shared.ready.wait(s).unwrap();
+        }
+    }
+
+    /// Block with a deadline.
+    pub fn recv_timeout(self, timeout: Duration) -> Option<T> {
+        let deadline = Instant::now() + timeout;
+        let mut s = self.shared.slot.lock().unwrap();
+        loop {
+            if let Some(v) = s.0.take() {
+                return Some(v);
+            }
+            if s.1 {
+                return None;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _) = self
+                .shared
+                .ready
+                .wait_timeout(s, deadline - now)
+                .unwrap();
+            s = guard;
+        }
+    }
+}
+
+/// Default worker count: cores - 1, at least 1.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get().saturating_sub(1).max(1))
+        .unwrap_or(2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<_> = (0..100)
+            .map(|_| {
+                let c = counter.clone();
+                pool.submit(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.recv().unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+        assert_eq!(pool.executed(), 100);
+    }
+
+    #[test]
+    fn submit_returns_value() {
+        let pool = ThreadPool::new(2);
+        let r = pool.submit(|| 6 * 7);
+        assert_eq!(r.recv(), Some(42));
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(4);
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..32usize)
+            .map(|i| Box::new(move || i * i) as Box<dyn FnOnce() -> usize + Send>)
+            .collect();
+        let out = pool.map(jobs);
+        assert_eq!(out, (0..32).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn oneshot_timeout_expires() {
+        let (_tx, rx) = oneshot::<u32>();
+        // Sender kept alive; timeout must fire.
+        let t0 = Instant::now();
+        assert_eq!(rx.recv_timeout(Duration::from_millis(30)), None);
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn oneshot_dropped_sender_yields_none() {
+        let (tx, rx) = oneshot::<u32>();
+        drop(tx);
+        assert_eq!(rx.recv(), None);
+    }
+
+    #[test]
+    fn shutdown_joins_cleanly() {
+        let pool = ThreadPool::new(2);
+        pool.spawn(|| std::thread::sleep(Duration::from_millis(10)));
+        drop(pool); // must not hang
+    }
+}

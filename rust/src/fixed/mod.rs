@@ -1,0 +1,218 @@
+//! Fixed-point arithmetic substrate.
+//!
+//! Signed Q-format words carried in `i64` with an explicit runtime format
+//! (`QFormat { int_bits, frac_bits }`). This is the numeric foundation of
+//! the golden datapath model, the baselines and the accelerator
+//! simulator; every rounding/saturation behaviour here is exactly what
+//! the hardware (and the Pallas kernel) does.
+
+use std::fmt;
+
+/// Rounding mode for float -> fixed and precision-reducing ops.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Round {
+    /// Round to nearest, ties away from zero (`rint`-compatible on our
+    /// data; hardware implements it as "+half then truncate").
+    Nearest,
+    /// Truncate toward negative infinity (drop lsbs).
+    Floor,
+}
+
+/// A signed fixed-point format `s{int_bits}.{frac_bits}`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct QFormat {
+    pub int_bits: u32,
+    pub frac_bits: u32,
+}
+
+impl QFormat {
+    pub const fn new(int_bits: u32, frac_bits: u32) -> Self {
+        QFormat { int_bits, frac_bits }
+    }
+
+    /// Total width including sign.
+    pub const fn width(&self) -> u32 {
+        1 + self.int_bits + self.frac_bits
+    }
+
+    /// Largest representable word.
+    pub const fn max_word(&self) -> i64 {
+        (1i64 << (self.width() - 1)) - 1
+    }
+
+    /// Smallest representable word.
+    pub const fn min_word(&self) -> i64 {
+        -(1i64 << (self.width() - 1))
+    }
+
+    /// Value of one lsb.
+    pub fn lsb(&self) -> f64 {
+        (self.frac_bits as f64 * -1.0).exp2()
+    }
+
+    /// Quantize a float to a word with saturation.
+    pub fn quantize(&self, x: f64, mode: Round) -> i64 {
+        let scaled = x * (1i64 << self.frac_bits) as f64;
+        let w = match mode {
+            Round::Nearest => rint(scaled),
+            Round::Floor => scaled.floor() as i64,
+        };
+        w.clamp(self.min_word(), self.max_word())
+    }
+
+    /// Word -> float.
+    pub fn dequantize(&self, w: i64) -> f64 {
+        w as f64 / (1i64 << self.frac_bits) as f64
+    }
+
+    /// True if `w` is representable in this format.
+    pub fn contains(&self, w: i64) -> bool {
+        (self.min_word()..=self.max_word()).contains(&w)
+    }
+}
+
+impl fmt::Display for QFormat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.int_bits == 0 {
+            write!(f, "s.{}", self.frac_bits)
+        } else {
+            write!(f, "s{}.{}", self.int_bits, self.frac_bits)
+        }
+    }
+}
+
+/// Round-to-nearest, ties to even — bit-compatible with `numpy.rint`,
+/// which the python oracle uses for every float -> word conversion.
+#[inline]
+pub fn rint(x: f64) -> i64 {
+    x.round_ties_even() as i64
+}
+
+/// Fixed-point multiply: both operands and result carry `frac` fractional
+/// bits; result rounded to nearest (hardware: `+half >> frac`).
+#[inline(always)]
+pub fn round_mul(a: i64, b: i64, frac: u32) -> i64 {
+    (a * b + (1i64 << (frac - 1))) >> frac
+}
+
+/// Fixed-point multiply with floor (truncate) rounding.
+#[inline(always)]
+pub fn floor_mul(a: i64, b: i64, frac: u32) -> i64 {
+    (a * b) >> frac
+}
+
+/// Saturating clamp of `w` into `fmt`.
+#[inline]
+pub fn saturate(w: i64, fmt: QFormat) -> i64 {
+    w.clamp(fmt.min_word(), fmt.max_word())
+}
+
+/// Absolute error statistics between a fixed-point evaluation and a
+/// float reference (the paper's Table II metric).
+#[derive(Clone, Debug, Default)]
+pub struct ErrorStats {
+    pub max_abs: f64,
+    pub mean_abs: f64,
+    pub rms: f64,
+    pub argmax: i64,
+    pub count: u64,
+}
+
+impl ErrorStats {
+    pub fn collect(pairs: impl Iterator<Item = (i64, f64, f64)>) -> ErrorStats {
+        let mut s = ErrorStats::default();
+        let mut sum = 0.0f64;
+        let mut sq = 0.0f64;
+        for (x, got, want) in pairs {
+            let e = (got - want).abs();
+            if e > s.max_abs {
+                s.max_abs = e;
+                s.argmax = x;
+            }
+            sum += e;
+            sq += e * e;
+            s.count += 1;
+        }
+        if s.count > 0 {
+            s.mean_abs = sum / s.count as f64;
+            s.rms = (sq / s.count as f64).sqrt();
+        }
+        s
+    }
+
+    /// Max error expressed in output lsbs.
+    pub fn max_lsb(&self, out: QFormat) -> f64 {
+        self.max_abs / out.lsb()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const S3_12: QFormat = QFormat::new(3, 12);
+    const S0_15: QFormat = QFormat::new(0, 15);
+
+    #[test]
+    fn widths_and_ranges() {
+        assert_eq!(S3_12.width(), 16);
+        assert_eq!(S3_12.max_word(), 32767);
+        assert_eq!(S3_12.min_word(), -32768);
+        assert_eq!(S0_15.width(), 16);
+        assert_eq!(format!("{S3_12}"), "s3.12");
+        assert_eq!(format!("{S0_15}"), "s.15");
+    }
+
+    #[test]
+    fn quantize_roundtrip_exact_values() {
+        for w in [-32768i64, -1, 0, 1, 4096, 32767] {
+            let x = S3_12.dequantize(w);
+            assert_eq!(S3_12.quantize(x, Round::Nearest), w);
+        }
+    }
+
+    #[test]
+    fn quantize_saturates() {
+        assert_eq!(S3_12.quantize(100.0, Round::Nearest), 32767);
+        assert_eq!(S3_12.quantize(-100.0, Round::Nearest), -32768);
+    }
+
+    #[test]
+    fn quantize_floor_vs_nearest() {
+        // 0.3 * 4096 = 1228.8
+        assert_eq!(S3_12.quantize(0.3, Round::Nearest), 1229);
+        assert_eq!(S3_12.quantize(0.3, Round::Floor), 1228);
+        // negative: floor goes down
+        assert_eq!(S3_12.quantize(-0.3, Round::Floor), -1229);
+    }
+
+    #[test]
+    fn round_mul_matches_definition() {
+        // 0.5 * 0.5 = 0.25 at frac=12
+        let half = 1 << 11;
+        assert_eq!(round_mul(half, half, 12), 1 << 10);
+        // rounding: (3 * 3) >> 3 with frac 3: 9/8 = 1.125 -> 1
+        assert_eq!(round_mul(3, 3, 3), 1);
+        assert_eq!(floor_mul(3, 3, 3), 1);
+        // 5*5/8 = 3.125 -> nearest 3; 5*7/8 = 4.375 -> 4; 5*5=25+4>>3=3
+        assert_eq!(round_mul(5, 5, 3), 3);
+        // 6*6/8 = 4.5 -> +half rounds up to 5, floor gives 4
+        assert_eq!(round_mul(6, 6, 3), 5);
+        assert_eq!(floor_mul(6, 6, 3), 4);
+    }
+
+    #[test]
+    fn lsb_value() {
+        assert!((S0_15.lsb() - 2f64.powi(-15)).abs() < 1e-18);
+    }
+
+    #[test]
+    fn error_stats() {
+        let pairs = vec![(0i64, 0.0, 0.0), (1, 1.0, 1.5), (2, 2.0, 1.9)];
+        let s = ErrorStats::collect(pairs.into_iter());
+        assert_eq!(s.count, 3);
+        assert!((s.max_abs - 0.5).abs() < 1e-12);
+        assert_eq!(s.argmax, 1);
+        assert!(s.mean_abs > 0.0 && s.rms >= s.mean_abs);
+    }
+}

@@ -1,0 +1,149 @@
+//! Standard-cell library model (the paper's synthesis substrate).
+//!
+//! The paper synthesizes Verilog RTL against SVT and LVT flavours of a
+//! 40nm-class library and reports area / leakage / fmax / logic levels
+//! (Tables III & IV). We have no commercial library or synthesis tool,
+//! so this module models the quantities a synthesizer derives from one:
+//!
+//! * per-gate (NAND2-equivalent) delay, area, leakage for each threshold
+//!   flavour — LVT switches faster but leaks ~30x more;
+//! * register (DFF) cost and clk->q + setup overhead;
+//! * a *mapping depth factor*: with timing pressure, technology mapping
+//!   onto rich cells (AOI/OAI/compound) shortens the critical path — the
+//!   reason the paper's LVT runs report fewer logic levels than SVT for
+//!   the same RTL;
+//! * a *sizing speedup*: tight stage budgets make the synthesizer upsize
+//!   drive strengths, trading area/leakage for per-level delay.
+//!
+//! Calibration (documented in DESIGN.md §6): constants are chosen so the
+//! 16-bit 1-stage SVT point lands near Table III's order of magnitude
+//! (135 levels / 188 MHz / ~3.7 kµm²); every other row must then follow
+//! from structure, not further tuning.
+
+/// Threshold-voltage flavour of the library.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CellClass {
+    /// Standard-Vt: slow, very low leakage.
+    Svt,
+    /// Low-Vt: ~30% faster gates, ~30x leakage.
+    Lvt,
+}
+
+impl CellClass {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CellClass::Svt => "SVT",
+            CellClass::Lvt => "LVT",
+        }
+    }
+}
+
+/// A characterized standard-cell library.
+#[derive(Clone, Debug)]
+pub struct CellLibrary {
+    pub class: CellClass,
+    /// Average NAND2-equivalent gate delay at nominal sizing (ps/level).
+    pub gate_delay_ps: f64,
+    /// NAND2-equivalent gate area (µm²).
+    pub gate_area_um2: f64,
+    /// NAND2-equivalent gate leakage (nW).
+    pub gate_leak_nw: f64,
+    /// Flop clk->q + setup overhead per stage (ps).
+    pub reg_overhead_ps: f64,
+    /// DFF area (µm² per bit).
+    pub reg_area_um2: f64,
+    /// DFF leakage (nW per bit).
+    pub reg_leak_nw: f64,
+    /// Technology-mapping depth reduction available to this flavour
+    /// (multiplies structural levels; < 1 means richer mapping).
+    pub mapping_depth_factor: f64,
+}
+
+impl CellLibrary {
+    /// 40nm-class SVT calibration point.
+    pub fn svt() -> Self {
+        CellLibrary {
+            class: CellClass::Svt,
+            gate_delay_ps: 38.0,
+            gate_area_um2: 0.40,
+            gate_leak_nw: 0.45,
+            reg_overhead_ps: 210.0,
+            reg_area_um2: 1.8,
+            reg_leak_nw: 1.6,
+            mapping_depth_factor: 1.0,
+        }
+    }
+
+    /// 40nm-class LVT calibration point.
+    pub fn lvt() -> Self {
+        CellLibrary {
+            class: CellClass::Lvt,
+            gate_delay_ps: 26.5,
+            gate_area_um2: 0.40,
+            gate_leak_nw: 13.5,
+            reg_overhead_ps: 150.0,
+            reg_area_um2: 1.8,
+            reg_leak_nw: 40.0,
+            mapping_depth_factor: 0.82,
+        }
+    }
+
+    pub fn by_class(class: CellClass) -> Self {
+        match class {
+            CellClass::Svt => Self::svt(),
+            CellClass::Lvt => Self::lvt(),
+        }
+    }
+
+    /// Drive-sizing speedup under timing pressure: when the stage budget
+    /// is short (few levels per stage), synthesis upsizes the path. The
+    /// factor multiplies per-level delay; the companion
+    /// [`CellLibrary::sizing_area_factor`] charges for it.
+    pub fn sizing_speedup(&self, levels_per_stage: f64) -> f64 {
+        // Nominal above ~100 levels; up to ~20% faster below ~20 levels.
+        let x = (levels_per_stage / 100.0).clamp(0.15, 1.0);
+        0.80 + 0.20 * x
+    }
+
+    /// Area/leakage multiplier paid for the sizing speedup.
+    pub fn sizing_area_factor(&self, levels_per_stage: f64) -> f64 {
+        let speed = self.sizing_speedup(levels_per_stage);
+        // Only the critical cone is upsized while the relaxed cloud is
+        // simultaneously downsized, so net area grows sub-linearly with
+        // the drive speedup.
+        speed.powf(-0.75)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lvt_faster_and_leakier() {
+        let svt = CellLibrary::svt();
+        let lvt = CellLibrary::lvt();
+        assert!(lvt.gate_delay_ps < svt.gate_delay_ps);
+        assert!(lvt.gate_leak_nw > 20.0 * svt.gate_leak_nw);
+        assert!(lvt.mapping_depth_factor < 1.0);
+    }
+
+    #[test]
+    fn sizing_monotone() {
+        let lib = CellLibrary::svt();
+        assert!(lib.sizing_speedup(10.0) < lib.sizing_speedup(150.0));
+        assert!(lib.sizing_area_factor(10.0) > lib.sizing_area_factor(150.0));
+        // Bounded effects.
+        assert!(lib.sizing_speedup(1.0) >= 0.80);
+        assert!((lib.sizing_speedup(200.0) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn calibration_point_svt_period() {
+        // 135 levels * 38 ps + 210 ps ~ 5.3 ns -> ~188 MHz (Table III r1).
+        let lib = CellLibrary::svt();
+        let period = 135.0 * lib.gate_delay_ps + lib.reg_overhead_ps;
+        let fmax_mhz = 1e6 / period;
+        assert!((fmax_mhz - 188.0).abs() < 15.0, "fmax {fmax_mhz}");
+    }
+}

@@ -1,0 +1,37 @@
+//! # tanh-vf — Scalable VLSI implementation of tanh via velocity factors
+//!
+//! Production-grade reproduction of *"A Novel Method for Scalable VLSI
+//! Implementation of Hyperbolic Tangent Function"* (M. Chandra, 2020):
+//! a bit-accurate model of the paper's velocity-factor tanh datapath,
+//! the VLSI substrate it was evaluated on (standard-cell library model,
+//! structural netlist, synthesis/PPA estimation, cycle-accurate RTL
+//! simulation, Verilog emission), the published baselines it compares
+//! against, and a rust serving coordinator that executes the
+//! JAX/Pallas-authored model artifacts through PJRT.
+//!
+//! Layer map (see `DESIGN.md`):
+//! * L3 (this crate): coordinator, VLSI substrate, baselines, analysis.
+//! * L2 (`python/compile/model.py`): JAX model graphs, AOT-lowered to
+//!   `artifacts/*.hlo.txt`.
+//! * L1 (`python/compile/kernels/`): Pallas velocity-factor kernel.
+//!
+//! The datapath semantics are specified once (`python/compile/kernels/
+//! config.py`) and implemented bit-identically by the Pallas kernel, the
+//! [`tanh::golden`] model, the [`rtl`] simulator and the emitted Verilog.
+
+pub mod accel;
+pub mod analysis;
+pub mod baselines;
+pub mod bench;
+pub mod cli;
+pub mod coordinator;
+pub mod exec;
+pub mod fixed;
+pub mod gates;
+pub mod proptest;
+pub mod rtl;
+pub mod runtime;
+pub mod synth;
+pub mod tanh;
+pub mod util;
+pub mod verilog;

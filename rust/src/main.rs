@@ -1,0 +1,313 @@
+//! tanh-vf CLI: the leader entry point.
+//!
+//! Subcommands regenerate every table/figure of the paper, generate
+//! Verilog, explore the scalability space, and run the serving demo.
+
+use std::time::Duration;
+
+use tanh_vf::analysis::{exhaustive_error, TanhImpl};
+use tanh_vf::baselines;
+use tanh_vf::cli::{usage, Args};
+use tanh_vf::coordinator::{native_factory, pjrt_factory, Config, Coordinator};
+use tanh_vf::gates::CellClass;
+use tanh_vf::synth::ppa::{ppa_for, table_rows};
+use tanh_vf::tanh::lut::table1_rows;
+use tanh_vf::tanh::published::{published_max_error, PublishedConfig};
+use tanh_vf::tanh::{Subtractor, TanhConfig, TanhUnit};
+use tanh_vf::util::rng::Rng;
+use tanh_vf::util::table::{sci, Table};
+
+const SUBCOMMANDS: &[(&str, &str)] = &[
+    ("eval", "evaluate tanh on a value: --x 1.25 [--bits 8|16]"),
+    ("table1", "multi-bit velocity-factor LUT contents (paper Table I)"),
+    ("table2", "error analysis: NR stages x subtractor (paper Table II)"),
+    ("table3", "PPA sweep, 16-bit unit (paper Table III)"),
+    ("table4", "PPA sweep, 8-bit unit (paper Table IV)"),
+    ("fig1", "tanh + PWL series (paper fig. 1): --segments 8 --points 33"),
+    ("baselines", "accuracy/cost comparison vs published baselines (§II/§V)"),
+    ("codegen", "emit Verilog + testbench: --stages 2 --bits 16 --out DIR"),
+    ("sweep", "scalability sweep over precision (the paper's key claim)"),
+    ("serve", "serving demo: --backend native|pjrt --requests 1000"),
+    ("info", "artifact manifest summary"),
+];
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    let sub = args.subcommand.clone().unwrap_or_default();
+    let result = match sub.as_str() {
+        "eval" => cmd_eval(&args),
+        "table1" => cmd_table1(),
+        "table2" => cmd_table2(),
+        "table3" => cmd_ppa(TanhConfig::s3_12(), "Table III (s3.12 -> s.15)"),
+        "table4" => cmd_ppa(TanhConfig::s3_5(), "Table IV (s3.5 -> s.7)"),
+        "fig1" => cmd_fig1(&args),
+        "baselines" => cmd_baselines(),
+        "codegen" => cmd_codegen(&args),
+        "sweep" => cmd_sweep(),
+        "serve" => cmd_serve(&args),
+        "info" => cmd_info(),
+        _ => {
+            println!("{}", usage("tanh-vf", SUBCOMMANDS));
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+type R = Result<(), Box<dyn std::error::Error>>;
+
+fn cfg_for_bits(args: &Args) -> Result<TanhConfig, Box<dyn std::error::Error>> {
+    Ok(match args.u64_or("bits", 16)? {
+        8 => TanhConfig::s3_5(),
+        16 => TanhConfig::s3_12(),
+        other => return Err(format!("--bits {other}: use 8 or 16").into()),
+    })
+}
+
+fn cmd_eval(args: &Args) -> R {
+    let cfg = cfg_for_bits(args)?;
+    let x = args.f64_or("x", 1.0)?;
+    let unit = TanhUnit::new(cfg)?;
+    let y = unit.eval_f64(x);
+    println!("config : {}", cfg.describe());
+    println!(
+        "tanh({x}) = {y:.8}  (true {:.8}, err {:.3e})",
+        x.tanh(),
+        (y - x.tanh()).abs()
+    );
+    Ok(())
+}
+
+fn cmd_table1() -> R {
+    println!("Table I — multi-bit lookup for velocity factors (2-bit groups, s3.12)\n");
+    let mut t = Table::new(&["entry", "word (u0.18)", "value"]);
+    for (name, word, value) in table1_rows(&TanhConfig::s3_12()) {
+        t.row(&[name, format!("{word}"), format!("{value:.9}")]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_table2() -> R {
+    println!("Table II — error analysis for arithmetic approximations");
+    println!("(s3.12 input, s.15 output; exhaustive over 2^16 words)\n");
+    let mut t = Table::new(&[
+        "NR stages", "Subtractor", "Max Error", "(lsb)", "Paper",
+    ]);
+    let rows: &[(u32, Subtractor, &str)] = &[
+        (0, Subtractor::Twos, "4.44e-5 (fp divider ref)"),
+        (2, Subtractor::Ones, "2.77e-4"),
+        (2, Subtractor::Twos, "2.56e-4"),
+        (3, Subtractor::Ones, "4.32e-5"),
+        (3, Subtractor::Twos, "4.44e-5"),
+    ];
+    for &(nr, sub, paper) in rows {
+        let cfg = TanhConfig::s3_12().with_nr(nr).with_subtractor(sub);
+        let unit = TanhUnit::new(cfg)?;
+        let stats = exhaustive_error(&unit);
+        t.row(&[
+            if nr == 0 { "0 (fp ref)".into() } else { format!("{nr}") },
+            sub.name().to_string(),
+            sci(stats.max_abs),
+            format!("{:.2}", stats.max_lsb(cfg.out_format())),
+            paper.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_ppa(cfg: TanhConfig, title: &str) -> R {
+    println!("{title} — modelled synthesis (see DESIGN.md §6 for the calibration stance)\n");
+    let mut t = Table::new(&[
+        "Cells", "Latency (clk)", "Area (um2)", "Leakage (uW)",
+        "Fmax (MHz)", "Logic Levels",
+    ]);
+    for r in table_rows(&cfg) {
+        t.row(&r.row());
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_fig1(args: &Args) -> R {
+    let segments = args.usize_or("segments", 8)?;
+    let points = args.usize_or("points", 33)?;
+    println!("fig. 1 — tanh and its piecewise-linear approximation ({segments} segments)\n");
+    let mut t = Table::new(&["x", "tanh(x)", "PWL(x)", "err"]);
+    for (x, tanh, pwl) in baselines::pwl::fig1_series(segments, points) {
+        t.row(&[
+            format!("{x:+.3}"),
+            format!("{tanh:+.5}"),
+            format!("{pwl:+.5}"),
+            format!("{:.4}", (tanh - pwl).abs()),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_baselines() -> R {
+    println!("Baseline comparison (16-bit operating point, exhaustive error)\n");
+    let mut t = Table::new(&[
+        "Implementation", "Max Error", "LUT bits", "Multipliers", "Adders",
+    ]);
+    let unit = TanhUnit::new(TanhConfig::s3_12())?;
+    let mut impls: Vec<Box<dyn TanhImpl>> = baselines::suite16();
+    impls.insert(0, Box::new(unit));
+    for imp in &impls {
+        let e = exhaustive_error(imp.as_ref());
+        let c = imp.cost();
+        t.row(&[
+            imp.name(),
+            sci(e.max_abs),
+            format!("{}", c.lut_bits),
+            format!("{}", c.multipliers),
+            format!("{}", c.adders),
+        ]);
+    }
+    println!("{}", t.render());
+    let pc = PublishedConfig::default();
+    println!(
+        "published method (fig. 3, eq. 3 tail, {} registers): max error {}",
+        pc.register_count(),
+        sci(published_max_error(&pc))
+    );
+    Ok(())
+}
+
+fn cmd_codegen(args: &Args) -> R {
+    let cfg = cfg_for_bits(args)?;
+    let stages = args.u64_or("stages", 2)? as u32;
+    let out = args.str_or("out", "target/verilog").to_string();
+    let gen = tanh_vf::verilog::generate(&cfg, stages, 256);
+    std::fs::create_dir_all(&out)?;
+    let vpath = format!("{out}/{}.v", gen.module_name);
+    let tpath = format!("{out}/{}_tb.v", gen.module_name);
+    std::fs::write(&vpath, &gen.module)?;
+    std::fs::write(&tpath, &gen.testbench)?;
+    println!("wrote {vpath}\nwrote {tpath}");
+    let r = ppa_for(&cfg, CellClass::Svt, stages);
+    println!(
+        "modelled PPA (SVT): {:.0} um2, {:.2} uW leakage, {:.0} MHz, {} levels",
+        r.area_um2, r.leakage_uw, r.fmax_mhz, r.logic_levels
+    );
+    Ok(())
+}
+
+fn cmd_sweep() -> R {
+    println!("Scalability sweep — one datapath generator, any precision\n");
+    let mut t = Table::new(&[
+        "Config", "Max Error", "(lsb)", "Area um2 (SVT,2st)", "Fmax MHz",
+    ]);
+    let points = [
+        TanhConfig {
+            in_int: 2, in_frac: 5, out_frac: 7, lut_bits: 10, mult_bits: 9,
+            lut_group: 3, shuffle: true, nr_stages: 3,
+            subtractor: Subtractor::Twos,
+        },
+        TanhConfig::s3_5(),
+        TanhConfig {
+            in_int: 3, in_frac: 9, out_frac: 11, lut_bits: 14, mult_bits: 12,
+            lut_group: 4, shuffle: true, nr_stages: 3,
+            subtractor: Subtractor::Twos,
+        },
+        TanhConfig::s3_12(),
+        TanhConfig {
+            in_int: 4, in_frac: 13, out_frac: 17, lut_bits: 20, mult_bits: 18,
+            lut_group: 4, shuffle: true, nr_stages: 3,
+            subtractor: Subtractor::Twos,
+        },
+    ];
+    for cfg in points {
+        let unit = TanhUnit::new(cfg)?;
+        let e = exhaustive_error(&unit);
+        let r = ppa_for(&cfg, CellClass::Svt, 2);
+        t.row(&[
+            cfg.describe(),
+            sci(e.max_abs),
+            format!("{:.2}", e.max_lsb(cfg.out_format())),
+            format!("{:.0}", r.area_um2),
+            format!("{:.0}", r.fmax_mhz),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> R {
+    let backend = args.str_or("backend", "native").to_string();
+    let n = args.usize_or("requests", 1000)?;
+    let factory = match backend.as_str() {
+        "native" => native_factory(TanhConfig::s3_12(), true),
+        "pjrt" => pjrt_factory(
+            tanh_vf::runtime::artifacts_dir(),
+            "tanh_s3_12".to_string(),
+        ),
+        other => return Err(format!("--backend {other}: native|pjrt").into()),
+    };
+    let c = Coordinator::start(
+        Config {
+            batch_capacity: 1024,
+            max_wait: Duration::from_millis(2),
+            workers: 2,
+            queue_limit: 8192,
+        },
+        factory,
+    );
+    let mut rng = Rng::new(1);
+    let t0 = std::time::Instant::now();
+    let handles: Vec<_> = (0..n)
+        .map(|_| {
+            let len = 1 + rng.below(256) as usize;
+            let words: Vec<i32> = (0..len)
+                .map(|_| rng.range_i64(-32768, 32768) as i32)
+                .collect();
+            c.submit(words)
+        })
+        .collect();
+    let mut words_total = 0usize;
+    for h in handles {
+        let out = h.recv().ok_or("dropped")?.map_err(|e| e.to_string())?;
+        words_total += out.len();
+    }
+    let dt = t0.elapsed();
+    let s = c.snapshot();
+    println!("backend={backend} requests={n} words={words_total}");
+    println!(
+        "wall={:?}  throughput={:.0} req/s  ({:.2e} words/s)",
+        dt,
+        n as f64 / dt.as_secs_f64(),
+        words_total as f64 / dt.as_secs_f64()
+    );
+    println!(
+        "batches={} mean_fill={:.2} p50={}us p99={}us max={}us",
+        s.batches, s.mean_batch_fill, s.p50_latency_us, s.p99_latency_us,
+        s.max_latency_us
+    );
+    Ok(())
+}
+
+fn cmd_info() -> R {
+    let dir = tanh_vf::runtime::artifacts_dir();
+    let man = tanh_vf::runtime::Manifest::load(&dir)?;
+    println!("artifacts: {}", dir.display());
+    for (name, e) in &man.entries {
+        let ins: Vec<String> = e
+            .inputs
+            .iter()
+            .map(|s| format!("{}{:?}", s.name, s.shape))
+            .collect();
+        println!("  {name}: {} <- {}", e.file, ins.join(", "));
+    }
+    Ok(())
+}

@@ -1,0 +1,235 @@
+//! Minimal property-based testing framework.
+//!
+//! The offline crate set has no `proptest`, so this module provides the
+//! subset the test-suite needs: composable generators over a
+//! deterministic PRNG, a `forall` runner with failure-case shrinking, and
+//! a `prop!` macro for terse invariant checks.
+//!
+//! Shrinking is value-based: a failing case is re-generated from
+//! candidate simplifications (halving integers toward zero, shortening
+//! vectors) until a local minimum is reached.
+
+use crate::util::rng::Rng;
+
+/// A generator of values of type `T`, plus a shrinking strategy.
+pub struct Gen<T> {
+    gen: Box<dyn Fn(&mut Rng) -> T>,
+    shrink: Box<dyn Fn(&T) -> Vec<T>>,
+}
+
+impl<T: Clone + 'static> Gen<T> {
+    pub fn new(
+        gen: impl Fn(&mut Rng) -> T + 'static,
+        shrink: impl Fn(&T) -> Vec<T> + 'static,
+    ) -> Self {
+        Gen { gen: Box::new(gen), shrink: Box::new(shrink) }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> T {
+        (self.gen)(rng)
+    }
+
+    pub fn shrinks(&self, v: &T) -> Vec<T> {
+        (self.shrink)(v)
+    }
+
+    /// Map the generated value (loses shrinking granularity of the target
+    /// domain; shrinks of the source are mapped through).
+    pub fn map<U: Clone + 'static>(
+        self,
+        f: impl Fn(T) -> U + Clone + 'static,
+    ) -> Gen<U>
+    where
+        T: 'static,
+    {
+        // Keep a paired source value via regeneration: simplest sound
+        // approach is to not shrink mapped generators.
+        let g = self.gen;
+        let f2 = f.clone();
+        Gen::new(move |r| f2(g(r)), |_| vec![])
+    }
+}
+
+/// Integer generator in `[lo, hi]`, shrinking toward `0` (or `lo`).
+pub fn int(lo: i64, hi: i64) -> Gen<i64> {
+    assert!(lo <= hi);
+    let anchor = if lo <= 0 && hi >= 0 { 0 } else { lo };
+    Gen::new(
+        move |r| r.range_i64(lo, hi + 1),
+        move |&v| {
+            let mut out = Vec::new();
+            if v != anchor {
+                out.push(anchor);
+                let mid = anchor + (v - anchor) / 2;
+                if mid != v && mid != anchor {
+                    out.push(mid);
+                }
+                if (v - anchor).abs() > 1 {
+                    out.push(v - (v - anchor).signum());
+                }
+            }
+            out
+        },
+    )
+}
+
+/// Vec generator with length in `[0, max_len]`, shrinking by halving
+/// length and shrinking elements.
+pub fn vec_of(elem: Gen<i64>, max_len: usize) -> Gen<Vec<i64>> {
+    let elem = std::rc::Rc::new(elem);
+    let e1 = elem.clone();
+    Gen::new(
+        move |r| {
+            let n = r.below(max_len as u64 + 1) as usize;
+            (0..n).map(|_| e1.sample(r)).collect()
+        },
+        move |v: &Vec<i64>| {
+            let mut out = Vec::new();
+            if !v.is_empty() {
+                out.push(v[..v.len() / 2].to_vec());
+                out.push(v[1..].to_vec());
+                // shrink one element
+                for (i, x) in v.iter().enumerate().take(4) {
+                    for s in elem.shrinks(x) {
+                        let mut w = v.clone();
+                        w[i] = s;
+                        out.push(w);
+                    }
+                }
+            }
+            out
+        },
+    )
+}
+
+/// Result of a property run.
+#[derive(Debug)]
+pub enum PropResult<T> {
+    Pass { cases: usize },
+    Fail { minimal: T, shrinks: usize, message: String },
+}
+
+/// Run `check` against `cases` generated values; on failure, shrink.
+pub fn forall<T: Clone + std::fmt::Debug + 'static>(
+    seed: u64,
+    cases: usize,
+    gen: &Gen<T>,
+    check: impl Fn(&T) -> Result<(), String>,
+) -> PropResult<T> {
+    let mut rng = Rng::new(seed);
+    for _ in 0..cases {
+        let v = gen.sample(&mut rng);
+        if let Err(msg) = check(&v) {
+            // Shrink to a local minimum (bounded effort).
+            let mut cur = v;
+            let mut cur_msg = msg;
+            let mut shrinks = 0;
+            'outer: loop {
+                for cand in gen.shrinks(&cur) {
+                    if let Err(m) = check(&cand) {
+                        cur = cand;
+                        cur_msg = m;
+                        shrinks += 1;
+                        if shrinks < 1000 {
+                            continue 'outer;
+                        }
+                    }
+                }
+                break;
+            }
+            return PropResult::Fail { minimal: cur, shrinks, message: cur_msg };
+        }
+    }
+    PropResult::Pass { cases }
+}
+
+/// Assert a property holds; panics with the minimal counterexample.
+pub fn assert_prop<T: Clone + std::fmt::Debug + 'static>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    gen: &Gen<T>,
+    check: impl Fn(&T) -> Result<(), String>,
+) {
+    match forall(seed, cases, gen, check) {
+        PropResult::Pass { .. } => {}
+        PropResult::Fail { minimal, shrinks, message } => panic!(
+            "property '{name}' failed after {shrinks} shrinks\n  \
+             counterexample: {minimal:?}\n  {message}"
+        ),
+    }
+}
+
+/// Terse property check: `prop!(name, gen, |v| condition, cases)`.
+#[macro_export]
+macro_rules! prop {
+    ($name:expr, $gen:expr, $check:expr) => {
+        $crate::proptest::assert_prop($name, 0xC0FFEE, 256, &$gen, $check)
+    };
+    ($name:expr, $gen:expr, $check:expr, $cases:expr) => {
+        $crate::proptest::assert_prop($name, 0xC0FFEE, $cases, &$gen, $check)
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        let g = int(-100, 100);
+        match forall(1, 500, &g, |&v| {
+            if v >= -100 && v <= 100 {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        }) {
+            PropResult::Pass { cases } => assert_eq!(cases, 500),
+            f => panic!("{f:?}"),
+        }
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_boundary() {
+        // Fails for v >= 50; minimal counterexample should shrink to 50.
+        let g = int(0, 1000);
+        match forall(2, 500, &g, |&v| {
+            if v < 50 {
+                Ok(())
+            } else {
+                Err(format!("{v} >= 50"))
+            }
+        }) {
+            PropResult::Fail { minimal, .. } => {
+                assert_eq!(minimal, 50, "shrinking should find the boundary")
+            }
+            _ => panic!("property should fail"),
+        }
+    }
+
+    #[test]
+    fn vec_shrinking_reduces_length() {
+        let g = vec_of(int(0, 10), 64);
+        match forall(3, 500, &g, |v: &Vec<i64>| {
+            if v.len() < 3 {
+                Ok(())
+            } else {
+                Err("len >= 3".into())
+            }
+        }) {
+            PropResult::Fail { minimal, .. } => assert_eq!(minimal.len(), 3),
+            _ => panic!("should fail"),
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let g = int(0, 1 << 30);
+        let mut r1 = Rng::new(9);
+        let mut r2 = Rng::new(9);
+        for _ in 0..50 {
+            assert_eq!(g.sample(&mut r1), g.sample(&mut r2));
+        }
+    }
+}

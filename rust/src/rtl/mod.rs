@@ -1,0 +1,233 @@
+//! Cycle-accurate RTL simulation of the pipelined datapath.
+//!
+//! Simulates the synthesized netlist with its pipeline stage assignment
+//! at clock granularity: a new input word may be accepted every clock,
+//! values computed in stage `s` are only visible after `s+1` clock edges,
+//! and the result emerges after `stages` clocks (the paper's "Latency
+//! (Clocks)" column). Verified bit-exact against the golden model.
+
+pub mod vcd;
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::synth::netlist::Netlist;
+use crate::synth::pipeline::PipelineAssignment;
+
+/// One in-flight transaction.
+#[derive(Clone, Debug)]
+struct Txn {
+    /// Clocks since insertion (stage index currently being computed).
+    age: u32,
+    /// Node values computed so far (by stage).
+    vals: Vec<i64>,
+    /// Which nodes have been computed.
+    done: Vec<bool>,
+    input: i64,
+}
+
+/// Cycle-accurate simulator for a pipelined feed-forward netlist.
+pub struct RtlSim<'a> {
+    net: &'a Netlist,
+    pipe: &'a PipelineAssignment,
+    in_flight: VecDeque<Txn>,
+    /// Total clock edges simulated.
+    pub cycles: u64,
+    /// Total results produced.
+    pub results: u64,
+}
+
+impl<'a> RtlSim<'a> {
+    pub fn new(net: &'a Netlist, pipe: &'a PipelineAssignment) -> Self {
+        assert_eq!(net.nodes.len(), pipe.stage_of.len());
+        RtlSim { net, pipe, in_flight: VecDeque::new(), cycles: 0, results: 0 }
+    }
+
+    pub fn latency(&self) -> u32 {
+        self.pipe.stages
+    }
+
+    /// True when no transactions are in flight.
+    pub fn idle(&self) -> bool {
+        self.in_flight.is_empty()
+    }
+
+    /// The value currently visible on each node's output wires: the
+    /// combinational cloud of stage `s` shows the transaction whose age
+    /// is `s` (its registered inputs arrived this cycle). Used by the
+    /// VCD dumper.
+    pub fn visible_values(&self) -> Vec<Option<i64>> {
+        let mut out = vec![None; self.net.nodes.len()];
+        let last = self.pipe.stages - 1;
+        for txn in &self.in_flight {
+            let occupied = txn.age.min(last);
+            for (id, &s) in self.pipe.stage_of.iter().enumerate() {
+                if s == occupied && txn.done[id] {
+                    out[id] = Some(txn.vals[id]);
+                }
+            }
+        }
+        out
+    }
+
+    /// Advance one clock edge. `input`: the word accepted this cycle (the
+    /// pipeline accepts one per clock; `None` inserts a bubble). Returns
+    /// the output word registered at this edge, if one completes.
+    pub fn clock(&mut self, input: Option<i64>) -> Option<i64> {
+        self.cycles += 1;
+
+        // Age the pipeline and compute each transaction's next stage.
+        let mut flying = std::mem::take(&mut self.in_flight);
+        for txn in flying.iter_mut() {
+            txn.age += 1;
+            if txn.age < self.pipe.stages {
+                self.compute_stage(txn, txn.age);
+            }
+        }
+        self.in_flight = flying;
+
+        // Retire the oldest transaction if it has passed the output reg.
+        let out = if self
+            .in_flight
+            .front()
+            .map(|t| t.age >= self.pipe.stages)
+            .unwrap_or(false)
+        {
+            let t = self.in_flight.pop_front().unwrap();
+            self.results += 1;
+            Some(self.net.outputs.iter().map(|&o| t.vals[o]).next().unwrap())
+        } else {
+            None
+        };
+
+        // Accept the new input and compute its stage-0 logic.
+        if let Some(x) = input {
+            let mut txn = Txn {
+                age: 0,
+                vals: vec![0; self.net.nodes.len()],
+                done: vec![false; self.net.nodes.len()],
+                input: x,
+            };
+            self.compute_stage(&mut txn, 0);
+            self.in_flight.push_back(txn);
+        }
+
+        out
+    }
+
+    /// Evaluate all nodes assigned to `stage` for this transaction, from
+    /// the (registered) values of earlier stages — exactly what the
+    /// stage's combinational cloud does on a clock edge.
+    fn compute_stage(&self, txn: &mut Txn, stage: u32) {
+        let mut inputs = BTreeMap::new();
+        inputs.insert("x".to_string(), txn.input);
+        for (id, &s) in self.pipe.stage_of.iter().enumerate() {
+            if s == stage {
+                debug_assert!(!txn.done[id]);
+                // Pipeline legality: predecessors live in stages <= s.
+                debug_assert!(
+                    self.net.nodes[id].inputs.iter().all(|&i| txn.done[i]),
+                    "stage {stage} node {id} reads an uncomputed value"
+                );
+                txn.vals[id] = self.net.eval_node_at(id, &txn.vals, &inputs);
+                txn.done[id] = true;
+            }
+        }
+    }
+
+    /// Run a whole batch through the pipeline back-to-back; returns the
+    /// outputs in order plus the cycle count it took.
+    pub fn run_batch(&mut self, xs: &[i64]) -> (Vec<i64>, u64) {
+        let start = self.cycles;
+        let mut out = Vec::with_capacity(xs.len());
+        let mut it = xs.iter();
+        loop {
+            let next = it.next().copied();
+            if next.is_none() && self.in_flight.is_empty() {
+                break;
+            }
+            if let Some(y) = self.clock(next) {
+                out.push(y);
+            }
+        }
+        (out, self.cycles - start)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synth::datapath::build_tanh_datapath;
+    use crate::synth::pipeline::assign_stages;
+    use crate::tanh::golden::tanh_golden_batch;
+    use crate::tanh::TanhConfig;
+
+    #[test]
+    fn pipelined_sim_matches_golden_8bit_exhaustive() {
+        let cfg = TanhConfig::s3_5();
+        let net = build_tanh_datapath(&cfg);
+        let xs: Vec<i64> = (-256..256).collect();
+        let want = tanh_golden_batch(&xs, &cfg);
+        for stages in [1u32, 2, 4, 7] {
+            let pipe = assign_stages(&net, stages);
+            let mut sim = RtlSim::new(&net, &pipe);
+            let (got, _) = sim.run_batch(&xs);
+            assert_eq!(got, want, "stages={stages}");
+        }
+    }
+
+    #[test]
+    fn throughput_one_per_clock() {
+        let cfg = TanhConfig::s3_12();
+        let net = build_tanh_datapath(&cfg);
+        let pipe = assign_stages(&net, 7);
+        let mut sim = RtlSim::new(&net, &pipe);
+        let xs: Vec<i64> = (0..1000).collect();
+        let (got, cycles) = sim.run_batch(&xs);
+        assert_eq!(got.len(), 1000);
+        // N results in N + latency cycles.
+        assert_eq!(cycles, 1000 + 7);
+    }
+
+    #[test]
+    fn latency_matches_stage_count() {
+        let cfg = TanhConfig::s3_12();
+        let net = build_tanh_datapath(&cfg);
+        for stages in [1u32, 2, 7] {
+            let pipe = assign_stages(&net, stages);
+            let mut sim = RtlSim::new(&net, &pipe);
+            let mut first_out_at = None;
+            for c in 0..(stages as usize + 2) {
+                let out = sim.clock(if c == 0 { Some(1000) } else { None });
+                if out.is_some() && first_out_at.is_none() {
+                    first_out_at = Some(c as u32);
+                }
+            }
+            // Input at clock 0 emerges on the edge `stages` clocks later.
+            assert_eq!(first_out_at, Some(stages), "stages={stages}");
+        }
+    }
+
+    #[test]
+    fn bubbles_preserve_order_and_values() {
+        let cfg = TanhConfig::s3_5();
+        let net = build_tanh_datapath(&cfg);
+        let pipe = assign_stages(&net, 3);
+        let mut sim = RtlSim::new(&net, &pipe);
+        let xs = [5i64, -17, 100];
+        let want = tanh_golden_batch(&xs, &cfg);
+        let mut got = Vec::new();
+        // Insert with bubbles between.
+        let pattern = [Some(5i64), None, Some(-17), None, None, Some(100)];
+        for &p in &pattern {
+            if let Some(y) = sim.clock(p) {
+                got.push(y);
+            }
+        }
+        for _ in 0..8 {
+            if let Some(y) = sim.clock(None) {
+                got.push(y);
+            }
+        }
+        assert_eq!(got, want);
+    }
+}

@@ -1,0 +1,340 @@
+//! PJRT runtime: load the AOT-compiled JAX/Pallas artifacts and execute
+//! them from the rust hot path.
+//!
+//! Python runs only at build time (`make artifacts`); this module makes
+//! the resulting HLO text executable: parse `artifacts/manifest.json`,
+//! compile each entry once on the PJRT CPU client, validate buffer
+//! shapes/dtypes against the manifest before dispatch, and cache the
+//! compiled executables for reuse.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Supported element types of artifact I/O.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "s32" | "i32" => Ok(Dtype::I32),
+            other => bail!("unsupported dtype '{other}'"),
+        }
+    }
+}
+
+/// Declared shape/dtype of one artifact input or output.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: v
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("io entry missing name"))?
+                .to_string(),
+            shape: v
+                .get("shape")
+                .and_then(Json::as_i64_vec)
+                .ok_or_else(|| anyhow!("io entry missing shape"))?
+                .into_iter()
+                .map(|d| d as usize)
+                .collect(),
+            dtype: Dtype::parse(
+                v.get("dtype").and_then(Json::as_str).unwrap_or("f32"),
+            )?,
+        })
+    }
+}
+
+/// One AOT-compiled entry point.
+#[derive(Clone, Debug)]
+pub struct EntryMeta {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Parsed `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: BTreeMap<String, EntryMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| {
+                format!(
+                    "reading {}/manifest.json (run `make artifacts`)",
+                    dir.display()
+                )
+            })?;
+        let root = json::parse(&text)
+            .map_err(|e| anyhow!("parsing manifest.json: {e}"))?;
+        let mut entries = BTreeMap::new();
+        let obj = root
+            .get("entries")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest has no entries"))?;
+        for (name, e) in obj {
+            let inputs = e
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("entry {name} missing inputs"))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = e
+                .get("outputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("entry {name} missing outputs"))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let default_file = format!("{name}.hlo.txt");
+            entries.insert(
+                name.clone(),
+                EntryMeta {
+                    name: name.clone(),
+                    file: e
+                        .get("file")
+                        .and_then(Json::as_str)
+                        .unwrap_or(&default_file)
+                        .to_string(),
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), entries })
+    }
+}
+
+/// A tensor travelling into/out of an executable.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Tensor {
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32(v) => v.len(),
+            Tensor::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            Tensor::F32(_) => Dtype::F32,
+            Tensor::I32(_) => Dtype::I32,
+        }
+    }
+
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            Tensor::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_i32(&self) -> Option<&[i32]> {
+        match self {
+            Tensor::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    fn to_literal(&self, spec: &TensorSpec) -> Result<xla::Literal> {
+        let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Tensor::F32(v) => xla::Literal::vec1(v),
+            Tensor::I32(v) => xla::Literal::vec1(v),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    fn from_literal(lit: &xla::Literal, dtype: Dtype) -> Result<Tensor> {
+        Ok(match dtype {
+            Dtype::F32 => Tensor::F32(lit.to_vec::<f32>()?),
+            Dtype::I32 => Tensor::I32(lit.to_vec::<i32>()?),
+        })
+    }
+}
+
+/// PJRT-backed executor with an executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<BTreeMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and load the manifest from `dir`.
+    pub fn new(dir: &Path) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu()?;
+        let manifest = Manifest::load(dir)?;
+        Ok(Runtime { client, manifest, cache: Mutex::new(BTreeMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn entry(&self, name: &str) -> Result<EntryMeta> {
+        self.manifest
+            .entries
+            .get(name)
+            .cloned()
+            .ok_or_else(|| anyhow!("no artifact entry '{name}'"))
+    }
+
+    /// Compile (or fetch from cache) an entry point.
+    pub fn ensure_compiled(&self, name: &str) -> Result<()> {
+        let meta = self.entry(name)?;
+        let mut cache = self.cache.lock().unwrap();
+        if cache.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.manifest.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .with_context(|| format!("loading HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an entry point. Inputs are validated against the manifest.
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let meta = self.entry(name)?;
+        if inputs.len() != meta.inputs.len() {
+            bail!(
+                "{name}: expected {} inputs, got {}",
+                meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (t, spec) in inputs.iter().zip(&meta.inputs) {
+            if t.len() != spec.elements() {
+                bail!(
+                    "{name}: input '{}' expects {} elements, got {}",
+                    spec.name,
+                    spec.elements(),
+                    t.len()
+                );
+            }
+            if t.dtype() != spec.dtype {
+                bail!("{name}: input '{}' dtype mismatch", spec.name);
+            }
+        }
+        self.ensure_compiled(name)?;
+        let cache = self.cache.lock().unwrap();
+        let exe = cache.get(name).unwrap();
+
+        let literals = inputs
+            .iter()
+            .zip(&meta.inputs)
+            .map(|(t, s)| t.to_literal(s))
+            .collect::<Result<Vec<_>>>()?;
+        let result =
+            exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let parts = result.to_tuple()?;
+        if parts.len() != meta.outputs.len() {
+            bail!(
+                "{name}: expected {} outputs, got {}",
+                meta.outputs.len(),
+                parts.len()
+            );
+        }
+        parts
+            .iter()
+            .zip(&meta.outputs)
+            .map(|(lit, spec)| Tensor::from_literal(lit, spec.dtype))
+            .collect()
+    }
+}
+
+/// Default artifacts directory (repo-relative).
+pub fn artifacts_dir() -> PathBuf {
+    crate::util::repo_path("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Manifest parsing is unit-testable without PJRT; executor paths are
+    // covered by `rust/tests/pjrt_integration.rs`.
+
+    #[test]
+    fn manifest_parses() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let man = Manifest::load(&dir).unwrap();
+        let tanh = &man.entries["tanh_s3_12"];
+        assert_eq!(tanh.inputs.len(), 1);
+        assert_eq!(tanh.inputs[0].dtype, Dtype::I32);
+        assert_eq!(tanh.inputs[0].shape, vec![1024]);
+        let mlp = &man.entries["mlp_b32"];
+        assert_eq!(mlp.inputs.len(), 7);
+        assert_eq!(mlp.outputs[0].shape, vec![32, 10]);
+    }
+
+    #[test]
+    fn tensor_validation() {
+        let spec = TensorSpec {
+            name: "x".into(),
+            shape: vec![4, 2],
+            dtype: Dtype::F32,
+        };
+        assert_eq!(spec.elements(), 8);
+        let t = Tensor::F32(vec![0.0; 8]);
+        assert_eq!(t.dtype(), Dtype::F32);
+        assert!(t.to_literal(&spec).is_ok());
+    }
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(Dtype::parse("f32").unwrap(), Dtype::F32);
+        assert_eq!(Dtype::parse("s32").unwrap(), Dtype::I32);
+        assert!(Dtype::parse("f64").is_err());
+    }
+}

@@ -1,0 +1,203 @@
+//! Build the optimized velocity-factor tanh datapath (paper fig. 5) as a
+//! structural netlist, bit-identical to the golden model.
+
+use crate::tanh::config::{Subtractor, TanhConfig};
+use crate::tanh::lut::lut_tables;
+
+use super::netlist::{BlockKind, Netlist, NodeId};
+
+/// Construct the datapath netlist for `cfg`. The single input is `"x"`
+/// (signed s{in_int}.{in_frac} word); the single output is the signed
+/// s.{out_frac} tanh word.
+pub fn build_tanh_datapath(cfg: &TanhConfig) -> Netlist {
+    cfg.validate().expect("invalid config");
+    let mut n = Netlist::default();
+    let l = cfg.lut_bits;
+    let m = cfg.mult_bits;
+    let one_l = 1i64 << l;
+
+    let x = n.input("x", cfg.in_width());
+    let mag = n.add(BlockKind::SignAbs, vec![x], cfg.mag_bits());
+    let sign = n.add(BlockKind::SignBit, vec![x], 1);
+    let sat = n.add(
+        BlockKind::CmpGeConst { k: cfg.sat_threshold() },
+        vec![mag],
+        1,
+    );
+
+    // Grouped LUT lookups (fig. 5 left) followed by the product chain of
+    // §IV.B.3. The chain is kept *sequential* — the same association and
+    // rounding order as the cross-layer spec — so the netlist is
+    // bit-identical to the golden model and the Pallas kernel. (A
+    // balanced tree would shave one multiplier level but changes the
+    // intermediate rounding; see DESIGN.md §5.)
+    let factors: Vec<NodeId> = cfg
+        .group_positions()
+        .into_iter()
+        .zip(lut_tables(cfg))
+        .map(|(positions, table)| {
+            n.add(BlockKind::RomGather { positions, table }, vec![mag], l + 1)
+        })
+        .collect();
+    let mut f = factors[0];
+    for &e in &factors[1..] {
+        f = n.add(BlockKind::MulRound { frac: l }, vec![f, e], l + 1);
+    }
+
+    // Output stage: num = 1 - f (subtractor flavour), den = 1 + f (wire).
+    let num = match cfg.subtractor {
+        Subtractor::Twos => {
+            n.add(BlockKind::SubFromConst { k: one_l }, vec![f], l)
+        }
+        Subtractor::Ones => {
+            n.add(BlockKind::OnesFromConst { k: one_l }, vec![f], l)
+        }
+    };
+    let den = n.add(BlockKind::ConcatConst { k: one_l }, vec![f], l + 1);
+
+    let t = if cfg.nr_stages == 0 {
+        n.add(
+            BlockKind::FloatDivRef { out_frac: cfg.out_frac },
+            vec![num, den],
+            cfg.out_frac + 1,
+        )
+    } else {
+        // d = (1+f)/2 at M fractional bits (wire: shift).
+        let d = n.add(BlockKind::ShiftRight { k: l + 1 - m }, vec![den], m + 1);
+        // NR seed and iterations.
+        let mut xr = n.add(
+            BlockKind::SeedSub { c: cfg.nr_seed_const() },
+            vec![d],
+            m + 2,
+        );
+        for _ in 0..cfg.nr_stages {
+            let t0 = n.add(BlockKind::MulRound { frac: m }, vec![d, xr], m + 2);
+            let sub = n.add(
+                BlockKind::SubFromConst { k: 2i64 << m },
+                vec![t0],
+                m + 2,
+            );
+            xr = n.add(BlockKind::MulRound { frac: m }, vec![xr, sub], m + 2);
+        }
+        // tanh = num * recip / 2 rounded into the output format: a single
+        // round-shift multiply (no intermediate rounding).
+        let shift = l + m + 1 - cfg.out_frac;
+        n.add(
+            BlockKind::MulRound { frac: shift },
+            vec![num, xr],
+            cfg.out_frac + 2,
+        )
+    };
+
+    let clamped = n.add(
+        BlockKind::ClampMax { max: cfg.out_max() },
+        vec![t],
+        cfg.out_frac,
+    );
+    let sat_sel = n.add(
+        BlockKind::MuxConst { k: cfg.out_max() },
+        vec![clamped, sat],
+        cfg.out_frac,
+    );
+    let out = n.add(BlockKind::NegIf, vec![sat_sel, sign], cfg.out_width());
+    n.mark_output(out);
+    n.check().unwrap();
+    n
+}
+
+/// Evaluate the netlist on one input word (test/simulation helper).
+pub fn eval_datapath(net: &Netlist, x: i64) -> i64 {
+    let mut ins = std::collections::BTreeMap::new();
+    ins.insert("x".to_string(), x);
+    net.eval(&ins)[0]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tanh::golden::tanh_golden_batch;
+    use crate::tanh::Subtractor;
+
+    #[test]
+    fn netlist_matches_golden_8bit_exhaustive() {
+        for sub in [Subtractor::Twos, Subtractor::Ones] {
+            for nr in [0u32, 2, 3] {
+                let cfg = TanhConfig::s3_5().with_nr(nr).with_subtractor(sub);
+                let net = build_tanh_datapath(&cfg);
+                let xs: Vec<i64> = (-256..256).collect();
+                let want = tanh_golden_batch(&xs, &cfg);
+                for (&x, &w) in xs.iter().zip(&want) {
+                    assert_eq!(eval_datapath(&net, x), w,
+                               "x={x} cfg={}", cfg.describe());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn netlist_matches_golden_16bit_sampled() {
+        let cfg = TanhConfig::s3_12();
+        let net = build_tanh_datapath(&cfg);
+        let xs: Vec<i64> = (-32768..32768).step_by(97).collect();
+        let want = tanh_golden_batch(&xs, &cfg);
+        for (&x, &w) in xs.iter().zip(&want) {
+            assert_eq!(eval_datapath(&net, x), w, "x={x}");
+        }
+    }
+
+    #[test]
+    fn structure_multiplier_count() {
+        // §IV.B.3: 4-bit grouping for s3.12 -> 4 LUTs, 3 chain multipliers;
+        // NR3 adds 6; final recompose adds 1 -> 10 MulRound nodes.
+        let net = build_tanh_datapath(&TanhConfig::s3_12());
+        let muls = net
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.kind, BlockKind::MulRound { .. }))
+            .count();
+        assert_eq!(muls, 10);
+        let roms = net
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.kind, BlockKind::RomGather { .. }))
+            .count();
+        assert_eq!(roms, 4);
+    }
+
+    #[test]
+    fn critical_path_in_paper_band() {
+        // Paper Table III: 135 logic levels for the 1-stage 16-bit SVT
+        // flavour. The structural model must land in the same band.
+        let net = build_tanh_datapath(&TanhConfig::s3_12());
+        let levels = net.critical_levels();
+        assert!(
+            (90.0..200.0).contains(&levels),
+            "critical levels {levels} out of the paper's band"
+        );
+    }
+
+    #[test]
+    fn eight_bit_shallower_than_16() {
+        let l16 = build_tanh_datapath(&TanhConfig::s3_12()).critical_levels();
+        let l8 = build_tanh_datapath(&TanhConfig::s3_5()).critical_levels();
+        assert!(l8 < l16);
+    }
+
+    #[test]
+    fn sequential_product_chain_order() {
+        // The chain must associate left-to-right (spec rounding order):
+        // each chain multiplier's arrival strictly grows.
+        let cfg = TanhConfig::s3_12();
+        let net = build_tanh_datapath(&cfg);
+        let arr = net.arrival_levels();
+        let mul_arr: Vec<f64> = net
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| matches!(n.kind, BlockKind::MulRound { .. }))
+            .map(|(i, _)| arr[i])
+            .collect();
+        // First three MulRounds are the LUT chain.
+        assert!(mul_arr[0] < mul_arr[1] && mul_arr[1] < mul_arr[2]);
+    }
+}

@@ -1,0 +1,25 @@
+//! Structural netlist + synthesis model: the substrate that regenerates
+//! the paper's PPA tables.
+//!
+//! * [`netlist`]  — word-level structural blocks (bit-true `eval`,
+//!   NAND2-equivalent depth/gate formulas per block).
+//! * [`datapath`] — builds the velocity-factor tanh datapath (fig. 5)
+//!   from a [`crate::tanh::TanhConfig`].
+//! * [`pipeline`] — retiming-style stage assignment for N-stage flavours.
+//! * [`ppa`]      — static timing + area/leakage roll-up against a
+//!   [`crate::gates::CellLibrary`] -> the Tables III/IV rows.
+//!
+//! Fidelity stance (DESIGN.md §6): block `eval` is bit-exact with the
+//! golden model (tested exhaustively at 8-bit, sampled at 16-bit); the
+//! PPA numbers are *modelled*, calibrated once at the 1-stage/SVT/16-bit
+//! point, with every other row produced structurally.
+
+pub mod datapath;
+pub mod netlist;
+pub mod pipeline;
+pub mod ppa;
+
+pub use datapath::build_tanh_datapath;
+pub use netlist::{BlockKind, Netlist, NodeId};
+pub use pipeline::PipelineAssignment;
+pub use ppa::{ppa_for, PpaReport};

@@ -1,0 +1,157 @@
+//! Pipeline stage assignment (retiming model).
+//!
+//! The paper evaluates 1-, 2- and 7-stage pipelined flavours of the same
+//! RTL. We model the synthesis retiming step: blocks are assigned to
+//! stages by cutting the DAG at accumulated-depth thresholds, with the
+//! topological constraint `stage(node) >= stage(pred)`. Cuts happen at
+//! *block* granularity — a multiplier cannot be split — which is exactly
+//! why the paper's 2-stage flavour reports 95 levels rather than 135/2,
+//! and the 7-stage one 25 rather than 135/7.
+
+use super::netlist::{levels_of, Netlist};
+
+/// A stage assignment for a netlist.
+#[derive(Clone, Debug)]
+pub struct PipelineAssignment {
+    pub stages: u32,
+    /// Stage index of each node.
+    pub stage_of: Vec<u32>,
+    /// Per-stage critical path, in block levels.
+    pub stage_levels: Vec<f64>,
+    /// Total pipeline-register bits inserted at cut boundaries
+    /// (including the output register; excluding the input register).
+    pub reg_bits: u64,
+}
+
+impl PipelineAssignment {
+    /// Worst per-stage logic depth (the paper's "Logic Levels" column).
+    pub fn worst_stage_levels(&self) -> f64 {
+        self.stage_levels.iter().copied().fold(0.0, f64::max)
+    }
+}
+
+/// Assign `stages` pipeline stages to `net` by balanced-depth cuts.
+pub fn assign_stages(net: &Netlist, stages: u32) -> PipelineAssignment {
+    assert!(stages >= 1);
+    let arr = net.arrival_levels();
+    let total = arr.iter().copied().fold(0.0, f64::max).max(1e-9);
+    let budget = total / stages as f64;
+
+    // Initial assignment by midpoint of each block's span, then enforce
+    // topological monotonicity.
+    let mut stage_of = vec![0u32; net.nodes.len()];
+    for (id, node) in net.nodes.iter().enumerate() {
+        let mid = arr[id] - levels_of(node) / 2.0;
+        let s = ((mid / budget).floor() as i64).clamp(0, stages as i64 - 1);
+        let pred_max = node
+            .inputs
+            .iter()
+            .map(|&i| stage_of[i])
+            .max()
+            .unwrap_or(0);
+        stage_of[id] = (s as u32).max(pred_max);
+    }
+
+    // Per-stage critical path: longest chain of blocks within a stage.
+    let mut intra = vec![0f64; net.nodes.len()];
+    let mut stage_levels = vec![0f64; stages as usize];
+    for (id, node) in net.nodes.iter().enumerate() {
+        let base = node
+            .inputs
+            .iter()
+            .filter(|&&i| stage_of[i] == stage_of[id])
+            .map(|&i| intra[i])
+            .fold(0.0f64, f64::max);
+        intra[id] = base + levels_of(node);
+        let s = stage_of[id] as usize;
+        stage_levels[s] = stage_levels[s].max(intra[id]);
+    }
+
+    // Register bits: retiming shares pipeline registers across consumers
+    // — a node crossing k stage boundaries (to its furthest consumer)
+    // contributes k registered copies of its width. Plus the output reg.
+    let mut furthest = vec![0u32; net.nodes.len()];
+    for (id, node) in net.nodes.iter().enumerate() {
+        for &i in &node.inputs {
+            furthest[i] = furthest[i].max(stage_of[id]);
+        }
+    }
+    let mut reg_bits = 0u64;
+    for (id, node) in net.nodes.iter().enumerate() {
+        let hops = furthest[id].saturating_sub(stage_of[id]) as u64;
+        reg_bits += hops * node.width as u64;
+    }
+    for &o in &net.outputs {
+        reg_bits += net.nodes[o].width as u64; // output register
+    }
+
+    PipelineAssignment { stages, stage_of, stage_levels, reg_bits }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synth::datapath::build_tanh_datapath;
+    use crate::tanh::TanhConfig;
+
+    fn net16() -> Netlist {
+        build_tanh_datapath(&TanhConfig::s3_12())
+    }
+
+    #[test]
+    fn single_stage_is_whole_path() {
+        let net = net16();
+        let p = assign_stages(&net, 1);
+        assert!(p.stage_of.iter().all(|&s| s == 0));
+        assert!((p.worst_stage_levels() - net.critical_levels()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stages_monotone_along_edges() {
+        let net = net16();
+        for stages in [2u32, 3, 7] {
+            let p = assign_stages(&net, stages);
+            for (id, node) in net.nodes.iter().enumerate() {
+                for &i in &node.inputs {
+                    assert!(p.stage_of[i] <= p.stage_of[id]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn deeper_pipeline_fewer_levels_per_stage() {
+        let net = net16();
+        let l1 = assign_stages(&net, 1).worst_stage_levels();
+        let l2 = assign_stages(&net, 2).worst_stage_levels();
+        let l7 = assign_stages(&net, 7).worst_stage_levels();
+        assert!(l2 < l1 && l7 < l2, "{l1} {l2} {l7}");
+        // Block granularity: 2-stage worst > ideal half (paper: 95 vs 67).
+        assert!(l2 > l1 / 2.0);
+        assert!(l7 > l1 / 7.0);
+    }
+
+    #[test]
+    fn register_bits_grow_with_depth() {
+        let net = net16();
+        let r1 = assign_stages(&net, 1).reg_bits;
+        let r7 = assign_stages(&net, 7).reg_bits;
+        assert!(r7 > r1, "{r1} vs {r7}");
+        // 1-stage still has the output register.
+        assert!(r1 >= 16);
+    }
+
+    #[test]
+    fn all_stages_populated() {
+        let net = net16();
+        for stages in [2u32, 7] {
+            let p = assign_stages(&net, stages);
+            for s in 0..stages {
+                assert!(
+                    p.stage_of.iter().any(|&x| x == s),
+                    "stage {s}/{stages} empty"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,158 @@
+//! PPA roll-up: static timing + area + leakage for a pipelined datapath
+//! against a cell library — the engine behind Tables III and IV.
+
+use crate::gates::{CellClass, CellLibrary};
+use crate::tanh::TanhConfig;
+
+use super::datapath::build_tanh_datapath;
+use super::netlist::Netlist;
+use super::pipeline::{assign_stages, PipelineAssignment};
+
+/// One synthesized flavour (a row of Table III/IV).
+#[derive(Clone, Debug)]
+pub struct PpaReport {
+    pub cells: CellClass,
+    pub latency_clocks: u32,
+    pub area_um2: f64,
+    pub leakage_uw: f64,
+    pub fmax_mhz: f64,
+    pub logic_levels: u32,
+    pub reg_bits: u64,
+    pub gate_count: f64,
+}
+
+impl PpaReport {
+    pub fn row(&self) -> Vec<String> {
+        vec![
+            self.cells.name().to_string(),
+            format!("{}", self.latency_clocks),
+            format!("{:.2}", self.area_um2),
+            format!("{:.2}", self.leakage_uw),
+            format!("{:.0}", self.fmax_mhz),
+            format!("{}", self.logic_levels),
+        ]
+    }
+}
+
+/// Synthesize (model) one flavour of the tanh unit.
+pub fn ppa_for(cfg: &TanhConfig, class: CellClass, stages: u32) -> PpaReport {
+    let net = build_tanh_datapath(cfg);
+    ppa_for_netlist(&net, class, stages)
+}
+
+/// PPA for an arbitrary netlist (used by ablations over other datapaths).
+pub fn ppa_for_netlist(net: &Netlist, class: CellClass, stages: u32) -> PpaReport {
+    let lib = CellLibrary::by_class(class);
+    let pipe: PipelineAssignment = assign_stages(net, stages);
+
+    // Technology mapping: richer cells shorten the path for LVT runs.
+    let levels = pipe.worst_stage_levels() * lib.mapping_depth_factor;
+
+    // Static timing: per-level delay shrinks under sizing pressure.
+    let per_level = lib.gate_delay_ps * lib.sizing_speedup(levels);
+    let period_ps = levels * per_level + lib.reg_overhead_ps;
+    let fmax_mhz = 1e6 / period_ps;
+
+    // Area: logic (sized) + pipeline registers.
+    let sizing = lib.sizing_area_factor(levels);
+    let gate_count = net.total_gates();
+    let logic_area = gate_count * lib.gate_area_um2 * sizing;
+    let reg_area = pipe.reg_bits as f64 * lib.reg_area_um2;
+    let area_um2 = logic_area + reg_area;
+
+    // Leakage scales with sized gate count + registers.
+    let leakage_nw = gate_count * lib.gate_leak_nw * sizing
+        + pipe.reg_bits as f64 * lib.reg_leak_nw;
+
+    PpaReport {
+        cells: class,
+        latency_clocks: stages,
+        area_um2,
+        leakage_uw: leakage_nw / 1000.0,
+        fmax_mhz,
+        logic_levels: levels.round() as u32,
+        reg_bits: pipe.reg_bits,
+        gate_count,
+    }
+}
+
+/// The paper's sweep: {SVT, LVT} x {1, 2, 7} stages.
+pub fn table_rows(cfg: &TanhConfig) -> Vec<PpaReport> {
+    let mut rows = Vec::new();
+    for stages in [1u32, 2, 7] {
+        for class in [CellClass::Svt, CellClass::Lvt] {
+            rows.push(ppa_for(cfg, class, stages));
+        }
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tanh::TanhConfig;
+
+    fn report(class: CellClass, stages: u32) -> PpaReport {
+        ppa_for(&TanhConfig::s3_12(), class, stages)
+    }
+
+    #[test]
+    fn calibration_1stage_svt_16bit() {
+        // Table III row 1: 3748 µm², 4.2 µW, 188 MHz, 135 levels.
+        // Modelled substrate: same order of magnitude (±40%), see
+        // DESIGN.md §6 for the calibration stance.
+        let r = report(CellClass::Svt, 1);
+        assert!((2200.0..5300.0).contains(&r.area_um2), "area {}", r.area_um2);
+        assert!((2.0..8.0).contains(&r.leakage_uw), "leak {}", r.leakage_uw);
+        assert!((110.0..260.0).contains(&r.fmax_mhz), "fmax {}", r.fmax_mhz);
+        assert!((90..200).contains(&r.logic_levels), "lvl {}", r.logic_levels);
+    }
+
+    #[test]
+    fn shape_lvt_faster_same_depth() {
+        for stages in [1u32, 2, 7] {
+            let svt = report(CellClass::Svt, stages);
+            let lvt = report(CellClass::Lvt, stages);
+            assert!(lvt.fmax_mhz > svt.fmax_mhz);
+            assert!(lvt.leakage_uw > 20.0 * svt.leakage_uw);
+            assert!(lvt.logic_levels <= svt.logic_levels);
+        }
+    }
+
+    #[test]
+    fn shape_deeper_pipeline_scales_fmax() {
+        let f1 = report(CellClass::Svt, 1).fmax_mhz;
+        let f2 = report(CellClass::Svt, 2).fmax_mhz;
+        let f7 = report(CellClass::Svt, 7).fmax_mhz;
+        assert!(f2 > 1.2 * f1);
+        // Paper: 188 -> 1176 MHz (6.25x). Accept 3.5x..9x.
+        let ratio = f7 / f1;
+        assert!((3.5..9.0).contains(&ratio), "1->7 ratio {ratio}");
+    }
+
+    #[test]
+    fn shape_area_roughly_flat_with_depth() {
+        let a1 = report(CellClass::Svt, 1).area_um2;
+        let a7 = report(CellClass::Svt, 7).area_um2;
+        let growth = a7 / a1;
+        assert!((0.9..1.45).contains(&growth), "area growth {growth}");
+    }
+
+    #[test]
+    fn shape_8bit_much_smaller() {
+        let a16 = report(CellClass::Svt, 1).area_um2;
+        let a8 = ppa_for(&TanhConfig::s3_5(), CellClass::Svt, 1).area_um2;
+        // Paper: 3748 vs 764 µm² (4.9x). Accept 3x..7x.
+        let ratio = a16 / a8;
+        assert!((2.5..7.0).contains(&ratio), "16/8 area ratio {ratio}");
+    }
+
+    #[test]
+    fn table_rows_complete() {
+        let rows = table_rows(&TanhConfig::s3_12());
+        assert_eq!(rows.len(), 6);
+        for r in &rows {
+            assert!(r.fmax_mhz > 50.0 && r.area_um2 > 100.0);
+        }
+    }
+}

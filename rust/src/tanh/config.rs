@@ -1,0 +1,282 @@
+//! Datapath configuration — the rust mirror of the cross-layer spec in
+//! `python/compile/kernels/config.py`. Field semantics, derived
+//! quantities and defaults must match bit-for-bit; the golden-vector
+//! integration tests (`rust/tests/golden_vectors.rs`) enforce this.
+
+use crate::fixed::QFormat;
+
+/// Final-stage subtractor implementation for `1 - f` (paper §IV.B.4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Subtractor {
+    /// True two's complement: `2^L - f`.
+    Twos,
+    /// One's complement approximation: `~f = 2^L - 1 - f` (cheaper:
+    /// drops the carry chain; costs <= 1 lsb of f).
+    Ones,
+}
+
+impl Subtractor {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Subtractor::Twos => "2's",
+            Subtractor::Ones => "1's",
+        }
+    }
+}
+
+/// Static parameters of one hardware instance of the tanh unit.
+///
+/// Canonical instances: [`TanhConfig::s3_12`] (16-bit, Tables II/III) and
+/// [`TanhConfig::s3_5`] (8-bit, Table IV).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TanhConfig {
+    /// Integer bits of the input format.
+    pub in_int: u32,
+    /// Fractional bits of the input format.
+    pub in_frac: u32,
+    /// Fractional bits of the (sign + fraction) output format.
+    pub out_frac: u32,
+    /// Velocity-factor LUT precision L (entries are u0.L).
+    pub lut_bits: u32,
+    /// Multiplier fractional precision M in the NR/recompose path.
+    pub mult_bits: u32,
+    /// Bits per LUT group (1 = per-bit registers, 4 = paper's choice).
+    pub lut_group: u32,
+    /// Bit-shuffled LUT addressing (paper §IV.B.3).
+    pub shuffle: bool,
+    /// NR iterations; 0 = reference float divider (Table II row 0).
+    pub nr_stages: u32,
+    /// Final-stage subtractor flavour.
+    pub subtractor: Subtractor,
+}
+
+impl Default for TanhConfig {
+    fn default() -> Self {
+        Self::s3_12()
+    }
+}
+
+impl TanhConfig {
+    /// 16-bit operating point: s3.12 in, s.15 out, L=18, M=16, 4-bit LUTs.
+    pub const fn s3_12() -> Self {
+        TanhConfig {
+            in_int: 3,
+            in_frac: 12,
+            out_frac: 15,
+            lut_bits: 18,
+            mult_bits: 16,
+            lut_group: 4,
+            shuffle: true,
+            nr_stages: 3,
+            subtractor: Subtractor::Twos,
+        }
+    }
+
+    /// 8-bit operating point: s3.5 in, s.7 out, L=10, M=9, 3-bit LUTs.
+    pub const fn s3_5() -> Self {
+        TanhConfig {
+            in_int: 3,
+            in_frac: 5,
+            out_frac: 7,
+            lut_bits: 10,
+            mult_bits: 9,
+            lut_group: 3,
+            shuffle: true,
+            nr_stages: 3,
+            subtractor: Subtractor::Twos,
+        }
+    }
+
+    pub fn with_nr(mut self, stages: u32) -> Self {
+        self.nr_stages = stages;
+        self
+    }
+
+    pub fn with_subtractor(mut self, sub: Subtractor) -> Self {
+        self.subtractor = sub;
+        self
+    }
+
+    pub fn with_group(mut self, g: u32) -> Self {
+        self.lut_group = g;
+        self
+    }
+
+    pub fn with_shuffle(mut self, s: bool) -> Self {
+        self.shuffle = s;
+        self
+    }
+
+    /// Validate invariants (mirrors the python `__post_init__`).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.in_frac < 1 || self.out_frac < 1 {
+            return Err(format!("invalid format: {self:?}"));
+        }
+        if self.lut_bits + 1 < self.mult_bits {
+            return Err("lut_bits must be >= mult_bits - 1".into());
+        }
+        if self.lut_group < 1 {
+            return Err("lut_group must be >= 1".into());
+        }
+        if self.nr_stages > 4 {
+            return Err("nr_stages must be in {0..4}".into());
+        }
+        if self.in_int + self.in_frac + self.lut_bits + self.mult_bits > 58 {
+            return Err("combined precision exceeds i64 headroom".into());
+        }
+        Ok(())
+    }
+
+    // ---- derived geometry --------------------------------------------
+
+    /// Magnitude bits of the input (sign stripped).
+    pub const fn mag_bits(&self) -> u32 {
+        self.in_int + self.in_frac
+    }
+
+    pub const fn in_width(&self) -> u32 {
+        1 + self.mag_bits()
+    }
+
+    pub const fn out_width(&self) -> u32 {
+        1 + self.out_frac
+    }
+
+    /// Largest representable output word: `1 - 2^-out_frac`.
+    pub const fn out_max(&self) -> i64 {
+        (1i64 << self.out_frac) - 1
+    }
+
+    pub const fn num_groups(&self) -> u32 {
+        (self.mag_bits() + self.lut_group - 1) / self.lut_group
+    }
+
+    pub fn in_format(&self) -> QFormat {
+        QFormat::new(self.in_int, self.in_frac)
+    }
+
+    pub fn out_format(&self) -> QFormat {
+        QFormat::new(0, self.out_frac)
+    }
+
+    /// Smallest input magnitude word that saturates the output
+    /// (`ceil(atanh(1 - 2^-out_frac) * 2^in_frac)`, paper §IV).
+    pub fn sat_threshold(&self) -> i64 {
+        let dom = (1.0 - (-(self.out_frac as f64)).exp2()).atanh();
+        (dom * (1i64 << self.in_frac) as f64).ceil() as i64
+    }
+
+    /// NR linear-seed constant: `2.75 * 2^M` (see python spec for why
+    /// 2.75 = 0b10.11 rather than Kornerup-Muller's 2.9142).
+    pub const fn nr_seed_const(&self) -> i64 {
+        11i64 << (self.mult_bits - 2)
+    }
+
+    /// Bit positions (lsb = 0) addressed by each LUT group.
+    ///
+    /// `shuffle` deals positions round-robin so every group mixes small
+    /// and large place values (paper §IV.B.3); otherwise consecutive.
+    pub fn group_positions(&self) -> Vec<Vec<u32>> {
+        let n = self.mag_bits();
+        let g = self.num_groups();
+        if self.shuffle {
+            (0..g).map(|j| (j..n).step_by(g as usize).collect()).collect()
+        } else {
+            (0..g)
+                .map(|j| {
+                    (j * self.lut_group..((j + 1) * self.lut_group).min(n))
+                        .collect()
+                })
+                .collect()
+        }
+    }
+
+    /// Human-readable description matching the python `describe()`.
+    pub fn describe(&self) -> String {
+        format!(
+            "s{}.{}->s.{} L={} M={} g={} {} nr={} {}",
+            self.in_int,
+            self.in_frac,
+            self.out_frac,
+            self.lut_bits,
+            self.mult_bits,
+            self.lut_group,
+            if self.shuffle { "shuf" } else { "seq" },
+            self.nr_stages,
+            self.subtractor.name()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonical_geometry() {
+        let c = TanhConfig::s3_12();
+        assert_eq!(c.mag_bits(), 15);
+        assert_eq!(c.in_width(), 16);
+        assert_eq!(c.out_width(), 16);
+        assert_eq!(c.out_max(), 32767);
+        assert_eq!(c.num_groups(), 4);
+        c.validate().unwrap();
+
+        let c8 = TanhConfig::s3_5();
+        assert_eq!(c8.mag_bits(), 8);
+        assert_eq!(c8.num_groups(), 3);
+        c8.validate().unwrap();
+    }
+
+    #[test]
+    fn sat_threshold_matches_paper_domain() {
+        // Paper §IV: ±5.55 for 16-bit out, ±2.77 for 8-bit out.
+        let t16 = TanhConfig::s3_12().sat_threshold() as f64 / 4096.0;
+        assert!((t16 - 5.55).abs() < 0.01, "{t16}");
+        let t8 = TanhConfig::s3_5().sat_threshold() as f64 / 32.0;
+        assert!((t8 - 2.78).abs() < 0.04, "{t8}");
+    }
+
+    #[test]
+    fn seed_constant() {
+        assert_eq!(TanhConfig::s3_12().nr_seed_const(), (2.75 * 65536.0) as i64);
+        assert_eq!(TanhConfig::s3_5().nr_seed_const(), (2.75 * 512.0) as i64);
+    }
+
+    #[test]
+    fn group_positions_partition() {
+        for cfg in [TanhConfig::s3_12(), TanhConfig::s3_5(),
+                    TanhConfig::s3_12().with_shuffle(false),
+                    TanhConfig::s3_12().with_group(2),
+                    TanhConfig::s3_12().with_group(5)] {
+            let mut flat: Vec<u32> =
+                cfg.group_positions().into_iter().flatten().collect();
+            flat.sort_unstable();
+            assert_eq!(flat, (0..cfg.mag_bits()).collect::<Vec<_>>(),
+                       "{}", cfg.describe());
+        }
+    }
+
+    #[test]
+    fn shuffle_mixes_magnitudes() {
+        let cfg = TanhConfig::s3_12();
+        for g in cfg.group_positions() {
+            let lo = *g.iter().min().unwrap();
+            let hi = *g.iter().max().unwrap();
+            assert!(lo < cfg.mag_bits() / 2 && hi >= cfg.mag_bits() / 2);
+        }
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut c = TanhConfig::s3_12();
+        c.lut_bits = 10;
+        assert!(c.validate().is_err());
+        let mut c = TanhConfig::s3_12();
+        c.nr_stages = 9;
+        assert!(c.validate().is_err());
+        let mut c = TanhConfig::s3_12();
+        c.lut_group = 0;
+        assert!(c.validate().is_err());
+    }
+}

@@ -1,0 +1,182 @@
+//! Golden bit-accurate model: the rust transcription of the datapath
+//! spec (`python/compile/kernels/config.py` §5 of DESIGN.md).
+//!
+//! This is the readable straight-line version used as the oracle for the
+//! RTL simulator, the Verilog testbench and the PJRT artifacts. The
+//! serving hot path lives in [`super::unit::TanhUnit`], which must agree
+//! with this word-for-word (property-tested).
+
+use crate::fixed::rint;
+
+use super::config::{Subtractor, TanhConfig};
+use super::lut::lut_tables;
+use super::newton::nr_recip;
+
+/// Evaluate one input word through the full datapath.
+///
+/// `x` is a signed input word in s{in_int}.{in_frac}; the result is a
+/// signed output word in s.{out_frac}.
+pub fn tanh_golden(x: i64, cfg: &TanhConfig) -> i64 {
+    let tables = lut_tables(cfg);
+    tanh_golden_with_tables(x, cfg, &tables)
+}
+
+/// As [`tanh_golden`] but with prebuilt tables (batch callers).
+pub fn tanh_golden_with_tables(x: i64, cfg: &TanhConfig, tables: &[Vec<i64>]) -> i64 {
+    let sign = x < 0;
+    let n = x.unsigned_abs() as i64;
+    let one_l = 1i64 << cfg.lut_bits;
+
+    // 1. Saturation region: |x| >= atanh(1 - 2^-out_frac).
+    if n >= cfg.sat_threshold() {
+        let t = cfg.out_max();
+        return if sign { -t } else { t };
+    }
+
+    // 2. Grouped LUT product chain (eq. 7, Table I).
+    let mut f = 0i64;
+    for (gi, positions) in cfg.group_positions().iter().enumerate() {
+        let mut addr = 0usize;
+        for (j, &p) in positions.iter().enumerate() {
+            addr |= (((n >> p) & 1) as usize) << j;
+        }
+        let entry = tables[gi][addr];
+        f = if gi == 0 {
+            entry
+        } else {
+            crate::fixed::round_mul(f, entry, cfg.lut_bits)
+        };
+    }
+
+    // 3. Output stage: num = 1 - f, den = 1 + f (bit concat).
+    let num = match cfg.subtractor {
+        Subtractor::Twos => one_l - f,
+        Subtractor::Ones => (one_l - 1) - f,
+    };
+    let den = one_l + f;
+
+    let mut t = if cfg.nr_stages == 0 {
+        // Reference float divider + fixed-point conversion (Table II row 0).
+        rint(num as f64 / den as f64 * (1i64 << cfg.out_frac) as f64)
+    } else {
+        // 4. d = (1+f)/2 truncated to M fractional bits (eq. 11).
+        let d = den >> (cfg.lut_bits + 1 - cfg.mult_bits);
+        // 5. NR reciprocal.
+        let recip = nr_recip(d, cfg);
+        // 6. tanh = num * recip / 2, rounded into the output format.
+        let shift = cfg.lut_bits + cfg.mult_bits + 1 - cfg.out_frac;
+        (num * recip + (1i64 << (shift - 1))) >> shift
+    };
+
+    t = t.clamp(0, cfg.out_max());
+    if sign {
+        -t
+    } else {
+        t
+    }
+}
+
+/// Batch evaluation with table reuse.
+pub fn tanh_golden_batch(xs: &[i64], cfg: &TanhConfig) -> Vec<i64> {
+    let tables = lut_tables(cfg);
+    xs.iter()
+        .map(|&x| tanh_golden_with_tables(x, cfg, &tables))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::{ErrorStats, QFormat};
+
+    fn sweep_error(cfg: &TanhConfig) -> ErrorStats {
+        let half = 1i64 << cfg.mag_bits();
+        let tables = lut_tables(cfg);
+        let inf = cfg.in_format();
+        let outf = cfg.out_format();
+        ErrorStats::collect((-half..half).map(|x| {
+            let got = outf.dequantize(tanh_golden_with_tables(x, cfg, &tables));
+            let want = inf.dequantize(x).tanh();
+            (x, got, want)
+        }))
+    }
+
+    #[test]
+    fn zero_is_zero() {
+        assert_eq!(tanh_golden(0, &TanhConfig::s3_12()), 0);
+    }
+
+    #[test]
+    fn odd_symmetry() {
+        let cfg = TanhConfig::s3_12();
+        for x in [1i64, 7, 100, 4096, 20000, 32767] {
+            assert_eq!(tanh_golden(x, &cfg), -tanh_golden(-x, &cfg));
+        }
+    }
+
+    #[test]
+    fn saturation() {
+        let cfg = TanhConfig::s3_12();
+        assert_eq!(tanh_golden(cfg.sat_threshold(), &cfg), cfg.out_max());
+        assert_eq!(tanh_golden(-32768, &cfg), -cfg.out_max());
+    }
+
+    #[test]
+    fn table2_nr3_error_band() {
+        // Paper Table II: 4.44e-5 for NR3/2's. Same band here.
+        let stats = sweep_error(&TanhConfig::s3_12());
+        assert!(stats.max_abs < 7.7e-5, "max err {}", stats.max_abs);
+        assert!(stats.max_lsb(QFormat::new(0, 15)) < 2.6);
+    }
+
+    #[test]
+    fn table2_nr2_error_band() {
+        // Paper Table II: 2.56e-4 for NR2/2's.
+        let stats = sweep_error(&TanhConfig::s3_12().with_nr(2));
+        assert!(stats.max_abs > 1e-4 && stats.max_abs < 6e-4,
+                "max err {}", stats.max_abs);
+    }
+
+    #[test]
+    fn ref_divider_within_one_lsb() {
+        let stats = sweep_error(&TanhConfig::s3_12().with_nr(0));
+        assert!(stats.max_lsb(QFormat::new(0, 15)) < 1.05);
+    }
+
+    #[test]
+    fn eight_bit_exhaustive_within_lsb() {
+        let cfg = TanhConfig::s3_5();
+        let stats = sweep_error(&cfg);
+        assert!(stats.max_lsb(QFormat::new(0, 7)) <= 1.01,
+                "max err {} lsb", stats.max_lsb(QFormat::new(0, 7)));
+    }
+
+    #[test]
+    fn monotone_within_noise() {
+        let cfg = TanhConfig::s3_12();
+        let tables = lut_tables(&cfg);
+        let mut prev = -cfg.out_max() - 2;
+        for x in (-32768..32768).step_by(17) {
+            let y = tanh_golden_with_tables(x, &cfg, &tables);
+            assert!(y >= prev - 2, "non-monotone at {x}: {y} < {prev}");
+            prev = y;
+        }
+    }
+
+    #[test]
+    fn group_size_one_matches_group_size_four() {
+        // Different LUT groupings change rounding by at most ~2 output lsb
+        // but the headline accuracy band must be preserved.
+        let s1 = sweep_error(&TanhConfig::s3_12().with_group(1));
+        let s4 = sweep_error(&TanhConfig::s3_12());
+        assert!(s1.max_abs < 1e-4 && s4.max_abs < 1e-4);
+    }
+
+    #[test]
+    fn shuffle_no_worse_than_sequential() {
+        // §IV.B.3: shuffled addressing should not lose accuracy.
+        let shuf = sweep_error(&TanhConfig::s3_12());
+        let seq = sweep_error(&TanhConfig::s3_12().with_shuffle(false));
+        assert!(shuf.max_abs <= seq.max_abs * 1.5);
+    }
+}

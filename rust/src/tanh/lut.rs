@@ -1,0 +1,125 @@
+//! Velocity-factor LUT construction (paper eq. 7–9 and Table I).
+//!
+//! `entry[mask] = round(2^L * Π_{j: mask_j=1} e^(-2 · 2^(p_j - in_frac)))`
+//!
+//! The product over a group's set bits is evaluated exactly in f64 and
+//! rounded once — that is what a synthesized ROM stores. Matches
+//! `TanhConfig.lut_tables()` in the python spec bit-for-bit (enforced by
+//! the golden-vector tests).
+
+use super::config::TanhConfig;
+
+/// Build the grouped LUT tables; one `Vec` (of `2^|group|` entries) per
+/// group, entries as u0.L words in `(0, 2^L]`.
+pub fn lut_tables(cfg: &TanhConfig) -> Vec<Vec<i64>> {
+    let one = 1i64 << cfg.lut_bits;
+    cfg.group_positions()
+        .iter()
+        .map(|positions| {
+            (0..1usize << positions.len())
+                .map(|mask| {
+                    let a: f64 = positions
+                        .iter()
+                        .enumerate()
+                        .filter(|(j, _)| (mask >> j) & 1 == 1)
+                        .map(|(_, &p)| (p as f64 - cfg.in_frac as f64).exp2())
+                        .sum();
+                    let v = (one as f64 * (-2.0 * a).exp()).round_ties_even()
+                        as i64;
+                    v.min(one)
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// The velocity factor for a single place value `2^(p - in_frac)`,
+/// as stored by the per-bit ("registers") variant of fig. 3.
+pub fn single_bit_factor(cfg: &TanhConfig, p: u32) -> i64 {
+    let one = 1i64 << cfg.lut_bits;
+    let a = (p as f64 - cfg.in_frac as f64).exp2();
+    ((one as f64 * (-2.0 * a).exp()).round_ties_even() as i64).min(one)
+}
+
+/// Render the paper's Table I (2-bit grouped LUT) for documentation /
+/// the `table1_lut` bench.
+pub fn table1_rows(cfg: &TanhConfig) -> Vec<(String, i64, f64)> {
+    let mut cfg2 = *cfg;
+    cfg2.lut_group = 2;
+    cfg2.shuffle = false;
+    let tables = lut_tables(&cfg2);
+    let positions = cfg2.group_positions();
+    let mut rows = Vec::new();
+    for (g, (pos, table)) in positions.iter().zip(&tables).enumerate() {
+        for (mask, &v) in table.iter().enumerate() {
+            let bits = format!("{mask:0width$b}", width = pos.len());
+            rows.push((
+                format!("LUT{g}[{bits}] (bits {:?})", pos),
+                v,
+                v as f64 / (1i64 << cfg2.lut_bits) as f64,
+            ));
+        }
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mask_zero_is_unity() {
+        let cfg = TanhConfig::s3_12();
+        for t in lut_tables(&cfg) {
+            assert_eq!(t[0], 1i64 << cfg.lut_bits);
+        }
+    }
+
+    #[test]
+    fn entries_in_unit_interval() {
+        // f = e^-2a in (0, 1]: the paper's §IV.B.2 scalability property.
+        let cfg = TanhConfig::s3_12();
+        for t in lut_tables(&cfg) {
+            for &v in &t {
+                assert!(v > 0 && v <= 1i64 << cfg.lut_bits);
+            }
+        }
+    }
+
+    #[test]
+    fn multi_bit_entry_is_rounded_product() {
+        // Table I: entry(11) ~= entry(01) * entry(10) (exact product, one
+        // rounding — so within 2 ulp of the chained product).
+        let cfg = TanhConfig::s3_12();
+        let one = 1i64 << cfg.lut_bits;
+        for t in lut_tables(&cfg) {
+            if t.len() >= 4 {
+                let approx = (t[1] as f64) * (t[2] as f64) / one as f64;
+                assert!((t[3] as f64 - approx).abs() <= 2.0);
+            }
+        }
+    }
+
+    #[test]
+    fn table_sizes_16bit() {
+        let sizes: Vec<usize> =
+            lut_tables(&TanhConfig::s3_12()).iter().map(Vec::len).collect();
+        assert_eq!(sizes, vec![16, 16, 16, 8]);
+    }
+
+    #[test]
+    fn single_bit_matches_group_entry() {
+        let cfg = TanhConfig::s3_12().with_group(1);
+        let tables = lut_tables(&cfg);
+        for (g, pos) in cfg.group_positions().iter().enumerate() {
+            assert_eq!(tables[g][1], single_bit_factor(&cfg, pos[0]));
+        }
+    }
+
+    #[test]
+    fn table1_rows_cover_all_masks() {
+        let rows = table1_rows(&TanhConfig::s3_12());
+        // 15 bits in groups of 2 -> 7 groups of 4 entries + 1 group of 2.
+        assert_eq!(rows.len(), 7 * 4 + 2);
+    }
+}

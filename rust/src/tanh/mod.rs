@@ -1,0 +1,24 @@
+//! The paper's contribution: velocity-factor tanh datapath.
+//!
+//! * [`config`]   — static datapath parameters (mirrors
+//!   `python/compile/kernels/config.py`, the cross-layer spec).
+//! * [`lut`]      — grouped velocity-factor LUT construction (Table I).
+//! * [`newton`]   — Newton-Raphson reciprocal (fig. 4).
+//! * [`golden`]   — straight-line bit-accurate model (the spec oracle).
+//! * [`unit`]     — precomputed, optimized implementation for serving.
+//! * [`published`]— the unmodified Doerfler-style method of fig. 3
+//!   (per-bit registers + eq. 3 residual compensation), kept as the
+//!   ablation baseline that §IV.B.1 improves upon.
+
+pub mod config;
+pub mod golden;
+pub mod lut;
+pub mod newton;
+pub mod published;
+pub mod sigmoid;
+pub mod unit;
+
+pub use config::{Subtractor, TanhConfig};
+pub use golden::{tanh_golden, tanh_golden_batch};
+pub use sigmoid::{ExpUnit, SigmoidUnit};
+pub use unit::TanhUnit;

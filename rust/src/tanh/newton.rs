@@ -1,0 +1,92 @@
+//! Newton-Raphson reciprocal (paper fig. 4, eq. 8).
+//!
+//! Computes `1/d` for `d ∈ [0.5, 1]` held as a u1.M word, with every
+//! product rounded to M fractional bits (the paper's fixed multiplier
+//! precision). Seed: `x0 = 2.75 - 2d` (see `TanhConfig::nr_seed_const`).
+
+use crate::fixed::round_mul;
+
+use super::config::TanhConfig;
+
+/// One NR refinement: `x <- x * (2 - d * x)` at M fractional bits.
+#[inline(always)]
+pub fn nr_step(d: i64, x: i64, m: u32) -> i64 {
+    let t = round_mul(d, x, m);
+    round_mul(x, (2i64 << m) - t, m)
+}
+
+/// Full reciprocal: seed + `stages` refinements. `d` is u1.M in
+/// `[2^(M-1), 2^M]`; the result is u1.M in `[2^M, 2^(M+1)]` (≈ 1/d).
+#[inline(always)]
+pub fn nr_recip(d: i64, cfg: &TanhConfig) -> i64 {
+    let m = cfg.mult_bits;
+    let mut x = cfg.nr_seed_const() - (d << 1);
+    for _ in 0..cfg.nr_stages {
+        x = nr_step(d, x, m);
+    }
+    x
+}
+
+/// Relative error of the fixed-point reciprocal vs exact, for analysis.
+pub fn recip_rel_error(d: i64, cfg: &TanhConfig) -> f64 {
+    let m = cfg.mult_bits;
+    let df = d as f64 / (1i64 << m) as f64;
+    let exact = 1.0 / df;
+    let got = nr_recip(d, cfg) as f64 / (1i64 << m) as f64;
+    (got - exact).abs() / exact
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tanh::config::TanhConfig;
+
+    #[test]
+    fn converges_over_full_domain() {
+        let cfg = TanhConfig::s3_12(); // nr_stages = 3, M = 16
+        let m = cfg.mult_bits;
+        let (lo, hi) = (1i64 << (m - 1), 1i64 << m);
+        let mut worst = 0.0f64;
+        let mut d = lo;
+        while d <= hi {
+            worst = worst.max(recip_rel_error(d, &cfg));
+            d += 7; // stride: full scan is done in the analysis bench
+        }
+        // 3 stages + 16-bit mults: relative error near quantization floor.
+        assert!(worst < 1e-4, "worst rel err {worst}");
+    }
+
+    #[test]
+    fn two_stages_visibly_worse_than_three() {
+        let c3 = TanhConfig::s3_12();
+        let c2 = TanhConfig::s3_12().with_nr(2);
+        let m = c3.mult_bits;
+        let mut w2 = 0.0f64;
+        let mut w3 = 0.0f64;
+        let mut d = 1i64 << (m - 1);
+        while d <= 1i64 << m {
+            w2 = w2.max(recip_rel_error(d, &c2));
+            w3 = w3.max(recip_rel_error(d, &c3));
+            d += 13;
+        }
+        assert!(w2 > 2.0 * w3, "NR2 {w2} vs NR3 {w3}");
+    }
+
+    #[test]
+    fn exact_at_endpoints() {
+        // d = 1.0 -> 1/d = 1.0; d = 0.5 -> 1/d = 2.0.
+        let cfg = TanhConfig::s3_12();
+        let m = cfg.mult_bits;
+        let one = 1i64 << m;
+        assert!((nr_recip(one, &cfg) - one).abs() <= 2);
+        assert!((nr_recip(one / 2, &cfg) - 2 * one).abs() <= 4);
+    }
+
+    #[test]
+    fn zero_stages_returns_seed() {
+        let cfg = TanhConfig::s3_12().with_nr(0);
+        let m = cfg.mult_bits;
+        let d = 3i64 << (m - 2); // 0.75
+        assert_eq!(nr_recip(d, &cfg), cfg.nr_seed_const() - (d << 1));
+    }
+}

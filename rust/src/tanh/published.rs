@@ -1,0 +1,191 @@
+//! The *published* (unimproved) method of paper fig. 3 — per-bit
+//! velocity-factor registers above a threshold plus the eq. 3 small-angle
+//! compensation for the residual low bits:
+//!
+//! `tanh(a + b) ≈ tanh(a) + b · (1 - tanh²(a))`   (eq. 3)
+//!
+//! Kept as an ablation baseline: §IV.B.1 shows the compensation both
+//! introduces error and costs two extra last-stage multipliers, which the
+//! optimized datapath (`golden`/`unit`) removes.
+
+use crate::fixed::{rint, round_mul};
+
+use super::config::{Subtractor, TanhConfig};
+use super::lut::single_bit_factor;
+use super::newton::nr_recip;
+
+/// Configuration: the paper's example keeps registers for place values
+/// `2^k`, `-7 <= k <= 2` (threshold `2^-7`) for the s3.12 format.
+#[derive(Clone, Copy, Debug)]
+pub struct PublishedConfig {
+    pub base: TanhConfig,
+    /// Keep per-bit registers for place values `>= 2^-threshold_exp`.
+    pub threshold_exp: i32,
+}
+
+impl Default for PublishedConfig {
+    fn default() -> Self {
+        PublishedConfig { base: TanhConfig::s3_12(), threshold_exp: 7 }
+    }
+}
+
+impl PublishedConfig {
+    /// Bit positions (of the magnitude word) held in registers.
+    pub fn register_positions(&self) -> Vec<u32> {
+        let cfg = &self.base;
+        (0..cfg.mag_bits())
+            .filter(|&p| p as i32 - cfg.in_frac as i32 >= -self.threshold_exp)
+            .collect()
+    }
+
+    /// Number of velocity-factor registers (paper: 10 for s3.12, t=7).
+    pub fn register_count(&self) -> usize {
+        self.register_positions().len()
+    }
+}
+
+/// Evaluate one word via the published method.
+pub fn tanh_published(x: i64, pc: &PublishedConfig) -> i64 {
+    let cfg = &pc.base;
+    let sign = x < 0;
+    let n = x.unsigned_abs() as i64;
+    let one_l = 1i64 << cfg.lut_bits;
+
+    if n >= cfg.sat_threshold() {
+        let t = cfg.out_max();
+        return if sign { -t } else { t };
+    }
+
+    // Product over per-bit registers (high bits only).
+    let mut f = one_l;
+    for &p in &pc.register_positions() {
+        if (n >> p) & 1 == 1 {
+            f = round_mul(f, single_bit_factor(cfg, p), cfg.lut_bits);
+        }
+    }
+
+    // tanh(a) = (1 - f)/(1 + f) through the same divider as the main path.
+    let num = match cfg.subtractor {
+        Subtractor::Twos => one_l - f,
+        Subtractor::Ones => (one_l - 1) - f,
+    };
+    let den = one_l + f;
+    let tanh_a: i64 = if cfg.nr_stages == 0 {
+        rint(num as f64 / den as f64 * (1i64 << cfg.out_frac) as f64)
+    } else {
+        let d = den >> (cfg.lut_bits + 1 - cfg.mult_bits);
+        let recip = nr_recip(d, cfg);
+        let shift = cfg.lut_bits + cfg.mult_bits + 1 - cfg.out_frac;
+        (num * recip + (1i64 << (shift - 1))) >> shift
+    };
+
+    // Residual low bits b (value < 2^-threshold_exp) via eq. 3:
+    // tanh(a+b) = tanh(a) + b * (1 - tanh^2 a). Two extra multipliers.
+    let low_mask = (1i64 << (cfg.in_frac as i32 - pc.threshold_exp)) - 1;
+    let b = n & low_mask; // b as s{in} word
+    let t = if b != 0 {
+        let q = cfg.out_frac;
+        // tanh_a is u0.q; tanh^2 a at q frac bits.
+        let t2 = round_mul(tanh_a, tanh_a, q);
+        let comp_factor = (1i64 << q) - t2; // 1 - tanh^2 a, u0.q
+        // b is at in_frac bits; product at q + in_frac, renormalize to q.
+        let comp = (b * comp_factor + (1i64 << (cfg.in_frac - 1)))
+            >> cfg.in_frac;
+        tanh_a + comp
+    } else {
+        tanh_a
+    };
+
+    let t = t.clamp(0, cfg.out_max());
+    if sign {
+        -t
+    } else {
+        t
+    }
+}
+
+/// Exhaustive max |error| vs f64 tanh (for the ablation bench).
+pub fn published_max_error(pc: &PublishedConfig) -> f64 {
+    let cfg = &pc.base;
+    let half = 1i64 << cfg.mag_bits();
+    let inf = cfg.in_format();
+    let outf = cfg.out_format();
+    let mut worst = 0.0f64;
+    for x in -half..half {
+        let got = outf.dequantize(tanh_published(x, pc));
+        let want = inf.dequantize(x).tanh();
+        worst = worst.max((got - want).abs());
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tanh::golden::tanh_golden;
+
+    #[test]
+    fn register_count_matches_paper() {
+        // Paper §IV.A: "10 registers ... for 2^k (-7 <= k <= 2)" for s3.12.
+        let pc = PublishedConfig::default();
+        assert_eq!(pc.register_count(), 10);
+        // positions are the top 10 magnitude bits (5..14)
+        assert_eq!(pc.register_positions(), (5..15).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn agrees_with_golden_when_no_residual() {
+        // Inputs with only register bits set take the identical path
+        // (modulo grouped-vs-per-bit rounding, <= 2 lsb).
+        let pc = PublishedConfig::default();
+        let g1 = pc.base.with_group(1);
+        for x in [0i64, 1 << 5, 1 << 10, (1 << 12) + (1 << 7), 3 << 11] {
+            let a = tanh_published(x, &pc);
+            let b = tanh_golden(x, &g1);
+            assert!((a - b).abs() <= 2, "x={x}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn residual_compensation_beats_truncation() {
+        // eq. 3 must be better than ignoring the low bits entirely.
+        let pc = PublishedConfig::default();
+        let cfg = &pc.base;
+        let x = (1i64 << 9) + 37; // high bit + low residual
+        let t_comp = cfg.out_format().dequantize(tanh_published(x, &pc));
+        let t_trunc = cfg
+            .out_format()
+            .dequantize(tanh_published(x & !0x1f, &pc));
+        let want = cfg.in_format().dequantize(x).tanh();
+        assert!((t_comp - want).abs() < (t_trunc - want).abs());
+    }
+
+    #[test]
+    fn worse_than_optimized_method() {
+        // §IV.B.1's motivation: the optimized datapath beats the
+        // published method's max error (sampled here; exhaustive in the
+        // ablation bench).
+        let pc = PublishedConfig::default();
+        let cfg = pc.base;
+        let mut worst_pub = 0.0f64;
+        let mut worst_opt = 0.0f64;
+        let inf = cfg.in_format();
+        let outf = cfg.out_format();
+        for x in (-32768i64..32768).step_by(11) {
+            let want = inf.dequantize(x).tanh();
+            worst_pub = worst_pub
+                .max((outf.dequantize(tanh_published(x, &pc)) - want).abs());
+            worst_opt = worst_opt
+                .max((outf.dequantize(tanh_golden(x, &cfg)) - want).abs());
+        }
+        assert!(worst_pub > worst_opt, "pub {worst_pub} opt {worst_opt}");
+    }
+
+    #[test]
+    fn odd_symmetry() {
+        let pc = PublishedConfig::default();
+        for x in [3i64, 100, 5000, 20000] {
+            assert_eq!(tanh_published(x, &pc), -tanh_published(-x, &pc));
+        }
+    }
+}

@@ -1,0 +1,210 @@
+//! Sigmoid and exp(-2x) units derived from the same velocity-factor
+//! datapath — the paper's "free" extensions.
+//!
+//! * **Sigmoid**: `sigma(x) = (1 + tanh(x/2)) / 2`. In hardware the
+//!   halving is a 1-bit pre-shift of the input word and the final
+//!   `(1+t)/2` is a concat + shift: the tanh core is reused unchanged.
+//!   Every §II baseline paper ("tanh sigmoid function") implements this
+//!   pair; here it is one unit.
+//! * **Exp**: the velocity factor itself *is* `e^(-2a)` (eq. 9), so the
+//!   LUT product chain with no output stage at all yields a hardware
+//!   `exp(-2x)` for x >= 0 — reference [10]'s broader "fast exponential"
+//!   claim realized on the same silicon.
+
+use super::config::TanhConfig;
+use super::lut::lut_tables;
+use super::unit::TanhUnit;
+use crate::fixed::{round_mul, QFormat};
+
+/// Sigmoid unit: wraps the tanh core with the shift trick.
+pub struct SigmoidUnit {
+    tanh: TanhUnit,
+}
+
+impl SigmoidUnit {
+    pub fn new(cfg: TanhConfig) -> Result<SigmoidUnit, String> {
+        Ok(SigmoidUnit { tanh: TanhUnit::new(cfg)? })
+    }
+
+    pub fn config(&self) -> &TanhConfig {
+        self.tanh.config()
+    }
+
+    /// Word-level sigmoid: input s{in_int}.{in_frac} word, output
+    /// u0.{out_frac} word in [0, 2^out_frac] representing [0, 1].
+    ///
+    /// Hardware: arithmetic-shift the input right by 1 (x/2, rounding
+    /// toward -inf like the wire does), tanh core, then (1 + t) >> 1
+    /// with the lsb of (1+t) kept by widening the output to out_frac.
+    pub fn eval(&self, x: i64) -> i64 {
+        // Rounding pre-shift (x/2 to nearest, ties away from zero):
+        // one half-adder on the magnitude in hardware — the sign split
+        // already exists at the tanh core input, so rounding the
+        // magnitude keeps sigma(-x) = 1 - sigma(x) exact.
+        let half = if x >= 0 { (x + 1) >> 1 } else { -((1 - x) >> 1) };
+        let t = self.tanh.eval(half);
+        let one = 1i64 << self.tanh.config().out_frac;
+        (one + t) >> 1
+    }
+
+    /// Float convenience.
+    pub fn eval_f64(&self, x: f64) -> f64 {
+        let cfg = self.tanh.config();
+        let w = cfg.in_format().quantize(x, crate::fixed::Round::Nearest);
+        // Output has out_frac-1 effective fractional bits after the >>1,
+        // but we keep the word scale at out_frac for the [0,1] mapping.
+        self.eval(w) as f64 / (1i64 << (cfg.out_frac - 1)) as f64 / 2.0
+    }
+
+    /// Exhaustive max error vs the true sigmoid.
+    pub fn exhaustive_error(&self) -> f64 {
+        let cfg = self.tanh.config();
+        let half = 1i64 << cfg.mag_bits();
+        let inf = cfg.in_format();
+        let mut worst = 0.0f64;
+        for x in -half..half {
+            let got = self.eval(x) as f64 / (1i64 << cfg.out_frac) as f64;
+            let want = 1.0 / (1.0 + (-inf.dequantize(x)).exp());
+            worst = worst.max((got - want).abs());
+        }
+        worst
+    }
+}
+
+/// exp(-2x) unit for x >= 0: the bare velocity-factor product chain.
+pub struct ExpUnit {
+    cfg: TanhConfig,
+    tables: Vec<Vec<i64>>,
+}
+
+impl ExpUnit {
+    pub fn new(cfg: TanhConfig) -> Result<ExpUnit, String> {
+        cfg.validate()?;
+        Ok(ExpUnit { cfg, tables: lut_tables(&cfg) })
+    }
+
+    /// `e^(-2 * n * 2^-in_frac)` as a u0.{lut_bits} word, for a
+    /// non-negative magnitude word `n`.
+    pub fn eval(&self, n: i64) -> i64 {
+        assert!(n >= 0, "exp unit takes magnitudes (paper: odd-function split)");
+        let cfg = &self.cfg;
+        let mut f = 0i64;
+        for (gi, positions) in cfg.group_positions().iter().enumerate() {
+            let mut addr = 0usize;
+            for (j, &p) in positions.iter().enumerate() {
+                addr |= (((n >> p) & 1) as usize) << j;
+            }
+            let e = self.tables[gi][addr];
+            f = if gi == 0 { e } else { round_mul(f, e, cfg.lut_bits) };
+        }
+        f
+    }
+
+    pub fn out_format(&self) -> QFormat {
+        QFormat::new(0, self.cfg.lut_bits)
+    }
+
+    /// Float convenience: e^(-2x) for x >= 0.
+    pub fn eval_f64(&self, x: f64) -> f64 {
+        assert!(x >= 0.0);
+        let w = self.cfg.in_format().quantize(x, crate::fixed::Round::Nearest);
+        self.eval(w) as f64 / (1i64 << self.cfg.lut_bits) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sigmoid_accuracy_exhaustive() {
+        let s = SigmoidUnit::new(TanhConfig::s3_12()).unwrap();
+        // The x/2 pre-shift makes the inner tanh see a grid twice as
+        // coarse, so the pre-shift quantization (~2 lsb) dominates:
+        // total < 3 output lsb on the stock s3.12 core.
+        let e = s.exhaustive_error();
+        assert!(e < 3.0 * 2f64.powi(-15), "sigmoid max err {e}");
+    }
+
+    #[test]
+    fn sigmoid_extra_input_bit_restores_accuracy() {
+        // The scalability answer: give the sigmoid flavour one more
+        // input fraction bit and the pre-shift cost disappears.
+        let cfg = TanhConfig {
+            in_int: 3,
+            in_frac: 13,
+            out_frac: 15,
+            lut_bits: 18,
+            mult_bits: 16,
+            lut_group: 4,
+            shuffle: true,
+            nr_stages: 3,
+            subtractor: crate::tanh::Subtractor::Twos,
+        };
+        let s = SigmoidUnit::new(cfg).unwrap();
+        let e = s.exhaustive_error();
+        assert!(e < 2.0 * 2f64.powi(-15), "sigmoid(s3.13) max err {e}");
+    }
+
+    #[test]
+    fn sigmoid_fixed_points() {
+        let s = SigmoidUnit::new(TanhConfig::s3_12()).unwrap();
+        let one = 1i64 << 15;
+        assert_eq!(s.eval(0), one / 2); // sigma(0) = 0.5 exactly
+        // Large positive -> ~1, large negative -> ~0. Note sigma(7.8)
+        // = 0.99959, i.e. ~13 lsb below 1.0 — the unit must NOT
+        // saturate early (the tanh domain is halved by the pre-shift).
+        assert!(s.eval(32000) > one - 16);
+        assert!(s.eval(-32000) < 16);
+        assert_eq!(s.eval(32000) + s.eval(-32000), one);
+    }
+
+    #[test]
+    fn sigmoid_complement_symmetry() {
+        // sigma(-x) = 1 - sigma(x): holds to 1 lsb through the unit.
+        let s = SigmoidUnit::new(TanhConfig::s3_12()).unwrap();
+        let one = 1i64 << 15;
+        for x in [2i64, 100, 5001, 20000] {
+            let a = s.eval(x);
+            let b = s.eval(-x);
+            assert!((a + b - one).abs() <= 1, "x={x}: {a} + {b} != {one}");
+        }
+    }
+
+    #[test]
+    fn exp_matches_f64_reference() {
+        let e = ExpUnit::new(TanhConfig::s3_12()).unwrap();
+        for n in [0i64, 1, 100, 4096, 8192, 20000] {
+            let x = n as f64 / 4096.0;
+            let got = e.eval(n) as f64 / 262144.0;
+            let want = (-2.0 * x).exp();
+            assert!(
+                (got - want).abs() < 3e-5,
+                "n={n}: {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn exp_of_zero_is_one() {
+        let e = ExpUnit::new(TanhConfig::s3_12()).unwrap();
+        assert_eq!(e.eval(0), 1 << 18);
+    }
+
+    #[test]
+    fn exp_monotone_decreasing() {
+        let e = ExpUnit::new(TanhConfig::s3_12()).unwrap();
+        let mut prev = (1i64 << 18) + 1;
+        for n in (0..32768).step_by(97) {
+            let v = e.eval(n);
+            assert!(v <= prev, "non-monotone at {n}");
+            prev = v + 1; // allow 1 ulp of chained-rounding jitter
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "magnitudes")]
+    fn exp_rejects_negative() {
+        ExpUnit::new(TanhConfig::s3_12()).unwrap().eval(-1);
+    }
+}

@@ -1,0 +1,280 @@
+//! `TanhUnit` — the optimized, reusable implementation of the datapath
+//! for the serving hot path.
+//!
+//! Output-identical to [`super::golden`] (property-tested + verified
+//! exhaustively for the 16-bit point), but engineered for throughput:
+//! prebuilt flat tables, precomputed group shifts, branch-light inner
+//! loop, and an optional fully-tabulated mode (`precompute_all`) that
+//! memoizes the entire input domain — the software analogue of taping
+//! out the unit.
+
+use super::config::{Subtractor, TanhConfig};
+use super::lut::lut_tables;
+
+/// Precomputed per-group addressing: the bit positions each address bit
+/// gathers from, flattened for cache-friendly iteration.
+#[derive(Clone, Debug)]
+struct Group {
+    /// `positions[j]` = input bit feeding address bit `j`.
+    positions: Vec<u32>,
+    /// Offset of this group's table in the flat `tables` vec.
+    offset: usize,
+}
+
+/// A ready-to-serve tanh unit instance.
+#[derive(Clone, Debug)]
+pub struct TanhUnit {
+    cfg: TanhConfig,
+    groups: Vec<Group>,
+    /// All group tables, flattened.
+    tables: Vec<i64>,
+    sat_threshold: i64,
+    out_max: i64,
+    /// Optional full-domain memo (index = input word - min_word).
+    full_table: Option<Vec<i32>>,
+}
+
+impl TanhUnit {
+    /// Build the unit (tables + addressing) for `cfg`.
+    pub fn new(cfg: TanhConfig) -> Result<TanhUnit, String> {
+        cfg.validate()?;
+        let mut tables = Vec::new();
+        let mut groups = Vec::new();
+        for (positions, table) in
+            cfg.group_positions().into_iter().zip(lut_tables(&cfg))
+        {
+            groups.push(Group { positions, offset: tables.len() });
+            tables.extend(table);
+        }
+        Ok(TanhUnit {
+            sat_threshold: cfg.sat_threshold(),
+            out_max: cfg.out_max(),
+            cfg,
+            groups,
+            tables,
+            full_table: None,
+        })
+    }
+
+    pub fn config(&self) -> &TanhConfig {
+        &self.cfg
+    }
+
+    /// Memoize the whole input domain (2^in_width words). For the 16-bit
+    /// point this is a 256 KiB table — the fastest possible software
+    /// implementation and the shape a ROM-compiler would produce.
+    pub fn precompute_all(&mut self) {
+        let w = self.cfg.in_width();
+        let lo = -(1i64 << (w - 1));
+        let hi = 1i64 << (w - 1);
+        let table: Vec<i32> =
+            (lo..hi).map(|x| self.eval_datapath(x) as i32).collect();
+        self.full_table = Some(table);
+    }
+
+    /// Evaluate one word (dispatches to the memo if built).
+    #[inline]
+    pub fn eval(&self, x: i64) -> i64 {
+        if let Some(t) = &self.full_table {
+            let lo = -(1i64 << (self.cfg.in_width() - 1));
+            return t[(x - lo) as usize] as i64;
+        }
+        self.eval_datapath(x)
+    }
+
+    /// Evaluate one word through the live datapath.
+    #[inline]
+    pub fn eval_datapath(&self, x: i64) -> i64 {
+        let neg = x < 0;
+        let n = x.unsigned_abs() as i64;
+
+        if n >= self.sat_threshold {
+            return if neg { -self.out_max } else { self.out_max };
+        }
+
+        let cfg = &self.cfg;
+        let l = cfg.lut_bits;
+        let one_l = 1i64 << l;
+        let half_l = 1i64 << (l - 1);
+
+        // LUT product chain.
+        let g0 = &self.groups[0];
+        let mut f = unsafe {
+            *self.tables.get_unchecked(g0.offset + gather(n, &g0.positions))
+        };
+        for g in &self.groups[1..] {
+            let e = unsafe {
+                *self.tables.get_unchecked(g.offset + gather(n, &g.positions))
+            };
+            f = (f * e + half_l) >> l;
+        }
+
+        // Output stage.
+        let num = match cfg.subtractor {
+            Subtractor::Twos => one_l - f,
+            Subtractor::Ones => (one_l - 1) - f,
+        };
+        let den = one_l + f;
+
+        let t = if cfg.nr_stages == 0 {
+            crate::fixed::rint(
+                num as f64 / den as f64 * (1i64 << cfg.out_frac) as f64,
+            )
+        } else {
+            let m = cfg.mult_bits;
+            let half_m = 1i64 << (m - 1);
+            let two_m = 2i64 << m;
+            let d = den >> (l + 1 - m);
+            let mut xr = cfg.nr_seed_const() - (d << 1);
+            // Specialized 3-stage unroll (the production configuration):
+            // lets the compiler keep d/xr in registers with no loop
+            // carried branch (§Perf iteration 2 in EXPERIMENTS.md).
+            if cfg.nr_stages == 3 {
+                let t0 = (d * xr + half_m) >> m;
+                xr = (xr * (two_m - t0) + half_m) >> m;
+                let t1 = (d * xr + half_m) >> m;
+                xr = (xr * (two_m - t1) + half_m) >> m;
+                let t2 = (d * xr + half_m) >> m;
+                xr = (xr * (two_m - t2) + half_m) >> m;
+            } else {
+                for _ in 0..cfg.nr_stages {
+                    let t0 = (d * xr + half_m) >> m;
+                    xr = (xr * (two_m - t0) + half_m) >> m;
+                }
+            }
+            let shift = l + m + 1 - cfg.out_frac;
+            (num * xr + (1i64 << (shift - 1))) >> shift
+        };
+
+        let t = t.clamp(0, self.out_max);
+        if neg {
+            -t
+        } else {
+            t
+        }
+    }
+
+    /// Batch evaluation into a caller-provided buffer.
+    pub fn eval_batch_into(&self, xs: &[i64], out: &mut [i64]) {
+        assert_eq!(xs.len(), out.len());
+        if let Some(t) = &self.full_table {
+            let lo = -(1i64 << (self.cfg.in_width() - 1));
+            for (o, &x) in out.iter_mut().zip(xs) {
+                *o = t[(x - lo) as usize] as i64;
+            }
+        } else {
+            for (o, &x) in out.iter_mut().zip(xs) {
+                *o = self.eval_datapath(x);
+            }
+        }
+    }
+
+    pub fn eval_batch(&self, xs: &[i64]) -> Vec<i64> {
+        let mut out = vec![0i64; xs.len()];
+        self.eval_batch_into(xs, &mut out);
+        out
+    }
+
+    /// i32-word batch API (the PJRT artifact I/O type).
+    pub fn eval_batch_i32(&self, xs: &[i32]) -> Vec<i32> {
+        xs.iter().map(|&x| self.eval(x as i64) as i32).collect()
+    }
+
+    /// Float convenience: quantize -> datapath -> dequantize.
+    pub fn eval_f64(&self, x: f64) -> f64 {
+        let w = self.cfg.in_format().quantize(x, crate::fixed::Round::Nearest);
+        self.cfg.out_format().dequantize(self.eval(w))
+    }
+
+    /// Sigmoid through the same unit: sigma(x) = (1 + tanh(x/2)) / 2.
+    pub fn sigmoid_f64(&self, x: f64) -> f64 {
+        (1.0 + self.eval_f64(x * 0.5)) * 0.5
+    }
+}
+
+/// Gather the address bits for one LUT group.
+#[inline(always)]
+fn gather(n: i64, positions: &[u32]) -> usize {
+    let mut addr = 0usize;
+    for (j, &p) in positions.iter().enumerate() {
+        addr |= (((n >> p) & 1) as usize) << j;
+    }
+    addr
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::{self, int};
+    use crate::tanh::golden::tanh_golden_batch;
+
+    #[test]
+    fn matches_golden_16bit_sampled() {
+        let cfg = TanhConfig::s3_12();
+        let unit = TanhUnit::new(cfg).unwrap();
+        let xs: Vec<i64> = (-32768..32768).step_by(13).collect();
+        let want = tanh_golden_batch(&xs, &cfg);
+        let got = unit.eval_batch(&xs);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn matches_golden_8bit_exhaustive() {
+        let cfg = TanhConfig::s3_5();
+        let unit = TanhUnit::new(cfg).unwrap();
+        let xs: Vec<i64> = (-256..256).collect();
+        assert_eq!(unit.eval_batch(&xs), tanh_golden_batch(&xs, &cfg));
+    }
+
+    #[test]
+    fn memo_is_output_identical() {
+        let cfg = TanhConfig::s3_12();
+        let mut unit = TanhUnit::new(cfg).unwrap();
+        let xs: Vec<i64> = (-32768..32768).step_by(7).collect();
+        let live = unit.eval_batch(&xs);
+        unit.precompute_all();
+        assert_eq!(unit.eval_batch(&xs), live);
+    }
+
+    #[test]
+    fn property_unit_equals_golden() {
+        let cfg = TanhConfig::s3_12().with_nr(2).with_subtractor(Subtractor::Ones);
+        let unit = TanhUnit::new(cfg).unwrap();
+        let g = int(-32768, 32767);
+        proptest::assert_prop("unit==golden", 42, 2000, &g, |&x| {
+            let got = unit.eval(x);
+            let want = crate::tanh::golden::tanh_golden(x, &cfg);
+            if got == want {
+                Ok(())
+            } else {
+                Err(format!("x={x}: unit {got} != golden {want}"))
+            }
+        });
+    }
+
+    #[test]
+    fn f64_api_accuracy() {
+        let unit = TanhUnit::new(TanhConfig::s3_12()).unwrap();
+        for i in -40..=40 {
+            let x = i as f64 * 0.1;
+            assert!((unit.eval_f64(x) - x.tanh()).abs() < 2e-4, "x={x}");
+        }
+    }
+
+    #[test]
+    fn sigmoid_accuracy() {
+        let unit = TanhUnit::new(TanhConfig::s3_12()).unwrap();
+        for i in -30..=30 {
+            let x = i as f64 * 0.25;
+            let want = 1.0 / (1.0 + (-x).exp());
+            assert!((unit.sigmoid_f64(x) - want).abs() < 2e-4, "x={x}");
+        }
+    }
+
+    #[test]
+    fn invalid_config_rejected() {
+        let mut cfg = TanhConfig::s3_12();
+        cfg.lut_group = 0;
+        assert!(TanhUnit::new(cfg).is_err());
+    }
+}

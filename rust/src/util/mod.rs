@@ -1,0 +1,13 @@
+//! Small shared utilities: JSON, deterministic PRNG, table formatting.
+
+pub mod json;
+pub mod rng;
+pub mod table;
+
+/// Repository-relative path helper: resolves `rel` against the crate root
+/// (so binaries work from any CWD under the repo).
+pub fn repo_path(rel: &str) -> std::path::PathBuf {
+    let mut base = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    base.push(rel);
+    base
+}

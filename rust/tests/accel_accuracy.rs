@@ -1,0 +1,86 @@
+//! Network-level activation-accuracy experiment (paper §I motivation):
+//! train a float MLP, quantize it onto the accelerator simulator, and
+//! compare classification accuracy across activation implementations.
+//! The velocity-factor unit must track float accuracy; crude baselines
+//! must lose visibly more.
+
+use tanh_vf::accel::trainer::{blobs, spirals, Mlp};
+use tanh_vf::accel::DenseNet;
+use tanh_vf::analysis::TanhImpl;
+use tanh_vf::baselines::{fmt16, lut::UniformLut, pwl::Pwl};
+use tanh_vf::fixed::QFormat;
+use tanh_vf::tanh::{TanhConfig, TanhUnit};
+use tanh_vf::util::rng::Rng;
+
+fn quantized_accuracy(
+    net: &Mlp,
+    act: &dyn TanhImpl,
+    xs: &[Vec<f64>],
+    ys: &[usize],
+) -> f64 {
+    let dn = DenseNet::from_float(
+        &net.layers(),
+        QFormat::new(2, 9),
+        QFormat::new(3, 12),
+        act,
+    );
+    dn.accuracy(xs, ys)
+}
+
+#[test]
+fn vf_unit_preserves_trained_accuracy_on_spirals() {
+    let mut rng = Rng::new(41);
+    let (xs, ys) = spirals(150, 0.03, &mut rng);
+    let mut net = Mlp::new(&[2, 24, 2], &mut rng);
+    let float_acc = net.train(&xs, &ys, 80, 0.03, &mut rng);
+    assert!(float_acc > 0.85, "trainer failed: {float_acc}");
+
+    let unit = TanhUnit::new(TanhConfig::s3_12()).unwrap();
+    let q_acc = quantized_accuracy(&net, &unit, &xs, &ys);
+    assert!(
+        q_acc >= float_acc - 0.03,
+        "VF-quantized accuracy {q_acc} vs float {float_acc}"
+    );
+}
+
+#[test]
+fn crude_activation_loses_accuracy_on_spirals() {
+    let mut rng = Rng::new(42);
+    let (xs, ys) = spirals(150, 0.03, &mut rng);
+    let mut net = Mlp::new(&[2, 24, 2], &mut rng);
+    let float_acc = net.train(&xs, &ys, 80, 0.03, &mut rng);
+
+    let (fi, fo) = fmt16();
+    let unit = TanhUnit::new(TanhConfig::s3_12()).unwrap();
+    let crude = UniformLut::new(fi, fo, 16); // 16-entry LUT: very coarse
+    let acc_vf = quantized_accuracy(&net, &unit, &xs, &ys);
+    let acc_crude = quantized_accuracy(&net, &crude, &xs, &ys);
+    assert!(
+        acc_vf >= acc_crude,
+        "VF {acc_vf} should be at least as accurate as crude LUT {acc_crude} \
+         (float {float_acc})"
+    );
+}
+
+#[test]
+fn blobs_task_robust_across_reasonable_activations() {
+    // On an easy task, any decent activation preserves accuracy — the
+    // effect the paper notes is workload-dependent.
+    let mut rng = Rng::new(43);
+    let (xs, ys) = blobs(3, 80, &mut rng);
+    let mut net = Mlp::new(&[2, 16, 3], &mut rng);
+    let float_acc = net.train(&xs, &ys, 40, 0.05, &mut rng);
+    assert!(float_acc > 0.95);
+
+    let (fi, fo) = fmt16();
+    let unit = TanhUnit::new(TanhConfig::s3_12()).unwrap();
+    let pwl = Pwl::new(fi, fo, 32);
+    for act in [&unit as &dyn TanhImpl, &pwl] {
+        let acc = quantized_accuracy(&net, act, &xs, &ys);
+        assert!(
+            acc >= float_acc - 0.05,
+            "{}: {acc} vs float {float_acc}",
+            act.name()
+        );
+    }
+}

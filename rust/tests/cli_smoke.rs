@@ -1,0 +1,100 @@
+//! CLI smoke tests: every subcommand runs and prints what it promises.
+
+use std::process::Command;
+
+fn run(args: &[&str]) -> (String, bool) {
+    let out = Command::new(env!("CARGO_BIN_EXE_tanh-vf"))
+        .args(args)
+        .output()
+        .expect("spawn tanh-vf");
+    (
+        String::from_utf8_lossy(&out.stdout).to_string()
+            + &String::from_utf8_lossy(&out.stderr),
+        out.status.success(),
+    )
+}
+
+#[test]
+fn no_args_prints_usage() {
+    let (out, ok) = run(&[]);
+    assert!(ok);
+    assert!(out.contains("subcommands:"));
+    for sub in ["table2", "table3", "codegen", "serve"] {
+        assert!(out.contains(sub), "usage missing {sub}");
+    }
+}
+
+#[test]
+fn eval_prints_value_and_error() {
+    let (out, ok) = run(&["eval", "--x", "0.5"]);
+    assert!(ok, "{out}");
+    assert!(out.contains("tanh(0.5)"));
+    assert!(out.contains("s3.12"));
+    let (out8, ok8) = run(&["eval", "--x", "0.5", "--bits", "8"]);
+    assert!(ok8);
+    assert!(out8.contains("s3.5"));
+}
+
+#[test]
+fn eval_rejects_bad_bits() {
+    let (out, ok) = run(&["eval", "--bits", "12"]);
+    assert!(!ok);
+    assert!(out.contains("use 8 or 16"));
+}
+
+#[test]
+fn table2_reports_all_five_rows() {
+    let (out, ok) = run(&["table2"]);
+    assert!(ok, "{out}");
+    assert!(out.contains("0 (fp ref)"));
+    assert_eq!(out.matches("e-").count() >= 5, true);
+    assert!(out.contains("2.77e-4")); // the paper column
+}
+
+#[test]
+fn tables_3_and_4_have_six_flavours() {
+    for t in ["table3", "table4"] {
+        let (out, ok) = run(&[t]);
+        assert!(ok, "{t}: {out}");
+        assert_eq!(out.matches("SVT").count(), 3, "{t}");
+        assert_eq!(out.matches("LVT").count(), 3, "{t}");
+    }
+}
+
+#[test]
+fn codegen_writes_files() {
+    let dir = std::env::temp_dir().join("tanhvf-cli-codegen");
+    let _ = std::fs::remove_dir_all(&dir);
+    let (out, ok) = run(&[
+        "codegen",
+        "--stages",
+        "2",
+        "--out",
+        dir.to_str().unwrap(),
+    ]);
+    assert!(ok, "{out}");
+    let v = dir.join("tanh_vf_s3_12_15_p2.v");
+    assert!(v.exists());
+    let text = std::fs::read_to_string(v).unwrap();
+    assert!(text.contains("endmodule"));
+}
+
+#[test]
+fn sweep_and_fig1_and_table1_run() {
+    for sub in ["sweep", "table1"] {
+        let (out, ok) = run(&[sub]);
+        assert!(ok, "{sub}: {out}");
+        assert!(out.len() > 200, "{sub} output too short");
+    }
+    let (out, ok) = run(&["fig1", "--segments", "16", "--points", "9"]);
+    assert!(ok);
+    assert!(out.contains("PWL"));
+}
+
+#[test]
+fn serve_native_small_run() {
+    let (out, ok) = run(&["serve", "--backend", "native", "--requests", "50"]);
+    assert!(ok, "{out}");
+    assert!(out.contains("throughput"));
+    assert!(out.contains("batches="));
+}

@@ -1,0 +1,121 @@
+//! End-to-end coordinator integration: serve batched activation traffic
+//! through BOTH backends (native unit and the PJRT-compiled Pallas
+//! kernel) and check bit-identical responses, batching behaviour and
+//! metrics sanity.
+
+use std::time::Duration;
+
+use tanh_vf::coordinator::{native_factory, pjrt_factory, Config, Coordinator};
+use tanh_vf::runtime::artifacts_dir;
+use tanh_vf::tanh::golden::tanh_golden_batch;
+use tanh_vf::tanh::TanhConfig;
+use tanh_vf::util::rng::Rng;
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+fn requests(n: usize, seed: u64) -> Vec<Vec<i32>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let len = 1 + rng.below(200) as usize;
+            (0..len)
+                .map(|_| rng.range_i64(-32768, 32768) as i32)
+                .collect()
+        })
+        .collect()
+}
+
+fn expected(req: &[i32]) -> Vec<i64> {
+    tanh_golden_batch(
+        &req.iter().map(|&w| w as i64).collect::<Vec<_>>(),
+        &TanhConfig::s3_12(),
+    )
+}
+
+#[test]
+fn native_backend_end_to_end() {
+    let c = Coordinator::start(
+        Config {
+            batch_capacity: 1024,
+            max_wait: Duration::from_millis(1),
+            workers: 3,
+            queue_limit: 1024,
+        },
+        native_factory(TanhConfig::s3_12(), true),
+    );
+    let reqs = requests(100, 1);
+    let handles: Vec<_> = reqs.iter().map(|r| c.submit(r.clone())).collect();
+    for (r, h) in reqs.iter().zip(handles) {
+        let got = h.recv().unwrap().unwrap();
+        assert_eq!(
+            got.iter().map(|&v| v as i64).collect::<Vec<_>>(),
+            expected(r)
+        );
+    }
+    let s = c.snapshot();
+    assert_eq!(s.completed, 100);
+    assert!(s.batches <= 100);
+    assert!(s.p50_latency_us <= s.p99_latency_us);
+}
+
+#[test]
+fn pjrt_backend_end_to_end_bit_exact() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let c = Coordinator::start(
+        Config {
+            batch_capacity: 1024, // must match the artifact batch shape
+            max_wait: Duration::from_millis(5),
+            workers: 1,
+            queue_limit: 1024,
+        },
+        pjrt_factory(artifacts_dir(), "tanh_s3_12".to_string()),
+    );
+    let reqs = requests(40, 2);
+    let handles: Vec<_> = reqs.iter().map(|r| c.submit(r.clone())).collect();
+    for (r, h) in reqs.iter().zip(handles) {
+        let got = h
+            .recv_timeout(Duration::from_secs(120))
+            .expect("response")
+            .expect("pjrt execution");
+        assert_eq!(
+            got.iter().map(|&v| v as i64).collect::<Vec<_>>(),
+            expected(r),
+            "pjrt response must be bit-identical to the golden model"
+        );
+    }
+    let s = c.snapshot();
+    assert_eq!(s.completed, 40);
+    // Co-batching must amortize PJRT dispatch.
+    assert!(s.batches < 40, "batches {}", s.batches);
+}
+
+#[test]
+fn native_and_pjrt_agree_under_same_traffic() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let native = Coordinator::start(
+        Config::default(),
+        native_factory(TanhConfig::s3_12(), false),
+    );
+    let pjrt = Coordinator::start(
+        Config {
+            batch_capacity: 1024,
+            max_wait: Duration::from_millis(5),
+            workers: 1,
+            queue_limit: 1024,
+        },
+        pjrt_factory(artifacts_dir(), "tanh_s3_12".to_string()),
+    );
+    for r in requests(10, 3) {
+        let a = native.eval_blocking(r.clone()).unwrap();
+        let b = pjrt.eval_blocking(r).unwrap();
+        assert_eq!(a, b);
+    }
+}

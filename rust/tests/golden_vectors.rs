@@ -1,0 +1,146 @@
+//! Cross-layer bit-exactness: replay the golden vectors emitted by the
+//! python oracle (`make artifacts` -> `artifacts/golden_vectors.json`)
+//! through every rust implementation of the datapath:
+//!
+//!   python numpy oracle == rust golden model == TanhUnit (live + memo)
+//!   == structural netlist == cycle-accurate RTL simulation.
+//!
+//! This is the test that makes "the same hardware, specified once" a
+//! checked property rather than a claim.
+
+use tanh_vf::rtl::RtlSim;
+use tanh_vf::synth::datapath::{build_tanh_datapath, eval_datapath};
+use tanh_vf::synth::pipeline::assign_stages;
+use tanh_vf::tanh::golden::tanh_golden_with_tables;
+use tanh_vf::tanh::lut::lut_tables;
+use tanh_vf::tanh::{Subtractor, TanhConfig, TanhUnit};
+use tanh_vf::util::json::{self, Json};
+
+fn load_vectors() -> Option<Json> {
+    let path = tanh_vf::runtime::artifacts_dir().join("golden_vectors.json");
+    let text = std::fs::read_to_string(path).ok()?;
+    Some(json::parse(&text).expect("golden_vectors.json parses"))
+}
+
+fn config_from(v: &Json) -> TanhConfig {
+    let c = v.get("config").expect("config");
+    let get = |k: &str| c.get(k).and_then(Json::as_i64).unwrap() as u32;
+    TanhConfig {
+        in_int: get("in_int"),
+        in_frac: get("in_frac"),
+        out_frac: get("out_frac"),
+        lut_bits: get("lut_bits"),
+        mult_bits: get("mult_bits"),
+        lut_group: get("lut_group"),
+        shuffle: c.get("shuffle").and_then(Json::as_bool).unwrap(),
+        nr_stages: get("nr_stages"),
+        subtractor: match c.get("subtractor").and_then(Json::as_str).unwrap() {
+            "ones" => Subtractor::Ones,
+            _ => Subtractor::Twos,
+        },
+    }
+}
+
+fn vectors_of(v: &Json) -> (Vec<i64>, Vec<i64>) {
+    (
+        v.get("inputs").and_then(Json::as_i64_vec).unwrap(),
+        v.get("outputs").and_then(Json::as_i64_vec).unwrap(),
+    )
+}
+
+#[test]
+fn python_oracle_matches_rust_golden_model() {
+    let Some(root) = load_vectors() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    for key in ["tanh_s3_12", "tanh_s3_5", "tanh_s3_12_nr2_ones"] {
+        let entry = root.get(key).expect(key);
+        let cfg = config_from(entry);
+        let (xs, want) = vectors_of(entry);
+        let tables = lut_tables(&cfg);
+        for (&x, &w) in xs.iter().zip(&want) {
+            let got = tanh_golden_with_tables(x, &cfg, &tables);
+            assert_eq!(got, w, "{key}: x={x}");
+        }
+    }
+}
+
+#[test]
+fn python_oracle_matches_tanh_unit_live_and_memo() {
+    let Some(root) = load_vectors() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    for key in ["tanh_s3_12", "tanh_s3_5"] {
+        let entry = root.get(key).expect(key);
+        let cfg = config_from(entry);
+        let (xs, want) = vectors_of(entry);
+        let mut unit = TanhUnit::new(cfg).unwrap();
+        for (&x, &w) in xs.iter().zip(&want) {
+            assert_eq!(unit.eval(x), w, "{key} live: x={x}");
+        }
+        unit.precompute_all();
+        for (&x, &w) in xs.iter().zip(&want) {
+            assert_eq!(unit.eval(x), w, "{key} memo: x={x}");
+        }
+    }
+}
+
+#[test]
+fn python_oracle_matches_structural_netlist() {
+    let Some(root) = load_vectors() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    for key in ["tanh_s3_12", "tanh_s3_5", "tanh_s3_12_nr2_ones"] {
+        let entry = root.get(key).expect(key);
+        let cfg = config_from(entry);
+        let (xs, want) = vectors_of(entry);
+        let net = build_tanh_datapath(&cfg);
+        for (&x, &w) in xs.iter().zip(&want) {
+            assert_eq!(eval_datapath(&net, x), w, "{key}: x={x}");
+        }
+    }
+}
+
+#[test]
+fn python_oracle_matches_pipelined_rtl_sim() {
+    let Some(root) = load_vectors() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let entry = root.get("tanh_s3_12").unwrap();
+    let cfg = config_from(entry);
+    let (xs, want) = vectors_of(entry);
+    let net = build_tanh_datapath(&cfg);
+    for stages in [1u32, 2, 7] {
+        let pipe = assign_stages(&net, stages);
+        let mut sim = RtlSim::new(&net, &pipe);
+        let (got, cycles) = sim.run_batch(&xs);
+        assert_eq!(got, want, "stages={stages}");
+        assert_eq!(cycles, xs.len() as u64 + stages as u64);
+    }
+}
+
+#[test]
+fn exhaustive_max_error_matches_python_report() {
+    // The python oracle records its exhaustive max error; the rust unit
+    // must land on exactly the same accuracy (same datapath).
+    let Some(root) = load_vectors() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    for key in ["tanh_s3_12", "tanh_s3_5"] {
+        let entry = root.get(key).unwrap();
+        let cfg = config_from(entry);
+        let py_err = entry
+            .get("exhaustive_max_error")
+            .and_then(Json::as_f64)
+            .unwrap();
+        let unit = TanhUnit::new(cfg).unwrap();
+        let stats = tanh_vf::analysis::exhaustive_error(&unit);
+        let rel = (stats.max_abs - py_err).abs() / py_err;
+        assert!(rel < 1e-9, "{key}: rust {} vs python {py_err}", stats.max_abs);
+    }
+}

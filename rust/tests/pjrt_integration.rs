@@ -1,0 +1,178 @@
+//! PJRT integration: the AOT-compiled JAX/Pallas artifacts, executed
+//! from rust, must agree with the native implementations — the L1/L2/L3
+//! composition proof.
+
+use tanh_vf::runtime::{artifacts_dir, Runtime, Tensor};
+use tanh_vf::tanh::{TanhConfig, TanhUnit};
+use tanh_vf::util::json::{self, Json};
+
+fn runtime() -> Option<Runtime> {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::new(&dir).expect("pjrt cpu client"))
+}
+
+fn golden() -> Option<Json> {
+    let text =
+        std::fs::read_to_string(artifacts_dir().join("golden_vectors.json"))
+            .ok()?;
+    Some(json::parse(&text).unwrap())
+}
+
+#[test]
+fn tanh_artifact_matches_native_unit_bit_exactly() {
+    let Some(rt) = runtime() else { return };
+    let entry = rt.entry("tanh_s3_12").unwrap();
+    let n = entry.inputs[0].elements();
+
+    let mut rng = tanh_vf::util::rng::Rng::new(0xA07);
+    let words: Vec<i32> =
+        (0..n).map(|_| rng.range_i64(-32768, 32768) as i32).collect();
+    let out = rt
+        .execute("tanh_s3_12", &[Tensor::I32(words.clone())])
+        .expect("execute");
+    let got = out[0].as_i32().unwrap();
+
+    let unit = TanhUnit::new(TanhConfig::s3_12()).unwrap();
+    let want = unit.eval_batch_i32(&words);
+    assert_eq!(got, want.as_slice());
+}
+
+#[test]
+fn tanh_8bit_artifact_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let n = rt.entry("tanh_s3_5").unwrap().inputs[0].elements();
+    let mut rng = tanh_vf::util::rng::Rng::new(77);
+    let words: Vec<i32> =
+        (0..n).map(|_| rng.range_i64(-256, 256) as i32).collect();
+    let out = rt
+        .execute("tanh_s3_5", &[Tensor::I32(words.clone())])
+        .unwrap();
+    let unit = TanhUnit::new(TanhConfig::s3_5()).unwrap();
+    assert_eq!(out[0].as_i32().unwrap(), unit.eval_batch_i32(&words).as_slice());
+}
+
+#[test]
+fn tanh_artifact_matches_python_golden_vectors() {
+    let (Some(rt), Some(g)) = (runtime(), golden()) else { return };
+    let entry = g.get("tanh_s3_12").unwrap();
+    let xs: Vec<i32> = entry
+        .get("inputs")
+        .and_then(Json::as_i64_vec)
+        .unwrap()
+        .iter()
+        .map(|&v| v as i32)
+        .collect();
+    let want: Vec<i32> = entry
+        .get("outputs")
+        .and_then(Json::as_i64_vec)
+        .unwrap()
+        .iter()
+        .map(|&v| v as i32)
+        .collect();
+    let out = rt.execute("tanh_s3_12", &[Tensor::I32(xs)]).unwrap();
+    assert_eq!(out[0].as_i32().unwrap(), want.as_slice());
+}
+
+#[test]
+fn mlp_artifact_matches_python_golden() {
+    let (Some(rt), Some(g)) = (runtime(), golden()) else { return };
+    let entry = g.get("mlp_b32").unwrap();
+    let f32s = |k: &str| -> Vec<f32> {
+        entry
+            .get(k)
+            .and_then(Json::as_f64_vec)
+            .unwrap()
+            .iter()
+            .map(|&v| v as f32)
+            .collect()
+    };
+    let params = entry.get("params").unwrap();
+    let p32 = |k: &str| -> Vec<f32> {
+        params
+            .get(k)
+            .and_then(Json::as_f64_vec)
+            .unwrap()
+            .iter()
+            .map(|&v| v as f32)
+            .collect()
+    };
+    let inputs = vec![
+        Tensor::F32(f32s("x")),
+        Tensor::F32(p32("w1")),
+        Tensor::F32(p32("b1")),
+        Tensor::F32(p32("w2")),
+        Tensor::F32(p32("b2")),
+        Tensor::F32(p32("w3")),
+        Tensor::F32(p32("b3")),
+    ];
+    let out = rt.execute("mlp_b32", &inputs).unwrap();
+    let got = out[0].as_f32().unwrap();
+    let want = f32s("logits");
+    assert_eq!(got.len(), want.len());
+    for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+        assert!(
+            (a - b).abs() <= 1e-5 * b.abs().max(1.0),
+            "logit {i}: {a} vs {b}"
+        );
+    }
+}
+
+#[test]
+fn lstm_cell_artifact_matches_python_golden() {
+    let (Some(rt), Some(g)) = (runtime(), golden()) else { return };
+    let entry = g.get("lstm_cell_b16").unwrap();
+    let f32s = |v: &Json| -> Vec<f32> {
+        v.as_f64_vec().unwrap().iter().map(|&x| x as f32).collect()
+    };
+    let params = entry.get("params").unwrap();
+    let inputs = vec![
+        Tensor::F32(f32s(entry.get("x").unwrap())),
+        Tensor::F32(f32s(entry.get("h").unwrap())),
+        Tensor::F32(f32s(entry.get("c").unwrap())),
+        Tensor::F32(f32s(params.get("wx").unwrap())),
+        Tensor::F32(f32s(params.get("wh").unwrap())),
+        Tensor::F32(f32s(params.get("b").unwrap())),
+    ];
+    let out = rt.execute("lstm_cell_b16", &inputs).unwrap();
+    let want_h = f32s(entry.get("h_new").unwrap());
+    let want_c = f32s(entry.get("c_new").unwrap());
+    let got_h = out[0].as_f32().unwrap();
+    let got_c = out[1].as_f32().unwrap();
+    for (a, b) in got_h.iter().zip(&want_h) {
+        assert!((a - b).abs() <= 1e-5, "h: {a} vs {b}");
+    }
+    for (a, b) in got_c.iter().zip(&want_c) {
+        assert!((a - b).abs() <= 1e-5, "c: {a} vs {b}");
+    }
+}
+
+#[test]
+fn executable_cache_reuses_compilation() {
+    let Some(rt) = runtime() else { return };
+    rt.ensure_compiled("tanh_s3_12").unwrap();
+    let t0 = std::time::Instant::now();
+    rt.ensure_compiled("tanh_s3_12").unwrap();
+    // Cached path must be instant (no recompile).
+    assert!(t0.elapsed() < std::time::Duration::from_millis(50));
+}
+
+#[test]
+fn shape_validation_rejects_bad_inputs() {
+    let Some(rt) = runtime() else { return };
+    // Wrong length.
+    assert!(rt
+        .execute("tanh_s3_12", &[Tensor::I32(vec![0; 17])])
+        .is_err());
+    // Wrong dtype.
+    assert!(rt
+        .execute("tanh_s3_12", &[Tensor::F32(vec![0.0; 1024])])
+        .is_err());
+    // Wrong arity.
+    assert!(rt.execute("mlp_b32", &[Tensor::F32(vec![0.0; 2048])]).is_err());
+    // Unknown entry.
+    assert!(rt.execute("nope", &[]).is_err());
+}

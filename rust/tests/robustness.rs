@@ -1,0 +1,220 @@
+//! Failure injection + cross-module property tests: the suite that
+//! checks the system degrades loudly and correctly, not silently.
+
+use tanh_vf::proptest::{assert_prop, int};
+use tanh_vf::runtime::Manifest;
+use tanh_vf::synth::datapath::{build_tanh_datapath, eval_datapath};
+use tanh_vf::synth::pipeline::assign_stages;
+use tanh_vf::tanh::{Subtractor, TanhConfig, TanhUnit};
+use tanh_vf::util::json;
+
+// ---------------------------------------------------------------------
+// Failure injection
+// ---------------------------------------------------------------------
+
+fn tmpdir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("tanhvf-test-{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn corrupt_manifest_is_a_loud_error() {
+    let dir = tmpdir("corrupt-manifest");
+    std::fs::write(dir.join("manifest.json"), "{\"entries\": [not json").unwrap();
+    let err = Manifest::load(&dir).unwrap_err();
+    assert!(format!("{err:#}").contains("manifest"), "{err:#}");
+}
+
+#[test]
+fn missing_manifest_mentions_make_artifacts() {
+    let dir = tmpdir("missing-manifest");
+    let err = Manifest::load(&dir).unwrap_err();
+    assert!(format!("{err:#}").contains("make artifacts"));
+}
+
+#[test]
+fn manifest_with_bad_dtype_rejected() {
+    let dir = tmpdir("bad-dtype");
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"entries": {"m": {"file": "m.hlo.txt",
+            "inputs": [{"name": "x", "shape": [4], "dtype": "f64"}],
+            "outputs": []}}}"#,
+    )
+    .unwrap();
+    assert!(Manifest::load(&dir).is_err());
+}
+
+#[test]
+fn json_parser_rejects_truncation_at_every_prefix() {
+    // Robustness sweep: no prefix of a valid document may parse.
+    let doc = r#"{"a": [1, 2.5, true], "b": {"c": "x\n"}}"#;
+    for cut in 1..doc.len() {
+        let prefix = &doc[..cut];
+        if prefix.trim() == doc.trim() {
+            continue;
+        }
+        assert!(
+            json::parse(prefix).is_err(),
+            "prefix of length {cut} should not parse: {prefix:?}"
+        );
+    }
+    assert!(json::parse(doc).is_ok());
+}
+
+#[test]
+fn invalid_configs_fail_construction_not_evaluation() {
+    let mut cfg = TanhConfig::s3_12();
+    cfg.lut_bits = 3; // < mult_bits - 1
+    assert!(TanhUnit::new(cfg).is_err());
+    let mut cfg = TanhConfig::s3_12();
+    cfg.in_int = 40; // blows the i64 headroom guard
+    cfg.in_frac = 20;
+    assert!(TanhUnit::new(cfg).is_err());
+}
+
+// ---------------------------------------------------------------------
+// Cross-module property tests
+// ---------------------------------------------------------------------
+
+#[test]
+fn property_netlist_equals_unit_for_random_configs() {
+    // For randomized (nr, group, shuffle, subtractor) configurations,
+    // the structural netlist and the optimized unit agree word-for-word
+    // on random inputs.
+    let g = int(0, i64::MAX - 1);
+    assert_prop("netlist==unit over configs", 0xBEEF, 60, &g, |&seed| {
+        let mut rng = tanh_vf::util::rng::Rng::new(seed as u64);
+        let cfg = TanhConfig {
+            in_int: 3,
+            in_frac: 5 + rng.below(8) as u32,
+            out_frac: 7 + rng.below(9) as u32,
+            lut_bits: 0,
+            mult_bits: 0,
+            lut_group: 1 + rng.below(5) as u32,
+            shuffle: rng.below(2) == 1,
+            nr_stages: 1 + rng.below(3) as u32,
+            subtractor: if rng.below(2) == 1 {
+                Subtractor::Ones
+            } else {
+                Subtractor::Twos
+            },
+        };
+        let cfg = TanhConfig {
+            lut_bits: cfg.out_frac + 3,
+            mult_bits: cfg.out_frac + 1,
+            ..cfg
+        };
+        if cfg.validate().is_err() {
+            return Ok(()); // skip invalid corners
+        }
+        let unit = TanhUnit::new(cfg).map_err(|e| e)?;
+        let net = build_tanh_datapath(&cfg);
+        let half = 1i64 << cfg.mag_bits();
+        for _ in 0..24 {
+            let x = rng.range_i64(-half, half);
+            let a = unit.eval(x);
+            let b = eval_datapath(&net, x);
+            if a != b {
+                return Err(format!("{}: x={x} unit={a} netlist={b}",
+                                   cfg.describe()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn property_pipeline_legal_for_any_stage_count() {
+    let net = build_tanh_datapath(&TanhConfig::s3_12());
+    let g = int(1, 40);
+    assert_prop("pipeline legality", 0xCAFE, 40, &g, |&stages| {
+        let p = assign_stages(&net, stages as u32);
+        for (id, node) in net.nodes.iter().enumerate() {
+            for &i in &node.inputs {
+                if p.stage_of[i] > p.stage_of[id] {
+                    return Err(format!("edge {i}->{id} goes backwards"));
+                }
+            }
+        }
+        if p.worst_stage_levels() <= 0.0 {
+            return Err("empty critical path".into());
+        }
+        // Register bits monotone-ish in stages is NOT required (depends
+        // on cut placement), but output register must always exist.
+        if p.reg_bits < 16 {
+            return Err(format!("reg_bits {} too small", p.reg_bits));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn property_unit_bounded_and_odd_for_all_configs() {
+    let g = int(0, i64::MAX - 1);
+    assert_prop("unit bounded+odd", 0xF00D, 40, &g, |&seed| {
+        let mut rng = tanh_vf::util::rng::Rng::new(seed as u64);
+        let in_frac = 4 + rng.below(9) as u32;
+        let out_frac = 6 + rng.below(10) as u32;
+        let cfg = TanhConfig {
+            in_int: 2 + rng.below(3) as u32,
+            in_frac,
+            out_frac,
+            lut_bits: out_frac + 3,
+            mult_bits: out_frac + 1,
+            lut_group: 3 + rng.below(3) as u32,
+            shuffle: true,
+            nr_stages: 3,
+            subtractor: Subtractor::Twos,
+        };
+        if cfg.validate().is_err() {
+            return Ok(());
+        }
+        let unit = TanhUnit::new(cfg)?;
+        let half = 1i64 << cfg.mag_bits();
+        for _ in 0..32 {
+            let x = rng.range_i64(-(half - 1), half);
+            let y = unit.eval(x);
+            if y.abs() > cfg.out_max() {
+                return Err(format!("{}: |{y}| > out_max", cfg.describe()));
+            }
+            if unit.eval(-x) != -y {
+                return Err(format!("{}: not odd at {x}", cfg.describe()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn property_verilog_generates_for_random_configs() {
+    let g = int(1, 10);
+    assert_prop("verilog generation", 0xDEAD, 12, &g, |&stages| {
+        for cfg in [TanhConfig::s3_12(), TanhConfig::s3_5()] {
+            let out = tanh_vf::verilog::generate(&cfg, stages as u32, 16);
+            if !out.module.contains("endmodule") {
+                return Err("no endmodule".into());
+            }
+            if out.module.matches("case (").count()
+                != out.module.matches("endcase").count()
+            {
+                return Err("unbalanced case".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn rtl_sim_rejects_mismatched_pipeline() {
+    let net16 = build_tanh_datapath(&TanhConfig::s3_12());
+    let net8 = build_tanh_datapath(&TanhConfig::s3_5());
+    let pipe8 = assign_stages(&net8, 2);
+    // Different node counts: constructor must panic (assert), not read OOB.
+    let result = std::panic::catch_unwind(|| {
+        tanh_vf::rtl::RtlSim::new(&net16, &pipe8)
+    });
+    assert!(result.is_err());
+}
