@@ -1,27 +1,78 @@
-//! END-TO-END DRIVER: the full three-layer system on a real workload.
+//! END-TO-END DRIVER: the full four-layer system on a real workload.
 //!
-//! Starts the rust coordinator, loads the AOT-compiled JAX/Pallas
-//! artifacts through PJRT, serves a batched activation + LSTM-inference
-//! workload, verifies bit-exactness against the golden model on the fly,
-//! and reports latency/throughput — proving L1 (Pallas kernel), L2 (JAX
-//! model), and L3 (rust coordinator) compose.
+//! Phase 0 boots the L4 HTTP front-end over a two-precision route table
+//! and serves mixed-precision traffic through real sockets, verifying a
+//! sample against the golden model. Phases 1-2 then start the rust
+//! coordinator directly, load the AOT-compiled JAX/Pallas artifacts
+//! through PJRT, serve a batched activation + LSTM-inference workload,
+//! verify bit-exactness on the fly, and report latency/throughput —
+//! proving L1 (Pallas kernel), L2 (JAX model), L3 (rust coordinator)
+//! and L4 (HTTP server) compose.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example serve_activations
 //! ```
+//! (Phase 0 runs even without artifacts; the PJRT phases skip.)
 
 use std::time::{Duration, Instant};
 
 use tanh_vf::coordinator::{native_factory, pjrt_factory, Config, Coordinator};
 use tanh_vf::runtime::{artifacts_dir, Runtime, Tensor};
+use tanh_vf::server::loadgen::{self, LoadgenConfig};
+use tanh_vf::server::{named_config, parse_routes, Server, ServerConfig};
 use tanh_vf::tanh::golden::tanh_golden_batch;
 use tanh_vf::tanh::TanhConfig;
 use tanh_vf::util::rng::Rng;
 use tanh_vf::util::table::Table;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
+    // ---------------------------------------------------------------
+    // Phase 0: the HTTP front door (L4) over two native precisions.
+    // ---------------------------------------------------------------
+    println!("== phase 0: HTTP activation service (L4) ==\n");
+    {
+        let routes = parse_routes("native:s3_12,native:s3_5")?;
+        let mut srv = Server::start(
+            ServerConfig { addr: "127.0.0.1:0".into(), ..Default::default() },
+            routes,
+        )?;
+        let addr = srv.local_addr().to_string();
+        println!("listening on http://{addr}");
+        let (_, models) = loadgen::http_get(&addr, "/v1/models")?;
+        println!("GET /v1/models -> {models}");
+
+        // Spot-check bit-exactness through the socket.
+        let words: Vec<i32> = (-8..8).map(|i| i * 500).collect();
+        let got = loadgen::eval_words(&addr, "s3_12", &words)?;
+        let want = tanh_golden_batch(
+            &words.iter().map(|&w| w as i64).collect::<Vec<_>>(),
+            &named_config("s3_12")?,
+        );
+        assert_eq!(
+            got.iter().map(|&w| w as i64).collect::<Vec<_>>(),
+            want,
+            "HTTP path returned non-golden words"
+        );
+        println!("POST /v1/batch spot-check: bit-exact vs golden model");
+
+        // Closed-loop mixed-precision load.
+        let mut lg = LoadgenConfig::new(addr.clone(), &["s3_12", "s3_5"]);
+        lg.connections = 4;
+        lg.requests_per_connection = 100;
+        lg.words_per_request = 64;
+        let report = loadgen::run(&lg)?;
+        assert_eq!(report.failures, 0, "{}", report.render());
+        println!("loadgen: {}", report.render());
+        srv.shutdown();
+        println!("graceful shutdown: ok\n");
+    }
+
     if !artifacts_dir().join("manifest.json").exists() {
-        return Err("artifacts missing — run `make artifacts` first".into());
+        println!(
+            "artifacts missing — run `make artifacts` for the PJRT phases \
+             (1-2); HTTP phase (0) completed."
+        );
+        return Ok(());
     }
 
     // ---------------------------------------------------------------

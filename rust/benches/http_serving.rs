@@ -1,0 +1,64 @@
+//! HTTP serving-path throughput: the L4 front door under closed-loop
+//! load at increasing connection counts, with the direct in-process
+//! router as the overhead baseline. Companion to `throughput.rs`, one
+//! layer up the stack.
+
+use std::time::Instant;
+
+use tanh_vf::server::loadgen::{self, LoadgenConfig};
+use tanh_vf::server::{parse_routes, Server, ServerConfig};
+
+fn main() {
+    let routes = parse_routes("native:s3_12,native:s3_5").unwrap();
+    let srv = Server::start(
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            workers: 32,
+            max_connections: 32,
+            ..Default::default()
+        },
+        routes,
+    )
+    .unwrap();
+    let addr = srv.local_addr().to_string();
+
+    println!("== HTTP serving (closed-loop POST /v1/batch, 64 words, mixed s3_12/s3_5) ==\n");
+    for conns in [1usize, 4, 16] {
+        let mut cfg = LoadgenConfig::new(addr.clone(), &["s3_12", "s3_5"]);
+        cfg.connections = conns;
+        cfg.requests_per_connection = 400;
+        cfg.words_per_request = 64;
+        cfg.word_range = 128;
+        let r = loadgen::run(&cfg).expect("loadgen");
+        assert_eq!(r.failures, 0, "{}", r.render());
+        println!("conns={conns:<3} {}", r.render());
+    }
+
+    // Baseline: the same batch shape straight into the router (no HTTP),
+    // to show what the wire + parse layer costs per request.
+    let direct_routes = parse_routes("native:s3_12").unwrap();
+    let router =
+        tanh_vf::coordinator::router::Router::start(direct_routes).unwrap();
+    let words: Vec<i32> = (0..64).map(|i| (i * 31) % 128).collect();
+    let n = 2000;
+    let t0 = Instant::now();
+    for _ in 0..n {
+        router.eval_blocking("s3_12", words.clone()).unwrap();
+    }
+    let direct = t0.elapsed();
+    println!(
+        "\ndirect router baseline: {:.0} req/s ({:.1} us/req) — \
+         HTTP delta above this is wire+parse overhead",
+        n as f64 / direct.as_secs_f64(),
+        direct.as_micros() as f64 / n as f64
+    );
+
+    println!("\n== per-route completions ==");
+    for (route, snap) in srv.snapshots() {
+        println!(
+            "{route:<8} completed={} batches={} fill={:.2} p99={}us",
+            snap.completed, snap.batches, snap.mean_batch_fill,
+            snap.p99_latency_us
+        );
+    }
+}

@@ -21,6 +21,36 @@ pub enum RouteBackend {
     Pjrt { dir: PathBuf, entry: String },
 }
 
+impl RouteBackend {
+    /// Short backend kind for route tables and metrics labels.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            RouteBackend::Native { .. } => "native",
+            RouteBackend::Pjrt { .. } => "pjrt",
+        }
+    }
+
+    /// One-line human description (the `/v1/models` detail field).
+    pub fn describe(&self) -> String {
+        match self {
+            RouteBackend::Native { cfg, memo } => {
+                format!("{}{}", cfg.describe(), if *memo { " memo" } else { "" })
+            }
+            RouteBackend::Pjrt { dir, entry } => {
+                format!("{}:{entry}", dir.display())
+            }
+        }
+    }
+
+    /// The datapath config, when statically known (native routes).
+    pub fn native_cfg(&self) -> Option<TanhConfig> {
+        match self {
+            RouteBackend::Native { cfg, .. } => Some(*cfg),
+            RouteBackend::Pjrt { .. } => None,
+        }
+    }
+}
+
 /// Declarative route table entry.
 #[derive(Clone, Debug)]
 pub struct Route {
@@ -29,6 +59,9 @@ pub struct Route {
     pub batch_capacity: usize,
     pub max_wait: Duration,
     pub workers: usize,
+    /// Bound on queued requests before rejection (backpressure; the
+    /// HTTP front-end maps rejections to 503).
+    pub queue_limit: usize,
 }
 
 impl Route {
@@ -39,6 +72,7 @@ impl Route {
             batch_capacity: 1024,
             max_wait: Duration::from_millis(2),
             workers: 2,
+            queue_limit: 8192,
         }
     }
 
@@ -49,7 +83,24 @@ impl Route {
             batch_capacity: capacity,
             max_wait: Duration::from_millis(2),
             workers: 1,
+            queue_limit: 8192,
         }
+    }
+
+    pub fn with_queue_limit(mut self, n: usize) -> Route {
+        self.queue_limit = n;
+        self
+    }
+
+    pub fn with_batch(mut self, capacity: usize, max_wait: Duration) -> Route {
+        self.batch_capacity = capacity;
+        self.max_wait = max_wait;
+        self
+    }
+
+    pub fn with_workers(mut self, n: usize) -> Route {
+        self.workers = n;
+        self
     }
 
     fn factory(&self) -> BackendFactory {
@@ -62,9 +113,28 @@ impl Route {
     }
 }
 
+/// Static description of a started route — everything the serving
+/// front-end needs for `/v1/models`, request validation, and metrics
+/// labels.
+#[derive(Clone, Debug)]
+pub struct RouteInfo {
+    pub name: String,
+    pub kind: &'static str,
+    pub detail: String,
+    pub native_cfg: Option<TanhConfig>,
+    pub batch_capacity: usize,
+    pub workers: usize,
+    pub queue_limit: usize,
+}
+
+struct RouteEntry {
+    info: RouteInfo,
+    coord: Coordinator,
+}
+
 /// The router: owns one coordinator per route.
 pub struct Router {
-    routes: BTreeMap<String, Coordinator>,
+    routes: BTreeMap<String, RouteEntry>,
 }
 
 impl Router {
@@ -75,22 +145,41 @@ impl Router {
             if map.contains_key(&r.name) {
                 return Err(format!("duplicate route '{}'", r.name));
             }
+            let info = RouteInfo {
+                name: r.name.clone(),
+                kind: r.backend.kind(),
+                detail: r.backend.describe(),
+                native_cfg: r.backend.native_cfg(),
+                batch_capacity: r.batch_capacity,
+                workers: r.workers,
+                queue_limit: r.queue_limit,
+            };
             let coord = Coordinator::start(
                 Config {
                     batch_capacity: r.batch_capacity,
                     max_wait: r.max_wait,
                     workers: r.workers,
-                    queue_limit: 8192,
+                    queue_limit: r.queue_limit,
                 },
                 r.factory(),
             );
-            map.insert(r.name.clone(), coord);
+            map.insert(r.name.clone(), RouteEntry { info, coord });
         }
         Ok(Router { routes: map })
     }
 
     pub fn route_names(&self) -> Vec<&str> {
         self.routes.keys().map(String::as_str).collect()
+    }
+
+    /// Static metadata for every route, in name order.
+    pub fn route_infos(&self) -> Vec<RouteInfo> {
+        self.routes.values().map(|e| e.info.clone()).collect()
+    }
+
+    /// Static metadata for one route.
+    pub fn route_info(&self, route: &str) -> Option<RouteInfo> {
+        self.routes.get(route).map(|e| e.info.clone())
     }
 
     /// Submit to a named route.
@@ -101,7 +190,7 @@ impl Router {
     ) -> Result<Receiver<Result<Vec<i32>, String>>, String> {
         self.routes
             .get(route)
-            .map(|c| c.submit(words))
+            .map(|e| e.coord.submit(words))
             .ok_or_else(|| format!("unknown route '{route}'"))
     }
 
@@ -120,7 +209,7 @@ impl Router {
     pub fn snapshots(&self) -> BTreeMap<String, Snapshot> {
         self.routes
             .iter()
-            .map(|(k, c)| (k.clone(), c.snapshot()))
+            .map(|(k, e)| (k.clone(), e.coord.snapshot()))
             .collect()
     }
 }
@@ -181,6 +270,80 @@ mod tests {
         let snaps = r.snapshots();
         assert_eq!(snaps["tanh16"].completed, 5);
         assert_eq!(snaps["tanh8"].completed, 0);
+    }
+
+    #[test]
+    fn route_table_is_deterministic_and_complete() {
+        // `/v1/models` depends on infos covering every route, in a
+        // stable (name-sorted) order, including idle routes.
+        let r = two_precision_router();
+        assert_eq!(r.route_names(), vec!["tanh16", "tanh8"]);
+        let infos = r.route_infos();
+        assert_eq!(infos.len(), 2);
+        assert_eq!(infos[0].name, "tanh16");
+        assert_eq!(infos[0].kind, "native");
+        assert_eq!(infos[0].native_cfg, Some(TanhConfig::s3_12()));
+        assert!(infos[0].detail.contains("s3.12"));
+        assert_eq!(infos[1].native_cfg, Some(TanhConfig::s3_5()));
+        // Snapshots must also cover idle routes (so `/metrics` never
+        // drops a label between scrapes).
+        let snaps = r.snapshots();
+        assert_eq!(snaps.len(), 2);
+        assert_eq!(snaps["tanh8"].submitted, 0);
+    }
+
+    #[test]
+    fn route_info_reflects_overrides() {
+        let r = Router::start(vec![Route::native("a", TanhConfig::s3_12())
+            .with_queue_limit(3)
+            .with_workers(1)
+            .with_batch(64, Duration::from_millis(1))])
+        .unwrap();
+        let i = r.route_info("a").unwrap();
+        assert_eq!(i.queue_limit, 3);
+        assert_eq!(i.workers, 1);
+        assert_eq!(i.batch_capacity, 64);
+        assert!(r.route_info("nope").is_none());
+    }
+
+    #[test]
+    fn pjrt_route_info_has_no_native_cfg() {
+        let r = Router::start(vec![Route::pjrt(
+            "p",
+            PathBuf::from("/tmp/artifacts"),
+            "tanh_s3_12",
+            512,
+        )])
+        .unwrap();
+        let i = r.route_info("p").unwrap();
+        assert_eq!(i.kind, "pjrt");
+        assert_eq!(i.native_cfg, None);
+        assert!(i.detail.contains("tanh_s3_12"));
+    }
+
+    #[test]
+    fn per_route_queue_limit_backpressure() {
+        // A tiny queue with a long batching window must reject floods on
+        // that route only — the other route stays unaffected.
+        let r = Router::start(vec![
+            Route::native("tiny", TanhConfig::s3_12())
+                .with_queue_limit(2)
+                .with_workers(1)
+                .with_batch(1024, Duration::from_millis(100)),
+            Route::native("big", TanhConfig::s3_5()),
+        ])
+        .unwrap();
+        let handles: Vec<_> = (0..32)
+            .map(|_| r.submit("tiny", vec![1; 4]).unwrap())
+            .collect();
+        let rejected = handles
+            .into_iter()
+            .map(|h| h.recv().unwrap())
+            .filter(Result::is_err)
+            .count();
+        assert!(rejected > 0, "expected queue-limit rejections");
+        assert!(r.eval_blocking("big", vec![5; 4]).is_ok());
+        assert_eq!(r.snapshots()["big"].rejected, 0);
     }
 
     #[test]

@@ -10,6 +10,9 @@
 //! JAX/Pallas-authored model artifacts through PJRT.
 //!
 //! Layer map (see `DESIGN.md`):
+//! * L4 ([`server`]): HTTP/1.1 activation service over the precision
+//!   router — JSON eval/batch endpoints, model listing, health,
+//!   Prometheus metrics, connection + queue backpressure.
 //! * L3 (this crate): coordinator, VLSI substrate, baselines, analysis.
 //! * L2 (`python/compile/model.py`): JAX model graphs, AOT-lowered to
 //!   `artifacts/*.hlo.txt`.
@@ -31,6 +34,7 @@ pub mod gates;
 pub mod proptest;
 pub mod rtl;
 pub mod runtime;
+pub mod server;
 pub mod synth;
 pub mod tanh;
 pub mod util;

@@ -28,6 +28,11 @@ const SUBCOMMANDS: &[(&str, &str)] = &[
     ("codegen", "emit Verilog + testbench: --stages 2 --bits 16 --out DIR"),
     ("sweep", "scalability sweep over precision (the paper's key claim)"),
     ("serve", "serving demo: --backend native|pjrt --requests 1000"),
+    (
+        "serve-http",
+        "HTTP activation service: --addr 127.0.0.1:8787 \
+         --routes native:s3_12,native:s3_5 [--workers 8] [--duration-secs 0]",
+    ),
     ("info", "artifact manifest summary"),
 ];
 
@@ -51,6 +56,7 @@ fn main() {
         "codegen" => cmd_codegen(&args),
         "sweep" => cmd_sweep(),
         "serve" => cmd_serve(&args),
+        "serve-http" => cmd_serve_http(&args),
         "info" => cmd_info(),
         _ => {
             println!("{}", usage("tanh-vf", SUBCOMMANDS));
@@ -64,6 +70,12 @@ fn main() {
 }
 
 type R = Result<(), Box<dyn std::error::Error>>;
+
+/// Invalid-flag error that also reprints the usage block, so a typo'd
+/// `--backend`/`--routes` fails loudly with the valid choices in view.
+fn usage_err(msg: impl std::fmt::Display) -> Box<dyn std::error::Error> {
+    format!("{msg}\n\n{}", usage("tanh-vf", SUBCOMMANDS)).into()
+}
 
 fn cfg_for_bits(args: &Args) -> Result<TanhConfig, Box<dyn std::error::Error>> {
     Ok(match args.u64_or("bits", 16)? {
@@ -247,13 +259,15 @@ fn cmd_sweep() -> R {
 fn cmd_serve(args: &Args) -> R {
     let backend = args.str_or("backend", "native").to_string();
     let n = args.usize_or("requests", 1000)?;
+    // Same validation as `serve-http --routes` (server::parse_routes).
+    tanh_vf::server::validate_backend(&backend)
+        .map_err(|e| usage_err(format!("--backend {backend}: {e}")))?;
     let factory = match backend.as_str() {
         "native" => native_factory(TanhConfig::s3_12(), true),
-        "pjrt" => pjrt_factory(
+        _ => pjrt_factory(
             tanh_vf::runtime::artifacts_dir(),
             "tanh_s3_12".to_string(),
         ),
-        other => return Err(format!("--backend {other}: native|pjrt").into()),
     };
     let c = Coordinator::start(
         Config {
@@ -294,6 +308,42 @@ fn cmd_serve(args: &Args) -> R {
         s.batches, s.mean_batch_fill, s.p50_latency_us, s.p99_latency_us,
         s.max_latency_us
     );
+    Ok(())
+}
+
+fn cmd_serve_http(args: &Args) -> R {
+    let addr = args.str_or("addr", "127.0.0.1:8787").to_string();
+    let routes_spec =
+        args.str_or("routes", "native:s3_12,native:s3_5").to_string();
+    let workers = args.usize_or("workers", 8)?;
+    let max_conns = args.usize_or("max-conns", 64)?;
+    let duration_secs = args.u64_or("duration-secs", 0)?;
+
+    let routes = tanh_vf::server::parse_routes(&routes_spec)
+        .map_err(|e| usage_err(format!("--routes {routes_spec}: {e}")))?;
+    let mut srv = tanh_vf::server::Server::start(
+        tanh_vf::server::ServerConfig {
+            addr,
+            workers,
+            max_connections: max_conns,
+            ..Default::default()
+        },
+        routes,
+    )?;
+    println!("tanh-vf http listening on http://{}", srv.local_addr());
+    println!("endpoints: /health /v1/models /v1/eval /v1/batch /metrics");
+    for (name, _) in srv.snapshots() {
+        println!("route: {name}");
+    }
+    if duration_secs == 0 {
+        // Serve until killed.
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+    std::thread::sleep(Duration::from_secs(duration_secs));
+    srv.shutdown();
+    println!("\n--- final metrics ---\n{}", srv.metrics_text());
     Ok(())
 }
 

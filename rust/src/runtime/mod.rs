@@ -11,9 +11,12 @@ use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 
-use anyhow::{anyhow, bail, Context, Result};
-
+use crate::util::error::{Context, Result};
 use crate::util::json::{self, Json};
+use crate::{anyhow, bail};
+
+mod xla_stub;
+use xla_stub as xla;
 
 /// Supported element types of artifact I/O.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

@@ -1,0 +1,181 @@
+//! Offline stand-in for the `xla` (PJRT binding) crate.
+//!
+//! The offline build has no vendored `xla` crate, so this module mirrors
+//! the exact API surface `runtime` uses. Host-side data plumbing
+//! ([`Literal`]) is real — construction, reshape and readback work, and
+//! the manifest/validation layer stays fully testable — while device
+//! entry points ([`PjRtClient::cpu`]) return a descriptive error. The
+//! coordinator is built to survive that: a PJRT-backed worker whose
+//! backend fails to construct drains its queue with errors instead of
+//! stranding requests, so serving stays live on native routes.
+//!
+//! When a vendored `xla` crate lands, delete this file and restore
+//! `use xla;` in `runtime/mod.rs` — no other code changes needed.
+
+use crate::anyhow;
+use crate::util::error::Result;
+
+fn unavailable(what: &str) -> crate::util::error::Error {
+    anyhow!(
+        "{what}: PJRT backend unavailable (built without the vendored \
+         `xla` crate; native routes remain fully functional)"
+    )
+}
+
+/// Element storage for [`Literal`] (stub-public, not part of the real
+/// xla API).
+#[derive(Clone, Debug)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Data {
+    fn len(&self) -> usize {
+        match self {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+        }
+    }
+}
+
+/// Element types a [`Literal`] can hold.
+pub trait NativeType: Copy {
+    fn wrap(v: Vec<Self>) -> Data;
+    fn unwrap(d: &Data) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn wrap(v: Vec<f32>) -> Data {
+        Data::F32(v)
+    }
+    fn unwrap(d: &Data) -> Option<Vec<f32>> {
+        match d {
+            Data::F32(v) => Some(v.clone()),
+            Data::I32(_) => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(v: Vec<i32>) -> Data {
+        Data::I32(v)
+    }
+    fn unwrap(d: &Data) -> Option<Vec<i32>> {
+        match d {
+            Data::I32(v) => Some(v.clone()),
+            Data::F32(_) => None,
+        }
+    }
+}
+
+/// Host-side tensor literal (functional in the stub).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal { data: T::wrap(v.to_vec()), dims: vec![v.len() as i64] }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want as usize != self.data.len() {
+            return Err(anyhow!(
+                "reshape: {:?} has {} elements, target {:?} wants {}",
+                self.dims,
+                self.data.len(),
+                dims,
+                want
+            ));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data).ok_or_else(|| anyhow!("literal dtype mismatch"))
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+}
+
+/// Stub PJRT client: construction fails with a descriptive error.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Parsed HLO module text (held opaquely by the stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        // Real file I/O so missing-artifact errors stay accurate.
+        std::fs::read_to_string(path)
+            .map(|_| HloModuleProto)
+            .map_err(|e| anyhow!("{path}: {e}"))
+    }
+}
+
+/// Computation wrapper (opaque).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device buffer handle returned by execution (unreachable in the stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable handle (unreachable in the stub).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[Literal]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let lit = Literal::vec1(&[1i32, 2, 3, 4]);
+        let r = lit.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4]);
+        assert!(r.to_vec::<f32>().is_err());
+        assert!(lit.reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn client_fails_descriptively() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(format!("{err}").contains("PJRT backend unavailable"));
+    }
+}

@@ -1,0 +1,381 @@
+//! JSON API endpoints over [`crate::coordinator::router::Router`].
+//!
+//! Endpoint layout follows the OpenAI-compatible serving shape of the
+//! related inference-endpoint repos: model listing + health + metrics
+//! next to the eval routes, with per-request model (= precision) names:
+//!
+//! * `GET  /health`     — liveness + uptime.
+//! * `GET  /v1/models`  — the route table, name-sorted.
+//! * `POST /v1/eval`    — one word (or a float `x`) through one route.
+//! * `POST /v1/batch`   — a packed word batch through one route.
+//! * `GET  /metrics`    — Prometheus text: per-route coordinator
+//!   [`Snapshot`](crate::coordinator::Snapshot)s + HTTP counters.
+//!
+//! Coordinator backpressure ("queue full") surfaces as 503 so closed-loop
+//! clients can shed load; malformed bodies are 400, unknown models 404.
+
+use std::fmt::Write as _;
+use std::sync::atomic::Ordering;
+
+use crate::coordinator::router::RouteInfo;
+use crate::fixed::Round;
+use crate::util::json::Json;
+
+use super::http::{Request, Response};
+use super::AppState;
+
+/// Route an HTTP request to its handler.
+pub(crate) fn dispatch(state: &AppState, req: &Request) -> Response {
+    match (req.method.as_str(), req.path()) {
+        ("GET", "/health") => health(state),
+        ("GET", "/v1/models") => models(state),
+        ("GET", "/metrics") => render_metrics(state),
+        ("POST", "/v1/eval") => eval(state, req),
+        ("POST", "/v1/batch") => batch(state, req),
+        (_, "/health" | "/v1/models" | "/metrics") => {
+            error_resp(405, "method_not_allowed", "endpoint is GET-only")
+        }
+        (_, "/v1/eval" | "/v1/batch") => {
+            error_resp(405, "method_not_allowed", "endpoint is POST-only")
+        }
+        (_, path) => {
+            error_resp(404, "not_found", &format!("no endpoint at {path}"))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Handlers
+// ---------------------------------------------------------------------
+
+fn health(state: &AppState) -> Response {
+    Response::json(
+        200,
+        &obj([
+            ("status", Json::Str("ok".into())),
+            ("uptime_s", Json::Num(state.started.elapsed().as_secs() as f64)),
+            ("routes", Json::Num(state.router.route_infos().len() as f64)),
+        ]),
+    )
+}
+
+fn models(state: &AppState) -> Response {
+    let data: Vec<Json> = state
+        .router
+        .route_infos()
+        .iter()
+        .map(|i| {
+            obj([
+                ("id", Json::Str(i.name.clone())),
+                ("object", Json::Str("model".into())),
+                ("backend", Json::Str(i.kind.into())),
+                ("detail", Json::Str(i.detail.clone())),
+                ("batch_capacity", Json::Num(i.batch_capacity as f64)),
+                ("workers", Json::Num(i.workers as f64)),
+                ("queue_limit", Json::Num(i.queue_limit as f64)),
+            ])
+        })
+        .collect();
+    Response::json(
+        200,
+        &obj([
+            ("object", Json::Str("list".into())),
+            ("data", Json::Arr(data)),
+        ]),
+    )
+}
+
+fn eval(state: &AppState, req: &Request) -> Response {
+    let (body, info) = match parse_model_body(state, req) {
+        Ok(v) => v,
+        Err(resp) => return resp,
+    };
+    let word = match (body.get("word"), body.get("x")) {
+        (Some(w), None) => match as_exact_i64(w) {
+            Some(w) => w,
+            None => {
+                return error_resp(400, "bad_request", "word must be an integer")
+            }
+        },
+        (None, Some(x)) => {
+            let Some(x) = x.as_f64() else {
+                return error_resp(400, "bad_request", "x must be a number");
+            };
+            let Some(cfg) = info.native_cfg else {
+                return error_resp(
+                    400,
+                    "bad_request",
+                    "float x needs a native route (send a fixed-point word)",
+                );
+            };
+            cfg.in_format().quantize(x, Round::Nearest)
+        }
+        _ => {
+            return error_resp(
+                400,
+                "bad_request",
+                "body needs exactly one of word (int) or x (float)",
+            )
+        }
+    };
+    if let Some(resp) = check_words(&info, &[word]) {
+        return resp;
+    }
+    match submit(state, &info.name, vec![word as i32]) {
+        Err(resp) => resp,
+        Ok(out) => {
+            let y_word = out[0] as i64;
+            let mut fields = vec![
+                ("model", Json::Str(info.name.clone())),
+                ("word", Json::Num(word as f64)),
+                ("y_word", Json::Num(y_word as f64)),
+            ];
+            if let Some(cfg) = info.native_cfg {
+                fields.push((
+                    "y",
+                    Json::Num(cfg.out_format().dequantize(y_word)),
+                ));
+            }
+            Response::json(200, &obj(fields))
+        }
+    }
+}
+
+fn batch(state: &AppState, req: &Request) -> Response {
+    let (body, info) = match parse_model_body(state, req) {
+        Ok(v) => v,
+        Err(resp) => return resp,
+    };
+    let Some(arr) = body.get("words").and_then(Json::as_arr) else {
+        return error_resp(400, "bad_request", "words must be an array");
+    };
+    if arr.is_empty() {
+        return error_resp(400, "bad_request", "words must be non-empty");
+    }
+    if arr.len() > info.batch_capacity {
+        return error_resp(
+            400,
+            "bad_request",
+            &format!(
+                "{} words exceeds batch_capacity {} of model '{}'",
+                arr.len(),
+                info.batch_capacity,
+                info.name
+            ),
+        );
+    }
+    let mut words = Vec::with_capacity(arr.len());
+    for v in arr {
+        match as_exact_i64(v) {
+            Some(w) => words.push(w),
+            None => {
+                return error_resp(
+                    400,
+                    "bad_request",
+                    "words must all be integers",
+                )
+            }
+        }
+    }
+    if let Some(resp) = check_words(&info, &words) {
+        return resp;
+    }
+    let words32: Vec<i32> = words.iter().map(|&w| w as i32).collect();
+    match submit(state, &info.name, words32) {
+        Err(resp) => resp,
+        Ok(out) => Response::json(
+            200,
+            &obj([
+                ("model", Json::Str(info.name.clone())),
+                ("count", Json::Num(out.len() as f64)),
+                (
+                    "words",
+                    Json::Arr(
+                        out.iter().map(|&w| Json::Num(w as f64)).collect(),
+                    ),
+                ),
+            ]),
+        ),
+    }
+}
+
+pub(crate) fn render_metrics(state: &AppState) -> Response {
+    let mut s = String::new();
+    let h = &state.http;
+    let _ = writeln!(s, "# TYPE tanhvf_http_connections_total counter");
+    let _ = writeln!(
+        s,
+        "tanhvf_http_connections_total {}",
+        h.connections.load(Ordering::Relaxed)
+    );
+    let _ = writeln!(
+        s,
+        "tanhvf_http_rejected_connections_total {}",
+        h.rejected_connections.load(Ordering::Relaxed)
+    );
+    let _ = writeln!(
+        s,
+        "tanhvf_http_requests_total {}",
+        h.requests.load(Ordering::Relaxed)
+    );
+    for (class, v) in [
+        ("2xx", &h.responses_2xx),
+        ("4xx", &h.responses_4xx),
+        ("5xx", &h.responses_5xx),
+    ] {
+        let _ = writeln!(
+            s,
+            "tanhvf_http_responses_total{{class=\"{class}\"}} {}",
+            v.load(Ordering::Relaxed)
+        );
+    }
+    let _ = writeln!(
+        s,
+        "tanhvf_uptime_seconds {}",
+        state.started.elapsed().as_secs()
+    );
+    let _ = writeln!(s, "# TYPE tanhvf_requests_completed_total counter");
+    for (route, snap) in state.router.snapshots() {
+        let r = route.as_str();
+        let _ = writeln!(
+            s,
+            "tanhvf_requests_submitted_total{{route=\"{r}\"}} {}",
+            snap.submitted
+        );
+        let _ = writeln!(
+            s,
+            "tanhvf_requests_completed_total{{route=\"{r}\"}} {}",
+            snap.completed
+        );
+        let _ = writeln!(
+            s,
+            "tanhvf_requests_rejected_total{{route=\"{r}\"}} {}",
+            snap.rejected
+        );
+        let _ = writeln!(
+            s,
+            "tanhvf_batches_total{{route=\"{r}\"}} {}",
+            snap.batches
+        );
+        let _ = writeln!(
+            s,
+            "tanhvf_batch_fill_ratio{{route=\"{r}\"}} {:.4}",
+            snap.mean_batch_fill
+        );
+        for (q, v) in [
+            ("0.5", snap.p50_latency_us),
+            ("0.99", snap.p99_latency_us),
+            ("1.0", snap.max_latency_us),
+        ] {
+            let _ = writeln!(
+                s,
+                "tanhvf_latency_microseconds{{route=\"{r}\",quantile=\"{q}\"}} {v}"
+            );
+        }
+    }
+    Response::text(200, &s)
+}
+
+// ---------------------------------------------------------------------
+// Shared pieces
+// ---------------------------------------------------------------------
+
+/// Parse a JSON body and resolve its `model` to a route.
+fn parse_model_body(
+    state: &AppState,
+    req: &Request,
+) -> Result<(Json, RouteInfo), Response> {
+    let body = req
+        .json_body()
+        .map_err(|e| error_resp(400, "bad_request", &format!("body: {e}")))?;
+    let Some(model) = body.get("model").and_then(Json::as_str) else {
+        return Err(error_resp(400, "bad_request", "model (string) required"));
+    };
+    let info = state.router.route_info(model).ok_or_else(|| {
+        error_resp(
+            404,
+            "unknown_model",
+            &format!("no model '{model}' (see /v1/models)"),
+        )
+    })?;
+    Ok((body, info))
+}
+
+/// Range-check words against the route's input format, when known. The
+/// memoized native unit indexes a full table, so out-of-range words must
+/// be rejected here rather than trusted to the backend.
+fn check_words(info: &RouteInfo, words: &[i64]) -> Option<Response> {
+    let limit = match info.native_cfg {
+        Some(cfg) => 1i64 << cfg.mag_bits(),
+        None => 1i64 << 31, // pjrt: anything that fits the i32 wire type
+    };
+    for &w in words {
+        if w < -limit || w >= limit {
+            return Some(error_resp(
+                400,
+                "bad_request",
+                &format!(
+                    "word {w} outside [{}, {}) for model '{}'",
+                    -limit, limit, info.name
+                ),
+            ));
+        }
+    }
+    None
+}
+
+/// Submit to the router and map failures to HTTP statuses.
+fn submit(
+    state: &AppState,
+    route: &str,
+    words: Vec<i32>,
+) -> Result<Vec<i32>, Response> {
+    let rx = state
+        .router
+        .submit(route, words)
+        .map_err(|e| error_resp(404, "unknown_model", &e))?;
+    match rx.recv_timeout(state.request_timeout) {
+        None => Err(error_resp(
+            504,
+            "timeout",
+            "backend did not answer in time",
+        )),
+        Some(Err(e)) if e.contains("queue full") => Err(error_resp(
+            503,
+            "overloaded",
+            "route queue is full, retry later",
+        )),
+        Some(Err(e)) if e.contains("outside 1..=") => {
+            Err(error_resp(400, "bad_request", &e))
+        }
+        Some(Err(e)) => Err(error_resp(500, "backend_error", &e)),
+        Some(Ok(out)) => Ok(out),
+    }
+}
+
+/// Integer-valued JSON number (rejects 1.5 and non-numbers).
+fn as_exact_i64(v: &Json) -> Option<i64> {
+    match v {
+        Json::Num(n) if n.fract() == 0.0 && n.abs() <= 9e15 => Some(*n as i64),
+        _ => None,
+    }
+}
+
+fn obj(pairs: impl IntoIterator<Item = (&'static str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+/// Uniform error body: `{"error":{"code":...,"message":...}}`.
+pub(crate) fn error_resp(status: u16, code: &str, message: &str) -> Response {
+    Response::json(
+        status,
+        &obj([(
+            "error",
+            obj([
+                ("code", Json::Str(code.into())),
+                ("message", Json::Str(message.into())),
+                ("status", Json::Num(status as f64)),
+            ]),
+        )]),
+    )
+}

@@ -1,0 +1,606 @@
+//! Strict HTTP/1.1 wire layer (no external deps).
+//!
+//! Exactly the subset the activation service needs: request-line +
+//! header parsing with hard limits, `Content-Length` bodies, keep-alive,
+//! and a response writer that always emits `Content-Length`. Malformed
+//! input maps to a 4xx via [`HttpError::status`]; chunked transfer
+//! encoding is refused with 501. The same buffered-connection type also
+//! implements the client side (used by [`super::loadgen`] and the e2e
+//! tests), so requests and responses are parsed by one code path.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+use crate::util::json::{self, Json};
+
+/// Longest accepted request/status/header line, in bytes.
+const MAX_LINE: usize = 8192;
+/// Most headers accepted per message.
+const MAX_HEADERS: usize = 64;
+
+/// A parsed HTTP request.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub target: String,
+    pub version: String,
+    /// Header names lowercased, values trimmed.
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.get(name).map(String::as_str)
+    }
+
+    /// Path component of the target (query string stripped).
+    pub fn path(&self) -> &str {
+        self.target.split(['?', '#']).next().unwrap_or(&self.target)
+    }
+
+    /// HTTP/1.1 keep-alive semantics (1.0 requires opt-in).
+    pub fn keep_alive(&self) -> bool {
+        let conn = self
+            .header("connection")
+            .map(str::to_ascii_lowercase)
+            .unwrap_or_default();
+        if self.version == "HTTP/1.0" {
+            conn == "keep-alive"
+        } else {
+            conn != "close"
+        }
+    }
+
+    /// Body parsed as JSON, or a reason it can't be.
+    pub fn json_body(&self) -> Result<Json, String> {
+        let text = std::str::from_utf8(&self.body)
+            .map_err(|_| "body is not valid UTF-8".to_string())?;
+        json::parse(text).map_err(|e| e.to_string())
+    }
+}
+
+/// Protocol-level failure while reading a message.
+#[derive(Debug)]
+pub enum HttpError {
+    /// Syntactically invalid input -> 400.
+    Malformed(String),
+    /// Mid-message read timeout (slow client) -> 408.
+    Timeout(String),
+    /// Line/header/body limits exceeded -> 431 or 413.
+    TooLarge { what: String, status: u16 },
+    /// Valid HTTP we refuse to implement (chunked) -> 501.
+    Unsupported(String),
+    /// Transport error; no response possible.
+    Io(std::io::Error),
+}
+
+impl HttpError {
+    /// The response status this error maps to (0 = connection is dead).
+    pub fn status(&self) -> u16 {
+        match self {
+            HttpError::Malformed(_) => 400,
+            HttpError::Timeout(_) => 408,
+            HttpError::TooLarge { status, .. } => *status,
+            HttpError::Unsupported(_) => 501,
+            HttpError::Io(_) => 0,
+        }
+    }
+}
+
+impl std::fmt::Display for HttpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HttpError::Malformed(m) => write!(f, "malformed request: {m}"),
+            HttpError::Timeout(m) => write!(f, "timeout: {m}"),
+            HttpError::TooLarge { what, .. } => write!(f, "too large: {what}"),
+            HttpError::Unsupported(m) => write!(f, "unsupported: {m}"),
+            HttpError::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+/// Result of waiting for the next request on a connection.
+pub enum Outcome {
+    Request(Request),
+    /// Peer closed cleanly between requests.
+    Closed,
+    /// Read timeout with no bytes pending — caller decides whether the
+    /// keep-alive idle budget is spent.
+    IdleTimeout,
+}
+
+enum Line {
+    Text(String),
+    Eof,
+    Idle,
+}
+
+/// A buffered HTTP connection (server or client side).
+pub struct HttpConn {
+    stream: TcpStream,
+    buf: Vec<u8>,
+    pos: usize,
+}
+
+impl HttpConn {
+    pub fn new(stream: TcpStream) -> HttpConn {
+        HttpConn { stream, buf: Vec::with_capacity(4096), pos: 0 }
+    }
+
+    pub fn stream(&self) -> &TcpStream {
+        &self.stream
+    }
+
+    fn buffered_empty(&self) -> bool {
+        self.pos >= self.buf.len()
+    }
+
+    /// Drop consumed bytes (called between messages).
+    fn compact(&mut self) {
+        if self.pos > 0 {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+    }
+
+    /// Read more bytes from the socket into the buffer.
+    fn fill(&mut self) -> std::io::Result<usize> {
+        let mut chunk = [0u8; 4096];
+        let n = self.stream.read(&mut chunk)?;
+        self.buf.extend_from_slice(&chunk[..n]);
+        Ok(n)
+    }
+
+    /// Next CRLF/LF-terminated line; classifies EOF and idle timeouts.
+    fn next_line(&mut self, at_message_start: bool) -> Result<Line, HttpError> {
+        loop {
+            if let Some(off) =
+                self.buf[self.pos..].iter().position(|&b| b == b'\n')
+            {
+                let end = self.pos + off;
+                let mut line = &self.buf[self.pos..end];
+                if line.last() == Some(&b'\r') {
+                    line = &line[..line.len() - 1];
+                }
+                let text = String::from_utf8(line.to_vec()).map_err(|_| {
+                    HttpError::Malformed("non-UTF-8 header bytes".into())
+                })?;
+                self.pos = end + 1;
+                return Ok(Line::Text(text));
+            }
+            if self.buf.len() - self.pos > MAX_LINE {
+                return Err(HttpError::TooLarge {
+                    what: "header line exceeds 8 KiB".into(),
+                    status: 431,
+                });
+            }
+            match self.fill() {
+                Ok(0) => {
+                    return if self.buffered_empty() && at_message_start {
+                        Ok(Line::Eof)
+                    } else {
+                        Err(HttpError::Malformed("unexpected eof".into()))
+                    };
+                }
+                Ok(_) => {}
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock
+                            | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    return if self.buffered_empty() && at_message_start {
+                        Ok(Line::Idle)
+                    } else {
+                        Err(HttpError::Timeout("mid-message read stall".into()))
+                    };
+                }
+                Err(e) => return Err(HttpError::Io(e)),
+            }
+        }
+    }
+
+    /// Read exactly `len` body bytes (headers already consumed).
+    fn read_body(&mut self, len: usize) -> Result<Vec<u8>, HttpError> {
+        while self.buf.len() - self.pos < len {
+            match self.fill() {
+                Ok(0) => {
+                    return Err(HttpError::Malformed("eof in body".into()))
+                }
+                Ok(_) => {}
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock
+                            | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    return Err(HttpError::Timeout("body read stall".into()));
+                }
+                Err(e) => return Err(HttpError::Io(e)),
+            }
+        }
+        let body = self.buf[self.pos..self.pos + len].to_vec();
+        self.pos += len;
+        Ok(body)
+    }
+
+    /// Shared header-block reader (server requests + client responses).
+    fn read_headers(&mut self) -> Result<BTreeMap<String, String>, HttpError> {
+        let mut headers = BTreeMap::new();
+        loop {
+            let Line::Text(line) = self.next_line(false)? else {
+                return Err(HttpError::Malformed("eof in headers".into()));
+            };
+            if line.is_empty() {
+                return Ok(headers);
+            }
+            if headers.len() >= MAX_HEADERS {
+                return Err(HttpError::TooLarge {
+                    what: "more than 64 headers".into(),
+                    status: 431,
+                });
+            }
+            let (name, value) = line.split_once(':').ok_or_else(|| {
+                HttpError::Malformed(format!("header without ':': {line:?}"))
+            })?;
+            if name.is_empty()
+                || !name.bytes().all(|b| b.is_ascii_graphic() && b != b':')
+            {
+                return Err(HttpError::Malformed(format!(
+                    "invalid header name {name:?}"
+                )));
+            }
+            headers.insert(name.to_ascii_lowercase(), value.trim().to_string());
+        }
+    }
+
+    fn body_from_headers(
+        &mut self,
+        headers: &BTreeMap<String, String>,
+        max_body: usize,
+    ) -> Result<Vec<u8>, HttpError> {
+        if headers.contains_key("transfer-encoding") {
+            return Err(HttpError::Unsupported(
+                "transfer-encoding (use Content-Length)".into(),
+            ));
+        }
+        let len = match headers.get("content-length") {
+            None => 0,
+            Some(v) => v.parse::<usize>().map_err(|_| {
+                HttpError::Malformed(format!("bad content-length {v:?}"))
+            })?,
+        };
+        if len > max_body {
+            return Err(HttpError::TooLarge {
+                what: format!("body of {len} bytes (limit {max_body})"),
+                status: 413,
+            });
+        }
+        self.read_body(len)
+    }
+
+    /// Server side: wait for the next request.
+    pub fn read_request(&mut self, max_body: usize) -> Result<Outcome, HttpError> {
+        self.compact();
+        // Request line (tolerate a stray CRLF after the previous message).
+        let mut blanks = 0;
+        let line = loop {
+            match self.next_line(true)? {
+                Line::Eof => return Ok(Outcome::Closed),
+                Line::Idle => return Ok(Outcome::IdleTimeout),
+                Line::Text(t) if t.is_empty() => {
+                    blanks += 1;
+                    if blanks > 2 {
+                        return Err(HttpError::Malformed(
+                            "blank lines before request line".into(),
+                        ));
+                    }
+                }
+                Line::Text(t) => break t,
+            }
+        };
+        let mut parts = line.split(' ');
+        let (method, target, version) =
+            match (parts.next(), parts.next(), parts.next(), parts.next()) {
+                (Some(m), Some(t), Some(v), None)
+                    if !m.is_empty() && !t.is_empty() =>
+                {
+                    (m.to_string(), t.to_string(), v.to_string())
+                }
+                _ => {
+                    return Err(HttpError::Malformed(format!(
+                        "bad request line {line:?}"
+                    )))
+                }
+            };
+        if !method.bytes().all(|b| b.is_ascii_uppercase()) {
+            return Err(HttpError::Malformed(format!("bad method {method:?}")));
+        }
+        if !target.starts_with('/') {
+            return Err(HttpError::Malformed(format!("bad target {target:?}")));
+        }
+        if version != "HTTP/1.1" && version != "HTTP/1.0" {
+            return Err(HttpError::Malformed(format!(
+                "unsupported version {version:?}"
+            )));
+        }
+        let headers = self.read_headers()?;
+        let body = self.body_from_headers(&headers, max_body)?;
+        Ok(Outcome::Request(Request { method, target, version, headers, body }))
+    }
+
+    /// Server side: serialize a response.
+    pub fn write_response(
+        &mut self,
+        resp: &Response,
+        keep_alive: bool,
+    ) -> std::io::Result<()> {
+        let head = format!(
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n\
+             Connection: {}\r\n\r\n",
+            resp.status,
+            reason(resp.status),
+            resp.content_type,
+            resp.body.len(),
+            if keep_alive { "keep-alive" } else { "close" },
+        );
+        // One write_all for head+body: no mid-message gap for the peer's
+        // read timeout to land in.
+        let mut msg = head.into_bytes();
+        msg.extend_from_slice(&resp.body);
+        self.stream.write_all(&msg)?;
+        self.stream.flush()
+    }
+
+    /// Client side: serialize a request (always keep-alive).
+    pub fn write_request(
+        &mut self,
+        method: &str,
+        target: &str,
+        body: &[u8],
+    ) -> std::io::Result<()> {
+        let host = self
+            .stream
+            .peer_addr()
+            .map(|a| a.to_string())
+            .unwrap_or_else(|_| "localhost".into());
+        let head = format!(
+            "{method} {target} HTTP/1.1\r\nHost: {host}\r\n\
+             Content-Type: application/json\r\nContent-Length: {}\r\n\
+             Connection: keep-alive\r\n\r\n",
+            body.len(),
+        );
+        let mut msg = head.into_bytes();
+        msg.extend_from_slice(body);
+        self.stream.write_all(&msg)?;
+        self.stream.flush()
+    }
+
+    /// Client side: read a status + headers + body response.
+    pub fn read_response(
+        &mut self,
+        max_body: usize,
+    ) -> Result<(u16, BTreeMap<String, String>, Vec<u8>), HttpError> {
+        self.compact();
+        let line = match self.next_line(true)? {
+            Line::Text(t) => t,
+            Line::Eof => {
+                return Err(HttpError::Malformed("closed before response".into()))
+            }
+            Line::Idle => {
+                return Err(HttpError::Timeout("waiting for response".into()))
+            }
+        };
+        let mut parts = line.splitn(3, ' ');
+        let (version, code) = (parts.next().unwrap_or(""), parts.next());
+        if !version.starts_with("HTTP/1.") {
+            return Err(HttpError::Malformed(format!(
+                "bad status line {line:?}"
+            )));
+        }
+        let status: u16 = code
+            .and_then(|c| c.parse().ok())
+            .ok_or_else(|| {
+                HttpError::Malformed(format!("bad status line {line:?}"))
+            })?;
+        let headers = self.read_headers()?;
+        let body = self.body_from_headers(&headers, max_body)?;
+        Ok((status, headers, body))
+    }
+}
+
+/// An HTTP response about to be serialized.
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: String,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn json(status: u16, v: &Json) -> Response {
+        Response {
+            status,
+            content_type: "application/json".into(),
+            body: json::write(v).into_bytes(),
+        }
+    }
+
+    pub fn text(status: u16, body: &str) -> Response {
+        Response {
+            status,
+            content_type: "text/plain; charset=utf-8".into(),
+            body: body.as_bytes().to_vec(),
+        }
+    }
+}
+
+/// Canonical reason phrases for the statuses the service emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::{TcpListener, TcpStream};
+
+    /// Loopback socket pair for exercising the parser on real streams.
+    fn pair() -> (TcpStream, TcpStream) {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        let a = TcpStream::connect(addr).unwrap();
+        let (b, _) = l.accept().unwrap();
+        (a, b)
+    }
+
+    fn feed(bytes: &[u8]) -> Result<Outcome, HttpError> {
+        let (mut client, server) = pair();
+        client.write_all(bytes).unwrap();
+        drop(client); // EOF terminates the message cleanly for the parser
+        HttpConn::new(server).read_request(1 << 20)
+    }
+
+    #[test]
+    fn parses_post_with_body() {
+        let req = feed(
+            b"POST /v1/eval HTTP/1.1\r\nHost: x\r\nContent-Length: 4\r\n\r\nabcd",
+        );
+        match req.unwrap() {
+            Outcome::Request(r) => {
+                assert_eq!(r.method, "POST");
+                assert_eq!(r.path(), "/v1/eval");
+                assert_eq!(r.body, b"abcd");
+                assert!(r.keep_alive());
+            }
+            _ => panic!("expected request"),
+        }
+    }
+
+    #[test]
+    fn query_string_is_stripped_and_close_honoured() {
+        let out = feed(
+            b"GET /metrics?x=1 HTTP/1.1\r\nConnection: close\r\n\r\n",
+        );
+        match out.unwrap() {
+            Outcome::Request(r) => {
+                assert_eq!(r.path(), "/metrics");
+                assert!(!r.keep_alive());
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn clean_eof_is_closed() {
+        match feed(b"") {
+            Ok(Outcome::Closed) => {}
+            other => panic!("{other:?}", other = other.map(|_| "req")),
+        }
+    }
+
+    #[test]
+    fn garbage_is_malformed() {
+        for bad in [
+            &b"NOT AN HTTP REQUEST\r\n\r\n"[..],
+            b"GET\r\n\r\n",
+            b"get /x HTTP/1.1\r\n\r\n",
+            b"GET x HTTP/1.1\r\n\r\n",
+            b"GET /x HTTP/2\r\n\r\n",
+            b"GET /x HTTP/1.1\r\nbad header\r\n\r\n",
+            b"POST /x HTTP/1.1\r\nContent-Length: ten\r\n\r\n",
+            b"POST /x HTTP/1.1\r\nContent-Length: 99\r\n\r\nshort",
+        ] {
+            let err = match feed(bad) {
+                Err(e) => e,
+                Ok(Outcome::Request(r)) => panic!("parsed {bad:?} as {r:?}"),
+                Ok(_) => panic!("{bad:?} not treated as malformed"),
+            };
+            assert_eq!(err.status(), 400, "{bad:?} -> {err}");
+        }
+    }
+
+    #[test]
+    fn oversize_body_is_413_and_chunked_501() {
+        let err = feed(b"POST /x HTTP/1.1\r\nContent-Length: 50\r\n\r\n")
+            .map(|_| ())
+            .unwrap_err();
+        // parsed against a 16-byte limit
+        let (mut client, server) = pair();
+        client
+            .write_all(b"POST /x HTTP/1.1\r\nContent-Length: 50\r\n\r\n")
+            .unwrap();
+        drop(client);
+        let err413 = HttpConn::new(server).read_request(16).unwrap_err();
+        assert_eq!(err413.status(), 413);
+        drop(err);
+
+        let err501 = feed(
+            b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n0\r\n\r\n",
+        )
+        .map(|_| ())
+        .unwrap_err();
+        assert_eq!(err501.status(), 501);
+    }
+
+    #[test]
+    fn response_roundtrips_through_client_parser() {
+        let (client, mut server_stream) = pair();
+        let resp = Response::json(
+            200,
+            &Json::Obj(
+                [("ok".to_string(), Json::Bool(true))].into_iter().collect(),
+            ),
+        );
+        // Serialize server->client, parse with the client-side reader.
+        let mut server = HttpConn::new(server_stream.try_clone().unwrap());
+        server.write_response(&resp, true).unwrap();
+        server_stream.flush().unwrap();
+        let mut c = HttpConn::new(client);
+        let (status, headers, body) = c.read_response(1 << 20).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(
+            headers.get("content-type").map(String::as_str),
+            Some("application/json")
+        );
+        assert_eq!(body, br#"{"ok":true}"#);
+    }
+
+    #[test]
+    fn keep_alive_serves_two_requests_on_one_connection() {
+        let (mut client, server) = pair();
+        client
+            .write_all(
+                b"GET /a HTTP/1.1\r\n\r\nGET /b HTTP/1.1\r\nConnection: close\r\n\r\n",
+            )
+            .unwrap();
+        let mut conn = HttpConn::new(server);
+        let a = match conn.read_request(64).unwrap() {
+            Outcome::Request(r) => r,
+            _ => panic!(),
+        };
+        let b = match conn.read_request(64).unwrap() {
+            Outcome::Request(r) => r,
+            _ => panic!(),
+        };
+        assert_eq!((a.path(), b.path()), ("/a", "/b"));
+        assert!(a.keep_alive() && !b.keep_alive());
+    }
+}

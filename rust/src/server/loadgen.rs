@@ -1,0 +1,239 @@
+//! Closed-loop HTTP load generator + tiny blocking client helpers.
+//!
+//! Each connection thread sends `POST /v1/batch` requests back-to-back
+//! on one keep-alive connection (closed-loop: next request only after
+//! the previous response), cycling through the configured model names —
+//! so a two-route server sees genuinely mixed-precision traffic. Reports
+//! req/s and p50/p99/max latency; used by the `http_serving` bench, the
+//! serving example, and the e2e test.
+
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
+
+use super::http::HttpConn;
+
+/// Workload description for [`run`].
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    /// Server address, e.g. `"127.0.0.1:8787"`.
+    pub addr: String,
+    /// Concurrent keep-alive connections.
+    pub connections: usize,
+    /// Requests each connection sends.
+    pub requests_per_connection: usize,
+    /// Words per `POST /v1/batch` request.
+    pub words_per_request: usize,
+    /// Model names cycled per request (mixed-precision traffic).
+    pub models: Vec<String>,
+    /// Input words drawn uniformly from `[-word_range, word_range)`
+    /// (keep within the smallest route's input format).
+    pub word_range: i64,
+    pub seed: u64,
+}
+
+impl LoadgenConfig {
+    pub fn new(addr: impl Into<String>, models: &[&str]) -> LoadgenConfig {
+        LoadgenConfig {
+            addr: addr.into(),
+            connections: 4,
+            requests_per_connection: 100,
+            words_per_request: 64,
+            models: models.iter().map(|m| m.to_string()).collect(),
+            word_range: 128,
+            seed: 42,
+        }
+    }
+}
+
+/// Aggregated result of one load run.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    pub requests: u64,
+    pub failures: u64,
+    pub words: u64,
+    pub wall: Duration,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub max_us: u64,
+}
+
+impl LoadReport {
+    pub fn req_per_s(&self) -> f64 {
+        self.requests as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+
+    pub fn words_per_s(&self) -> f64 {
+        self.words as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "{} reqs ({} failed) in {:?}: {:.0} req/s, {:.2e} words/s, \
+             p50 {} us, p99 {} us, max {} us",
+            self.requests,
+            self.failures,
+            self.wall,
+            self.req_per_s(),
+            self.words_per_s(),
+            self.p50_us,
+            self.p99_us,
+            self.max_us
+        )
+    }
+}
+
+/// Run the closed-loop workload to completion.
+pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport, String> {
+    if cfg.models.is_empty() || cfg.connections == 0 {
+        return Err("loadgen needs at least one model and connection".into());
+    }
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for ci in 0..cfg.connections {
+        let cfg = cfg.clone();
+        handles.push(std::thread::spawn(
+            move || -> Result<(u64, u64, Vec<u64>), String> {
+                connection_loop(&cfg, ci)
+            },
+        ));
+    }
+    let mut words = 0u64;
+    let mut failures = 0u64;
+    let mut lats: Vec<u64> = Vec::new();
+    for h in handles {
+        let (w, f, l) =
+            h.join().map_err(|_| "loadgen thread panicked".to_string())??;
+        words += w;
+        failures += f;
+        lats.extend(l);
+    }
+    let wall = t0.elapsed();
+    lats.sort_unstable();
+    let pick = |q: f64| -> u64 {
+        if lats.is_empty() {
+            0
+        } else {
+            lats[((lats.len() - 1) as f64 * q) as usize]
+        }
+    };
+    Ok(LoadReport {
+        requests: lats.len() as u64 + failures,
+        failures,
+        words,
+        wall,
+        p50_us: pick(0.50),
+        p99_us: pick(0.99),
+        max_us: lats.last().copied().unwrap_or(0),
+    })
+}
+
+fn connection_loop(
+    cfg: &LoadgenConfig,
+    ci: usize,
+) -> Result<(u64, u64, Vec<u64>), String> {
+    let stream = TcpStream::connect(&cfg.addr)
+        .map_err(|e| format!("connect {}: {e}", cfg.addr))?;
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+    let mut conn = HttpConn::new(stream);
+    let mut rng = Rng::new(cfg.seed ^ (ci as u64).wrapping_mul(0x9E3779B9));
+    let mut lats = Vec::with_capacity(cfg.requests_per_connection);
+    let mut failures = 0u64;
+    let mut words_done = 0u64;
+    for r in 0..cfg.requests_per_connection {
+        let model = &cfg.models[(ci + r) % cfg.models.len()];
+        let words: Vec<Json> = (0..cfg.words_per_request)
+            .map(|_| {
+                Json::Num(rng.range_i64(-cfg.word_range, cfg.word_range) as f64)
+            })
+            .collect();
+        let body = json::write(&Json::Obj(
+            [
+                ("model".to_string(), Json::Str(model.clone())),
+                ("words".to_string(), Json::Arr(words)),
+            ]
+            .into_iter()
+            .collect(),
+        ));
+        let t = Instant::now();
+        conn.write_request("POST", "/v1/batch", body.as_bytes())
+            .map_err(|e| format!("write: {e}"))?;
+        let (status, _, _) =
+            conn.read_response(1 << 22).map_err(|e| format!("read: {e}"))?;
+        if status == 200 {
+            lats.push(t.elapsed().as_micros() as u64);
+            words_done += cfg.words_per_request as u64;
+        } else {
+            failures += 1;
+        }
+    }
+    Ok((words_done, failures, lats))
+}
+
+// ---------------------------------------------------------------------
+// One-shot client helpers (tests, examples)
+// ---------------------------------------------------------------------
+
+fn connect(addr: &str) -> Result<HttpConn, String> {
+    let stream =
+        TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
+    Ok(HttpConn::new(stream))
+}
+
+/// Blocking GET; returns (status, body text).
+pub fn http_get(addr: &str, path: &str) -> Result<(u16, String), String> {
+    let mut conn = connect(addr)?;
+    conn.write_request("GET", path, b"").map_err(|e| e.to_string())?;
+    let (status, _, body) =
+        conn.read_response(1 << 22).map_err(|e| e.to_string())?;
+    Ok((status, String::from_utf8_lossy(&body).into_owned()))
+}
+
+/// Blocking POST of a JSON value; returns (status, parsed JSON body).
+pub fn http_post_json(
+    addr: &str,
+    path: &str,
+    body: &Json,
+) -> Result<(u16, Json), String> {
+    let mut conn = connect(addr)?;
+    conn.write_request("POST", path, json::write(body).as_bytes())
+        .map_err(|e| e.to_string())?;
+    let (status, _, resp) =
+        conn.read_response(1 << 22).map_err(|e| e.to_string())?;
+    let text = String::from_utf8_lossy(&resp);
+    let parsed = json::parse(&text)
+        .map_err(|e| format!("non-JSON response ({status}): {e}: {text}"))?;
+    Ok((status, parsed))
+}
+
+/// Evaluate a word batch over HTTP; errors on any non-200.
+pub fn eval_words(
+    addr: &str,
+    model: &str,
+    words: &[i32],
+) -> Result<Vec<i32>, String> {
+    let body = Json::Obj(
+        [
+            ("model".to_string(), Json::Str(model.to_string())),
+            (
+                "words".to_string(),
+                Json::Arr(words.iter().map(|&w| Json::Num(w as f64)).collect()),
+            ),
+        ]
+        .into_iter()
+        .collect(),
+    );
+    let (status, resp) = http_post_json(addr, "/v1/batch", &body)?;
+    if status != 200 {
+        return Err(format!("{status}: {}", json::write(&resp)));
+    }
+    resp.get("words")
+        .and_then(Json::as_i64_vec)
+        .map(|v| v.into_iter().map(|w| w as i32).collect())
+        .ok_or_else(|| "response missing words".into())
+}

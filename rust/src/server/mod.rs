@@ -1,0 +1,432 @@
+//! Layer-4 HTTP activation-serving front-end.
+//!
+//! A dependency-free HTTP/1.1 service (std `TcpListener` + the crate's
+//! own [`ThreadPool`]) layered on the multi-precision
+//! [`Router`](crate::coordinator::router::Router): the network front
+//! door for the paper's "easily tuned for different accuracy and
+//! precision requirements" claim — one route per precision, selected
+//! per-request by model name.
+//!
+//! * [`http`]    — strict request/response wire layer (shared with the
+//!   client side used by tests and the load generator).
+//! * [`api`]     — JSON endpoints: `/health`, `/v1/models`, `/v1/eval`,
+//!   `/v1/batch`, `/metrics`.
+//! * [`loadgen`] — closed-loop multi-connection load generator.
+//!
+//! Backpressure is two-level: the accept loop answers 503 above the
+//! connection limit, and coordinator queue-limit rejections surface as
+//! 503 from the eval endpoints. Shutdown uses the crate's `AtomicBool`
+//! pattern: flag + wake the blocking accept with a loopback connect,
+//! then drain handler threads (they poll the flag on a 250 ms read
+//! tick).
+
+pub mod api;
+pub mod http;
+pub mod loadgen;
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::router::{Route, Router};
+use crate::coordinator::Snapshot;
+use crate::exec::ThreadPool;
+use crate::runtime::artifacts_dir;
+use crate::tanh::{Subtractor, TanhConfig};
+
+use http::{HttpConn, Outcome};
+
+/// Tuning knobs for one server instance.
+///
+/// An admitted connection owns one handler thread until it closes
+/// (blocking keep-alive loop), so the effective concurrent-connection
+/// capacity is `min(max_connections, workers)`; connections beyond it
+/// are answered 503 at accept time.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Bind address; port 0 picks an ephemeral port.
+    pub addr: String,
+    /// Connection-handler threads.
+    pub workers: usize,
+    /// Open-connection bound; beyond it new connections get an
+    /// immediate 503.
+    pub max_connections: usize,
+    /// Request body size limit (413 beyond).
+    pub max_body_bytes: usize,
+    /// Idle keep-alive budget per connection.
+    pub keep_alive: Duration,
+    /// How long an eval may wait on its coordinator before 504.
+    pub request_timeout: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            addr: "127.0.0.1:8787".into(),
+            workers: 16,
+            max_connections: 16,
+            max_body_bytes: 1 << 20,
+            keep_alive: Duration::from_secs(5),
+            request_timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+/// HTTP-level counters (the coordinator keeps per-route metrics).
+#[derive(Default)]
+pub(crate) struct HttpCounters {
+    pub connections: AtomicU64,
+    pub rejected_connections: AtomicU64,
+    pub requests: AtomicU64,
+    pub responses_2xx: AtomicU64,
+    pub responses_4xx: AtomicU64,
+    pub responses_5xx: AtomicU64,
+}
+
+impl HttpCounters {
+    fn count_response(&self, status: u16) {
+        let c = match status {
+            200..=299 => &self.responses_2xx,
+            400..=499 => &self.responses_4xx,
+            _ => &self.responses_5xx,
+        };
+        c.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Shared state behind every connection handler.
+pub(crate) struct AppState {
+    pub router: Router,
+    pub http: HttpCounters,
+    pub started: Instant,
+    pub request_timeout: Duration,
+}
+
+/// A running HTTP activation service. Dropping it (or calling
+/// [`Server::shutdown`]) stops accepting, drains handlers, and joins
+/// every thread.
+pub struct Server {
+    local_addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+    pool: Option<Arc<ThreadPool>>,
+    state: Arc<AppState>,
+}
+
+impl Server {
+    /// Start the router, bind, and begin accepting.
+    pub fn start(cfg: ServerConfig, routes: Vec<Route>) -> Result<Server, String> {
+        let router = Router::start(routes)?;
+        let listener = TcpListener::bind(&cfg.addr)
+            .map_err(|e| format!("bind {}: {e}", cfg.addr))?;
+        let local_addr = listener.local_addr().map_err(|e| e.to_string())?;
+        let state = Arc::new(AppState {
+            router,
+            http: HttpCounters::default(),
+            started: Instant::now(),
+            request_timeout: cfg.request_timeout,
+        });
+        let pool = Arc::new(ThreadPool::new(cfg.workers.max(1)));
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let active = Arc::new(AtomicUsize::new(0));
+
+        let accept_thread = {
+            let state = state.clone();
+            let shutdown = shutdown.clone();
+            let pool = pool.clone();
+            std::thread::Builder::new()
+                .name("tanhvf-http-accept".into())
+                .spawn(move || {
+                    accept_loop(&listener, &cfg, &state, &shutdown, &active, &pool)
+                })
+                .map_err(|e| format!("spawn accept thread: {e}"))?
+        };
+
+        Ok(Server {
+            local_addr,
+            shutdown,
+            accept_thread: Some(accept_thread),
+            pool: Some(pool),
+            state,
+        })
+    }
+
+    /// The bound address (resolves ephemeral ports).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Per-route coordinator metrics.
+    pub fn snapshots(&self) -> std::collections::BTreeMap<String, Snapshot> {
+        self.state.router.snapshots()
+    }
+
+    /// The `/metrics` exposition text (same renderer as the endpoint).
+    pub fn metrics_text(&self) -> String {
+        String::from_utf8_lossy(&api::render_metrics(&self.state).body)
+            .into_owned()
+    }
+
+    /// Stop accepting, drain in-flight connections, join all threads.
+    /// Idempotent; also runs on drop.
+    pub fn shutdown(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // Unblock the accept() call with a throwaway loopback connect.
+        let _ = TcpStream::connect_timeout(
+            &self.local_addr,
+            Duration::from_millis(200),
+        );
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        // Dropping the last pool Arc joins the handler threads (they
+        // observe the flag within one 250 ms read tick).
+        self.pool.take();
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(
+    listener: &TcpListener,
+    cfg: &ServerConfig,
+    state: &Arc<AppState>,
+    shutdown: &Arc<AtomicBool>,
+    active: &Arc<AtomicUsize>,
+    pool: &Arc<ThreadPool>,
+) {
+    loop {
+        let stream = match listener.accept() {
+            _ if shutdown.load(Ordering::SeqCst) => return,
+            Ok((s, _)) => s,
+            Err(_) => {
+                // Transient accept failure (e.g. fd exhaustion): back off
+                // briefly instead of spinning.
+                std::thread::sleep(Duration::from_millis(10));
+                continue;
+            }
+        };
+        state.http.connections.fetch_add(1, Ordering::Relaxed);
+        // One handler thread per open connection: admission is bounded
+        // by whichever of the two limits is tighter.
+        let limit = cfg.max_connections.min(cfg.workers.max(1));
+        let prev = active.fetch_add(1, Ordering::SeqCst);
+        if prev >= limit {
+            active.fetch_sub(1, Ordering::SeqCst);
+            state.http.rejected_connections.fetch_add(1, Ordering::Relaxed);
+            state.http.count_response(503);
+            let mut conn = HttpConn::new(stream);
+            let _ = conn.write_response(
+                &api::error_resp(
+                    503,
+                    "overloaded",
+                    "connection limit reached, retry later",
+                ),
+                false,
+            );
+            // Best-effort drain of any already-sent request bytes so the
+            // close sends FIN rather than RST (which could destroy the
+            // 503 in the peer's receive buffer).
+            let _ = conn.stream().set_nonblocking(true);
+            let mut sink = [0u8; 4096];
+            let mut r = conn.stream();
+            let _ = std::io::Read::read(&mut r, &mut sink);
+            continue;
+        }
+        let guard = ConnGuard(active.clone());
+        let st = state.clone();
+        let sd = shutdown.clone();
+        let cc = cfg.clone();
+        pool.spawn(move || {
+            let _guard = guard;
+            handle_connection(&st, &cc, stream, &sd);
+        });
+    }
+}
+
+struct ConnGuard(Arc<AtomicUsize>);
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+fn handle_connection(
+    state: &Arc<AppState>,
+    cfg: &ServerConfig,
+    stream: TcpStream,
+    shutdown: &Arc<AtomicBool>,
+) {
+    let _ = stream.set_nodelay(true);
+    // Short read tick so idle handlers notice shutdown promptly.
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(250)));
+    let mut conn = HttpConn::new(stream);
+    let mut idle_since = Instant::now();
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        match conn.read_request(cfg.max_body_bytes) {
+            Ok(Outcome::Request(req)) => {
+                state.http.requests.fetch_add(1, Ordering::Relaxed);
+                let keep =
+                    req.keep_alive() && !shutdown.load(Ordering::SeqCst);
+                let resp = api::dispatch(state, &req);
+                state.http.count_response(resp.status);
+                if conn.write_response(&resp, keep).is_err() || !keep {
+                    return;
+                }
+                // Anchor the idle budget at response completion: a slow
+                // dispatch must not eat the next request's keep-alive.
+                idle_since = Instant::now();
+            }
+            Ok(Outcome::Closed) => return,
+            Ok(Outcome::IdleTimeout) => {
+                if idle_since.elapsed() >= cfg.keep_alive {
+                    return;
+                }
+            }
+            Err(e) => {
+                let status = e.status();
+                if status != 0 {
+                    state.http.count_response(status);
+                    let _ = conn.write_response(
+                        &api::error_resp(
+                            status,
+                            "protocol_error",
+                            &e.to_string(),
+                        ),
+                        false,
+                    );
+                }
+                return;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Route-spec parsing (shared by `serve-http --routes` and `serve
+// --backend` validation)
+// ---------------------------------------------------------------------
+
+/// Backend kinds a route spec may name.
+pub const BACKENDS: &[&str] = &["native", "pjrt"];
+
+/// Reject unknown backend kinds with the valid set in the message.
+pub fn validate_backend(kind: &str) -> Result<(), String> {
+    if BACKENDS.contains(&kind) {
+        Ok(())
+    } else {
+        Err(format!(
+            "unknown backend '{kind}' (valid: {})",
+            BACKENDS.join("|")
+        ))
+    }
+}
+
+/// Parse `backend:name,backend:name,...` into a route table.
+///
+/// `native:<cfg>` uses [`named_config`]; `pjrt:<entry>` serves the named
+/// artifact entry from the default artifacts directory.
+pub fn parse_routes(spec: &str) -> Result<Vec<Route>, String> {
+    let mut routes = Vec::new();
+    for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let (kind, name) = part.split_once(':').ok_or_else(|| {
+            format!("route '{part}': expected backend:name (e.g. native:s3_12)")
+        })?;
+        validate_backend(kind).map_err(|e| format!("route '{part}': {e}"))?;
+        match kind {
+            "native" => {
+                routes.push(Route::native(name, named_config(name)?));
+            }
+            _ => {
+                routes.push(Route::pjrt(name, artifacts_dir(), name, 1024));
+            }
+        }
+    }
+    if routes.is_empty() {
+        return Err("empty route spec".into());
+    }
+    Ok(routes)
+}
+
+/// Resolve a precision name to a datapath config.
+///
+/// The canonical operating points (`s3_12`, `s3_5`) use the paper's
+/// exact parameters; any other `s<int>_<frac>` derives the secondary
+/// parameters the same way the scalability sweep does (out = frac+2,
+/// L = out+3, M = out+1), demonstrating the "any precision from one
+/// generator" claim over the wire.
+pub fn named_config(name: &str) -> Result<TanhConfig, String> {
+    match name {
+        "s3_12" => return Ok(TanhConfig::s3_12()),
+        "s3_5" => return Ok(TanhConfig::s3_5()),
+        _ => {}
+    }
+    let parse = || -> Option<(u32, u32)> {
+        let (i, f) = name.strip_prefix('s')?.split_once('_')?;
+        Some((i.parse().ok()?, f.parse().ok()?))
+    };
+    let (in_int, in_frac) = parse().ok_or_else(|| {
+        format!("unknown model config '{name}' (expected s<int>_<frac>, e.g. s3_12)")
+    })?;
+    let out_frac = in_frac + 2;
+    let cfg = TanhConfig {
+        in_int,
+        in_frac,
+        out_frac,
+        lut_bits: out_frac + 3,
+        mult_bits: out_frac + 1,
+        lut_group: if in_int + in_frac >= 12 { 4 } else { 3 },
+        shuffle: true,
+        nr_stages: 3,
+        subtractor: Subtractor::Twos,
+    };
+    cfg.validate().map_err(|e| format!("config '{name}': {e}"))?;
+    Ok(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn named_configs_resolve() {
+        assert_eq!(named_config("s3_12").unwrap(), TanhConfig::s3_12());
+        assert_eq!(named_config("s3_5").unwrap(), TanhConfig::s3_5());
+        let c = named_config("s2_8").unwrap();
+        assert_eq!((c.in_int, c.in_frac, c.out_frac), (2, 8, 10));
+        c.validate().unwrap();
+        assert!(named_config("q8").is_err());
+        assert!(named_config("s99_99").is_err());
+    }
+
+    #[test]
+    fn route_specs_parse() {
+        let routes =
+            parse_routes("native:s3_12, native:s2_8").unwrap();
+        assert_eq!(routes.len(), 2);
+        assert_eq!(routes[0].name, "s3_12");
+        assert_eq!(routes[1].name, "s2_8");
+        assert!(parse_routes("bogus:s3_12").is_err());
+        assert!(parse_routes("native").is_err());
+        assert!(parse_routes("").is_err());
+        let p = parse_routes("pjrt:tanh_s3_12").unwrap();
+        assert_eq!(p[0].backend.kind(), "pjrt");
+    }
+
+    #[test]
+    fn validate_backend_lists_valid_set() {
+        assert!(validate_backend("native").is_ok());
+        assert!(validate_backend("pjrt").is_ok());
+        let e = validate_backend("onnx").unwrap_err();
+        assert!(e.contains("native|pjrt"), "{e}");
+    }
+}

@@ -1,0 +1,156 @@
+//! Minimal `anyhow`-style error type.
+//!
+//! The offline crate set has no `anyhow`; this provides the subset the
+//! runtime needs: a message error constructed by [`crate::anyhow!`] /
+//! [`crate::bail!`], a context chain added via the [`Context`] extension
+//! trait, `{}` printing the outermost message and `{:#}` printing the
+//! whole chain (`outer: ...: root`), exactly like `anyhow`'s alternate
+//! formatting that the robustness tests assert on.
+
+use std::fmt;
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A message error with a context chain. `chain[0]` is the outermost
+/// (most recently attached) context; the last element is the root cause.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a single message (the root cause).
+    pub fn msg(msg: impl Into<String>) -> Error {
+        Error { chain: vec![msg.into()] }
+    }
+
+    /// Attach an outer context layer.
+    pub fn context(mut self, msg: impl fmt::Display) -> Error {
+        self.chain.insert(0, msg.to_string());
+        self
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> &[String] {
+        &self.chain
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Debug mirrors the full chain so `unwrap()` panics are readable.
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+/// Extension trait mirroring `anyhow::Context` for the error types that
+/// actually flow through the runtime.
+pub trait Context<T> {
+    /// Wrap the error with a lazily-built context message.
+    fn with_context<S: fmt::Display, F: FnOnce() -> S>(
+        self,
+        f: F,
+    ) -> Result<T, Error>;
+
+    /// Wrap the error with a fixed context message.
+    fn context<S: fmt::Display>(self, msg: S) -> Result<T, Error>;
+}
+
+impl<T> Context<T> for Result<T, Error> {
+    fn with_context<S: fmt::Display, F: FnOnce() -> S>(
+        self,
+        f: F,
+    ) -> Result<T, Error> {
+        self.map_err(|e| e.context(f()))
+    }
+
+    fn context<S: fmt::Display>(self, msg: S) -> Result<T, Error> {
+        self.map_err(|e| e.context(msg))
+    }
+}
+
+impl<T> Context<T> for Result<T, std::io::Error> {
+    fn with_context<S: fmt::Display, F: FnOnce() -> S>(
+        self,
+        f: F,
+    ) -> Result<T, Error> {
+        self.map_err(|e| Error::msg(e.to_string()).context(f()))
+    }
+
+    fn context<S: fmt::Display>(self, msg: S) -> Result<T, Error> {
+        self.map_err(|e| Error::msg(e.to_string()).context(msg))
+    }
+}
+
+/// Construct an [`Error`] from a format string (`anyhow::anyhow!` shape).
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return with an [`Error`] (`anyhow::bail!` shape).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plain_display_is_outermost_only() {
+        let e = Error::msg("root").context("outer");
+        assert_eq!(format!("{e}"), "outer");
+    }
+
+    #[test]
+    fn alternate_display_is_full_chain() {
+        let e = Error::msg("root").context("mid").context("outer");
+        assert_eq!(format!("{e:#}"), "outer: mid: root");
+    }
+
+    #[test]
+    fn io_context_chains() {
+        let r: Result<(), std::io::Error> = Err(std::io::Error::new(
+            std::io::ErrorKind::NotFound,
+            "no such file",
+        ));
+        let e = r.with_context(|| "reading manifest").unwrap_err();
+        let s = format!("{e:#}");
+        assert!(s.starts_with("reading manifest: "), "{s}");
+        assert!(s.contains("no such file"), "{s}");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let e = crate::anyhow!("x = {}", 42);
+        assert_eq!(format!("{e}"), "x = 42");
+        fn inner() -> Result<()> {
+            crate::bail!("boom {}", 1);
+        }
+        assert_eq!(format!("{}", inner().unwrap_err()), "boom 1");
+    }
+}

@@ -89,9 +89,14 @@ impl Json {
     }
 }
 
+/// Nesting bound: the parser is recursive-descent and parses untrusted
+/// network bodies (HTTP server), so depth must be limited well below
+/// thread stack exhaustion.
+const MAX_DEPTH: u32 = 512;
+
 /// Parse a JSON document.
 pub fn parse(input: &str) -> Result<Json, ParseError> {
-    let mut p = Parser { b: input.as_bytes(), i: 0 };
+    let mut p = Parser { b: input.as_bytes(), i: 0, depth: 0 };
     p.skip_ws();
     let v = p.value()?;
     p.skip_ws();
@@ -118,6 +123,7 @@ impl std::error::Error for ParseError {}
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: u32,
 }
 
 impl<'a> Parser<'a> {
@@ -148,8 +154,8 @@ impl<'a> Parser<'a> {
 
     fn value(&mut self) -> Result<Json, ParseError> {
         match self.peek().ok_or_else(|| self.err("unexpected end"))? {
-            b'{' => self.object(),
-            b'[' => self.array(),
+            b'{' => self.nested(Parser::object),
+            b'[' => self.nested(Parser::array),
             b'"' => Ok(Json::Str(self.string()?)),
             b't' => self.lit("true", Json::Bool(true)),
             b'f' => self.lit("false", Json::Bool(false)),
@@ -166,6 +172,20 @@ impl<'a> Parser<'a> {
         } else {
             Err(self.err(&format!("expected '{word}'")))
         }
+    }
+
+    /// Run a container parser one nesting level deeper, bounded.
+    fn nested(
+        &mut self,
+        f: fn(&mut Parser<'a>) -> Result<Json, ParseError>,
+    ) -> Result<Json, ParseError> {
+        if self.depth >= MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
+        self.depth += 1;
+        let v = f(&mut *self);
+        self.depth -= 1;
+        v
     }
 
     fn object(&mut self) -> Result<Json, ParseError> {
@@ -240,20 +260,17 @@ impl<'a> Parser<'a> {
                         b'r' => s.push('\r'),
                         b't' => s.push('\t'),
                         b'u' => {
-                            let hex = self
-                                .b
-                                .get(self.i..self.i + 4)
-                                .ok_or_else(|| self.err("bad \\u"))?;
-                            let code = u32::from_str_radix(
-                                std::str::from_utf8(hex)
-                                    .map_err(|_| self.err("bad \\u"))?,
-                                16,
-                            )
-                            .map_err(|_| self.err("bad \\u"))?;
-                            self.i += 4;
-                            // Surrogate pairs are not needed for our data;
-                            // map unpaired surrogates to U+FFFD.
-                            s.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
+                            let code = self.hex4()?;
+                            let ch = if (0xD800..0xDC00).contains(&code) {
+                                // High surrogate: combine with a following
+                                // \uXXXX low surrogate (RFC 8259 §7).
+                                self.low_surrogate_tail(code)?
+                            } else if (0xDC00..0xE000).contains(&code) {
+                                '\u{FFFD}' // lone low surrogate
+                            } else {
+                                char::from_u32(code).unwrap_or('\u{FFFD}')
+                            };
+                            s.push(ch);
                         }
                         _ => return Err(self.err("bad escape char")),
                     }
@@ -283,6 +300,44 @@ impl<'a> Parser<'a> {
                 }
             }
         }
+    }
+
+    /// Four hex digits of a `\u` escape (cursor already past the `u`).
+    fn hex4(&mut self) -> Result<u32, ParseError> {
+        let hex = self
+            .b
+            .get(self.i..self.i + 4)
+            .ok_or_else(|| self.err("bad \\u"))?;
+        // from_str_radix tolerates a leading '+'; RFC 8259 requires
+        // exactly four hex digits.
+        if !hex.iter().all(u8::is_ascii_hexdigit) {
+            return Err(self.err("bad \\u"));
+        }
+        let code = u32::from_str_radix(
+            std::str::from_utf8(hex).map_err(|_| self.err("bad \\u"))?,
+            16,
+        )
+        .map_err(|_| self.err("bad \\u"))?;
+        self.i += 4;
+        Ok(code)
+    }
+
+    /// After a high surrogate `hi`, consume a `\uXXXX` low surrogate and
+    /// combine; a lone high surrogate becomes U+FFFD (and whatever
+    /// followed is re-parsed normally).
+    fn low_surrogate_tail(&mut self, hi: u32) -> Result<char, ParseError> {
+        if self.b.get(self.i) == Some(&b'\\') && self.b.get(self.i + 1) == Some(&b'u') {
+            let save = self.i;
+            self.i += 2;
+            let lo = self.hex4()?;
+            if (0xDC00..0xE000).contains(&lo) {
+                let code = 0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00);
+                return Ok(char::from_u32(code).unwrap_or('\u{FFFD}'));
+            }
+            // Not a low surrogate: rewind so the escape parses on its own.
+            self.i = save;
+        }
+        Ok('\u{FFFD}')
     }
 
     fn number(&mut self) -> Result<Json, ParseError> {
@@ -421,5 +476,52 @@ mod tests {
     fn unicode_passthrough() {
         let v = parse("\"héllo ☃\"").unwrap();
         assert_eq!(v.as_str(), Some("héllo ☃"));
+    }
+
+    #[test]
+    fn surrogate_pairs_combine() {
+        assert_eq!(parse("\"\\ud83d\\ude00\"").unwrap(), Json::Str("😀".into()));
+        assert_eq!(
+            parse("\"x\\uD83D\\uDE00!\"").unwrap(),
+            Json::Str("x😀!".into())
+        );
+    }
+
+    #[test]
+    fn lone_surrogates_become_replacement() {
+        assert_eq!(parse("\"\\ud83d\"").unwrap(), Json::Str("\u{FFFD}".into()));
+        assert_eq!(parse("\"\\ude00\"").unwrap(), Json::Str("\u{FFFD}".into()));
+        // High surrogate followed by a non-surrogate escape: the escape
+        // must survive on its own.
+        assert_eq!(
+            parse("\"\\ud83d\\u0041\"").unwrap(),
+            Json::Str("\u{FFFD}A".into())
+        );
+    }
+
+    #[test]
+    fn hostile_nesting_is_an_error_not_a_crash() {
+        let bomb = "[".repeat(100_000);
+        let err = parse(&bomb).unwrap_err();
+        assert!(err.msg.contains("nesting too deep"), "{err}");
+        // Well-formed documents inside the bound still parse.
+        let deep = format!("{}1{}", "[".repeat(400), "]".repeat(400));
+        assert!(parse(&deep).is_ok());
+    }
+
+    #[test]
+    fn unicode_escape_requires_four_hex_digits() {
+        assert!(parse("\"\\u+041\"").is_err()); // '+' is not a hex digit
+        assert!(parse("\"\\u00 1\"").is_err());
+        assert!(parse("\"\\u0041\"").is_ok());
+    }
+
+    #[test]
+    fn astral_and_control_roundtrip() {
+        let ctl: String = (0u32..0x20).map(|c| char::from_u32(c).unwrap()).collect();
+        for s in ["😀 \u{10FFFF}", ctl.as_str(), "\u{7F}\"\\/"] {
+            let v = Json::Str(s.to_string());
+            assert_eq!(parse(&write(&v)).unwrap(), v, "{s:?}");
+        }
     }
 }

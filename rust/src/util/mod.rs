@@ -1,5 +1,7 @@
-//! Small shared utilities: JSON, deterministic PRNG, table formatting.
+//! Small shared utilities: JSON, errors, deterministic PRNG, table
+//! formatting.
 
+pub mod error;
 pub mod json;
 pub mod rng;
 pub mod table;

@@ -98,3 +98,39 @@ fn serve_native_small_run() {
     assert!(out.contains("throughput"));
     assert!(out.contains("batches="));
 }
+
+#[test]
+fn serve_rejects_unknown_backend_with_usage() {
+    let (out, ok) = run(&["serve", "--backend", "bogus", "--requests", "1"]);
+    assert!(!ok, "unknown backend must exit non-zero:\n{out}");
+    assert!(out.contains("native|pjrt"), "{out}");
+    assert!(out.contains("subcommands:"), "usage text missing:\n{out}");
+}
+
+#[test]
+fn serve_http_rejects_unknown_route_backend_with_usage() {
+    let (out, ok) = run(&["serve-http", "--routes", "bogus:s3_12"]);
+    assert!(!ok, "unknown route backend must exit non-zero:\n{out}");
+    assert!(out.contains("native|pjrt"), "{out}");
+    assert!(out.contains("subcommands:"), "usage text missing:\n{out}");
+    let (out2, ok2) = run(&["serve-http", "--routes", "native:nonsense"]);
+    assert!(!ok2, "{out2}");
+    assert!(out2.contains("unknown model config"), "{out2}");
+}
+
+#[test]
+fn serve_http_timed_run_reports_metrics() {
+    let (out, ok) = run(&[
+        "serve-http",
+        "--addr",
+        "127.0.0.1:0",
+        "--routes",
+        "native:s3_5",
+        "--duration-secs",
+        "1",
+    ]);
+    assert!(ok, "{out}");
+    assert!(out.contains("listening on http://127.0.0.1:"), "{out}");
+    assert!(out.contains("route: s3_5"), "{out}");
+    assert!(out.contains("tanhvf_http_connections_total"), "{out}");
+}

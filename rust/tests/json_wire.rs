@@ -1,0 +1,112 @@
+//! Wire-hardening for `util::json`: now that JSON crosses the HTTP
+//! boundary, the writer and parser must round-trip arbitrary documents —
+//! control characters, surrogate pairs, astral plane, deep nesting —
+//! property-tested through the crate's own proptest module.
+
+use tanh_vf::proptest::{assert_prop, Gen};
+use tanh_vf::util::json::{parse, write, Json};
+use tanh_vf::util::rng::Rng;
+
+/// Strings drawn from the nasty corners: control chars, JSON
+/// metacharacters, multi-byte UTF-8, astral-plane (surrogate-pair) code
+/// points, and the BMP boundary values.
+fn random_string(rng: &mut Rng) -> String {
+    const POOL: &[char] = &[
+        'a', 'Z', '0', ' ', '"', '\\', '/', '\n', '\r', '\t',
+        '\u{0}', '\u{1}', '\u{8}', '\u{b}', '\u{c}', '\u{1f}', '\u{7f}',
+        'é', '☃', '中', '\u{d7ff}', '\u{e000}', '\u{fffd}',
+        '😀', '\u{10000}', '\u{10ffff}',
+    ];
+    let n = rng.below(12);
+    (0..n).map(|_| POOL[rng.below(POOL.len() as u64) as usize]).collect()
+}
+
+/// Random JSON value, numbers restricted to exactly-representable
+/// integers and dyadic rationals so equality is well-defined.
+fn random_json(rng: &mut Rng, depth: u32) -> Json {
+    let pick = if depth == 0 { rng.below(4) } else { rng.below(6) };
+    match pick {
+        0 => Json::Null,
+        1 => Json::Bool(rng.below(2) == 1),
+        2 => {
+            let int = rng.range_i64(-1_000_000, 1_000_000);
+            if rng.below(2) == 0 {
+                Json::Num(int as f64)
+            } else {
+                Json::Num(int as f64 / (1u64 << rng.below(20)) as f64)
+            }
+        }
+        3 => Json::Str(random_string(rng)),
+        4 => Json::Arr(
+            (0..rng.below(5)).map(|_| random_json(rng, depth - 1)).collect(),
+        ),
+        _ => Json::Obj(
+            (0..rng.below(5))
+                .map(|_| (random_string(rng), random_json(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn property_parse_write_roundtrip() {
+    let gen = Gen::new(
+        |rng: &mut Rng| random_json(rng, 3),
+        |_| vec![], // no shrinking for structured values
+    );
+    assert_prop("json parse<->write roundtrip", 0x1A7E, 600, &gen, |v| {
+        let text = write(v);
+        match parse(&text) {
+            Ok(back) if back == *v => Ok(()),
+            Ok(back) => Err(format!("wrote {text:?}, reparsed as {back:?}")),
+            Err(e) => Err(format!("wrote {text:?}, reparse failed: {e}")),
+        }
+    });
+}
+
+#[test]
+fn property_written_strings_are_ascii_safe_json() {
+    // Whatever we emit must itself be valid JSON for *other* parsers:
+    // no raw control bytes may survive in the output.
+    let gen = Gen::new(|rng: &mut Rng| random_string(rng), |_| vec![]);
+    assert_prop("writer escapes control bytes", 0x5AFE, 400, &gen, |s| {
+        let text = write(&Json::Str(s.clone()));
+        if text.bytes().any(|b| b < 0x20) {
+            Err(format!("raw control byte in {text:?}"))
+        } else {
+            Ok(())
+        }
+    });
+}
+
+#[test]
+fn escaped_surrogate_pairs_equal_raw_utf8() {
+    let escaped = parse("\"\\uD83D\\uDE00\"").unwrap();
+    let raw = parse("\"😀\"").unwrap();
+    assert_eq!(escaped, raw);
+    assert_eq!(parse(&write(&escaped)).unwrap(), raw);
+}
+
+#[test]
+fn all_control_characters_roundtrip_in_one_string() {
+    let s: String =
+        (0u32..0x20).map(|c| char::from_u32(c).unwrap()).collect();
+    let v = Json::Obj(
+        [(s.clone(), Json::Str(s))].into_iter().collect(),
+    );
+    assert_eq!(parse(&write(&v)).unwrap(), v);
+}
+
+#[test]
+fn deep_nesting_roundtrips() {
+    let mut v = Json::Num(7.0);
+    for i in 0..300 {
+        v = if i % 2 == 0 {
+            Json::Arr(vec![v])
+        } else {
+            Json::Obj([("k".to_string(), v)].into_iter().collect())
+        };
+    }
+    let text = write(&v);
+    assert_eq!(parse(&text).unwrap(), v);
+}

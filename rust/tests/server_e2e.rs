@@ -1,0 +1,302 @@
+//! HTTP activation service end-to-end: boot the server on an ephemeral
+//! port, drive mixed-precision traffic through real sockets, and verify
+//! bit-exactness against the golden model plus both 503 backpressure
+//! paths (connection limit, coordinator queue limit).
+
+use std::net::TcpStream;
+use std::time::Duration;
+
+use tanh_vf::coordinator::router::Route;
+use tanh_vf::server::http::HttpConn;
+use tanh_vf::server::loadgen::{self, LoadgenConfig};
+use tanh_vf::server::{named_config, parse_routes, Server, ServerConfig};
+use tanh_vf::tanh::golden::tanh_golden_batch;
+use tanh_vf::tanh::tanh_golden;
+use tanh_vf::util::json::Json;
+use tanh_vf::util::rng::Rng;
+
+fn ephemeral_cfg() -> ServerConfig {
+    ServerConfig { addr: "127.0.0.1:0".into(), ..Default::default() }
+}
+
+/// The acceptance-criteria route table: two native precisions.
+fn start_two_precision() -> (Server, String) {
+    let routes = parse_routes("native:s3_12,native:s2_8").unwrap();
+    let srv = Server::start(ephemeral_cfg(), routes).unwrap();
+    let addr = srv.local_addr().to_string();
+    (srv, addr)
+}
+
+fn connect(addr: &str) -> HttpConn {
+    let s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+    HttpConn::new(s)
+}
+
+fn obj(pairs: &[(&str, Json)]) -> Json {
+    Json::Obj(
+        pairs.iter().map(|(k, v)| (k.to_string(), v.clone())).collect(),
+    )
+}
+
+#[test]
+fn health_models_and_metrics_endpoints() {
+    let (_srv, addr) = start_two_precision();
+
+    let (status, body) = loadgen::http_get(&addr, "/health").unwrap();
+    assert_eq!(status, 200, "{body}");
+    assert!(body.contains("\"status\":\"ok\""), "{body}");
+
+    let (status, body) = loadgen::http_get(&addr, "/v1/models").unwrap();
+    assert_eq!(status, 200, "{body}");
+    let v = tanh_vf::util::json::parse(&body).unwrap();
+    let data = v.get("data").and_then(Json::as_arr).unwrap();
+    let ids: Vec<&str> = data
+        .iter()
+        .map(|m| m.get("id").and_then(Json::as_str).unwrap())
+        .collect();
+    assert_eq!(ids, vec!["s2_8", "s3_12"]); // name-sorted route table
+    assert!(body.contains("\"backend\":\"native\""), "{body}");
+
+    let (status, body) = loadgen::http_get(&addr, "/metrics").unwrap();
+    assert_eq!(status, 200);
+    assert!(body.contains("tanhvf_requests_completed_total{route=\"s3_12\"}"));
+    assert!(body.contains("tanhvf_requests_completed_total{route=\"s2_8\"}"));
+    assert!(body.contains("tanhvf_http_requests_total"), "{body}");
+}
+
+#[test]
+fn batch_eval_is_bit_exact_per_precision() {
+    let (_srv, addr) = start_two_precision();
+    // Full-range sweep per route: every response word must equal the
+    // golden model under that route's exact config.
+    for model in ["s3_12", "s2_8"] {
+        let cfg = named_config(model).unwrap();
+        let limit = 1i64 << cfg.mag_bits();
+        let mut rng = Rng::new(0xE2E);
+        let words: Vec<i32> = (0..257)
+            .map(|_| rng.range_i64(-limit, limit) as i32)
+            .collect();
+        let got = loadgen::eval_words(&addr, model, &words).unwrap();
+        let want = tanh_golden_batch(
+            &words.iter().map(|&w| w as i64).collect::<Vec<_>>(),
+            &cfg,
+        );
+        assert_eq!(
+            got.iter().map(|&w| w as i64).collect::<Vec<_>>(),
+            want,
+            "route {model} not bit-exact"
+        );
+    }
+}
+
+#[test]
+fn concurrent_mixed_precision_load_all_succeeds() {
+    let (srv, addr) = start_two_precision();
+    let mut cfg = LoadgenConfig::new(addr, &["s3_12", "s2_8"]);
+    cfg.connections = 6;
+    cfg.requests_per_connection = 40;
+    cfg.words_per_request = 57;
+    cfg.word_range = 128; // in-range for both precisions
+    let report = loadgen::run(&cfg).unwrap();
+    assert_eq!(report.failures, 0, "{}", report.render());
+    assert_eq!(report.requests, 6 * 40);
+    assert_eq!(report.words, 6 * 40 * 57);
+    // Both routes saw traffic and completed everything they admitted.
+    let snaps = srv.snapshots();
+    assert_eq!(snaps["s3_12"].completed + snaps["s2_8"].completed, 6 * 40);
+    assert!(snaps["s3_12"].completed > 0 && snaps["s2_8"].completed > 0);
+}
+
+#[test]
+fn single_eval_word_and_float_agree_with_golden() {
+    let (_srv, addr) = start_two_precision();
+    let cfg = named_config("s3_12").unwrap();
+
+    let (status, resp) = loadgen::http_post_json(
+        &addr,
+        "/v1/eval",
+        &obj(&[
+            ("model", Json::Str("s3_12".into())),
+            ("word", Json::Num(4096.0)),
+        ]),
+    )
+    .unwrap();
+    assert_eq!(status, 200, "{resp:?}");
+    let want = tanh_golden(4096, &cfg);
+    assert_eq!(resp.get("y_word").and_then(Json::as_i64), Some(want));
+    let y = resp.get("y").and_then(Json::as_f64).unwrap();
+    assert!((y - 1.0f64.tanh()).abs() < 1e-3, "y = {y}");
+
+    // Float input quantizes to the same word.
+    let (status, resp) = loadgen::http_post_json(
+        &addr,
+        "/v1/eval",
+        &obj(&[
+            ("model", Json::Str("s3_12".into())),
+            ("x", Json::Num(1.0)),
+        ]),
+    )
+    .unwrap();
+    assert_eq!(status, 200, "{resp:?}");
+    assert_eq!(resp.get("word").and_then(Json::as_i64), Some(4096));
+    assert_eq!(resp.get("y_word").and_then(Json::as_i64), Some(want));
+}
+
+#[test]
+fn api_error_paths_map_to_http_statuses() {
+    let (_srv, addr) = start_two_precision();
+    let post = |path: &str, body: &Json| {
+        loadgen::http_post_json(&addr, path, body).unwrap().0
+    };
+
+    // Unknown path / wrong method.
+    assert_eq!(loadgen::http_get(&addr, "/nope").unwrap().0, 404);
+    assert_eq!(loadgen::http_get(&addr, "/v1/eval").unwrap().0, 405);
+
+    // Unknown model.
+    let body = obj(&[
+        ("model", Json::Str("s9_9_bogus".into())),
+        ("words", Json::Arr(vec![Json::Num(1.0)])),
+    ]);
+    assert_eq!(post("/v1/batch", &body), 404);
+
+    // Missing model / empty words / non-integer / out-of-range word.
+    assert_eq!(post("/v1/batch", &obj(&[("words", Json::Arr(vec![]))])), 400);
+    let empty = obj(&[
+        ("model", Json::Str("s3_12".into())),
+        ("words", Json::Arr(vec![])),
+    ]);
+    assert_eq!(post("/v1/batch", &empty), 400);
+    let frac = obj(&[
+        ("model", Json::Str("s3_12".into())),
+        ("words", Json::Arr(vec![Json::Num(1.5)])),
+    ]);
+    assert_eq!(post("/v1/batch", &frac), 400);
+    let oob = obj(&[
+        ("model", Json::Str("s3_12".into())),
+        ("words", Json::Arr(vec![Json::Num(999_999.0)])),
+    ]);
+    assert_eq!(post("/v1/batch", &oob), 400);
+
+    // Bodies that aren't JSON at all.
+    let mut conn = connect(&addr);
+    conn.write_request("POST", "/v1/eval", b"this is not json").unwrap();
+    let (status, _, _) = conn.read_response(1 << 20).unwrap();
+    assert_eq!(status, 400);
+}
+
+#[test]
+fn malformed_and_oversized_requests_get_4xx() {
+    let (_srv, addr) = start_two_precision();
+
+    // Raw garbage instead of a request line.
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    use std::io::{Read, Write};
+    s.write_all(b"THIS IS NOT HTTP\r\n\r\n").unwrap();
+    let mut buf = Vec::new();
+    let _ = s.read_to_end(&mut buf);
+    let text = String::from_utf8_lossy(&buf);
+    assert!(text.starts_with("HTTP/1.1 400"), "{text}");
+
+    // Declared body beyond the limit -> 413 before any body bytes.
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    s.write_all(
+        b"POST /v1/batch HTTP/1.1\r\nContent-Length: 99999999\r\n\r\n",
+    )
+    .unwrap();
+    let mut buf = Vec::new();
+    let _ = s.read_to_end(&mut buf);
+    let text = String::from_utf8_lossy(&buf);
+    assert!(text.starts_with("HTTP/1.1 413"), "{text}");
+}
+
+#[test]
+fn connection_limit_answers_503() {
+    let routes = parse_routes("native:s3_5").unwrap();
+    let srv = Server::start(
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            max_connections: 1,
+            ..Default::default()
+        },
+        routes,
+    )
+    .unwrap();
+    let addr = srv.local_addr().to_string();
+
+    // First connection occupies the only slot (request proves it is
+    // fully registered before the second connect).
+    let mut c1 = connect(&addr);
+    c1.write_request("GET", "/health", b"").unwrap();
+    assert_eq!(c1.read_response(1 << 20).unwrap().0, 200);
+
+    // Second connection is rejected at accept time: the 503 is written
+    // proactively, before any request bytes.
+    let mut c2 = connect(&addr);
+    let (status, _, body) = c2.read_response(1 << 20).unwrap();
+    assert_eq!(status, 503, "{}", String::from_utf8_lossy(&body));
+    drop(c1);
+}
+
+#[test]
+fn queue_limit_backpressure_answers_503() {
+    // One route with a one-deep queue and a long batching window: of N
+    // simultaneous in-flight requests, exactly one can sit in the queue;
+    // the rest must be answered 503 (not hang, not drop).
+    let route = Route::native("tiny", named_config("s3_5").unwrap())
+        .with_queue_limit(1)
+        .with_workers(1)
+        .with_batch(1024, Duration::from_millis(500));
+    let srv = Server::start(
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            workers: 8,
+            ..Default::default()
+        },
+        vec![route],
+    )
+    .unwrap();
+    let addr = srv.local_addr().to_string();
+
+    let body = tanh_vf::util::json::write(&obj(&[
+        ("model", Json::Str("tiny".into())),
+        ("words", Json::Arr(vec![Json::Num(3.0); 4])),
+    ]));
+    let mut conns: Vec<HttpConn> = (0..6).map(|_| connect(&addr)).collect();
+    for c in conns.iter_mut() {
+        c.write_request("POST", "/v1/batch", body.as_bytes()).unwrap();
+    }
+    let statuses: Vec<u16> = conns
+        .iter_mut()
+        .map(|c| c.read_response(1 << 20).unwrap().0)
+        .collect();
+    let ok = statuses.iter().filter(|&&s| s == 200).count();
+    let busy = statuses.iter().filter(|&&s| s == 503).count();
+    assert_eq!(ok + busy, 6, "unexpected statuses {statuses:?}");
+    assert!(ok >= 1, "the queued request must complete: {statuses:?}");
+    assert!(busy >= 1, "backpressure must trigger: {statuses:?}");
+    assert!(srv.snapshots()["tiny"].rejected >= busy as u64);
+}
+
+#[test]
+fn keep_alive_and_graceful_shutdown() {
+    let routes = parse_routes("native:s3_5").unwrap();
+    let mut srv = Server::start(ephemeral_cfg(), routes).unwrap();
+    let addr = srv.local_addr().to_string();
+
+    // Two requests over one connection.
+    let mut c = connect(&addr);
+    for _ in 0..2 {
+        c.write_request("GET", "/health", b"").unwrap();
+        assert_eq!(c.read_response(1 << 20).unwrap().0, 200);
+    }
+
+    srv.shutdown(); // must join promptly, not hang
+    assert!(
+        TcpStream::connect(&addr).is_err(),
+        "listener must be closed after shutdown"
+    );
+}
