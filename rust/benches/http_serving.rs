@@ -1,20 +1,55 @@
 //! HTTP serving-path throughput: the L4 front door under closed-loop
-//! load at increasing connection counts, with the direct in-process
-//! router as the overhead baseline. Companion to `throughput.rs`, one
-//! layer up the stack.
+//! load at increasing connection counts, the direct in-process router
+//! as the overhead baseline, and the reactor-vs-threaded concurrency
+//! headroom comparison (same worker count, how many connections can
+//! each backend sustain?). Companion to `throughput.rs`, one layer up
+//! the stack. Results persist to `BENCH_http_serving.json` so the perf
+//! trajectory is tracked across PRs.
 
-use std::time::Instant;
+use std::collections::BTreeMap;
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
 
+use tanh_vf::server::http::HttpConn;
 use tanh_vf::server::loadgen::{self, LoadgenConfig};
 use tanh_vf::server::{parse_routes, Server, ServerConfig};
+use tanh_vf::util::json::{self, Json};
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+/// Open `n` connections, hold them all open, then round-trip one
+/// `GET /health` on each: the count of 200s is the number of
+/// *simultaneously sustained* connections the backend admits.
+fn sustained_connections(addr: &str, n: usize) -> usize {
+    let mut conns: Vec<HttpConn> = Vec::new();
+    for _ in 0..n {
+        let Ok(s) = TcpStream::connect(addr) else { break };
+        let _ = s.set_nodelay(true);
+        let _ = s.set_read_timeout(Some(Duration::from_secs(10)));
+        conns.push(HttpConn::new(s));
+    }
+    let mut ok = 0usize;
+    for c in conns.iter_mut() {
+        if c.write_request("GET", "/health", b"").is_err() {
+            continue;
+        }
+        if let Ok((200, _, _)) = c.read_response(1 << 20) {
+            ok += 1;
+        }
+    }
+    ok
+}
 
 fn main() {
+    // -- closed-loop throughput on the default (reactor) backend ------
     let routes = parse_routes("native:s3_12,native:s3_5").unwrap();
     let srv = Server::start(
         ServerConfig {
             addr: "127.0.0.1:0".into(),
             workers: 32,
-            max_connections: 32,
+            max_connections: 128,
             ..Default::default()
         },
         routes,
@@ -23,7 +58,8 @@ fn main() {
     let addr = srv.local_addr().to_string();
 
     println!("== HTTP serving (closed-loop POST /v1/batch, 64 words, mixed s3_12/s3_5) ==\n");
-    for conns in [1usize, 4, 16] {
+    let mut closed_loop = Vec::new();
+    for conns in [1usize, 4, 16, 64] {
         let mut cfg = LoadgenConfig::new(addr.clone(), &["s3_12", "s3_5"]);
         cfg.connections = conns;
         cfg.requests_per_connection = 400;
@@ -32,6 +68,10 @@ fn main() {
         let r = loadgen::run(&cfg).expect("loadgen");
         assert_eq!(r.failures, 0, "{}", r.render());
         println!("conns={conns:<3} {}", r.render());
+        closed_loop.push(obj(vec![
+            ("connections", Json::Num(conns as f64)),
+            ("report", r.to_json()),
+        ]));
     }
 
     // Baseline: the same batch shape straight into the router (no HTTP),
@@ -46,19 +86,95 @@ fn main() {
         router.eval_blocking("s3_12", words.clone()).unwrap();
     }
     let direct = t0.elapsed();
+    let direct_rps = n as f64 / direct.as_secs_f64();
     println!(
-        "\ndirect router baseline: {:.0} req/s ({:.1} us/req) — \
+        "\ndirect router baseline: {direct_rps:.0} req/s ({:.1} us/req) — \
          HTTP delta above this is wire+parse overhead",
-        n as f64 / direct.as_secs_f64(),
         direct.as_micros() as f64 / n as f64
     );
 
     println!("\n== per-route completions ==");
+    let mut route_snaps: BTreeMap<String, Json> = BTreeMap::new();
     for (route, snap) in srv.snapshots() {
         println!(
             "{route:<8} completed={} batches={} fill={:.2} p99={}us",
             snap.completed, snap.batches, snap.mean_batch_fill,
             snap.p99_latency_us
         );
+        route_snaps.insert(
+            route,
+            obj(vec![
+                ("completed", Json::Num(snap.completed as f64)),
+                ("batches", Json::Num(snap.batches as f64)),
+                ("p99_us", Json::Num(snap.p99_latency_us as f64)),
+            ]),
+        );
     }
+    drop(srv);
+
+    // -- concurrency headroom: reactor vs thread-per-connection -------
+    // Equal worker count; the threaded backend's capacity is
+    // min(max_connections, workers) while the reactor's is
+    // max_connections alone. The acceptance bar is >2x.
+    const WORKERS: usize = 4;
+    const MAX_CONNS: usize = 64;
+    const ATTEMPT: usize = 32;
+    println!(
+        "\n== sustained concurrent connections (workers={WORKERS}, \
+         max-conns={MAX_CONNS}, attempting {ATTEMPT}) =="
+    );
+    let mut sustained = BTreeMap::new();
+    for (label, event_loop) in [("threaded", false), ("reactor", true)] {
+        let srv = Server::start(
+            ServerConfig {
+                addr: "127.0.0.1:0".into(),
+                workers: WORKERS,
+                max_connections: MAX_CONNS,
+                event_loop,
+                ..Default::default()
+            },
+            parse_routes("native:s3_5").unwrap(),
+        )
+        .unwrap();
+        let got = sustained_connections(&srv.local_addr().to_string(), ATTEMPT);
+        println!("{label:<9} {got}/{ATTEMPT} connections served");
+        sustained.insert(label.to_string(), got);
+    }
+    let threaded_ok = sustained["threaded"].max(1);
+    let reactor_ok = sustained["reactor"];
+    let ratio = reactor_ok as f64 / threaded_ok as f64;
+    println!("reactor/threaded sustained-connection ratio: {ratio:.1}x");
+    assert!(
+        ratio > 2.0,
+        "reactor must sustain >2x the threaded backend's connections \
+         at equal worker count (got {ratio:.1}x)"
+    );
+
+    // -- persist ------------------------------------------------------
+    let out = obj(vec![
+        ("bench", Json::Str("http_serving".into())),
+        ("closed_loop", Json::Arr(closed_loop)),
+        ("direct_router_rps", Json::Num(direct_rps)),
+        (
+            "routes",
+            Json::Obj(route_snaps),
+        ),
+        (
+            "concurrency_headroom",
+            obj(vec![
+                ("workers", Json::Num(WORKERS as f64)),
+                ("max_connections", Json::Num(MAX_CONNS as f64)),
+                ("attempted", Json::Num(ATTEMPT as f64)),
+                (
+                    "threaded_sustained",
+                    Json::Num(sustained["threaded"] as f64),
+                ),
+                ("reactor_sustained", Json::Num(reactor_ok as f64)),
+                ("ratio", Json::Num(ratio)),
+            ]),
+        ),
+    ]);
+    let path = "BENCH_http_serving.json";
+    std::fs::write(path, json::write(&out)).expect("write bench json");
+    println!("\nwrote {path}");
 }

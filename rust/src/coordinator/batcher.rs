@@ -92,6 +92,62 @@ mod tests {
     }
 
     #[test]
+    fn zero_length_requests_pack_and_scatter() {
+        // A zero-word request occupies a slot but no batch words, and
+        // must scatter back as an empty result — including when it
+        // lands exactly at the capacity boundary.
+        let reqs = vec![vec![], vec![7i32, 8], vec![]];
+        let (p, taken) = pack(&reqs, 4, 0);
+        assert_eq!(taken, 3);
+        assert_eq!(p.used, 2);
+        assert_eq!(p.slots, vec![(0, 0, 0), (1, 0, 2), (2, 2, 0)]);
+        let out = unpack(&p, &p.batch);
+        assert_eq!(out[0], (0, vec![]));
+        assert_eq!(out[1], (1, vec![7, 8]));
+        assert_eq!(out[2], (2, vec![]));
+
+        // Zero-length request after an exactly-full batch: its slot
+        // offset equals capacity, and unpack's `cap..cap` slice must
+        // stay in bounds.
+        let reqs = vec![vec![1i32; 4], vec![]];
+        let (p, taken) = pack(&reqs, 4, 0);
+        assert_eq!(taken, 2);
+        assert_eq!(p.used, 4);
+        assert_eq!(p.slots[1], (1, 4, 0));
+        let out = unpack(&p, &p.batch);
+        assert_eq!(out[1], (1, vec![]));
+    }
+
+    #[test]
+    fn exact_capacity_fill_leaves_no_padding() {
+        let reqs = vec![vec![1i32; 512], vec![2; 512], vec![3; 1]];
+        let (p, taken) = pack(&reqs, 1024, -9);
+        assert_eq!(taken, 2, "third request must wait for the next batch");
+        assert_eq!(p.used, 1024);
+        assert_eq!(p.batch.len(), 1024);
+        assert!(!p.batch.contains(&-9), "no pad word in a full batch");
+        assert_eq!(p.batch[511], 1);
+        assert_eq!(p.batch[512], 2);
+    }
+
+    #[test]
+    fn pad_words_fill_partial_batches_and_never_leak() {
+        let reqs = vec![vec![5i32, 6, 7]];
+        let (p, taken) = pack(&reqs, 8, -42);
+        assert_eq!(taken, 1);
+        assert_eq!(p.used, 3);
+        assert_eq!(&p.batch[..3], &[5, 6, 7]);
+        assert!(p.batch[3..].iter().all(|&w| w == -42), "{:?}", p.batch);
+
+        // Scatter from a result where pad lanes hold poison: no request
+        // may see a pad-lane value.
+        let mut result = vec![i32::MIN; 8];
+        result[..3].copy_from_slice(&[50, 60, 70]);
+        let out = unpack(&p, &result);
+        assert_eq!(out, vec![(0, vec![50, 60, 70])]);
+    }
+
+    #[test]
     fn property_pack_unpack_roundtrip() {
         // For arbitrary request shapes, packing then unpacking an
         // identity result returns every packed request verbatim.

@@ -1,9 +1,11 @@
-//! Minimal concurrency runtime: thread pool + oneshot futures + timers.
+//! Minimal concurrency runtime: thread pool + oneshot futures + wakers.
 //!
-//! tokio is unavailable in the offline crate set, and the coordinator's
-//! needs are modest: a fixed worker pool with a shared injector queue,
-//! oneshot completion handles, and deadline helpers. Everything is built
-//! on `std::thread` + `std::sync::mpsc`/`Condvar`.
+//! tokio is unavailable in the offline crate set, and the needs of the
+//! coordinator and the HTTP reactor are modest: a fixed worker pool
+//! with a shared injector queue, oneshot completion handles, and a
+//! cloneable [`Waker`] callback that worker threads fire to rouse a
+//! blocked event loop (the HTTP reactor backs it with a self-pipe).
+//! Everything is built on `std::thread` + `std::sync::Mutex`/`Condvar`.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -199,6 +201,36 @@ impl<T> Receiver<T> {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Waker
+// ---------------------------------------------------------------------------
+
+/// A cloneable callback that rouses a blocked event loop from another
+/// thread.
+///
+/// Pool jobs hold a clone and call [`Waker::wake`] when their result is
+/// ready; what "waking" means is the loop's business (the HTTP reactor
+/// registers a self-pipe write). Calls must be cheap, non-blocking, and
+/// safe to issue after the loop is gone.
+#[derive(Clone)]
+pub struct Waker(Arc<dyn Fn() + Send + Sync + 'static>);
+
+impl Waker {
+    pub fn new(f: impl Fn() + Send + Sync + 'static) -> Waker {
+        Waker(Arc::new(f))
+    }
+
+    pub fn wake(&self) {
+        (self.0)()
+    }
+}
+
+impl std::fmt::Debug for Waker {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("Waker")
+    }
+}
+
 /// Default worker count: cores - 1, at least 1.
 pub fn default_workers() -> usize {
     std::thread::available_parallelism()
@@ -268,5 +300,26 @@ mod tests {
         let pool = ThreadPool::new(2);
         pool.spawn(|| std::thread::sleep(Duration::from_millis(10)));
         drop(pool); // must not hang
+    }
+
+    #[test]
+    fn waker_fires_from_pool_jobs() {
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h = hits.clone();
+        let waker = Waker::new(move || {
+            h.fetch_add(1, Ordering::SeqCst);
+        });
+        let pool = ThreadPool::new(2);
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let w = waker.clone();
+                pool.submit(move || w.wake())
+            })
+            .collect();
+        for h in handles {
+            h.recv().unwrap();
+        }
+        assert_eq!(hits.load(Ordering::SeqCst), 8);
+        assert_eq!(format!("{waker:?}"), "Waker");
     }
 }

@@ -31,7 +31,8 @@ const SUBCOMMANDS: &[(&str, &str)] = &[
     (
         "serve-http",
         "HTTP activation service: --addr 127.0.0.1:8787 \
-         --routes native:s3_12,native:s3_5 [--workers 8] [--duration-secs 0]",
+         --routes native:s3_12,native:s3_5 [--workers 8] [--max-conns 64] \
+         [--event-loop reactor|threaded] [--duration-secs 0]",
     ),
     ("info", "artifact manifest summary"),
 ];
@@ -316,8 +317,24 @@ fn cmd_serve_http(args: &Args) -> R {
     let routes_spec =
         args.str_or("routes", "native:s3_12,native:s3_5").to_string();
     let workers = args.usize_or("workers", 8)?;
+    // With the reactor backend the connection capacity is no longer tied
+    // to the worker count, so --max-conns stands on its own.
     let max_conns = args.usize_or("max-conns", 64)?;
     let duration_secs = args.u64_or("duration-secs", 0)?;
+    let default_cfg = tanh_vf::server::ServerConfig::default();
+    let event_loop = match args.str_or("event-loop", "") {
+        "" => default_cfg.event_loop,
+        "reactor" => true,
+        "threaded" => false,
+        other => {
+            return Err(usage_err(format!(
+                "--event-loop {other}: use reactor or threaded"
+            )))
+        }
+    };
+    // The reactor needs epoll/poll fds; off unix the server falls back
+    // to the threaded backend, so report what actually runs.
+    let event_loop = event_loop && cfg!(unix);
 
     let routes = tanh_vf::server::parse_routes(&routes_spec)
         .map_err(|e| usage_err(format!("--routes {routes_spec}: {e}")))?;
@@ -326,11 +343,16 @@ fn cmd_serve_http(args: &Args) -> R {
             addr,
             workers,
             max_connections: max_conns,
-            ..Default::default()
+            event_loop,
+            ..default_cfg
         },
         routes,
     )?;
-    println!("tanh-vf http listening on http://{}", srv.local_addr());
+    println!(
+        "tanh-vf http listening on http://{} ({} backend)",
+        srv.local_addr(),
+        if event_loop { "reactor" } else { "threaded" }
+    );
     println!("endpoints: /health /v1/models /v1/eval /v1/batch /metrics");
     for (name, _) in srv.snapshots() {
         println!("route: {name}");

@@ -1,0 +1,647 @@
+//! Nonblocking connection state machine for the reactor backend.
+//!
+//! One [`Conn`] per accepted socket, driven by readiness events:
+//!
+//! ```text
+//!   Reading --(request parsed)--> Dispatching --(pool completes)-->
+//!   Writing --(drained, keep-alive)--> Reading | --(close)--> gone
+//! ```
+//!
+//! Each phase has its own deadline (checked by the reactor's sweep):
+//! a partially received message must keep making progress within
+//! `header_timeout` (slow-loris stall defence -> 408), an idle
+//! keep-alive connection is bounded by `keep_alive`, and a stalled
+//! response drain by `write_timeout`. Dispatch itself is bounded by the
+//! router's `request_timeout` (-> 504), so no phase can hold the
+//! connection forever.
+//!
+//! The state machine is transport-only — it never touches the router.
+//! Parsed requests surface as [`Action::Dispatch`] and the reactor
+//! hands them to the worker pool; internally generated protocol errors
+//! (400/408/413/431/501) are serialized straight into the output
+//! buffer, counted against the shared [`HttpCounters`], and the
+//! connection closes once they drain.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::os::unix::io::{AsRawFd, RawFd};
+use std::time::Instant;
+
+use super::api::error_resp;
+use super::http::{encode_response, HttpError, Parser, Request, Response};
+use super::reactor::Interest;
+use super::{HttpCounters, ServerConfig};
+
+/// Which part of the request lifecycle the connection is in.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum Phase {
+    /// Waiting for (more of) a request.
+    Reading,
+    /// A request is in flight on the worker pool.
+    Dispatching,
+    /// Draining a serialized response.
+    Writing,
+}
+
+/// What the reactor must do after driving the state machine.
+#[derive(Debug)]
+pub(crate) enum Action {
+    /// Nothing beyond refreshing poll interest.
+    Continue,
+    /// A complete request is ready for the worker pool.
+    Dispatch(Request),
+    /// Tear the connection down (any queued bytes already flushed or
+    /// unflushable).
+    Close,
+}
+
+/// Per-connection state: socket, resumable parser, pending output.
+pub(crate) struct Conn {
+    stream: TcpStream,
+    parser: Parser,
+    phase: Phase,
+    out: Vec<u8>,
+    out_pos: usize,
+    keep_after_write: bool,
+    max_body: usize,
+    /// Last progress on the in-progress message (None when idle between
+    /// messages) — anchors the mid-message stall deadline.
+    read_started: Option<Instant>,
+    /// First byte of the in-progress message — never refreshed, so a
+    /// byte-drip client (which always beats the stall deadline) is
+    /// still bounded by the total budget.
+    message_started: Option<Instant>,
+    /// Entry into idle Reading — anchors the keep-alive budget.
+    idle_since: Instant,
+    /// Entry into Writing — anchors the drain deadline.
+    write_since: Option<Instant>,
+    registered: Interest,
+}
+
+/// Bound on bytes consumed per readiness event so one chatty peer
+/// cannot starve the loop (level-triggered polling re-fires).
+const MAX_READ_PER_EVENT: usize = 16 * 4096;
+
+/// Total-receipt budget for one message, as a multiple of the stall
+/// deadline (`header_timeout`): generous enough for a slow legitimate
+/// upload, but a hard bound on a client dripping one byte per
+/// almost-`header_timeout` to dodge the stall check.
+const MESSAGE_BUDGET_FACTOR: u32 = 40;
+
+impl Conn {
+    pub fn new(
+        stream: TcpStream,
+        now: Instant,
+        max_body: usize,
+    ) -> std::io::Result<Conn> {
+        stream.set_nonblocking(true)?;
+        let _ = stream.set_nodelay(true);
+        Ok(Conn {
+            stream,
+            parser: Parser::new(),
+            phase: Phase::Reading,
+            out: Vec::new(),
+            out_pos: 0,
+            keep_after_write: false,
+            max_body,
+            read_started: None,
+            message_started: None,
+            idle_since: now,
+            write_since: None,
+            registered: Interest::Read,
+        })
+    }
+
+    pub fn fd(&self) -> RawFd {
+        self.stream.as_raw_fd()
+    }
+
+    pub fn phase(&self) -> Phase {
+        self.phase
+    }
+
+    /// The readiness this phase needs from the poller.
+    pub fn interest(&self) -> Interest {
+        match self.phase {
+            Phase::Reading => Interest::Read,
+            Phase::Dispatching => Interest::None,
+            Phase::Writing => Interest::Write,
+        }
+    }
+
+    pub fn registered_interest(&self) -> Interest {
+        self.registered
+    }
+
+    pub fn set_registered_interest(&mut self, i: Interest) {
+        self.registered = i;
+    }
+
+    /// Socket is readable: pull bytes, resume the parser, maybe yield a
+    /// request or a protocol-error response.
+    pub fn on_readable(
+        &mut self,
+        now: Instant,
+        http: &HttpCounters,
+    ) -> Action {
+        debug_assert_eq!(self.phase, Phase::Reading);
+        let mut taken = 0usize;
+        let mut eof = false;
+        loop {
+            let mut chunk = [0u8; 4096];
+            match self.stream.read(&mut chunk) {
+                // EOF: stop reading, but parse what arrived first — a
+                // client may write a full request and half-close in one
+                // event. The fd stays readable at EOF (level-triggered),
+                // so a later event closes the connection once the
+                // parser is back at a clean point.
+                Ok(0) => {
+                    eof = true;
+                    break;
+                }
+                Ok(n) => {
+                    self.parser.feed(&chunk[..n]);
+                    // Progress refreshes the stall deadline: a steady
+                    // (if slow) upload is fine; only a silent stall
+                    // mid-message draws the 408 — matching the threaded
+                    // backend's stall-based timeout. The total budget
+                    // (message_started) is anchored once and never
+                    // refreshed.
+                    self.read_started = Some(now);
+                    if self.message_started.is_none() {
+                        self.message_started = Some(now);
+                    }
+                    taken += n;
+                    if taken >= MAX_READ_PER_EVENT {
+                        break;
+                    }
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock =>
+                {
+                    break;
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::Interrupted =>
+                {
+                    continue;
+                }
+                Err(_) => return Action::Close,
+            }
+        }
+        let action = self.try_parse(now, http);
+        // On EOF with nothing dispatchable (idle peer close, or
+        // mid-message hangup with nobody left to answer), tear down now;
+        // a queued error response (phase Writing) still gets to drain.
+        if eof
+            && self.phase == Phase::Reading
+            && matches!(action, Action::Continue)
+        {
+            return Action::Close;
+        }
+        action
+    }
+
+    /// Socket is writable: keep draining the response.
+    pub fn on_writable(
+        &mut self,
+        now: Instant,
+        http: &HttpCounters,
+    ) -> Action {
+        debug_assert_eq!(self.phase, Phase::Writing);
+        if self.flush().is_err() {
+            return Action::Close;
+        }
+        self.after_flush(now, http)
+    }
+
+    /// A dispatched request finished: queue its response (the dispatch
+    /// job already counted the status) and start draining.
+    pub fn complete(
+        &mut self,
+        resp: &Response,
+        keep: bool,
+        now: Instant,
+        http: &HttpCounters,
+    ) -> Action {
+        debug_assert_eq!(self.phase, Phase::Dispatching);
+        self.keep_after_write = keep;
+        self.out = encode_response(resp, keep);
+        self.out_pos = 0;
+        self.phase = Phase::Writing;
+        self.write_since = Some(now);
+        if self.flush().is_err() {
+            return Action::Close;
+        }
+        self.after_flush(now, http)
+    }
+
+    /// Enforce the current phase's deadline.
+    pub fn check_deadline(
+        &mut self,
+        now: Instant,
+        cfg: &ServerConfig,
+        http: &HttpCounters,
+    ) -> Action {
+        match self.phase {
+            Phase::Reading => {
+                if let Some(t0) = self.read_started {
+                    let total_spent = self
+                        .message_started
+                        .map(|m| now.duration_since(m))
+                        .unwrap_or_default();
+                    if now.duration_since(t0) >= cfg.header_timeout
+                        || total_spent
+                            >= cfg.header_timeout * MESSAGE_BUDGET_FACTOR
+                    {
+                        return self.protocol_error(
+                            HttpError::Timeout(
+                                "mid-message read stall".into(),
+                            ),
+                            now,
+                            http,
+                        );
+                    }
+                } else if now.duration_since(self.idle_since)
+                    >= cfg.keep_alive
+                {
+                    return Action::Close;
+                }
+                Action::Continue
+            }
+            Phase::Writing => match self.write_since {
+                Some(t0)
+                    if now.duration_since(t0) >= cfg.write_timeout =>
+                {
+                    Action::Close
+                }
+                _ => Action::Continue,
+            },
+            // Bounded by the router's request_timeout -> 504.
+            Phase::Dispatching => Action::Continue,
+        }
+    }
+
+    // -- internals ----------------------------------------------------
+
+    /// Try to produce the next request from buffered bytes.
+    fn try_parse(&mut self, now: Instant, http: &HttpCounters) -> Action {
+        match self.parser.next_request(self.max_body) {
+            Ok(Some(req)) => {
+                self.read_started = None;
+                self.message_started = None;
+                self.phase = Phase::Dispatching;
+                Action::Dispatch(req)
+            }
+            Ok(None) => {
+                if self.parser.is_clean() {
+                    self.read_started = None;
+                    self.message_started = None;
+                } else {
+                    if self.read_started.is_none() {
+                        self.read_started = Some(now);
+                    }
+                    if self.message_started.is_none() {
+                        self.message_started = Some(now);
+                    }
+                }
+                Action::Continue
+            }
+            Err(e) => self.protocol_error(e, now, http),
+        }
+    }
+
+    /// Serialize + count an internally generated error response; the
+    /// connection always closes once it drains.
+    fn protocol_error(
+        &mut self,
+        e: HttpError,
+        now: Instant,
+        http: &HttpCounters,
+    ) -> Action {
+        let status = e.status();
+        if status == 0 {
+            return Action::Close;
+        }
+        http.count_response(status);
+        let resp = error_resp(status, "protocol_error", &e.to_string());
+        self.keep_after_write = false;
+        self.out = encode_response(&resp, false);
+        self.out_pos = 0;
+        self.phase = Phase::Writing;
+        self.write_since = Some(now);
+        self.read_started = None;
+        self.message_started = None;
+        if self.flush().is_err() {
+            return Action::Close;
+        }
+        self.after_flush(now, http)
+    }
+
+    /// Write as much pending output as the socket accepts.
+    fn flush(&mut self) -> Result<(), ()> {
+        while self.out_pos < self.out.len() {
+            match self.stream.write(&self.out[self.out_pos..]) {
+                Ok(0) => return Err(()),
+                Ok(n) => self.out_pos += n,
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock =>
+                {
+                    return Ok(());
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(_) => return Err(()),
+            }
+        }
+        Ok(())
+    }
+
+    /// Post-flush transition: stay in Writing, close, or go back to
+    /// Reading — where a pipelined request may already be buffered.
+    fn after_flush(&mut self, now: Instant, http: &HttpCounters) -> Action {
+        if self.out_pos < self.out.len() {
+            return Action::Continue; // still draining; stay in Writing
+        }
+        self.out.clear();
+        self.out_pos = 0;
+        self.write_since = None;
+        if !self.keep_after_write {
+            return Action::Close;
+        }
+        self.phase = Phase::Reading;
+        self.idle_since = now;
+        self.read_started = None;
+        self.try_parse(now, http)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::{TcpListener, TcpStream};
+    use std::time::Duration;
+
+    fn pair() -> (TcpStream, TcpStream) {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        let a = TcpStream::connect(addr).unwrap();
+        let (b, _) = l.accept().unwrap();
+        (a, b)
+    }
+
+    fn test_cfg() -> ServerConfig {
+        ServerConfig {
+            header_timeout: Duration::from_millis(200),
+            keep_alive: Duration::from_millis(500),
+            write_timeout: Duration::from_secs(2),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn request_dispatch_response_cycle_with_pipelining() {
+        let (mut client, server) = pair();
+        let now = Instant::now();
+        let http = HttpCounters::default();
+        let mut conn = Conn::new(server, now, 1 << 20).unwrap();
+
+        // Two pipelined requests land in one write.
+        client
+            .write_all(b"GET /a HTTP/1.1\r\n\r\nGET /b HTTP/1.1\r\n\r\n")
+            .unwrap();
+        std::thread::sleep(Duration::from_millis(50));
+        let req_a = match conn.on_readable(now, &http) {
+            Action::Dispatch(r) => r,
+            other => panic!("expected dispatch, got {other:?}"),
+        };
+        assert_eq!(req_a.path(), "/a");
+        assert_eq!(conn.phase(), Phase::Dispatching);
+        assert_eq!(conn.interest(), Interest::None);
+
+        // Completing /a must immediately surface the pipelined /b.
+        let resp = Response::text(200, "ok-a");
+        let req_b = match conn.complete(&resp, true, now, &http) {
+            Action::Dispatch(r) => r,
+            other => panic!("expected pipelined dispatch, got {other:?}"),
+        };
+        assert_eq!(req_b.path(), "/b");
+
+        // And /b's completion returns the connection to idle Reading.
+        let resp = Response::text(200, "ok-b");
+        match conn.complete(&resp, true, now, &http) {
+            Action::Continue => {}
+            other => panic!("expected continue, got {other:?}"),
+        }
+        assert_eq!(conn.phase(), Phase::Reading);
+
+        // Client sees both responses, in order.
+        client
+            .set_read_timeout(Some(Duration::from_secs(5)))
+            .unwrap();
+        let mut cc = crate::server::http::HttpConn::new(client);
+        let (s1, _, b1) = cc.read_response(1 << 20).unwrap();
+        let (s2, _, b2) = cc.read_response(1 << 20).unwrap();
+        assert_eq!((s1, s2), (200, 200));
+        assert_eq!((b1.as_slice(), b2.as_slice()), (&b"ok-a"[..], &b"ok-b"[..]));
+    }
+
+    #[test]
+    fn partial_writes_drain_across_writable_events() {
+        let (client, server) = pair();
+        let now = Instant::now();
+        let http = HttpCounters::default();
+        let mut conn = Conn::new(server, now, 1 << 20).unwrap();
+
+        // Drive a request through so the state machine is in Dispatching.
+        let mut c = client.try_clone().unwrap();
+        c.write_all(b"GET /big HTTP/1.1\r\n\r\n").unwrap();
+        std::thread::sleep(Duration::from_millis(50));
+        let req = match conn.on_readable(now, &http) {
+            Action::Dispatch(r) => r,
+            other => panic!("expected dispatch, got {other:?}"),
+        };
+        assert_eq!(req.path(), "/big");
+
+        // A response far larger than any socket buffer forces a partial
+        // write: the connection must park in Writing with bytes pending.
+        let big = "x".repeat(8 << 20);
+        let resp = Response::text(200, &big);
+        match conn.complete(&resp, true, now, &http) {
+            Action::Continue => {}
+            other => panic!("big response finished instantly: {other:?}"),
+        }
+        assert_eq!(conn.phase(), Phase::Writing);
+        assert_eq!(conn.interest(), Interest::Write);
+
+        // Reader drains the client side concurrently.
+        let reader = std::thread::spawn(move || {
+            let mut cc = crate::server::http::HttpConn::new(client);
+            cc.stream()
+                .set_read_timeout(Some(Duration::from_secs(20)))
+                .unwrap();
+            cc.read_response(16 << 20).unwrap()
+        });
+
+        // Repeated writable events eventually drain the whole response.
+        let t0 = Instant::now();
+        while conn.phase() == Phase::Writing {
+            assert!(
+                t0.elapsed() < Duration::from_secs(20),
+                "write never drained"
+            );
+            match conn.on_writable(Instant::now(), &http) {
+                Action::Continue => {
+                    std::thread::sleep(Duration::from_millis(1))
+                }
+                other => panic!("unexpected action {other:?}"),
+            }
+        }
+        assert_eq!(conn.phase(), Phase::Reading);
+        let (status, _, body) = reader.join().unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body.len(), 8 << 20);
+        assert!(body.iter().all(|&b| b == b'x'));
+    }
+
+    #[test]
+    fn slow_loris_partial_header_hits_408_deadline() {
+        let (mut client, server) = pair();
+        let cfg = test_cfg();
+        let t0 = Instant::now();
+        let http = HttpCounters::default();
+        let mut conn = Conn::new(server, t0, 1 << 20).unwrap();
+
+        // A partial request line, then silence.
+        client.write_all(b"GET /health HT").unwrap();
+        std::thread::sleep(Duration::from_millis(50));
+        match conn.on_readable(t0, &http) {
+            Action::Continue => {}
+            other => panic!("partial bytes must keep reading: {other:?}"),
+        }
+
+        // Before the deadline: still fine.
+        match conn.check_deadline(t0 + Duration::from_millis(100), &cfg, &http)
+        {
+            Action::Continue => {}
+            other => panic!("deadline fired early: {other:?}"),
+        }
+        // Past the deadline: 408 is queued, flushed, and the connection
+        // closes.
+        match conn.check_deadline(t0 + Duration::from_millis(250), &cfg, &http)
+        {
+            Action::Close => {}
+            other => panic!("expected close after 408, got {other:?}"),
+        }
+        assert_eq!(
+            http.responses_4xx.load(std::sync::atomic::Ordering::Relaxed),
+            1
+        );
+        client
+            .set_read_timeout(Some(Duration::from_secs(5)))
+            .unwrap();
+        let mut buf = Vec::new();
+        let _ = client.read_to_end(&mut buf);
+        let text = String::from_utf8_lossy(&buf);
+        assert!(text.starts_with("HTTP/1.1 408"), "{text}");
+    }
+
+    #[test]
+    fn idle_keep_alive_budget_expires_silently() {
+        let (client, server) = pair();
+        let cfg = test_cfg();
+        let t0 = Instant::now();
+        let http = HttpCounters::default();
+        let mut conn = Conn::new(server, t0, 1 << 20).unwrap();
+
+        match conn.check_deadline(t0 + Duration::from_millis(100), &cfg, &http)
+        {
+            Action::Continue => {}
+            other => panic!("idle budget spent early: {other:?}"),
+        }
+        match conn.check_deadline(t0 + Duration::from_millis(600), &cfg, &http)
+        {
+            Action::Close => {}
+            other => panic!("expected idle close, got {other:?}"),
+        }
+        assert_eq!(
+            http.responses_4xx.load(std::sync::atomic::Ordering::Relaxed),
+            0,
+            "idle expiry must not synthesize a response"
+        );
+        drop(client);
+    }
+
+    #[test]
+    fn request_then_half_close_is_still_served() {
+        // Data + EOF can land in one readiness event (client writes a
+        // request and immediately shuts down its write side); the
+        // buffered request must dispatch, not be dropped.
+        let (mut client, server) = pair();
+        let now = Instant::now();
+        let http = HttpCounters::default();
+        let mut conn = Conn::new(server, now, 1 << 20).unwrap();
+        client.write_all(b"GET /last HTTP/1.1\r\n\r\n").unwrap();
+        client.shutdown(std::net::Shutdown::Write).unwrap();
+        std::thread::sleep(Duration::from_millis(50));
+        let req = match conn.on_readable(now, &http) {
+            Action::Dispatch(r) => r,
+            other => panic!("half-closed request dropped: {other:?}"),
+        };
+        assert_eq!(req.path(), "/last");
+        match conn.complete(&Response::text(200, "late"), true, now, &http) {
+            Action::Continue => {}
+            other => panic!("unexpected {other:?}"),
+        }
+        // The pending EOF now closes the connection on the next event.
+        match conn.on_readable(now, &http) {
+            Action::Close => {}
+            other => panic!("expected close after EOF, got {other:?}"),
+        }
+        client
+            .set_read_timeout(Some(Duration::from_secs(5)))
+            .unwrap();
+        let mut buf = Vec::new();
+        let _ = client.read_to_end(&mut buf);
+        let text = String::from_utf8_lossy(&buf);
+        assert!(text.starts_with("HTTP/1.1 200"), "{text}");
+    }
+
+    #[test]
+    fn peer_eof_closes() {
+        let (client, server) = pair();
+        let now = Instant::now();
+        let http = HttpCounters::default();
+        let mut conn = Conn::new(server, now, 1 << 20).unwrap();
+        drop(client);
+        std::thread::sleep(Duration::from_millis(20));
+        match conn.on_readable(now, &http) {
+            Action::Close => {}
+            other => panic!("expected close on EOF, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn protocol_garbage_gets_400_then_close() {
+        let (mut client, server) = pair();
+        let now = Instant::now();
+        let http = HttpCounters::default();
+        let mut conn = Conn::new(server, now, 1 << 20).unwrap();
+        client.write_all(b"THIS IS NOT HTTP\r\n\r\n").unwrap();
+        std::thread::sleep(Duration::from_millis(50));
+        match conn.on_readable(now, &http) {
+            Action::Close => {}
+            other => panic!("expected close after 400, got {other:?}"),
+        }
+        client
+            .set_read_timeout(Some(Duration::from_secs(5)))
+            .unwrap();
+        let mut buf = Vec::new();
+        let _ = client.read_to_end(&mut buf);
+        assert!(
+            String::from_utf8_lossy(&buf).starts_with("HTTP/1.1 400"),
+            "{}",
+            String::from_utf8_lossy(&buf)
+        );
+    }
+}

@@ -56,6 +56,7 @@ pub struct LoadReport {
     pub words: u64,
     pub wall: Duration,
     pub p50_us: u64,
+    pub p95_us: u64,
     pub p99_us: u64,
     pub max_us: u64,
 }
@@ -72,15 +73,38 @@ impl LoadReport {
     pub fn render(&self) -> String {
         format!(
             "{} reqs ({} failed) in {:?}: {:.0} req/s, {:.2e} words/s, \
-             p50 {} us, p99 {} us, max {} us",
+             p50 {} us, p95 {} us, p99 {} us, max {} us",
             self.requests,
             self.failures,
             self.wall,
             self.req_per_s(),
             self.words_per_s(),
             self.p50_us,
+            self.p95_us,
             self.p99_us,
             self.max_us
+        )
+    }
+
+    /// Machine-readable form: the perf-trajectory record the
+    /// `http_serving` bench persists to `BENCH_http_serving.json`.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(
+            [
+                ("requests", Json::Num(self.requests as f64)),
+                ("failures", Json::Num(self.failures as f64)),
+                ("words", Json::Num(self.words as f64)),
+                ("wall_s", Json::Num(self.wall.as_secs_f64())),
+                ("rps", Json::Num(self.req_per_s())),
+                ("words_per_s", Json::Num(self.words_per_s())),
+                ("p50_us", Json::Num(self.p50_us as f64)),
+                ("p95_us", Json::Num(self.p95_us as f64)),
+                ("p99_us", Json::Num(self.p99_us as f64)),
+                ("max_us", Json::Num(self.max_us as f64)),
+            ]
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect(),
         )
     }
 }
@@ -125,6 +149,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport, String> {
         words,
         wall,
         p50_us: pick(0.50),
+        p95_us: pick(0.95),
         p99_us: pick(0.99),
         max_us: lats.last().copied().unwrap_or(0),
     })

@@ -1,28 +1,57 @@
 //! Layer-4 HTTP activation-serving front-end.
 //!
-//! A dependency-free HTTP/1.1 service (std `TcpListener` + the crate's
-//! own [`ThreadPool`]) layered on the multi-precision
+//! A dependency-free HTTP/1.1 service layered on the multi-precision
 //! [`Router`](crate::coordinator::router::Router): the network front
 //! door for the paper's "easily tuned for different accuracy and
 //! precision requirements" claim — one route per precision, selected
 //! per-request by model name.
 //!
-//! * [`http`]    — strict request/response wire layer (shared with the
-//!   client side used by tests and the load generator).
+//! ## Layer map
+//!
+//! * [`http`]    — incremental request/response parser ([`http::Parser`]:
+//!   feed bytes, resume mid-header/mid-body, chunked transfer coding
+//!   with trailers) plus the blocking [`http::HttpConn`] wrapper shared
+//!   with the client side used by tests and the load generator.
+//! * [`conn`]    — per-connection state machine for the reactor:
+//!   read → parse → dispatch → write → keep-alive, with per-state
+//!   deadlines (slow-loris 408, write-stall close, idle budget).
+//! * [`reactor`] — readiness event loop: raw `epoll` bindings with a
+//!   portable `poll(2)` fallback (`TANHVF_POLLER=poll`), a self-pipe
+//!   [`Waker`](crate::exec::Waker), and the accept/dispatch/deadline
+//!   loop. One thread multiplexes every connection.
 //! * [`api`]     — JSON endpoints: `/health`, `/v1/models`, `/v1/eval`,
 //!   `/v1/batch`, `/metrics`.
-//! * [`loadgen`] — closed-loop multi-connection load generator.
+//! * [`loadgen`] — closed-loop multi-connection load generator with a
+//!   machine-readable JSON report.
 //!
-//! Backpressure is two-level: the accept loop answers 503 above the
-//! connection limit, and coordinator queue-limit rejections surface as
-//! 503 from the eval endpoints. Shutdown uses the crate's `AtomicBool`
-//! pattern: flag + wake the blocking accept with a loopback connect,
-//! then drain handler threads (they poll the flag on a 250 ms read
-//! tick).
+//! ## Backends
+//!
+//! [`ServerConfig::event_loop`] selects between two transport backends
+//! over the same parser, API, and worker pool:
+//!
+//! * **Reactor** (default on unix): nonblocking sockets driven by
+//!   readiness events. Open-connection capacity is bounded only by
+//!   `max_connections`; `workers` bounds *in-flight dispatches*. A
+//!   parsed request is handed to the [`ThreadPool`]; completion wakes
+//!   the reactor through the self-pipe and the response drains
+//!   nonblockingly (partial writes resume on the next writable event).
+//! * **Threaded** (fallback, `TANHVF_SERVER_BACKEND=threaded`): one
+//!   blocking handler thread per open connection, capacity
+//!   `min(max_connections, workers)`.
+//!
+//! Backpressure is identical in both: the accept path answers 503 above
+//! the connection limit, and coordinator queue-limit rejections surface
+//! as 503 from the eval endpoints. Shutdown uses the crate's
+//! `AtomicBool` pattern: flag + wake (self-pipe for the reactor, a
+//! loopback connect for the blocking accept), then join.
 
 pub mod api;
+#[cfg(unix)]
+pub(crate) mod conn;
 pub mod http;
 pub mod loadgen;
+#[cfg(unix)]
+pub(crate) mod reactor;
 
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -31,7 +60,7 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::router::{Route, Router};
 use crate::coordinator::Snapshot;
-use crate::exec::ThreadPool;
+use crate::exec::{ThreadPool, Waker};
 use crate::runtime::artifacts_dir;
 use crate::tanh::{Subtractor, TanhConfig};
 
@@ -39,25 +68,40 @@ use http::{HttpConn, Outcome};
 
 /// Tuning knobs for one server instance.
 ///
-/// An admitted connection owns one handler thread until it closes
-/// (blocking keep-alive loop), so the effective concurrent-connection
-/// capacity is `min(max_connections, workers)`; connections beyond it
-/// are answered 503 at accept time.
+/// With the reactor backend (`event_loop: true`), `max_connections`
+/// bounds open sockets on its own and `workers` independently bounds
+/// in-flight dispatches. With the threaded backend an admitted
+/// connection owns one handler thread until it closes, so the effective
+/// connection capacity is `min(max_connections, workers)`.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
     /// Bind address; port 0 picks an ephemeral port.
     pub addr: String,
-    /// Connection-handler threads.
+    /// Dispatch workers (reactor) / connection-handler threads
+    /// (threaded).
     pub workers: usize,
     /// Open-connection bound; beyond it new connections get an
     /// immediate 503.
     pub max_connections: usize,
-    /// Request body size limit (413 beyond).
+    /// Request body size limit, decoded (413 beyond) — applies to
+    /// `Content-Length` and chunked bodies alike.
     pub max_body_bytes: usize,
     /// Idle keep-alive budget per connection.
     pub keep_alive: Duration,
     /// How long an eval may wait on its coordinator before 504.
     pub request_timeout: Duration,
+    /// Transport backend: readiness-driven reactor (true) or blocking
+    /// thread-per-connection (false). Defaults to the reactor on unix;
+    /// `TANHVF_SERVER_BACKEND=threaded|reactor` overrides.
+    pub event_loop: bool,
+    /// Reactor deadline: a partially received message must keep making
+    /// progress (bytes arriving) at least this often, else 408 — the
+    /// slow-loris stall defence (the threaded backend's analogue is its
+    /// 250 ms blocking-read tick).
+    pub header_timeout: Duration,
+    /// Reactor deadline: a response must drain within this budget,
+    /// else the connection is dropped.
+    pub write_timeout: Duration,
 }
 
 impl Default for ServerConfig {
@@ -65,11 +109,23 @@ impl Default for ServerConfig {
         ServerConfig {
             addr: "127.0.0.1:8787".into(),
             workers: 16,
-            max_connections: 16,
+            max_connections: 64,
             max_body_bytes: 1 << 20,
             keep_alive: Duration::from_secs(5),
             request_timeout: Duration::from_secs(10),
+            event_loop: default_event_loop(),
+            header_timeout: Duration::from_secs(5),
+            write_timeout: Duration::from_secs(10),
         }
+    }
+}
+
+/// Backend default: reactor on unix, overridable for CI A/B runs.
+fn default_event_loop() -> bool {
+    match std::env::var("TANHVF_SERVER_BACKEND").as_deref() {
+        Ok("threaded") => false,
+        Ok("reactor") => true,
+        _ => cfg!(unix),
     }
 }
 
@@ -112,6 +168,9 @@ pub struct Server {
     accept_thread: Option<std::thread::JoinHandle<()>>,
     pool: Option<Arc<ThreadPool>>,
     state: Arc<AppState>,
+    /// Present with the reactor backend: rouses the event loop so the
+    /// shutdown flag is observed immediately.
+    waker: Option<Waker>,
 }
 
 impl Server {
@@ -129,19 +188,9 @@ impl Server {
         });
         let pool = Arc::new(ThreadPool::new(cfg.workers.max(1)));
         let shutdown = Arc::new(AtomicBool::new(false));
-        let active = Arc::new(AtomicUsize::new(0));
 
-        let accept_thread = {
-            let state = state.clone();
-            let shutdown = shutdown.clone();
-            let pool = pool.clone();
-            std::thread::Builder::new()
-                .name("tanhvf-http-accept".into())
-                .spawn(move || {
-                    accept_loop(&listener, &cfg, &state, &shutdown, &active, &pool)
-                })
-                .map_err(|e| format!("spawn accept thread: {e}"))?
-        };
+        let (accept_thread, waker) =
+            launch_backend(listener, &cfg, &state, &shutdown, &pool)?;
 
         Ok(Server {
             local_addr,
@@ -149,6 +198,7 @@ impl Server {
             accept_thread: Some(accept_thread),
             pool: Some(pool),
             state,
+            waker,
         })
     }
 
@@ -172,16 +222,21 @@ impl Server {
     /// Idempotent; also runs on drop.
     pub fn shutdown(&mut self) {
         self.shutdown.store(true, Ordering::SeqCst);
-        // Unblock the accept() call with a throwaway loopback connect.
-        let _ = TcpStream::connect_timeout(
-            &self.local_addr,
-            Duration::from_millis(200),
-        );
+        match &self.waker {
+            // Reactor: the self-pipe interrupts the poll wait.
+            Some(w) => w.wake(),
+            // Threaded: unblock accept() with a throwaway connect.
+            None => {
+                let _ = TcpStream::connect_timeout(
+                    &self.local_addr,
+                    Duration::from_millis(200),
+                );
+            }
+        }
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
         }
-        // Dropping the last pool Arc joins the handler threads (they
-        // observe the flag within one 250 ms read tick).
+        // Dropping the last pool Arc joins the worker threads.
         self.pool.take();
     }
 }
@@ -190,6 +245,74 @@ impl Drop for Server {
     fn drop(&mut self) {
         self.shutdown();
     }
+}
+
+/// Spawn the transport backend thread: the reactor event loop when
+/// `event_loop` is set (unix only), else the blocking accept loop.
+#[cfg(unix)]
+fn launch_backend(
+    listener: TcpListener,
+    cfg: &ServerConfig,
+    state: &Arc<AppState>,
+    shutdown: &Arc<AtomicBool>,
+    pool: &Arc<ThreadPool>,
+) -> Result<(std::thread::JoinHandle<()>, Option<Waker>), String> {
+    if !cfg.event_loop {
+        return spawn_threaded(listener, cfg, state, shutdown, pool)
+            .map(|t| (t, None));
+    }
+    let (wake_reader, waker) =
+        reactor::self_pipe().map_err(|e| format!("self-pipe: {e}"))?;
+    let poller = reactor::init_poller(&listener, &wake_reader)
+        .map_err(|e| format!("reactor init: {e}"))?;
+    let cfg = cfg.clone();
+    let state = state.clone();
+    let shutdown = shutdown.clone();
+    let pool = pool.clone();
+    let job_waker = waker.clone();
+    let t = std::thread::Builder::new()
+        .name("tanhvf-http-reactor".into())
+        .spawn(move || {
+            reactor::run(
+                listener, poller, cfg, state, shutdown, pool, wake_reader,
+                job_waker,
+            )
+        })
+        .map_err(|e| format!("spawn reactor thread: {e}"))?;
+    Ok((t, Some(waker)))
+}
+
+#[cfg(not(unix))]
+fn launch_backend(
+    listener: TcpListener,
+    cfg: &ServerConfig,
+    state: &Arc<AppState>,
+    shutdown: &Arc<AtomicBool>,
+    pool: &Arc<ThreadPool>,
+) -> Result<(std::thread::JoinHandle<()>, Option<Waker>), String> {
+    spawn_threaded(listener, cfg, state, shutdown, pool).map(|t| (t, None))
+}
+
+/// The legacy blocking backend: one accept thread feeding handler jobs
+/// (one per open connection) into the pool.
+fn spawn_threaded(
+    listener: TcpListener,
+    cfg: &ServerConfig,
+    state: &Arc<AppState>,
+    shutdown: &Arc<AtomicBool>,
+    pool: &Arc<ThreadPool>,
+) -> Result<std::thread::JoinHandle<()>, String> {
+    let cfg = cfg.clone();
+    let state = state.clone();
+    let shutdown = shutdown.clone();
+    let pool = pool.clone();
+    let active = Arc::new(AtomicUsize::new(0));
+    std::thread::Builder::new()
+        .name("tanhvf-http-accept".into())
+        .spawn(move || {
+            accept_loop(&listener, &cfg, &state, &shutdown, &active, &pool)
+        })
+        .map_err(|e| format!("spawn accept thread: {e}"))
 }
 
 fn accept_loop(
@@ -218,24 +341,7 @@ fn accept_loop(
         let prev = active.fetch_add(1, Ordering::SeqCst);
         if prev >= limit {
             active.fetch_sub(1, Ordering::SeqCst);
-            state.http.rejected_connections.fetch_add(1, Ordering::Relaxed);
-            state.http.count_response(503);
-            let mut conn = HttpConn::new(stream);
-            let _ = conn.write_response(
-                &api::error_resp(
-                    503,
-                    "overloaded",
-                    "connection limit reached, retry later",
-                ),
-                false,
-            );
-            // Best-effort drain of any already-sent request bytes so the
-            // close sends FIN rather than RST (which could destroy the
-            // 503 in the peer's receive buffer).
-            let _ = conn.stream().set_nonblocking(true);
-            let mut sink = [0u8; 4096];
-            let mut r = conn.stream();
-            let _ = std::io::Read::read(&mut r, &mut sink);
+            reject_over_limit(stream, state);
             continue;
         }
         let guard = ConnGuard(active.clone());
@@ -247,6 +353,28 @@ fn accept_loop(
             handle_connection(&st, &cc, stream, &sd);
         });
     }
+}
+
+/// Accept-time 503 rejection shared by both backends: a proactive
+/// response before any request bytes, then a best-effort drain of
+/// already-sent bytes so the close sends FIN rather than RST (which
+/// could destroy the 503 in the peer's receive buffer).
+pub(crate) fn reject_over_limit(stream: TcpStream, state: &AppState) {
+    state.http.rejected_connections.fetch_add(1, Ordering::Relaxed);
+    state.http.count_response(503);
+    let mut conn = HttpConn::new(stream);
+    let _ = conn.write_response(
+        &api::error_resp(
+            503,
+            "overloaded",
+            "connection limit reached, retry later",
+        ),
+        false,
+    );
+    let _ = conn.stream().set_nonblocking(true);
+    let mut sink = [0u8; 4096];
+    let mut r = conn.stream();
+    let _ = std::io::Read::read(&mut r, &mut sink);
 }
 
 struct ConnGuard(Arc<AtomicUsize>);
@@ -428,5 +556,14 @@ mod tests {
         assert!(validate_backend("pjrt").is_ok());
         let e = validate_backend("onnx").unwrap_err();
         assert!(e.contains("native|pjrt"), "{e}");
+    }
+
+    #[test]
+    fn backend_env_override_parses() {
+        // Whatever the ambient env says, an explicit field always wins;
+        // this only checks the default resolver's fallback branch.
+        let d = ServerConfig::default();
+        assert_eq!(d.max_connections, 64);
+        assert!(d.header_timeout > Duration::from_millis(0));
     }
 }

@@ -1,0 +1,942 @@
+//! Readiness-driven event loop for the L4 front end (zero external
+//! deps).
+//!
+//! Three pieces:
+//!
+//! * [`Poller`] — a thin wrapper over raw `epoll_create1`/`epoll_ctl`/
+//!   `epoll_wait` (Linux) with a portable `poll(2)` fallback, both via
+//!   direct `extern "C"` bindings (std already links libc). The
+//!   fallback is also selectable at runtime (`TANHVF_POLLER=poll`) so
+//!   CI exercises it on Linux.
+//! * [`self_pipe`] — the classic self-pipe waker: worker threads wake
+//!   the blocked `wait()` by writing one byte; the read end is a
+//!   registered fd like any other. Exposed as a [`crate::exec::Waker`]
+//!   so completion callbacks stay decoupled from the pipe.
+//! * [`run`] — the reactor proper: one thread multiplexing the
+//!   listener, every connection's [`Conn`] state machine, dispatch
+//!   completions from the [`ThreadPool`] workers, and per-state
+//!   deadline sweeps. Connection capacity is bounded only by
+//!   `max_connections` — workers bound *in-flight dispatches*, not open
+//!   sockets.
+
+use std::collections::HashMap;
+use std::io;
+use std::net::TcpListener;
+use std::os::raw::{c_int, c_short, c_void};
+use std::os::unix::io::{AsRawFd, RawFd};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::exec::{ThreadPool, Waker};
+
+use super::api;
+use super::conn::{Action, Conn, Phase};
+use super::http::{Request, Response};
+use super::{AppState, ServerConfig};
+
+// ---------------------------------------------------------------------
+// Raw syscall surface
+// ---------------------------------------------------------------------
+
+#[cfg(target_os = "linux")]
+mod epoll_sys {
+    use super::{c_int, io, RawFd};
+
+    pub const EPOLL_CLOEXEC: c_int = 0o2000000;
+    pub const EPOLL_CTL_ADD: c_int = 1;
+    pub const EPOLL_CTL_DEL: c_int = 2;
+    pub const EPOLL_CTL_MOD: c_int = 3;
+    pub const EPOLLIN: u32 = 0x001;
+    pub const EPOLLPRI: u32 = 0x002;
+    pub const EPOLLOUT: u32 = 0x004;
+    pub const EPOLLERR: u32 = 0x008;
+    pub const EPOLLHUP: u32 = 0x010;
+    pub const EPOLLRDHUP: u32 = 0x2000;
+
+    /// Layout of `struct epoll_event`: packed on x86-64 only, matching
+    /// the kernel ABI (see `epoll.h`).
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[derive(Clone, Copy)]
+    pub struct EpollEvent {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: c_int) -> c_int;
+        fn epoll_ctl(
+            epfd: c_int,
+            op: c_int,
+            fd: c_int,
+            event: *mut EpollEvent,
+        ) -> c_int;
+        fn epoll_wait(
+            epfd: c_int,
+            events: *mut EpollEvent,
+            maxevents: c_int,
+            timeout: c_int,
+        ) -> c_int;
+    }
+
+    pub fn create() -> io::Result<c_int> {
+        let fd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+        if fd < 0 {
+            Err(io::Error::last_os_error())
+        } else {
+            Ok(fd)
+        }
+    }
+
+    pub fn ctl(
+        epfd: c_int,
+        op: c_int,
+        fd: RawFd,
+        events: u32,
+        token: u64,
+    ) -> io::Result<()> {
+        let mut ev = EpollEvent { events, data: token };
+        let rc = unsafe { epoll_ctl(epfd, op, fd, &mut ev) };
+        if rc < 0 {
+            Err(io::Error::last_os_error())
+        } else {
+            Ok(())
+        }
+    }
+
+    pub fn wait(
+        epfd: c_int,
+        events: &mut [EpollEvent],
+        timeout_ms: c_int,
+    ) -> io::Result<usize> {
+        let rc = unsafe {
+            epoll_wait(
+                epfd,
+                events.as_mut_ptr(),
+                events.len() as c_int,
+                timeout_ms,
+            )
+        };
+        if rc < 0 {
+            Err(io::Error::last_os_error())
+        } else {
+            Ok(rc as usize)
+        }
+    }
+}
+
+/// `struct pollfd` for the portable fallback.
+#[repr(C)]
+#[derive(Clone, Copy)]
+struct PollFd {
+    fd: c_int,
+    events: c_short,
+    revents: c_short,
+}
+
+const POLLIN: c_short = 0x001;
+const POLLPRI: c_short = 0x002;
+const POLLOUT: c_short = 0x004;
+const POLLERR: c_short = 0x008;
+const POLLHUP: c_short = 0x010;
+const POLLNVAL: c_short = 0x020;
+
+#[cfg(target_os = "linux")]
+type NfdsT = std::os::raw::c_ulong;
+#[cfg(not(target_os = "linux"))]
+type NfdsT = std::os::raw::c_uint;
+
+const F_GETFL: c_int = 3;
+const F_SETFL: c_int = 4;
+#[cfg(target_os = "linux")]
+const O_NONBLOCK: c_int = 0o4000;
+#[cfg(not(target_os = "linux"))]
+const O_NONBLOCK: c_int = 0x4;
+
+extern "C" {
+    fn poll(fds: *mut PollFd, nfds: NfdsT, timeout: c_int) -> c_int;
+    fn pipe(fds: *mut c_int) -> c_int;
+    fn close(fd: c_int) -> c_int;
+    fn read(fd: c_int, buf: *mut c_void, count: usize) -> isize;
+    fn write(fd: c_int, buf: *const c_void, count: usize) -> isize;
+    fn fcntl(fd: c_int, cmd: c_int, ...) -> c_int;
+}
+
+fn set_nonblocking_fd(fd: RawFd) -> io::Result<()> {
+    unsafe {
+        let flags = fcntl(fd, F_GETFL, 0);
+        if flags < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        if fcntl(fd, F_SETFL, flags | O_NONBLOCK) < 0 {
+            return Err(io::Error::last_os_error());
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Poller
+// ---------------------------------------------------------------------
+
+/// What a registered fd should be watched for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum Interest {
+    /// Only errors/hangup (a connection parked in dispatch).
+    None,
+    Read,
+    Write,
+}
+
+/// One readiness notification.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct Event {
+    pub token: u64,
+    pub readable: bool,
+    pub writable: bool,
+    /// Error or full hangup — the fd is dead regardless of interest.
+    pub closed: bool,
+}
+
+/// Readiness selector: epoll on Linux, `poll(2)` elsewhere (or when
+/// forced, so the fallback stays tested).
+pub(crate) enum Poller {
+    #[cfg(target_os = "linux")]
+    Epoll(EpollPoller),
+    Poll(PollPoller),
+}
+
+impl Poller {
+    pub fn new(force_poll: bool) -> io::Result<Poller> {
+        #[cfg(target_os = "linux")]
+        {
+            if !force_poll {
+                return Ok(Poller::Epoll(EpollPoller::new()?));
+            }
+        }
+        let _ = force_poll;
+        Ok(Poller::Poll(PollPoller::new()))
+    }
+
+    pub fn add(
+        &mut self,
+        fd: RawFd,
+        token: u64,
+        interest: Interest,
+    ) -> io::Result<()> {
+        match self {
+            #[cfg(target_os = "linux")]
+            Poller::Epoll(p) => p.add(fd, token, interest),
+            Poller::Poll(p) => p.add(fd, token, interest),
+        }
+    }
+
+    pub fn modify(
+        &mut self,
+        fd: RawFd,
+        token: u64,
+        interest: Interest,
+    ) -> io::Result<()> {
+        match self {
+            #[cfg(target_os = "linux")]
+            Poller::Epoll(p) => p.modify(fd, token, interest),
+            Poller::Poll(p) => p.modify(fd, interest),
+        }
+    }
+
+    pub fn remove(&mut self, fd: RawFd) {
+        match self {
+            #[cfg(target_os = "linux")]
+            Poller::Epoll(p) => p.remove(fd),
+            Poller::Poll(p) => p.remove(fd),
+        }
+    }
+
+    /// Collect ready events into `out` (cleared first). A timeout with
+    /// no events, or an EINTR, yields an empty `out`.
+    pub fn wait(
+        &mut self,
+        out: &mut Vec<Event>,
+        timeout_ms: i32,
+    ) -> io::Result<()> {
+        out.clear();
+        match self {
+            #[cfg(target_os = "linux")]
+            Poller::Epoll(p) => p.wait(out, timeout_ms),
+            Poller::Poll(p) => p.wait(out, timeout_ms),
+        }
+    }
+}
+
+#[cfg(target_os = "linux")]
+pub(crate) struct EpollPoller {
+    epfd: c_int,
+}
+
+#[cfg(target_os = "linux")]
+impl EpollPoller {
+    fn new() -> io::Result<EpollPoller> {
+        Ok(EpollPoller { epfd: epoll_sys::create()? })
+    }
+
+    fn mask(interest: Interest) -> u32 {
+        use epoll_sys::*;
+        match interest {
+            Interest::None => 0,
+            Interest::Read => EPOLLIN | EPOLLRDHUP,
+            Interest::Write => EPOLLOUT,
+        }
+    }
+
+    fn add(&self, fd: RawFd, token: u64, i: Interest) -> io::Result<()> {
+        epoll_sys::ctl(
+            self.epfd,
+            epoll_sys::EPOLL_CTL_ADD,
+            fd,
+            Self::mask(i),
+            token,
+        )
+    }
+
+    fn modify(&self, fd: RawFd, token: u64, i: Interest) -> io::Result<()> {
+        epoll_sys::ctl(
+            self.epfd,
+            epoll_sys::EPOLL_CTL_MOD,
+            fd,
+            Self::mask(i),
+            token,
+        )
+    }
+
+    fn remove(&self, fd: RawFd) {
+        let _ =
+            epoll_sys::ctl(self.epfd, epoll_sys::EPOLL_CTL_DEL, fd, 0, 0);
+    }
+
+    fn wait(&self, out: &mut Vec<Event>, timeout_ms: i32) -> io::Result<()> {
+        use epoll_sys::*;
+        let mut evs = [EpollEvent { events: 0, data: 0 }; 64];
+        let n = match epoll_sys::wait(self.epfd, &mut evs, timeout_ms) {
+            Ok(n) => n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => 0,
+            Err(e) => return Err(e),
+        };
+        for ev in evs.iter().take(n) {
+            // Copy the (possibly unaligned) packed fields out first.
+            let events = ev.events;
+            let token = ev.data;
+            out.push(Event {
+                token,
+                readable: events & (EPOLLIN | EPOLLPRI | EPOLLRDHUP) != 0,
+                writable: events & EPOLLOUT != 0,
+                closed: events & (EPOLLERR | EPOLLHUP) != 0,
+            });
+        }
+        Ok(())
+    }
+}
+
+#[cfg(target_os = "linux")]
+impl Drop for EpollPoller {
+    fn drop(&mut self) {
+        unsafe {
+            close(self.epfd);
+        }
+    }
+}
+
+/// `poll(2)` fallback: the registered set is rebuilt-in-place and
+/// scanned linearly — O(n) per wait, fine at the connection counts the
+/// fallback targets.
+pub(crate) struct PollPoller {
+    fds: Vec<PollFd>,
+    tokens: Vec<u64>,
+}
+
+impl PollPoller {
+    fn new() -> PollPoller {
+        PollPoller { fds: Vec::new(), tokens: Vec::new() }
+    }
+
+    fn mask(interest: Interest) -> c_short {
+        match interest {
+            Interest::None => 0,
+            Interest::Read => POLLIN,
+            Interest::Write => POLLOUT,
+        }
+    }
+
+    fn add(&mut self, fd: RawFd, token: u64, i: Interest) -> io::Result<()> {
+        self.fds.push(PollFd { fd, events: Self::mask(i), revents: 0 });
+        self.tokens.push(token);
+        Ok(())
+    }
+
+    fn modify(&mut self, fd: RawFd, i: Interest) -> io::Result<()> {
+        match self.fds.iter_mut().find(|p| p.fd == fd) {
+            Some(p) => {
+                p.events = Self::mask(i);
+                Ok(())
+            }
+            None => Err(io::Error::new(
+                io::ErrorKind::NotFound,
+                "fd not registered",
+            )),
+        }
+    }
+
+    fn remove(&mut self, fd: RawFd) {
+        if let Some(idx) = self.fds.iter().position(|p| p.fd == fd) {
+            self.fds.swap_remove(idx);
+            self.tokens.swap_remove(idx);
+        }
+    }
+
+    fn wait(&mut self, out: &mut Vec<Event>, timeout_ms: i32) -> io::Result<()> {
+        for p in self.fds.iter_mut() {
+            p.revents = 0;
+        }
+        let rc = unsafe {
+            poll(self.fds.as_mut_ptr(), self.fds.len() as NfdsT, timeout_ms)
+        };
+        if rc < 0 {
+            let e = io::Error::last_os_error();
+            return if e.kind() == io::ErrorKind::Interrupted {
+                Ok(())
+            } else {
+                Err(e)
+            };
+        }
+        for (p, &token) in self.fds.iter().zip(self.tokens.iter()) {
+            if p.revents == 0 {
+                continue;
+            }
+            out.push(Event {
+                token,
+                readable: p.revents & (POLLIN | POLLPRI) != 0,
+                writable: p.revents & POLLOUT != 0,
+                closed: p.revents & (POLLERR | POLLHUP | POLLNVAL) != 0,
+            });
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Self-pipe waker
+// ---------------------------------------------------------------------
+
+/// Owns the write end of the self-pipe; closed when the last
+/// [`Waker`] clone drops.
+struct PipeWriter(c_int);
+
+// A write(2) on a shared fd is thread-safe.
+unsafe impl Send for PipeWriter {}
+unsafe impl Sync for PipeWriter {}
+
+impl Drop for PipeWriter {
+    fn drop(&mut self) {
+        unsafe {
+            close(self.0);
+        }
+    }
+}
+
+/// Read end of the self-pipe, registered in the poller.
+pub(crate) struct WakeReader(c_int);
+
+impl WakeReader {
+    pub fn fd(&self) -> RawFd {
+        self.0
+    }
+
+    /// Swallow every pending wake byte (nonblocking).
+    pub fn drain(&self) {
+        let mut buf = [0u8; 64];
+        loop {
+            let n = unsafe {
+                read(self.0, buf.as_mut_ptr() as *mut c_void, buf.len())
+            };
+            if n <= 0 {
+                break;
+            }
+        }
+    }
+}
+
+impl Drop for WakeReader {
+    fn drop(&mut self) {
+        unsafe {
+            close(self.0);
+        }
+    }
+}
+
+/// Build the self-pipe: returns the pollable read end and a cloneable
+/// [`Waker`] whose `wake()` makes the read end readable. Writes to a
+/// full pipe or after the reader is gone are silently dropped (a wake
+/// is level-triggered; one pending byte is enough).
+pub(crate) fn self_pipe() -> io::Result<(WakeReader, Waker)> {
+    let mut fds: [c_int; 2] = [0; 2];
+    if unsafe { pipe(fds.as_mut_ptr()) } < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    let reader = WakeReader(fds[0]);
+    let writer = Arc::new(PipeWriter(fds[1]));
+    set_nonblocking_fd(fds[0])?;
+    set_nonblocking_fd(fds[1])?;
+    let waker = Waker::new(move || {
+        let byte = 1u8;
+        let _ = unsafe {
+            write(writer.0, &byte as *const u8 as *const c_void, 1)
+        };
+    });
+    Ok((reader, waker))
+}
+
+// ---------------------------------------------------------------------
+// The reactor loop
+// ---------------------------------------------------------------------
+
+const TOKEN_LISTENER: u64 = 0;
+const TOKEN_WAKER: u64 = 1;
+const FIRST_CONN_TOKEN: u64 = 2;
+/// Poll tick: upper bound on deadline-sweep latency and shutdown lag.
+const TICK_MS: i32 = 100;
+/// Hard bound on the post-shutdown drain of in-flight work.
+const DRAIN_GRACE: std::time::Duration = std::time::Duration::from_secs(5);
+
+/// A finished dispatch: (connection token, response, keep-alive).
+type Completion = (u64, Response, bool);
+
+/// Should the poll fallback be forced? (`TANHVF_POLLER=poll`.)
+pub(crate) fn force_poll_from_env() -> bool {
+    std::env::var("TANHVF_POLLER").as_deref() == Ok("poll")
+}
+
+/// Prepare the poller *before* the reactor thread spawns, so setup
+/// failures (epoll/pipe fd exhaustion, fcntl errors) surface as
+/// `Server::start` errors instead of a silently dead server.
+pub(crate) fn init_poller(
+    listener: &TcpListener,
+    wake: &WakeReader,
+) -> io::Result<Poller> {
+    listener.set_nonblocking(true)?;
+    let mut poller = Poller::new(force_poll_from_env())?;
+    poller.add(listener.as_raw_fd(), TOKEN_LISTENER, Interest::Read)?;
+    poller.add(wake.fd(), TOKEN_WAKER, Interest::Read)?;
+    Ok(poller)
+}
+
+/// Run the event loop until `shutdown` is flagged (and woken via
+/// `waker`). Owns the listener; dropping on return closes it.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run(
+    listener: TcpListener,
+    mut poller: Poller,
+    cfg: ServerConfig,
+    state: Arc<AppState>,
+    shutdown: Arc<AtomicBool>,
+    pool: Arc<ThreadPool>,
+    wake_reader: WakeReader,
+    waker: Waker,
+) {
+    let completions: Arc<Mutex<Vec<Completion>>> =
+        Arc::new(Mutex::new(Vec::new()));
+    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut next_token = FIRST_CONN_TOKEN;
+    let mut events: Vec<Event> = Vec::new();
+
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        if poller.wait(&mut events, TICK_MS).is_err() {
+            return;
+        }
+        if shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        let now = Instant::now();
+
+        for ev in events.drain(..) {
+            match ev.token {
+                TOKEN_LISTENER => accept_ready(
+                    &listener,
+                    &cfg,
+                    &state,
+                    &mut poller,
+                    &mut conns,
+                    &mut next_token,
+                    now,
+                ),
+                TOKEN_WAKER => wake_reader.drain(),
+                token => {
+                    let Some(conn) = conns.get_mut(&token) else {
+                        continue;
+                    };
+                    let action = match conn.phase() {
+                        Phase::Reading if ev.readable || ev.closed => {
+                            conn.on_readable(now, &state.http)
+                        }
+                        Phase::Writing if ev.writable || ev.closed => {
+                            conn.on_writable(now, &state.http)
+                        }
+                        Phase::Dispatching if ev.closed => Action::Close,
+                        _ => Action::Continue,
+                    };
+                    apply(
+                        token, action, &mut conns, &mut poller, &state,
+                        &shutdown, &pool, &completions, &waker,
+                    );
+                }
+            }
+        }
+
+        // Dispatch completions pushed by pool workers.
+        let done: Vec<Completion> = {
+            let mut guard = completions.lock().unwrap();
+            guard.drain(..).collect()
+        };
+        for (token, resp, keep) in done {
+            let Some(conn) = conns.get_mut(&token) else {
+                continue; // connection died while the request ran
+            };
+            if conn.phase() != Phase::Dispatching {
+                continue;
+            }
+            let action = conn.complete(&resp, keep, now, &state.http);
+            apply(
+                token, action, &mut conns, &mut poller, &state, &shutdown,
+                &pool, &completions, &waker,
+            );
+        }
+
+        // Per-state deadline sweep (slow-loris stalls, stalled writes,
+        // spent keep-alive budgets). Continue actions are applied too:
+        // a deadline 408 that only partially flushed has just moved the
+        // connection to Writing and needs its poll interest switched.
+        let swept: Vec<(u64, Action)> = conns
+            .iter_mut()
+            .map(|(&t, c)| (t, c.check_deadline(now, &cfg, &state.http)))
+            .collect();
+        for (token, action) in swept {
+            apply(
+                token, action, &mut conns, &mut poller, &state, &shutdown,
+                &pool, &completions, &waker,
+            );
+        }
+    }
+
+    // -- graceful drain (mirrors the threaded backend) ----------------
+    // Stop accepting and reading, but let in-flight dispatches finish
+    // and queued responses reach the wire, bounded by a hard deadline.
+    poller.remove(listener.as_raw_fd());
+    let idle: Vec<u64> = conns
+        .iter()
+        .filter(|(_, c)| c.phase() == Phase::Reading)
+        .map(|(&t, _)| t)
+        .collect();
+    for token in idle {
+        if let Some(c) = conns.remove(&token) {
+            poller.remove(c.fd());
+        }
+    }
+    let deadline = Instant::now() + DRAIN_GRACE;
+    while !conns.is_empty() && Instant::now() < deadline {
+        if poller.wait(&mut events, TICK_MS).is_err() {
+            return;
+        }
+        let now = Instant::now();
+        for ev in events.drain(..) {
+            match ev.token {
+                TOKEN_WAKER => wake_reader.drain(),
+                token => {
+                    let Some(conn) = conns.get_mut(&token) else {
+                        continue;
+                    };
+                    let action = match conn.phase() {
+                        Phase::Writing if ev.writable || ev.closed => {
+                            conn.on_writable(now, &state.http)
+                        }
+                        Phase::Dispatching if ev.closed => Action::Close,
+                        _ => Action::Continue,
+                    };
+                    // Once a response has drained, the connection is
+                    // done — no keep-alive and no pipelined dispatches
+                    // during shutdown.
+                    let action = match action {
+                        Action::Continue
+                            if conn.phase() == Phase::Reading =>
+                        {
+                            Action::Close
+                        }
+                        Action::Dispatch(_) => Action::Close,
+                        a => a,
+                    };
+                    apply(
+                        token, action, &mut conns, &mut poller, &state,
+                        &shutdown, &pool, &completions, &waker,
+                    );
+                }
+            }
+        }
+        let done: Vec<Completion> = {
+            let mut guard = completions.lock().unwrap();
+            guard.drain(..).collect()
+        };
+        for (token, resp, _keep) in done {
+            let Some(conn) = conns.get_mut(&token) else {
+                continue;
+            };
+            if conn.phase() != Phase::Dispatching {
+                continue;
+            }
+            // Never keep-alive during shutdown: the response drains and
+            // the connection closes.
+            let action = conn.complete(&resp, false, now, &state.http);
+            apply(
+                token, action, &mut conns, &mut poller, &state, &shutdown,
+                &pool, &completions, &waker,
+            );
+        }
+    }
+}
+
+/// Accept every pending connection; over-limit peers get a proactive
+/// 503 on the still-blocking freshly accepted socket.
+#[allow(clippy::too_many_arguments)]
+fn accept_ready(
+    listener: &TcpListener,
+    cfg: &ServerConfig,
+    state: &Arc<AppState>,
+    poller: &mut Poller,
+    conns: &mut HashMap<u64, Conn>,
+    next_token: &mut u64,
+    now: Instant,
+) {
+    loop {
+        let stream = match listener.accept() {
+            Ok((s, _)) => s,
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => return,
+        };
+        state.http.connections.fetch_add(1, Ordering::Relaxed);
+        if conns.len() >= cfg.max_connections {
+            super::reject_over_limit(stream, state);
+            continue;
+        }
+        let conn = match Conn::new(stream, now, cfg.max_body_bytes) {
+            Ok(c) => c,
+            Err(_) => continue,
+        };
+        let token = *next_token;
+        *next_token += 1;
+        if poller.add(conn.fd(), token, conn.interest()).is_ok() {
+            conns.insert(token, conn);
+        }
+    }
+}
+
+/// Apply a state-machine action: refresh interest, spawn a dispatch, or
+/// tear the connection down.
+#[allow(clippy::too_many_arguments)]
+fn apply(
+    token: u64,
+    action: Action,
+    conns: &mut HashMap<u64, Conn>,
+    poller: &mut Poller,
+    state: &Arc<AppState>,
+    shutdown: &Arc<AtomicBool>,
+    pool: &Arc<ThreadPool>,
+    completions: &Arc<Mutex<Vec<Completion>>>,
+    waker: &Waker,
+) {
+    match action {
+        Action::Close => {
+            if let Some(conn) = conns.remove(&token) {
+                poller.remove(conn.fd());
+            }
+        }
+        Action::Dispatch(req) => {
+            state.http.requests.fetch_add(1, Ordering::Relaxed);
+            refresh_interest(token, conns, poller);
+            spawn_dispatch(
+                token, req, state, shutdown, pool, completions, waker,
+            );
+        }
+        Action::Continue => refresh_interest(token, conns, poller),
+    }
+}
+
+fn refresh_interest(
+    token: u64,
+    conns: &mut HashMap<u64, Conn>,
+    poller: &mut Poller,
+) {
+    let Some(conn) = conns.get_mut(&token) else { return };
+    let want = conn.interest();
+    if conn.registered_interest() == want {
+        return;
+    }
+    if poller.modify(conn.fd(), token, want).is_ok() {
+        conn.set_registered_interest(want);
+    }
+}
+
+/// Hand a parsed request to the worker pool; completion wakes the
+/// reactor through the self-pipe.
+fn spawn_dispatch(
+    token: u64,
+    req: Request,
+    state: &Arc<AppState>,
+    shutdown: &Arc<AtomicBool>,
+    pool: &Arc<ThreadPool>,
+    completions: &Arc<Mutex<Vec<Completion>>>,
+    waker: &Waker,
+) {
+    let state = state.clone();
+    let shutdown = shutdown.clone();
+    let completions = completions.clone();
+    let waker = waker.clone();
+    pool.spawn(move || {
+        let keep = req.keep_alive() && !shutdown.load(Ordering::SeqCst);
+        let resp = api::dispatch(&state, &req);
+        state.http.count_response(resp.status);
+        completions.lock().unwrap().push((token, resp, keep));
+        waker.wake();
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+    use std::net::{TcpListener, TcpStream};
+
+    fn pollers() -> Vec<Poller> {
+        let mut v = vec![Poller::new(true).unwrap()];
+        if cfg!(target_os = "linux") {
+            v.push(Poller::new(false).unwrap());
+        }
+        v
+    }
+
+    #[test]
+    fn poller_reports_listener_readable_on_connect() {
+        for mut poller in pollers() {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            listener.set_nonblocking(true).unwrap();
+            poller
+                .add(listener.as_raw_fd(), 7, Interest::Read)
+                .unwrap();
+            let mut events = Vec::new();
+            poller.wait(&mut events, 0).unwrap();
+            assert!(events.is_empty(), "no events before connect");
+
+            let _client =
+                TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+            // The pending connection must surface within the timeout.
+            let mut seen = false;
+            for _ in 0..50 {
+                poller.wait(&mut events, 100).unwrap();
+                if events.iter().any(|e| e.token == 7 && e.readable) {
+                    seen = true;
+                    break;
+                }
+            }
+            assert!(seen, "listener never became readable");
+        }
+    }
+
+    #[test]
+    fn poller_tracks_write_interest() {
+        for mut poller in pollers() {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let client =
+                TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+            let (server, _) = listener.accept().unwrap();
+            server.set_nonblocking(true).unwrap();
+            poller.add(server.as_raw_fd(), 3, Interest::Write).unwrap();
+            let mut events = Vec::new();
+            poller.wait(&mut events, 1000).unwrap();
+            assert!(
+                events.iter().any(|e| e.token == 3 && e.writable),
+                "fresh socket must be writable: {events:?}"
+            );
+            // Downgrade to no interest: only errors may surface now.
+            poller.modify(server.as_raw_fd(), 3, Interest::None).unwrap();
+            poller.wait(&mut events, 0).unwrap();
+            assert!(
+                !events.iter().any(|e| e.writable),
+                "writable after deregistration: {events:?}"
+            );
+            poller.remove(server.as_raw_fd());
+            drop(client);
+        }
+    }
+
+    #[test]
+    fn self_pipe_wakes_poller_and_drains() {
+        for mut poller in pollers() {
+            let (reader, waker) = self_pipe().unwrap();
+            poller.add(reader.fd(), TOKEN_WAKER, Interest::Read).unwrap();
+            let mut events = Vec::new();
+            poller.wait(&mut events, 0).unwrap();
+            assert!(events.is_empty());
+
+            // Wake from another thread, as the pool workers do.
+            let w = waker.clone();
+            let t = std::thread::spawn(move || w.wake());
+            let mut woke = false;
+            for _ in 0..50 {
+                poller.wait(&mut events, 100).unwrap();
+                if events.iter().any(|e| e.token == TOKEN_WAKER && e.readable)
+                {
+                    woke = true;
+                    break;
+                }
+            }
+            t.join().unwrap();
+            assert!(woke, "waker did not rouse the poller");
+            reader.drain();
+            poller.wait(&mut events, 0).unwrap();
+            assert!(
+                !events.iter().any(|e| e.token == TOKEN_WAKER && e.readable),
+                "drain left the pipe readable"
+            );
+        }
+    }
+
+    #[test]
+    fn wake_after_reader_gone_is_harmless() {
+        let (reader, waker) = self_pipe().unwrap();
+        drop(reader);
+        waker.wake(); // EPIPE swallowed (Rust ignores SIGPIPE)
+        waker.wake();
+    }
+
+    #[test]
+    fn poll_fallback_sees_plain_readable_data() {
+        let mut poller = Poller::new(true).unwrap();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let mut client =
+            TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        server.set_nonblocking(true).unwrap();
+        poller.add(server.as_raw_fd(), 9, Interest::Read).unwrap();
+        client.write_all(b"hi").unwrap();
+        let mut events = Vec::new();
+        let mut seen = false;
+        for _ in 0..50 {
+            poller.wait(&mut events, 100).unwrap();
+            if events.iter().any(|e| e.token == 9 && e.readable) {
+                seen = true;
+                break;
+            }
+        }
+        assert!(seen, "data never surfaced through poll fallback");
+    }
+}

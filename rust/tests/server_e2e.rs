@@ -282,6 +282,138 @@ fn queue_limit_backpressure_answers_503() {
 }
 
 #[test]
+fn chunked_request_bodies_end_to_end() {
+    // The parser's 501 refusal is gone: a chunked POST with chunk
+    // boundaries split at awkward points (mid-size-line, mid-data) and
+    // a trailer must evaluate bit-exactly.
+    let (_srv, addr) = start_two_precision();
+    let cfg = named_config("s2_8").unwrap();
+    let body = r#"{"model":"s2_8","words":[1,2,3]}"#.as_bytes();
+
+    use std::io::Write;
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+    s.write_all(
+        b"POST /v1/batch HTTP/1.1\r\nHost: t\r\n\
+          Transfer-Encoding: chunked\r\n\r\n",
+    )
+    .unwrap();
+    let (a, b) = body.split_at(10);
+    // Chunk 1: size line split across two writes, data split mid-chunk.
+    s.write_all(format!("{:x}", a.len()).as_bytes()).unwrap();
+    std::thread::sleep(Duration::from_millis(40));
+    s.write_all(b"\r\n").unwrap();
+    s.write_all(&a[..4]).unwrap();
+    std::thread::sleep(Duration::from_millis(40));
+    s.write_all(&a[4..]).unwrap();
+    s.write_all(b"\r\n").unwrap();
+    // Chunk 2 in one piece, then the last chunk with a trailer.
+    s.write_all(format!("{:x}\r\n", b.len()).as_bytes()).unwrap();
+    s.write_all(b).unwrap();
+    s.write_all(b"\r\n0\r\nX-Client-Checksum: none\r\n\r\n").unwrap();
+
+    let mut conn = HttpConn::new(s);
+    let (status, _, resp) = conn.read_response(1 << 20).unwrap();
+    let text = String::from_utf8_lossy(&resp).into_owned();
+    assert_eq!(status, 200, "{text}");
+    let v = tanh_vf::util::json::parse(&text).unwrap();
+    let got = v.get("words").and_then(Json::as_i64_vec).unwrap();
+    assert_eq!(got, tanh_golden_batch(&[1, 2, 3], &cfg));
+}
+
+#[test]
+fn pipelined_keep_alive_requests_answer_in_order() {
+    let (_srv, addr) = start_two_precision();
+    let cfg = named_config("s3_12").unwrap();
+    let body = r#"{"model":"s3_12","word":4096}"#;
+    let wire = format!(
+        "GET /health HTTP/1.1\r\n\r\n\
+         POST /v1/eval HTTP/1.1\r\nContent-Length: {}\r\n\r\n{}\
+         GET /health HTTP/1.1\r\nConnection: close\r\n\r\n",
+        body.len(),
+        body
+    );
+
+    use std::io::Write;
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+    s.write_all(wire.as_bytes()).unwrap();
+    let mut conn = HttpConn::new(s);
+    let (s1, _, _) = conn.read_response(1 << 20).unwrap();
+    let (s2, _, b2) = conn.read_response(1 << 20).unwrap();
+    let (s3, _, _) = conn.read_response(1 << 20).unwrap();
+    assert_eq!((s1, s2, s3), (200, 200, 200));
+    let v = tanh_vf::util::json::parse(&String::from_utf8_lossy(&b2)).unwrap();
+    assert_eq!(
+        v.get("y_word").and_then(Json::as_i64),
+        Some(tanh_golden(4096, &cfg))
+    );
+}
+
+#[test]
+fn slow_loris_partial_header_answers_408() {
+    let routes = parse_routes("native:s3_5").unwrap();
+    let srv = Server::start(
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            header_timeout: Duration::from_millis(300),
+            ..Default::default()
+        },
+        routes,
+    )
+    .unwrap();
+    let addr = srv.local_addr().to_string();
+
+    use std::io::{Read, Write};
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    // A partial request line, then silence: the per-state read deadline
+    // must answer 408 and close rather than hold the slot forever.
+    s.write_all(b"GET /health HT").unwrap();
+    let mut buf = Vec::new();
+    let _ = s.read_to_end(&mut buf);
+    let text = String::from_utf8_lossy(&buf);
+    assert!(text.starts_with("HTTP/1.1 408"), "{text}");
+}
+
+#[test]
+#[cfg(unix)] // event_loop falls back to the threaded backend off unix
+fn reactor_decouples_connections_from_workers() {
+    // 12 concurrently open connections over only 2 workers: the
+    // blocking backend would cap at min(max_connections, workers) = 2,
+    // the reactor serves them all.
+    let routes = parse_routes("native:s3_5").unwrap();
+    let srv = Server::start(
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            workers: 2,
+            max_connections: 32,
+            event_loop: true,
+            ..Default::default()
+        },
+        routes,
+    )
+    .unwrap();
+    let addr = srv.local_addr().to_string();
+
+    let mut conns: Vec<HttpConn> = (0..12).map(|_| connect(&addr)).collect();
+    for c in conns.iter_mut() {
+        c.write_request("GET", "/health", b"").unwrap();
+    }
+    for c in conns.iter_mut() {
+        let (status, _, body) = c.read_response(1 << 20).unwrap();
+        assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+    }
+    // All still open: a second round on the same sockets must work too
+    // (keep-alive across the whole set).
+    for c in conns.iter_mut() {
+        c.write_request("GET", "/health", b"").unwrap();
+        assert_eq!(c.read_response(1 << 20).unwrap().0, 200);
+    }
+    assert!(srv.metrics_text().contains("tanhvf_http_requests_total"));
+}
+
+#[test]
 fn keep_alive_and_graceful_shutdown() {
     let routes = parse_routes("native:s3_5").unwrap();
     let mut srv = Server::start(ephemeral_cfg(), routes).unwrap();
