@@ -7,9 +7,10 @@
 //! trajectory is tracked across PRs.
 
 use std::collections::BTreeMap;
-use std::net::TcpStream;
+use std::net::{TcpListener, TcpStream};
 use std::time::{Duration, Instant};
 
+use tanh_vf::server::cluster::ClusterConfig;
 use tanh_vf::server::http::HttpConn;
 use tanh_vf::server::loadgen::{self, LoadgenConfig};
 use tanh_vf::server::{parse_routes, Server, ServerConfig};
@@ -17,6 +18,18 @@ use tanh_vf::util::json::{self, Json};
 
 fn obj(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+/// Reserve `n` distinct loopback addresses (cluster fronts must know
+/// each other's address before any of them starts).
+fn free_addrs(n: usize) -> Vec<String> {
+    let listeners: Vec<TcpListener> = (0..n)
+        .map(|_| TcpListener::bind("127.0.0.1:0").expect("bind"))
+        .collect();
+    listeners
+        .iter()
+        .map(|l| l.local_addr().expect("addr").to_string())
+        .collect()
 }
 
 /// Open `n` connections, hold them all open, then round-trip one
@@ -150,6 +163,104 @@ fn main() {
          at equal worker count (got {ratio:.1}x)"
     );
 
+    // -- cluster scaling: 3 consistent-hash fronts vs a single node ---
+    // Every front serves the same route table; model names shard
+    // across the ring, so each request is either answered locally or
+    // proxied one hop to its owner. The persisted point tracks what
+    // the cluster tier costs/buys at equal total connection count.
+    const NODES: usize = 3;
+    const CLUSTER_CONNS: usize = 24;
+    const CLUSTER_REQS: usize = 150;
+    println!(
+        "\n== cluster scaling ({NODES} fronts, {CLUSTER_CONNS} conns, \
+         mixed s3_12/s3_5) =="
+    );
+    let single = Server::start(
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            workers: 16,
+            max_connections: 128,
+            ..Default::default()
+        },
+        parse_routes("native:s3_12,native:s3_5").unwrap(),
+    )
+    .unwrap();
+    let mut cfg =
+        LoadgenConfig::new(single.local_addr().to_string(), &["s3_12", "s3_5"]);
+    cfg.connections = CLUSTER_CONNS;
+    cfg.requests_per_connection = CLUSTER_REQS;
+    cfg.words_per_request = 64;
+    cfg.word_range = 128;
+    let single_report = loadgen::run(&cfg).expect("single-node loadgen");
+    assert_eq!(single_report.failures, 0, "{}", single_report.render());
+    println!("single-node {}", single_report.render());
+    drop(single);
+
+    // Reserved ports can be snatched between release and re-bind
+    // (TOCTOU); retry with a fresh group like the e2e helper does.
+    let (fronts, addrs) = {
+        let mut made: Option<(Vec<Server>, Vec<String>)> = None;
+        'attempt: for _ in 0..5 {
+            let addrs = free_addrs(NODES);
+            let mut fronts = Vec::with_capacity(NODES);
+            for i in 0..NODES {
+                let peers: Vec<String> = addrs
+                    .iter()
+                    .enumerate()
+                    .filter(|&(j, _)| j != i)
+                    .map(|(_, a)| a.clone())
+                    .collect();
+                match Server::start_cluster(
+                    ServerConfig {
+                        addr: addrs[i].clone(),
+                        workers: 16,
+                        max_connections: 128,
+                        ..Default::default()
+                    },
+                    parse_routes("native:s3_12,native:s3_5").unwrap(),
+                    ClusterConfig {
+                        advertise: addrs[i].clone(),
+                        peers,
+                        probe_interval: Duration::from_millis(250),
+                        ..Default::default()
+                    },
+                ) {
+                    Ok(srv) => fronts.push(srv),
+                    Err(_) => continue 'attempt, // port stolen; regroup
+                }
+            }
+            made = Some((fronts, addrs));
+            break;
+        }
+        made.expect("could not bind a free port group for the cluster")
+    };
+    let mut ccfg = LoadgenConfig::new(addrs[0].clone(), &["s3_12", "s3_5"]);
+    ccfg.addrs = addrs.clone();
+    ccfg.connections = CLUSTER_CONNS;
+    ccfg.requests_per_connection = CLUSTER_REQS;
+    ccfg.words_per_request = 64;
+    ccfg.word_range = 128;
+    let cluster_report = loadgen::run(&ccfg).expect("cluster loadgen");
+    assert_eq!(cluster_report.failures, 0, "{}", cluster_report.render());
+    println!("cluster     {}", cluster_report.render());
+    let (mut proxied, mut local_hits) = (0u64, 0u64);
+    for f in &fronts {
+        let st = &f.cluster().expect("cluster mode").stats;
+        proxied += st.proxied.load(std::sync::atomic::Ordering::Relaxed);
+        local_hits += st.local.load(std::sync::atomic::Ordering::Relaxed);
+    }
+    let scaling_ratio =
+        cluster_report.req_per_s() / single_report.req_per_s().max(1e-9);
+    println!(
+        "cluster/single rps ratio: {scaling_ratio:.2}x \
+         ({proxied} proxied, {local_hits} local)"
+    );
+    assert!(
+        proxied > 0 && local_hits > 0,
+        "cluster run must exercise both the local and the proxy path"
+    );
+    drop(fronts);
+
     // -- persist ------------------------------------------------------
     let out = obj(vec![
         ("bench", Json::Str("http_serving".into())),
@@ -171,6 +282,18 @@ fn main() {
                 ),
                 ("reactor_sustained", Json::Num(reactor_ok as f64)),
                 ("ratio", Json::Num(ratio)),
+            ]),
+        ),
+        (
+            "cluster_scaling",
+            obj(vec![
+                ("nodes", Json::Num(NODES as f64)),
+                ("connections", Json::Num(CLUSTER_CONNS as f64)),
+                ("single_node", single_report.to_json()),
+                ("cluster", cluster_report.to_json()),
+                ("rps_ratio", Json::Num(scaling_ratio)),
+                ("proxied_requests", Json::Num(proxied as f64)),
+                ("local_requests", Json::Num(local_hits as f64)),
             ]),
         ),
     ]);

@@ -4,8 +4,14 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
+use crate::util::stats::{percentile, Reservoir};
+
+/// Newest latency samples kept per metrics sink — a hard memory bound
+/// for long-running servers (the ring overwrites in place, so sustained
+/// traffic can never grow the allocation past this).
+const LATENCY_RESERVOIR: usize = 100_000;
+
 /// Lock-light metrics sink shared by the coordinator's threads.
-#[derive(Default)]
 pub struct Metrics {
     pub submitted: AtomicU64,
     pub completed: AtomicU64,
@@ -15,7 +21,21 @@ pub struct Metrics {
     pub batched_words: AtomicU64,
     /// Sum of padded capacity across batches.
     pub batch_capacity: AtomicU64,
-    latencies_us: Mutex<Vec<u64>>,
+    latencies_us: Mutex<Reservoir>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics {
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batched_words: AtomicU64::new(0),
+            batch_capacity: AtomicU64::new(0),
+            latencies_us: Mutex::new(Reservoir::new(LATENCY_RESERVOIR)),
+        }
+    }
 }
 
 /// A point-in-time summary.
@@ -27,18 +47,14 @@ pub struct Snapshot {
     pub batches: u64,
     pub mean_batch_fill: f64,
     pub p50_latency_us: u64,
+    pub p95_latency_us: u64,
     pub p99_latency_us: u64,
     pub max_latency_us: u64,
 }
 
 impl Metrics {
     pub fn record_latency(&self, d: Duration) {
-        let mut v = self.latencies_us.lock().unwrap();
-        // Bounded reservoir: keep the newest 100k samples.
-        if v.len() >= 100_000 {
-            v.drain(..50_000);
-        }
-        v.push(d.as_micros() as u64);
+        self.latencies_us.lock().unwrap().push(d.as_micros() as u64);
     }
 
     pub fn record_batch(&self, words: u64, capacity: u64) {
@@ -48,15 +64,11 @@ impl Metrics {
     }
 
     pub fn snapshot(&self) -> Snapshot {
-        let mut lats = self.latencies_us.lock().unwrap().clone();
+        // Clone under the lock, sort outside it: an O(n log n) sort of
+        // a full reservoir inside the guard would stall every
+        // record_latency on the request hot path for milliseconds.
+        let mut lats = self.latencies_us.lock().unwrap().samples();
         lats.sort_unstable();
-        let pick = |q: f64| -> u64 {
-            if lats.is_empty() {
-                0
-            } else {
-                lats[((lats.len() - 1) as f64 * q) as usize]
-            }
-        };
         let cap = self.batch_capacity.load(Ordering::Relaxed);
         Snapshot {
             submitted: self.submitted.load(Ordering::Relaxed),
@@ -68,8 +80,9 @@ impl Metrics {
             } else {
                 self.batched_words.load(Ordering::Relaxed) as f64 / cap as f64
             },
-            p50_latency_us: pick(0.50),
-            p99_latency_us: pick(0.99),
+            p50_latency_us: percentile(&lats, 0.50),
+            p95_latency_us: percentile(&lats, 0.95),
+            p99_latency_us: percentile(&lats, 0.99),
             max_latency_us: lats.last().copied().unwrap_or(0),
         }
     }
@@ -88,7 +101,10 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.p50_latency_us, 30);
         assert_eq!(s.max_latency_us, 1000);
-        assert!(s.p99_latency_us >= 40);
+        // Nearest-rank: the upper quantiles of five samples are the
+        // maximum, not the second-largest the truncating picker chose.
+        assert_eq!(s.p95_latency_us, 1000);
+        assert_eq!(s.p99_latency_us, 1000);
     }
 
     #[test]
@@ -102,13 +118,20 @@ mod tests {
     }
 
     #[test]
-    fn reservoir_bounded() {
+    fn reservoir_bounded_and_snapshot_sane_past_cap() {
         let m = Metrics::default();
-        for i in 0..120_000u64 {
+        // Push well past the reservoir bound; only the newest samples
+        // survive, so every statistic must reflect the recent window.
+        for i in 0..(LATENCY_RESERVOIR as u64 + 20_000) {
             m.record_latency(Duration::from_micros(i % 997));
         }
-        // Should not blow past the bound.
+        let held = m.latencies_us.lock().unwrap().len();
+        assert_eq!(held, LATENCY_RESERVOIR, "ring must not grow past cap");
         let s = m.snapshot();
         assert!(s.max_latency_us <= 996);
+        assert!(s.p50_latency_us <= s.p95_latency_us);
+        assert!(s.p95_latency_us <= s.p99_latency_us);
+        assert!(s.p99_latency_us <= s.max_latency_us);
+        assert!(s.p50_latency_us > 0, "recent window must dominate");
     }
 }

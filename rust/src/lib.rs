@@ -12,7 +12,9 @@
 //! Layer map (see `DESIGN.md`):
 //! * L4 ([`server`]): HTTP/1.1 activation service over the precision
 //!   router — JSON eval/batch endpoints, model listing, health,
-//!   Prometheus metrics, connection + queue backpressure.
+//!   Prometheus metrics, connection + queue backpressure, and a
+//!   multi-node cluster tier (consistent-hash model routing across
+//!   health-checked peers, [`server::cluster`]).
 //! * L3 (this crate): coordinator, VLSI substrate, baselines, analysis.
 //! * L2 (`python/compile/model.py`): JAX model graphs, AOT-lowered to
 //!   `artifacts/*.hlo.txt`.

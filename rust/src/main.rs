@@ -34,6 +34,13 @@ const SUBCOMMANDS: &[(&str, &str)] = &[
          --routes native:s3_12,native:s3_5 [--workers 8] [--max-conns 64] \
          [--event-loop reactor|threaded] [--duration-secs 0]",
     ),
+    (
+        "serve-cluster",
+        "cluster front: serve-http plus consistent-hash routing across \
+         --peers host:port,host:port [--advertise host:port] \
+         [--virtual-nodes 64] [--probe-interval-ms 500] \
+         [--failure-threshold 3] [--recovery-threshold 2]",
+    ),
     ("info", "artifact manifest summary"),
 ];
 
@@ -58,6 +65,7 @@ fn main() {
         "sweep" => cmd_sweep(),
         "serve" => cmd_serve(&args),
         "serve-http" => cmd_serve_http(&args),
+        "serve-cluster" => cmd_serve_cluster(&args),
         "info" => cmd_info(),
         _ => {
             println!("{}", usage("tanh-vf", SUBCOMMANDS));
@@ -312,7 +320,14 @@ fn cmd_serve(args: &Args) -> R {
     Ok(())
 }
 
-fn cmd_serve_http(args: &Args) -> R {
+/// Flags shared by `serve-http` and `serve-cluster`: server config,
+/// parsed route table, and the run duration.
+fn http_server_setup(
+    args: &Args,
+) -> Result<
+    (tanh_vf::server::ServerConfig, Vec<tanh_vf::coordinator::router::Route>, u64),
+    Box<dyn std::error::Error>,
+> {
     let addr = args.str_or("addr", "127.0.0.1:8787").to_string();
     let routes_spec =
         args.str_or("routes", "native:s3_12,native:s3_5").to_string();
@@ -335,10 +350,9 @@ fn cmd_serve_http(args: &Args) -> R {
     // The reactor needs epoll/poll fds; off unix the server falls back
     // to the threaded backend, so report what actually runs.
     let event_loop = event_loop && cfg!(unix);
-
     let routes = tanh_vf::server::parse_routes(&routes_spec)
         .map_err(|e| usage_err(format!("--routes {routes_spec}: {e}")))?;
-    let mut srv = tanh_vf::server::Server::start(
+    Ok((
         tanh_vf::server::ServerConfig {
             addr,
             workers,
@@ -347,15 +361,40 @@ fn cmd_serve_http(args: &Args) -> R {
             ..default_cfg
         },
         routes,
-    )?;
+        duration_secs,
+    ))
+}
+
+/// Banner + serve loop shared by both HTTP subcommands.
+fn run_http_server(
+    mut srv: tanh_vf::server::Server,
+    event_loop: bool,
+    duration_secs: u64,
+) -> R {
     println!(
         "tanh-vf http listening on http://{} ({} backend)",
         srv.local_addr(),
         if event_loop { "reactor" } else { "threaded" }
     );
     println!("endpoints: /health /v1/models /v1/eval /v1/batch /metrics");
-    for (name, _) in srv.snapshots() {
-        println!("route: {name}");
+    if let Some(cl) = srv.cluster() {
+        println!(
+            "cluster: self={} nodes={} virtual-nodes={}",
+            cl.self_name(),
+            cl.ring().nodes().len(),
+            cl.config().virtual_nodes
+        );
+        for peer in cl.peer_health().keys() {
+            println!("peer: {peer}");
+        }
+        for (name, _) in srv.snapshots() {
+            let owner = cl.owner_name(&name).unwrap_or_else(|| "none".into());
+            println!("route: {name} (owner {owner})");
+        }
+    } else {
+        for (name, _) in srv.snapshots() {
+            println!("route: {name}");
+        }
     }
     if duration_secs == 0 {
         // Serve until killed.
@@ -367,6 +406,44 @@ fn cmd_serve_http(args: &Args) -> R {
     srv.shutdown();
     println!("\n--- final metrics ---\n{}", srv.metrics_text());
     Ok(())
+}
+
+fn cmd_serve_http(args: &Args) -> R {
+    let (cfg, routes, duration_secs) = http_server_setup(args)?;
+    let event_loop = cfg.event_loop;
+    let srv = tanh_vf::server::Server::start(cfg, routes)?;
+    run_http_server(srv, event_loop, duration_secs)
+}
+
+fn cmd_serve_cluster(args: &Args) -> R {
+    let (cfg, routes, duration_secs) = http_server_setup(args)?;
+    let peers_spec = args.required("peers").map_err(usage_err)?.to_string();
+    let peers: Vec<String> = peers_spec
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(str::to_string)
+        .collect();
+    if peers.is_empty() {
+        return Err(usage_err("--peers: need at least one host:port"));
+    }
+    // The identity this node hashes itself under; must match what the
+    // other fronts list in their --peers. Defaults to the bind address.
+    let advertise = args.str_or("advertise", &cfg.addr).to_string();
+    let ccfg = tanh_vf::server::cluster::ClusterConfig {
+        advertise,
+        peers,
+        virtual_nodes: args.usize_or("virtual-nodes", 64)?,
+        probe_interval: Duration::from_millis(
+            args.u64_or("probe-interval-ms", 500)?,
+        ),
+        failure_threshold: args.u64_or("failure-threshold", 3)? as u32,
+        recovery_threshold: args.u64_or("recovery-threshold", 2)? as u32,
+        ..Default::default()
+    };
+    let event_loop = cfg.event_loop;
+    let srv = tanh_vf::server::Server::start_cluster(cfg, routes, ccfg)?;
+    run_http_server(srv, event_loop, duration_secs)
 }
 
 fn cmd_info() -> R {

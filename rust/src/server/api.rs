@@ -13,6 +13,13 @@
 //!
 //! Coordinator backpressure ("queue full") surfaces as 503 so closed-loop
 //! clients can shed load; malformed bodies are 400, unknown models 404.
+//!
+//! In cluster mode ([`super::Server::start_cluster`]) the eval routes
+//! first consult the consistent-hash ring: models owned by a peer are
+//! proxied there (transport failures fail over along the ring, ending
+//! in local service — this node is always its own live candidate),
+//! models owned here — and every request already tagged as forwarded —
+//! run through the local router unchanged.
 
 use std::fmt::Write as _;
 use std::sync::atomic::Ordering;
@@ -21,6 +28,7 @@ use crate::coordinator::router::RouteInfo;
 use crate::fixed::Round;
 use crate::util::json::Json;
 
+use super::cluster::{self, Node};
 use super::http::{Request, Response};
 use super::AppState;
 
@@ -30,8 +38,8 @@ pub(crate) fn dispatch(state: &AppState, req: &Request) -> Response {
         ("GET", "/health") => health(state),
         ("GET", "/v1/models") => models(state),
         ("GET", "/metrics") => render_metrics(state),
-        ("POST", "/v1/eval") => eval(state, req),
-        ("POST", "/v1/batch") => batch(state, req),
+        ("POST", "/v1/eval") => clustered(state, req, eval),
+        ("POST", "/v1/batch") => clustered(state, req, batch),
         (_, "/health" | "/v1/models" | "/metrics") => {
             error_resp(405, "method_not_allowed", "endpoint is GET-only")
         }
@@ -44,28 +52,128 @@ pub(crate) fn dispatch(state: &AppState, req: &Request) -> Response {
     }
 }
 
+/// Cluster routing shim around an eval endpoint: parse the body once,
+/// serve locally when the ring says so (or when not clustered), else
+/// forward to the owning peer, failing over along the ring on
+/// transport errors.
+fn clustered(
+    state: &AppState,
+    req: &Request,
+    local: fn(&AppState, &Json) -> Response,
+) -> Response {
+    let body = match req.json_body() {
+        Ok(b) => b,
+        Err(e) => {
+            return error_resp(400, "bad_request", &format!("body: {e}"))
+        }
+    };
+    let Some(cl) = state.cluster.as_ref() else {
+        return local(state, &body);
+    };
+    // Loop guard: a request that already crossed one hop is answered
+    // here no matter what this node's ring says — transient ring
+    // disagreement between fronts can cost one extra hop, never a
+    // cycle.
+    if req.header(cluster::PROXIED_HEADER).is_some() {
+        cl.stats.proxied_in.fetch_add(1, Ordering::Relaxed);
+        return local(state, &body);
+    }
+    // The ring keys on the model name; bodies without one fall through
+    // to the local handler, whose 400 is exact.
+    let model = match body.get("model").and_then(Json::as_str) {
+        Some(m) => m.to_string(),
+        None => return local(state, &body),
+    };
+    let mut failed_hops = 0u64;
+    for node in cl.candidates(&model) {
+        match node {
+            Node::Local => {
+                cl.stats.local.fetch_add(1, Ordering::Relaxed);
+                if failed_hops > 0 {
+                    cl.stats.failovers.fetch_add(1, Ordering::Relaxed);
+                }
+                return local(state, &body);
+            }
+            Node::Peer(addr) => {
+                // Bounded outbound-proxy concurrency: a forward blocks
+                // this worker thread, and with every worker blocked on
+                // forwards two fronts proxying to each other would
+                // deadlock until the proxy timeout.
+                let Some(_permit) = cl.try_forward_permit() else {
+                    // Past the bound, prefer degrading to local
+                    // bit-exact service (every node normally serves
+                    // the full route table) over shedding; 503 only
+                    // when this node really can't answer.
+                    if state.router.route_info(&model).is_some() {
+                        cl.stats.local.fetch_add(1, Ordering::Relaxed);
+                        cl.stats.failovers.fetch_add(1, Ordering::Relaxed);
+                        return local(state, &body);
+                    }
+                    return error_resp(
+                        503,
+                        "overloaded",
+                        "proxy capacity exhausted, retry later",
+                    );
+                };
+                match cl.forward(&addr, req.path(), &req.body) {
+                    Ok(resp) => {
+                        // HTTP-level statuses (including the peer's own
+                        // 4xx/5xx) pass through untouched; only
+                        // transport failures fail over.
+                        cl.record_success(&addr);
+                        cl.stats.proxied.fetch_add(1, Ordering::Relaxed);
+                        if failed_hops > 0 {
+                            cl.stats.failovers.fetch_add(1, Ordering::Relaxed);
+                        }
+                        return resp;
+                    }
+                    Err(_) => {
+                        cl.stats.proxy_errors.fetch_add(1, Ordering::Relaxed);
+                        cl.record_failure(&addr);
+                        failed_hops += 1;
+                    }
+                }
+            }
+        }
+    }
+    // The ring always contains this node and Local is never filtered,
+    // so the walk above always returns from inside the loop; this tail
+    // is a defensive fallback, not a reachable error path.
+    cl.stats.local.fetch_add(1, Ordering::Relaxed);
+    local(state, &body)
+}
+
 // ---------------------------------------------------------------------
 // Handlers
 // ---------------------------------------------------------------------
 
 fn health(state: &AppState) -> Response {
-    Response::json(
-        200,
-        &obj([
-            ("status", Json::Str("ok".into())),
-            ("uptime_s", Json::Num(state.started.elapsed().as_secs() as f64)),
-            ("routes", Json::Num(state.router.route_infos().len() as f64)),
-        ]),
-    )
+    let mut fields = vec![
+        ("status", Json::Str("ok".into())),
+        ("uptime_s", Json::Num(state.started.elapsed().as_secs() as f64)),
+        ("routes", Json::Num(state.router.route_infos().len() as f64)),
+    ];
+    if let Some(cl) = &state.cluster {
+        fields.push((
+            "cluster_nodes",
+            Json::Num(cl.ring().nodes().len() as f64),
+        ));
+        fields.push((
+            "cluster_live_peers",
+            Json::Num(cl.healthy_peers() as f64),
+        ));
+    }
+    Response::json(200, &obj(fields))
 }
 
 fn models(state: &AppState) -> Response {
+    let cl = state.cluster.as_ref();
     let data: Vec<Json> = state
         .router
         .route_infos()
         .iter()
         .map(|i| {
-            obj([
+            let mut fields = vec![
                 ("id", Json::Str(i.name.clone())),
                 ("object", Json::Str("model".into())),
                 ("backend", Json::Str(i.kind.into())),
@@ -73,20 +181,63 @@ fn models(state: &AppState) -> Response {
                 ("batch_capacity", Json::Num(i.batch_capacity as f64)),
                 ("workers", Json::Num(i.workers as f64)),
                 ("queue_limit", Json::Num(i.queue_limit as f64)),
-            ])
+            ];
+            if let Some(cl) = cl {
+                // Peer-aware: where the ring currently routes this
+                // model (liveness applied), and whether that is here.
+                let owner =
+                    cl.owner_name(&i.name).unwrap_or_else(|| "none".into());
+                fields.push((
+                    "local",
+                    Json::Bool(owner == cl.self_name()),
+                ));
+                fields.push(("owner", Json::Str(owner)));
+            }
+            obj(fields)
         })
         .collect();
-    Response::json(
-        200,
-        &obj([
-            ("object", Json::Str("list".into())),
-            ("data", Json::Arr(data)),
-        ]),
-    )
+    let mut top = vec![
+        ("object", Json::Str("list".into())),
+        ("data", Json::Arr(data)),
+    ];
+    if let Some(cl) = cl {
+        let peers: Vec<Json> = cl
+            .peer_health()
+            .into_iter()
+            .map(|(addr, h)| {
+                obj([
+                    ("addr", Json::Str(addr)),
+                    ("health", Json::Str(h.name().into())),
+                ])
+            })
+            .collect();
+        top.push((
+            "cluster",
+            obj([
+                ("self", Json::Str(cl.self_name().into())),
+                (
+                    "nodes",
+                    Json::Arr(
+                        cl.ring()
+                            .nodes()
+                            .iter()
+                            .map(|n| Json::Str(n.clone()))
+                            .collect(),
+                    ),
+                ),
+                ("peers", Json::Arr(peers)),
+                (
+                    "virtual_nodes",
+                    Json::Num(cl.config().virtual_nodes as f64),
+                ),
+            ]),
+        ));
+    }
+    Response::json(200, &obj(top))
 }
 
-fn eval(state: &AppState, req: &Request) -> Response {
-    let (body, info) = match parse_model_body(state, req) {
+fn eval(state: &AppState, body: &Json) -> Response {
+    let info = match resolve_model(state, body) {
         Ok(v) => v,
         Err(resp) => return resp,
     };
@@ -141,8 +292,8 @@ fn eval(state: &AppState, req: &Request) -> Response {
     }
 }
 
-fn batch(state: &AppState, req: &Request) -> Response {
-    let (body, info) = match parse_model_body(state, req) {
+fn batch(state: &AppState, body: &Json) -> Response {
+    let info = match resolve_model(state, body) {
         Ok(v) => v,
         Err(resp) => return resp,
     };
@@ -264,6 +415,7 @@ pub(crate) fn render_metrics(state: &AppState) -> Response {
         );
         for (q, v) in [
             ("0.5", snap.p50_latency_us),
+            ("0.95", snap.p95_latency_us),
             ("0.99", snap.p99_latency_us),
             ("1.0", snap.max_latency_us),
         ] {
@@ -273,6 +425,42 @@ pub(crate) fn render_metrics(state: &AppState) -> Response {
             );
         }
     }
+    if let Some(cl) = &state.cluster {
+        let _ = writeln!(s, "# TYPE tanhvf_cluster_peer_up gauge");
+        for (addr, h) in cl.peer_health() {
+            let up = (h != cluster::PeerHealth::Down) as u32;
+            let _ = writeln!(
+                s,
+                "tanhvf_cluster_peer_up{{peer=\"{addr}\",state=\"{}\"}} {up}",
+                h.name()
+            );
+        }
+        let _ = writeln!(
+            s,
+            "tanhvf_cluster_ring_nodes {}",
+            cl.ring().nodes().len()
+        );
+        let st = &cl.stats;
+        for (name, v) in [
+            ("local", &st.local),
+            ("proxied", &st.proxied),
+            ("proxied_in", &st.proxied_in),
+        ] {
+            let _ = writeln!(
+                s,
+                "tanhvf_cluster_requests_total{{path=\"{name}\"}} {}",
+                v.load(Ordering::Relaxed)
+            );
+        }
+        for (name, v) in [
+            ("tanhvf_cluster_proxy_errors_total", &st.proxy_errors),
+            ("tanhvf_cluster_failovers_total", &st.failovers),
+            ("tanhvf_cluster_evictions_total", &st.evictions),
+            ("tanhvf_cluster_readmissions_total", &st.readmissions),
+        ] {
+            let _ = writeln!(s, "{name} {}", v.load(Ordering::Relaxed));
+        }
+    }
     Response::text(200, &s)
 }
 
@@ -280,25 +468,22 @@ pub(crate) fn render_metrics(state: &AppState) -> Response {
 // Shared pieces
 // ---------------------------------------------------------------------
 
-/// Parse a JSON body and resolve its `model` to a route.
-fn parse_model_body(
+/// Resolve a parsed body's `model` to a route (the body is parsed once
+/// in [`clustered`], before any routing decision).
+fn resolve_model(
     state: &AppState,
-    req: &Request,
-) -> Result<(Json, RouteInfo), Response> {
-    let body = req
-        .json_body()
-        .map_err(|e| error_resp(400, "bad_request", &format!("body: {e}")))?;
+    body: &Json,
+) -> Result<RouteInfo, Response> {
     let Some(model) = body.get("model").and_then(Json::as_str) else {
         return Err(error_resp(400, "bad_request", "model (string) required"));
     };
-    let info = state.router.route_info(model).ok_or_else(|| {
+    state.router.route_info(model).ok_or_else(|| {
         error_resp(
             404,
             "unknown_model",
             &format!("no model '{model}' (see /v1/models)"),
         )
-    })?;
-    Ok((body, info))
+    })
 }
 
 /// Range-check words against the route's input format, when known. The

@@ -1,0 +1,821 @@
+//! Cluster tier: consistent-hash routing of model names across several
+//! serving processes, with a health-checked peer table and an HTTP/1.1
+//! proxy path.
+//!
+//! The paper frames one datapath generator serving *many* precision
+//! design points; the router (L3) places those points side by side in
+//! one process, and this module shards them across processes. Each
+//! node runs the same HTTP front end ([`super::Server`]); a node
+//! started in cluster mode additionally owns:
+//!
+//! * [`HashRing`] — consistent hashing with virtual nodes over the
+//!   dependency-free [`hash64`] (FNV-1a + splitmix64 finalizer, the
+//!   crate's `util::rng`-style mixing). Every node hashes the same
+//!   identifier set (its own advertised address plus `--peers`), so
+//!   all fronts agree on ownership. A key's candidate order is the
+//!   ring walk from its hash point: the owner first, then the nodes
+//!   that would inherit it — which is exactly the failover order, so
+//!   a dead node's keys move *only* to their next-in-ring successor
+//!   and every other key keeps its owner.
+//! * A peer table with a background prober: `GET /health` every
+//!   `probe_interval`, [`ClusterConfig::failure_threshold`] consecutive
+//!   failures evict a peer from routing (it stays in the ring, so
+//!   re-admission restores the exact original placement), and
+//!   `recovery_threshold` consecutive successes re-admit it. Proxy
+//!   traffic feeds the same accounting, so a dead peer is usually
+//!   evicted by the first failed forward, not a probe tick later.
+//! * The proxy path: `/v1/eval` and `/v1/batch` bodies whose model is
+//!   owned elsewhere are forwarded verbatim (the incremental parser
+//!   has already decoded chunked or `Content-Length` framing, so the
+//!   hop is a plain `Content-Length` POST) tagged with
+//!   [`PROXIED_HEADER`]; tagged requests are always answered locally,
+//!   which bounds any transient ring disagreement to one hop.
+
+use std::collections::BTreeMap;
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, Weak};
+use std::time::Duration;
+
+use super::http::{HttpConn, Response};
+
+/// Header marking a request as already forwarded once: the receiving
+/// node must answer locally, never re-proxy (loop guard).
+pub const PROXIED_HEADER: &str = "x-tanhvf-proxied";
+
+/// Response-size bound for the proxy leg (mirrors the loadgen client).
+const MAX_PROXY_BODY: usize = 1 << 22;
+
+/// FNV-1a 64-bit: the dependency-free byte hash.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Ring hash: FNV-1a with a splitmix64 finalizer (the same mixing
+/// constants [`crate::util::rng`] seeds with). Raw FNV-1a is too
+/// correlated on near-identical short strings — `addr#0`, `addr#1`, …
+/// vnode labels land in clumps and the arc shares skew ~3x — and the
+/// finalizer's avalanche restores an even spread.
+pub fn hash64(bytes: &[u8]) -> u64 {
+    let mut z = fnv1a64(bytes).wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+// ---------------------------------------------------------------------
+// Hash ring
+// ---------------------------------------------------------------------
+
+/// Consistent-hash ring with virtual nodes.
+///
+/// Immutable once built: liveness is applied at lookup time by walking
+/// past dead nodes, so membership changes (eviction, re-admission)
+/// never rebuild the ring and the placement of keys on *live* nodes is
+/// a pure function of the configured node set.
+pub struct HashRing {
+    /// (hash point, node index), sorted by hash point.
+    points: Vec<(u64, u32)>,
+    nodes: Vec<String>,
+}
+
+impl HashRing {
+    /// Build over the deduplicated, name-sorted node set; each node
+    /// contributes `virtual_nodes` points.
+    pub fn new(nodes: &[String], virtual_nodes: usize) -> HashRing {
+        let mut uniq: Vec<String> = nodes.to_vec();
+        uniq.sort();
+        uniq.dedup();
+        let vnodes = virtual_nodes.max(1);
+        let mut points = Vec::with_capacity(uniq.len() * vnodes);
+        for (i, n) in uniq.iter().enumerate() {
+            for v in 0..vnodes {
+                points.push((hash64(format!("{n}#{v}").as_bytes()), i as u32));
+            }
+        }
+        points.sort_unstable();
+        HashRing { points, nodes: uniq }
+    }
+
+    /// The configured node set (sorted, deduplicated).
+    pub fn nodes(&self) -> &[String] {
+        &self.nodes
+    }
+
+    /// Every node in ring-walk order from `key`'s hash point: the
+    /// owner first, then successive inheritors. Deterministic for a
+    /// given (node set, virtual_nodes, key).
+    pub fn successors(&self, key: &str) -> Vec<&str> {
+        if self.points.is_empty() {
+            return Vec::new();
+        }
+        let h = hash64(key.as_bytes());
+        let start = self.points.partition_point(|&(p, _)| p < h);
+        let mut seen = vec![false; self.nodes.len()];
+        let mut out = Vec::with_capacity(self.nodes.len());
+        for off in 0..self.points.len() {
+            let (_, ni) = self.points[(start + off) % self.points.len()];
+            let ni = ni as usize;
+            if !seen[ni] {
+                seen[ni] = true;
+                out.push(self.nodes[ni].as_str());
+                if out.len() == self.nodes.len() {
+                    break;
+                }
+            }
+        }
+        out
+    }
+
+    /// The key's owner ignoring liveness.
+    pub fn owner(&self, key: &str) -> Option<&str> {
+        self.successors(key).first().copied()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Peer table
+// ---------------------------------------------------------------------
+
+/// Routing view of one peer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PeerHealth {
+    /// Answering probes/proxies; routable.
+    Healthy,
+    /// Recent failures below the eviction threshold; still routable.
+    Suspect,
+    /// Evicted from routing until `recovery_threshold` consecutive
+    /// successful probes.
+    Down,
+}
+
+impl PeerHealth {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PeerHealth::Healthy => "healthy",
+            PeerHealth::Suspect => "suspect",
+            PeerHealth::Down => "down",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+struct PeerSlot {
+    health: PeerHealth,
+    consecutive_failures: u32,
+    consecutive_successes: u32,
+}
+
+impl PeerSlot {
+    fn new() -> PeerSlot {
+        PeerSlot {
+            health: PeerHealth::Healthy,
+            consecutive_failures: 0,
+            consecutive_successes: 0,
+        }
+    }
+}
+
+/// Cluster-wide counters surfaced on `/metrics`.
+#[derive(Default)]
+pub struct ClusterStats {
+    /// Eval/batch requests answered by the local router (owned here).
+    pub local: AtomicU64,
+    /// Requests forwarded to a peer (successful round trip).
+    pub proxied: AtomicU64,
+    /// Forwarded requests received from another front.
+    pub proxied_in: AtomicU64,
+    /// Transport failures on the proxy leg.
+    pub proxy_errors: AtomicU64,
+    /// Requests served by a non-first candidate after the owner failed.
+    pub failovers: AtomicU64,
+    /// Peer transitions into `Down`.
+    pub evictions: AtomicU64,
+    /// Peer transitions out of `Down`.
+    pub readmissions: AtomicU64,
+}
+
+/// Where a key's next candidate lives.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Node {
+    /// This process owns the key: serve through the local router.
+    Local,
+    /// A peer owns it: proxy to this address.
+    Peer(String),
+}
+
+/// Tuning for one cluster node. `advertise` is the identity this node
+/// hashes itself under — it must match what the other fronts list in
+/// their `--peers` for all rings to agree (an empty string is filled
+/// with the bound address by [`super::Server::start_cluster`]).
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    pub advertise: String,
+    pub peers: Vec<String>,
+    /// Ring points per node; more points = tighter load spread per key
+    /// at O(nodes * virtual_nodes * log) build cost.
+    pub virtual_nodes: usize,
+    pub probe_interval: Duration,
+    /// Connect/read budget for one probe.
+    pub probe_timeout: Duration,
+    /// Consecutive failures (probe or proxy) that evict a peer.
+    pub failure_threshold: u32,
+    /// Consecutive successful probes that re-admit an evicted peer.
+    pub recovery_threshold: u32,
+    /// End-to-end budget for one forwarded request.
+    pub proxy_timeout: Duration,
+    /// Bound on concurrent outbound forwards. A forward blocks the
+    /// worker thread driving it, so an unbounded count lets two fronts
+    /// proxying to each other fill both worker pools and deadlock
+    /// until `proxy_timeout`; past the bound requests are shed with
+    /// 503 instead. `0` means "derive from the server's worker count"
+    /// ([`super::Server::start_cluster`] fills in `workers / 2`,
+    /// minimum 1, so at least half the pool always stays available for
+    /// local and proxied-in work).
+    pub max_inflight_forwards: usize,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            advertise: String::new(),
+            peers: Vec::new(),
+            virtual_nodes: 64,
+            probe_interval: Duration::from_millis(500),
+            probe_timeout: Duration::from_secs(1),
+            failure_threshold: 3,
+            recovery_threshold: 2,
+            proxy_timeout: Duration::from_secs(10),
+            max_inflight_forwards: 0,
+        }
+    }
+}
+
+/// A running cluster view: ring + peer table + prober thread.
+pub struct Cluster {
+    cfg: ClusterConfig,
+    ring: HashRing,
+    peers: Mutex<BTreeMap<String, PeerSlot>>,
+    pub stats: ClusterStats,
+    /// Concurrent outbound forwards (bounded by
+    /// `cfg.max_inflight_forwards`).
+    inflight_forwards: AtomicUsize,
+    shutdown: Arc<AtomicBool>,
+    prober: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl Cluster {
+    /// Validate, build the ring, and launch the prober.
+    pub fn start(mut cfg: ClusterConfig) -> Result<Arc<Cluster>, String> {
+        if cfg.advertise.is_empty() {
+            return Err("cluster: advertise address must be set".into());
+        }
+        if cfg.peers.iter().any(|p| p == &cfg.advertise) {
+            return Err(format!(
+                "cluster: --peers must not include the node itself ({})",
+                cfg.advertise
+            ));
+        }
+        if cfg.failure_threshold == 0 || cfg.recovery_threshold == 0 {
+            return Err("cluster: thresholds must be >= 1".into());
+        }
+        if cfg.max_inflight_forwards == 0 {
+            // "Auto" without a known worker count: effectively
+            // unbounded. The HTTP server substitutes workers/2 before
+            // starting the cluster.
+            cfg.max_inflight_forwards = usize::MAX;
+        }
+        let mut nodes = cfg.peers.clone();
+        nodes.push(cfg.advertise.clone());
+        let ring = HashRing::new(&nodes, cfg.virtual_nodes);
+        let peers = cfg
+            .peers
+            .iter()
+            .map(|p| (p.clone(), PeerSlot::new()))
+            .collect::<BTreeMap<_, _>>();
+        let cluster = Arc::new(Cluster {
+            cfg,
+            ring,
+            peers: Mutex::new(peers),
+            stats: ClusterStats::default(),
+            inflight_forwards: AtomicUsize::new(0),
+            shutdown: Arc::new(AtomicBool::new(false)),
+            prober: Mutex::new(None),
+        });
+        if !cluster.cfg.peers.is_empty() {
+            // The prober holds only a Weak reference: a Cluster whose
+            // owners all drop without calling stop() still gets its
+            // Drop (the upgrade fails and the thread exits) instead of
+            // an Arc cycle keeping both alive forever.
+            let weak: Weak<Cluster> = Arc::downgrade(&cluster);
+            let shutdown = cluster.shutdown.clone();
+            let interval = cluster.cfg.probe_interval;
+            let t = std::thread::Builder::new()
+                .name("tanhvf-cluster-prober".into())
+                .spawn(move || loop {
+                    // Sleep first (in short slices so stop() is
+                    // prompt): freshly started peers keep the
+                    // optimistic Healthy default for one interval, and
+                    // deterministic tests see no startup probe race.
+                    let mut left = interval;
+                    while !left.is_zero() {
+                        if shutdown.load(Ordering::SeqCst) {
+                            return;
+                        }
+                        let step = left.min(Duration::from_millis(25));
+                        std::thread::sleep(step);
+                        left -= step;
+                    }
+                    let Some(c) = weak.upgrade() else { return };
+                    if shutdown.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    c.probe_round();
+                })
+                .map_err(|e| format!("spawn prober: {e}"))?;
+            *cluster.prober.lock().unwrap() = Some(t);
+        }
+        Ok(cluster)
+    }
+
+    /// Stop the prober and join it. Idempotent. Joining is skipped when
+    /// called *from* the prober thread (possible when the prober's
+    /// transient strong reference is the last one and its drop runs
+    /// this via `Drop for Cluster`) — the thread exits on its own right
+    /// after.
+    pub fn stop(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        let handle = self.prober.lock().unwrap().take();
+        if let Some(t) = handle {
+            if t.thread().id() != std::thread::current().id() {
+                let _ = t.join();
+            }
+        }
+    }
+
+    /// Reserve one slot of outbound-forward concurrency, or `None` when
+    /// the bound is reached (the caller sheds load). The permit returns
+    /// its slot on drop.
+    pub fn try_forward_permit(&self) -> Option<ForwardPermit<'_>> {
+        let limit = self.cfg.max_inflight_forwards;
+        let mut cur = self.inflight_forwards.load(Ordering::Relaxed);
+        loop {
+            if cur >= limit {
+                return None;
+            }
+            match self.inflight_forwards.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return Some(ForwardPermit(self)),
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// This node's ring identity.
+    pub fn self_name(&self) -> &str {
+        &self.cfg.advertise
+    }
+
+    pub fn ring(&self) -> &HashRing {
+        &self.ring
+    }
+
+    pub fn config(&self) -> &ClusterConfig {
+        &self.cfg
+    }
+
+    /// Health of every peer, name-sorted.
+    pub fn peer_health(&self) -> BTreeMap<String, PeerHealth> {
+        self.peers
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.health))
+            .collect()
+    }
+
+    pub fn healthy_peers(&self) -> usize {
+        self.peers
+            .lock()
+            .unwrap()
+            .values()
+            .filter(|s| s.health != PeerHealth::Down)
+            .count()
+    }
+
+    /// Candidate nodes for a key, in ring order, evicted peers
+    /// skipped. The first entry is the routing decision; the rest are
+    /// the failover order.
+    pub fn candidates(&self, key: &str) -> Vec<Node> {
+        let peers = self.peers.lock().unwrap();
+        self.ring
+            .successors(key)
+            .into_iter()
+            .filter_map(|n| {
+                if n == self.cfg.advertise {
+                    Some(Node::Local)
+                } else {
+                    match peers.get(n) {
+                        Some(s) if s.health != PeerHealth::Down => {
+                            Some(Node::Peer(n.to_string()))
+                        }
+                        _ => None,
+                    }
+                }
+            })
+            .collect()
+    }
+
+    /// The node currently routed to for `key` (liveness applied).
+    pub fn owner_name(&self, key: &str) -> Option<String> {
+        match self.candidates(key).into_iter().next() {
+            Some(Node::Local) => Some(self.cfg.advertise.clone()),
+            Some(Node::Peer(p)) => Some(p),
+            None => None,
+        }
+    }
+
+    /// One failed probe/proxy against `addr`.
+    pub fn record_failure(&self, addr: &str) {
+        let mut peers = self.peers.lock().unwrap();
+        let Some(slot) = peers.get_mut(addr) else { return };
+        slot.consecutive_successes = 0;
+        slot.consecutive_failures = slot.consecutive_failures.saturating_add(1);
+        if slot.health != PeerHealth::Down {
+            slot.health = if slot.consecutive_failures
+                >= self.cfg.failure_threshold
+            {
+                self.stats.evictions.fetch_add(1, Ordering::Relaxed);
+                PeerHealth::Down
+            } else {
+                PeerHealth::Suspect
+            };
+        }
+    }
+
+    /// One successful probe/proxy against `addr`.
+    pub fn record_success(&self, addr: &str) {
+        let mut peers = self.peers.lock().unwrap();
+        let Some(slot) = peers.get_mut(addr) else { return };
+        slot.consecutive_failures = 0;
+        slot.consecutive_successes =
+            slot.consecutive_successes.saturating_add(1);
+        match slot.health {
+            PeerHealth::Down => {
+                if slot.consecutive_successes >= self.cfg.recovery_threshold {
+                    slot.health = PeerHealth::Healthy;
+                    self.stats.readmissions.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            PeerHealth::Suspect => slot.health = PeerHealth::Healthy,
+            PeerHealth::Healthy => {}
+        }
+    }
+
+    /// Forward a decoded request body to a peer and return its
+    /// response. Transport failures are `Err` (the caller records them
+    /// and fails over); HTTP-level errors pass through as responses.
+    pub fn forward(
+        &self,
+        addr: &str,
+        path: &str,
+        body: &[u8],
+    ) -> Result<Response, String> {
+        let sa = resolve(addr)?;
+        let stream = TcpStream::connect_timeout(&sa, self.cfg.proxy_timeout)
+            .map_err(|e| format!("connect {addr}: {e}"))?;
+        let _ = stream.set_nodelay(true);
+        let _ = stream.set_read_timeout(Some(self.cfg.proxy_timeout));
+        let _ = stream.set_write_timeout(Some(self.cfg.proxy_timeout));
+        let mut conn = HttpConn::new(stream);
+        conn.write_request_with_headers(
+            "POST",
+            path,
+            &[(PROXIED_HEADER, "1")],
+            body,
+        )
+        .map_err(|e| format!("forward to {addr}: {e}"))?;
+        let (status, headers, body) = conn
+            .read_response(MAX_PROXY_BODY)
+            .map_err(|e| format!("response from {addr}: {e}"))?;
+        let content_type = headers
+            .get("content-type")
+            .cloned()
+            .unwrap_or_else(|| "application/json".into());
+        Ok(Response { status, content_type, body })
+    }
+
+    /// One probe pass over every peer — including evicted ones, which
+    /// is the re-admission path. Proxy traffic feeds the same
+    /// accounting between rounds.
+    fn probe_round(&self) {
+        let addrs: Vec<String> =
+            self.peers.lock().unwrap().keys().cloned().collect();
+        for addr in addrs {
+            if self.shutdown.load(Ordering::SeqCst) {
+                return;
+            }
+            if probe(&addr, self.cfg.probe_timeout) {
+                self.record_success(&addr);
+            } else {
+                self.record_failure(&addr);
+            }
+        }
+    }
+}
+
+impl Drop for Cluster {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// An in-flight outbound-forward slot; dropping it frees the slot.
+pub struct ForwardPermit<'a>(&'a Cluster);
+
+impl Drop for ForwardPermit<'_> {
+    fn drop(&mut self) {
+        self.0.inflight_forwards.fetch_sub(1, Ordering::Release);
+    }
+}
+
+fn resolve(addr: &str) -> Result<SocketAddr, String> {
+    addr.to_socket_addrs()
+        .map_err(|e| format!("resolve {addr}: {e}"))?
+        .next()
+        .ok_or_else(|| format!("resolve {addr}: no address"))
+}
+
+/// One liveness probe: `GET /health` must answer 200 within the budget.
+fn probe(addr: &str, timeout: Duration) -> bool {
+    let Ok(sa) = resolve(addr) else { return false };
+    let Ok(stream) = TcpStream::connect_timeout(&sa, timeout) else {
+        return false;
+    };
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(timeout));
+    let _ = stream.set_write_timeout(Some(timeout));
+    let mut conn = HttpConn::new(stream);
+    if conn.write_request("GET", "/health", b"").is_err() {
+        return false;
+    }
+    matches!(conn.read_response(1 << 20), Ok((200, _, _)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn names(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("10.0.0.{i}:8787")).collect()
+    }
+
+    #[test]
+    fn fnv_matches_reference_vectors() {
+        // Published FNV-1a 64 test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn ring_hash_decorrelates_sequential_labels() {
+        // The finalizer must spread `addr#0..addr#n` labels evenly:
+        // check the top byte of consecutive vnode labels is not
+        // constant (raw FNV-1a fails this badly — its low-byte change
+        // barely reaches the high bits for short strings).
+        let mut top_bytes = std::collections::BTreeSet::new();
+        for v in 0..64 {
+            top_bytes.insert((hash64(format!("10.0.0.1:8787#{v}").as_bytes())
+                >> 56) as u8);
+        }
+        assert!(
+            top_bytes.len() > 32,
+            "only {} distinct top bytes over 64 labels",
+            top_bytes.len()
+        );
+    }
+
+    #[test]
+    fn ring_is_deterministic_and_covers_all_nodes() {
+        let nodes = names(3);
+        let a = HashRing::new(&nodes, 64);
+        let b = HashRing::new(&nodes, 64);
+        for key in ["s3_12", "s3_5", "s2_8", "model-x"] {
+            assert_eq!(a.owner(key), b.owner(key));
+            let succ = a.successors(key);
+            assert_eq!(succ.len(), 3, "{key}: {succ:?}");
+            let mut sorted: Vec<&str> = succ.clone();
+            sorted.sort_unstable();
+            let want: Vec<&str> =
+                nodes.iter().map(String::as_str).collect();
+            assert_eq!(sorted, want, "{key}");
+        }
+        // Node order in input must not matter.
+        let mut shuffled = nodes.clone();
+        shuffled.reverse();
+        let c = HashRing::new(&shuffled, 64);
+        assert_eq!(a.owner("s3_12"), c.owner("s3_12"));
+    }
+
+    #[test]
+    fn ring_spreads_keys_roughly_evenly() {
+        let ring = HashRing::new(&names(4), 64);
+        let mut counts = BTreeMap::new();
+        for i in 0..4000 {
+            let k = format!("model-{i}");
+            *counts.entry(ring.owner(&k).unwrap().to_string()).or_insert(0) +=
+                1;
+        }
+        assert_eq!(counts.len(), 4);
+        for (node, c) in &counts {
+            // 1000 expected; virtual nodes keep the spread sane.
+            assert!(
+                (400..=1800).contains(c),
+                "{node} owns {c} of 4000 keys: {counts:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn dead_node_moves_only_its_own_keys() {
+        // The rebalance bound: with one node excluded, every key owned
+        // by a surviving node keeps its owner; only the dead node's
+        // keys move (to their ring successor).
+        let nodes = names(3);
+        let ring = HashRing::new(&nodes, 64);
+        let dead = ring.owner("pick-a-victim").unwrap().to_string();
+        let total = 3000usize;
+        let mut moved = 0usize;
+        for i in 0..total {
+            let k = format!("model-{i}");
+            let succ = ring.successors(&k);
+            let before = succ[0];
+            let after = *succ
+                .iter()
+                .find(|&&n| n != dead.as_str())
+                .expect("two nodes survive");
+            if before == dead {
+                moved += 1;
+                // Inherited by the immediate successor, nothing else.
+                assert_eq!(after, succ[1], "{k}");
+            } else {
+                assert_eq!(before, after, "{k}: key moved off a live node");
+            }
+        }
+        let frac = moved as f64 / total as f64;
+        // Expected share 1/3; allow ring-slack for the hash spread.
+        assert!(
+            frac > 0.15 && frac < 1.0 / 3.0 + 0.15,
+            "moved fraction {frac}"
+        );
+    }
+
+    #[test]
+    fn single_node_ring_owns_everything() {
+        let ring = HashRing::new(&names(1), 8);
+        assert_eq!(ring.owner("anything"), Some("10.0.0.0:8787"));
+        assert!(HashRing::new(&[], 8).owner("x").is_none());
+    }
+
+    fn test_cluster(peers: usize) -> Arc<Cluster> {
+        Cluster::start(ClusterConfig {
+            advertise: "127.0.0.1:1".into(),
+            // Unroutable peers; the prober is effectively a no-op
+            // within the test runtime because probe_interval is long.
+            peers: (0..peers).map(|i| format!("127.0.0.1:{}", 2 + i)).collect(),
+            probe_interval: Duration::from_secs(3600),
+            probe_timeout: Duration::from_millis(10),
+            failure_threshold: 2,
+            recovery_threshold: 2,
+            ..Default::default()
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn eviction_and_readmission_state_machine() {
+        let c = test_cluster(2);
+        let peer = "127.0.0.1:2";
+        assert_eq!(c.peer_health()[peer], PeerHealth::Healthy);
+        c.record_failure(peer);
+        assert_eq!(c.peer_health()[peer], PeerHealth::Suspect);
+        // A success below the eviction threshold heals immediately.
+        c.record_success(peer);
+        assert_eq!(c.peer_health()[peer], PeerHealth::Healthy);
+        // Two consecutive failures evict.
+        c.record_failure(peer);
+        c.record_failure(peer);
+        assert_eq!(c.peer_health()[peer], PeerHealth::Down);
+        assert_eq!(c.stats.evictions.load(Ordering::Relaxed), 1);
+        assert_eq!(c.healthy_peers(), 1);
+        // Re-admission needs recovery_threshold consecutive successes.
+        c.record_success(peer);
+        assert_eq!(c.peer_health()[peer], PeerHealth::Down);
+        c.record_success(peer);
+        assert_eq!(c.peer_health()[peer], PeerHealth::Healthy);
+        assert_eq!(c.stats.readmissions.load(Ordering::Relaxed), 1);
+        c.stop();
+    }
+
+    #[test]
+    fn candidates_skip_evicted_peers() {
+        let c = test_cluster(2);
+        // Find a key owned by a peer.
+        let key = (0..200)
+            .map(|i| format!("m{i}"))
+            .find(|k| {
+                matches!(
+                    c.candidates(k).first(),
+                    Some(Node::Peer(_))
+                )
+            })
+            .expect("some key lands on a peer");
+        let Some(Node::Peer(owner)) = c.candidates(&key).first().cloned()
+        else {
+            unreachable!()
+        };
+        // Evict the owner: the key must remap to a surviving node and
+        // the candidate list must shrink by exactly one.
+        let before = c.candidates(&key);
+        assert_eq!(before.len(), 3);
+        c.record_failure(&owner);
+        c.record_failure(&owner);
+        let after = c.candidates(&key);
+        assert_eq!(after.len(), 2);
+        assert_ne!(after.first(), Some(&Node::Peer(owner.clone())));
+        // And the new order is the old order with the owner removed —
+        // only the dead node's keys moved.
+        let filtered: Vec<Node> = before
+            .into_iter()
+            .filter(|n| *n != Node::Peer(owner.clone()))
+            .collect();
+        assert_eq!(after, filtered);
+        c.stop();
+    }
+
+    #[test]
+    fn rejects_self_in_peer_list_and_empty_advertise() {
+        let err = Cluster::start(ClusterConfig {
+            advertise: "127.0.0.1:1".into(),
+            peers: vec!["127.0.0.1:1".into()],
+            ..Default::default()
+        })
+        .unwrap_err();
+        assert!(err.contains("itself"), "{err}");
+        assert!(Cluster::start(ClusterConfig::default()).is_err());
+    }
+
+    #[test]
+    fn forward_permits_bound_concurrency_and_release_on_drop() {
+        let c = Cluster::start(ClusterConfig {
+            advertise: "127.0.0.1:1".into(),
+            peers: vec!["127.0.0.1:2".into()],
+            probe_interval: Duration::from_secs(3600),
+            max_inflight_forwards: 2,
+            ..Default::default()
+        })
+        .unwrap();
+        let p1 = c.try_forward_permit().expect("first permit");
+        let p2 = c.try_forward_permit().expect("second permit");
+        assert!(
+            c.try_forward_permit().is_none(),
+            "bound of 2 must shed the third forward"
+        );
+        drop(p1);
+        let p3 = c.try_forward_permit().expect("slot freed on drop");
+        drop(p2);
+        drop(p3);
+        assert_eq!(c.inflight_forwards.load(Ordering::Relaxed), 0);
+        c.stop();
+    }
+
+    #[test]
+    fn default_permit_bound_is_unbounded_for_direct_users() {
+        // max_inflight_forwards = 0 means "auto": direct Cluster users
+        // get effectively unbounded permits (the HTTP server
+        // substitutes workers/2 before starting).
+        let c = test_cluster(1);
+        let _a = c.try_forward_permit().expect("permit");
+        let _b = c.try_forward_permit().expect("permit");
+        c.stop();
+    }
+
+    #[test]
+    fn unknown_peer_records_are_ignored() {
+        let c = test_cluster(1);
+        c.record_failure("127.0.0.1:999");
+        c.record_success("127.0.0.1:999");
+        assert_eq!(c.peer_health().len(), 1);
+        c.stop();
+    }
+}

@@ -25,7 +25,7 @@
 use std::io::{Read, Write};
 use std::net::TcpStream;
 use std::os::unix::io::{AsRawFd, RawFd};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use super::api::error_resp;
 use super::http::{encode_response, HttpError, Parser, Request, Response};
@@ -75,6 +75,8 @@ pub(crate) struct Conn {
     idle_since: Instant,
     /// Entry into Writing — anchors the drain deadline.
     write_since: Option<Instant>,
+    /// Entry into Dispatching — anchors the lost-completion backstop.
+    dispatch_since: Option<Instant>,
     registered: Interest,
 }
 
@@ -87,6 +89,17 @@ const MAX_READ_PER_EVENT: usize = 16 * 4096;
 /// upload, but a hard bound on a client dripping one byte per
 /// almost-`header_timeout` to dodge the stall check.
 const MESSAGE_BUDGET_FACTOR: u32 = 40;
+
+/// Slack added to `2 * request_timeout` for the Dispatching backstop.
+/// This is a lost-completion detector, not a latency bound: a dispatch
+/// normally answers within `request_timeout` (504 path), but a cluster
+/// front's proxy leg may legitimately take several `proxy_timeout`s
+/// (connect + write + read are bounded separately, across failover
+/// candidates), so the grace is deliberately far above any of those.
+/// Only a worker that died without pushing its completion — which
+/// would otherwise park the connection in Dispatching forever — should
+/// ever hit it.
+const DISPATCH_GRACE: Duration = Duration::from_secs(120);
 
 impl Conn {
     pub fn new(
@@ -108,6 +121,7 @@ impl Conn {
             message_started: None,
             idle_since: now,
             write_since: None,
+            dispatch_since: None,
             registered: Interest::Read,
         })
     }
@@ -225,6 +239,7 @@ impl Conn {
         http: &HttpCounters,
     ) -> Action {
         debug_assert_eq!(self.phase, Phase::Dispatching);
+        self.dispatch_since = None;
         self.keep_after_write = keep;
         self.out = encode_response(resp, keep);
         self.out_pos = 0;
@@ -277,8 +292,19 @@ impl Conn {
                 }
                 _ => Action::Continue,
             },
-            // Bounded by the router's request_timeout -> 504.
-            Phase::Dispatching => Action::Continue,
+            // Normally bounded by the router's request_timeout -> 504;
+            // the backstop only fires if a completion was lost (worker
+            // death), at which point closing is the only safe move —
+            // nobody is left to write a response.
+            Phase::Dispatching => match self.dispatch_since {
+                Some(t0)
+                    if now.duration_since(t0)
+                        >= cfg.request_timeout * 2 + DISPATCH_GRACE =>
+                {
+                    Action::Close
+                }
+                _ => Action::Continue,
+            },
         }
     }
 
@@ -291,6 +317,7 @@ impl Conn {
                 self.read_started = None;
                 self.message_started = None;
                 self.phase = Phase::Dispatching;
+                self.dispatch_since = Some(now);
                 Action::Dispatch(req)
             }
             Ok(None) => {
@@ -544,6 +571,39 @@ mod tests {
         let _ = client.read_to_end(&mut buf);
         let text = String::from_utf8_lossy(&buf);
         assert!(text.starts_with("HTTP/1.1 408"), "{text}");
+    }
+
+    #[test]
+    fn lost_completion_hits_dispatch_backstop() {
+        // A request is dispatched but its completion never arrives
+        // (worker death). The connection must not park in Dispatching
+        // forever: past 2 * request_timeout + grace it closes.
+        let (mut client, server) = pair();
+        let cfg = ServerConfig {
+            request_timeout: Duration::from_millis(100),
+            ..test_cfg()
+        };
+        let t0 = Instant::now();
+        let http = HttpCounters::default();
+        let mut conn = Conn::new(server, t0, 1 << 20).unwrap();
+        client.write_all(b"GET /stuck HTTP/1.1\r\n\r\n").unwrap();
+        std::thread::sleep(Duration::from_millis(50));
+        match conn.on_readable(t0, &http) {
+            Action::Dispatch(_) => {}
+            other => panic!("expected dispatch, got {other:?}"),
+        }
+        assert_eq!(conn.phase(), Phase::Dispatching);
+        // Within the in-flight budget (even a slow multi-candidate
+        // proxy chain): still waiting on the worker.
+        match conn.check_deadline(t0 + Duration::from_secs(60), &cfg, &http) {
+            Action::Continue => {}
+            other => panic!("backstop fired early: {other:?}"),
+        }
+        // Far past it: the connection is torn down.
+        match conn.check_deadline(t0 + Duration::from_secs(300), &cfg, &http) {
+            Action::Close => {}
+            other => panic!("expected backstop close, got {other:?}"),
+        }
     }
 
     #[test]

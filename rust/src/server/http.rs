@@ -698,17 +698,36 @@ impl HttpConn {
         target: &str,
         body: &[u8],
     ) -> std::io::Result<()> {
+        self.write_request_with_headers(method, target, &[], body)
+    }
+
+    /// Client side: serialize a request with extra headers — the proxy
+    /// leg of the cluster tier uses this to tag forwarded requests.
+    pub fn write_request_with_headers(
+        &mut self,
+        method: &str,
+        target: &str,
+        extra_headers: &[(&str, &str)],
+        body: &[u8],
+    ) -> std::io::Result<()> {
         let host = self
             .stream
             .peer_addr()
             .map(|a| a.to_string())
             .unwrap_or_else(|_| "localhost".into());
-        let head = format!(
+        let mut head = format!(
             "{method} {target} HTTP/1.1\r\nHost: {host}\r\n\
              Content-Type: application/json\r\nContent-Length: {}\r\n\
-             Connection: keep-alive\r\n\r\n",
+             Connection: keep-alive\r\n",
             body.len(),
         );
+        for (name, value) in extra_headers {
+            head.push_str(name);
+            head.push_str(": ");
+            head.push_str(value);
+            head.push_str("\r\n");
+        }
+        head.push_str("\r\n");
         let mut msg = head.into_bytes();
         msg.extend_from_slice(body);
         self.stream.write_all(&msg)?;
@@ -776,6 +795,7 @@ pub fn reason(status: u16) -> &'static str {
         431 => "Request Header Fields Too Large",
         500 => "Internal Server Error",
         501 => "Not Implemented",
+        502 => "Bad Gateway",
         503 => "Service Unavailable",
         504 => "Gateway Timeout",
         _ => "Unknown",

@@ -12,14 +12,17 @@ use std::time::{Duration, Instant};
 
 use crate::util::json::{self, Json};
 use crate::util::rng::Rng;
+use crate::util::stats::percentile;
 
 use super::http::HttpConn;
 
 /// Workload description for [`run`].
 #[derive(Clone, Debug)]
 pub struct LoadgenConfig {
-    /// Server address, e.g. `"127.0.0.1:8787"`.
-    pub addr: String,
+    /// Server addresses, e.g. `["127.0.0.1:8787"]`. With several
+    /// entries (a cluster of fronts) connections are dealt round-robin
+    /// across them, so the whole cluster is driven from one run.
+    pub addrs: Vec<String>,
     /// Concurrent keep-alive connections.
     pub connections: usize,
     /// Requests each connection sends.
@@ -37,7 +40,7 @@ pub struct LoadgenConfig {
 impl LoadgenConfig {
     pub fn new(addr: impl Into<String>, models: &[&str]) -> LoadgenConfig {
         LoadgenConfig {
-            addr: addr.into(),
+            addrs: vec![addr.into()],
             connections: 4,
             requests_per_connection: 100,
             words_per_request: 64,
@@ -111,8 +114,10 @@ impl LoadReport {
 
 /// Run the closed-loop workload to completion.
 pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport, String> {
-    if cfg.models.is_empty() || cfg.connections == 0 {
-        return Err("loadgen needs at least one model and connection".into());
+    if cfg.models.is_empty() || cfg.connections == 0 || cfg.addrs.is_empty() {
+        return Err(
+            "loadgen needs at least one model, connection, and address".into(),
+        );
     }
     let t0 = Instant::now();
     let mut handles = Vec::new();
@@ -135,22 +140,17 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport, String> {
         lats.extend(l);
     }
     let wall = t0.elapsed();
+    // Nearest-rank percentiles via the shared helper (the old local
+    // picker truncated the rank and under-reported p95/p99).
     lats.sort_unstable();
-    let pick = |q: f64| -> u64 {
-        if lats.is_empty() {
-            0
-        } else {
-            lats[((lats.len() - 1) as f64 * q) as usize]
-        }
-    };
     Ok(LoadReport {
         requests: lats.len() as u64 + failures,
         failures,
         words,
         wall,
-        p50_us: pick(0.50),
-        p95_us: pick(0.95),
-        p99_us: pick(0.99),
+        p50_us: percentile(&lats, 0.50),
+        p95_us: percentile(&lats, 0.95),
+        p99_us: percentile(&lats, 0.99),
         max_us: lats.last().copied().unwrap_or(0),
     })
 }
@@ -159,8 +159,9 @@ fn connection_loop(
     cfg: &LoadgenConfig,
     ci: usize,
 ) -> Result<(u64, u64, Vec<u64>), String> {
-    let stream = TcpStream::connect(&cfg.addr)
-        .map_err(|e| format!("connect {}: {e}", cfg.addr))?;
+    let addr = &cfg.addrs[ci % cfg.addrs.len()];
+    let stream = TcpStream::connect(addr)
+        .map_err(|e| format!("connect {addr}: {e}"))?;
     let _ = stream.set_nodelay(true);
     let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
     let mut conn = HttpConn::new(stream);

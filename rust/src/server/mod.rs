@@ -14,15 +14,24 @@
 //!   with the client side used by tests and the load generator.
 //! * [`conn`]    — per-connection state machine for the reactor:
 //!   read → parse → dispatch → write → keep-alive, with per-state
-//!   deadlines (slow-loris 408, write-stall close, idle budget).
+//!   deadlines (slow-loris 408, write-stall close, idle budget, and a
+//!   dispatch backstop so a lost completion can never leak the
+//!   connection).
 //! * [`reactor`] — readiness event loop: raw `epoll` bindings with a
 //!   portable `poll(2)` fallback (`TANHVF_POLLER=poll`), a self-pipe
 //!   [`Waker`](crate::exec::Waker), and the accept/dispatch/deadline
 //!   loop. One thread multiplexes every connection.
 //! * [`api`]     — JSON endpoints: `/health`, `/v1/models`, `/v1/eval`,
 //!   `/v1/batch`, `/metrics`.
-//! * [`loadgen`] — closed-loop multi-connection load generator with a
-//!   machine-readable JSON report.
+//! * [`cluster`] — multi-node tier ([`Server::start_cluster`]):
+//!   consistent-hash routing of model names across several fronts
+//!   (FNV-1a ring with virtual nodes), a health-checked peer table
+//!   (probe thread, failure-threshold eviction, re-admission), and the
+//!   proxy path that forwards `/v1/eval`/`/v1/batch` to the owning
+//!   peer while answering locally for keys this node owns.
+//! * [`loadgen`] — closed-loop multi-connection load generator (one
+//!   address or a whole cluster of fronts) with a machine-readable
+//!   JSON report.
 //!
 //! ## Backends
 //!
@@ -46,6 +55,7 @@
 //! loopback connect for the blocking accept), then join.
 
 pub mod api;
+pub mod cluster;
 #[cfg(unix)]
 pub(crate) mod conn;
 pub mod http;
@@ -157,6 +167,9 @@ pub(crate) struct AppState {
     pub http: HttpCounters,
     pub started: Instant,
     pub request_timeout: Duration,
+    /// Present when this node runs in cluster mode: ring + peer table
+    /// + proxy path (see [`cluster`]).
+    pub cluster: Option<Arc<cluster::Cluster>>,
 }
 
 /// A running HTTP activation service. Dropping it (or calling
@@ -174,17 +187,55 @@ pub struct Server {
 }
 
 impl Server {
-    /// Start the router, bind, and begin accepting.
+    /// Start the router, bind, and begin accepting (single node).
     pub fn start(cfg: ServerConfig, routes: Vec<Route>) -> Result<Server, String> {
+        Server::start_inner(cfg, routes, None)
+    }
+
+    /// Start in cluster mode: same server plus a consistent-hash ring
+    /// over `{advertise} ∪ peers`, a health-checked peer table, and
+    /// proxying of eval/batch requests whose model is owned elsewhere.
+    /// An empty `advertise` is filled with the bound address (useful
+    /// with port 0 in tests).
+    pub fn start_cluster(
+        cfg: ServerConfig,
+        routes: Vec<Route>,
+        cluster_cfg: cluster::ClusterConfig,
+    ) -> Result<Server, String> {
+        Server::start_inner(cfg, routes, Some(cluster_cfg))
+    }
+
+    fn start_inner(
+        cfg: ServerConfig,
+        routes: Vec<Route>,
+        cluster_cfg: Option<cluster::ClusterConfig>,
+    ) -> Result<Server, String> {
         let router = Router::start(routes)?;
         let listener = TcpListener::bind(&cfg.addr)
             .map_err(|e| format!("bind {}: {e}", cfg.addr))?;
         let local_addr = listener.local_addr().map_err(|e| e.to_string())?;
+        let cluster = match cluster_cfg {
+            None => None,
+            Some(mut c) => {
+                if c.advertise.is_empty() {
+                    c.advertise = local_addr.to_string();
+                }
+                if c.max_inflight_forwards == 0 {
+                    // A forward blocks its worker; keep at least half
+                    // the pool free for local and proxied-in requests
+                    // so mutual proxying between fronts cannot
+                    // deadlock both pools.
+                    c.max_inflight_forwards = (cfg.workers / 2).max(1);
+                }
+                Some(cluster::Cluster::start(c)?)
+            }
+        };
         let state = Arc::new(AppState {
             router,
             http: HttpCounters::default(),
             started: Instant::now(),
             request_timeout: cfg.request_timeout,
+            cluster,
         });
         let pool = Arc::new(ThreadPool::new(cfg.workers.max(1)));
         let shutdown = Arc::new(AtomicBool::new(false));
@@ -200,6 +251,11 @@ impl Server {
             state,
             waker,
         })
+    }
+
+    /// The cluster view, when started with [`Server::start_cluster`].
+    pub fn cluster(&self) -> Option<&cluster::Cluster> {
+        self.state.cluster.as_deref()
     }
 
     /// The bound address (resolves ephemeral ports).
@@ -221,6 +277,11 @@ impl Server {
     /// Stop accepting, drain in-flight connections, join all threads.
     /// Idempotent; also runs on drop.
     pub fn shutdown(&mut self) {
+        // Stop the cluster prober first: it must not re-admit or probe
+        // while the transport is tearing down.
+        if let Some(c) = &self.state.cluster {
+            c.stop();
+        }
         self.shutdown.store(true, Ordering::SeqCst);
         match &self.waker {
             // Reactor: the self-pipe interrupts the poll wait.

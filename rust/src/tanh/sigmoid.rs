@@ -23,6 +23,16 @@ pub struct SigmoidUnit {
 
 impl SigmoidUnit {
     pub fn new(cfg: TanhConfig) -> Result<SigmoidUnit, String> {
+        // The (1 + t) >> 1 recombination needs at least one output
+        // fraction bit, and the float mapping scales by 2^out_frac —
+        // reject degenerate formats here so no out_frac-dependent shift
+        // downstream can underflow.
+        if cfg.out_frac < 1 {
+            return Err(format!(
+                "sigmoid needs out_frac >= 1, got {}",
+                cfg.out_frac
+            ));
+        }
         Ok(SigmoidUnit { tanh: TanhUnit::new(cfg)? })
     }
 
@@ -51,9 +61,11 @@ impl SigmoidUnit {
     pub fn eval_f64(&self, x: f64) -> f64 {
         let cfg = self.tanh.config();
         let w = cfg.in_format().quantize(x, crate::fixed::Round::Nearest);
-        // Output has out_frac-1 effective fractional bits after the >>1,
-        // but we keep the word scale at out_frac for the [0,1] mapping.
-        self.eval(w) as f64 / (1i64 << (cfg.out_frac - 1)) as f64 / 2.0
+        // Word scale is u0.{out_frac} — one shift, matching the
+        // convention `exhaustive_error` uses. (The former
+        // `1 << (out_frac - 1)` then `/ 2.0` form computed the same
+        // value but underflowed the shift for out_frac = 0.)
+        self.eval(w) as f64 / (1i64 << cfg.out_frac) as f64
     }
 
     /// Exhaustive max error vs the true sigmoid.
@@ -144,6 +156,36 @@ mod tests {
         let s = SigmoidUnit::new(cfg).unwrap();
         let e = s.exhaustive_error();
         assert!(e < 2.0 * 2f64.powi(-15), "sigmoid(s3.13) max err {e}");
+    }
+
+    #[test]
+    fn zero_out_frac_rejected_not_panicking() {
+        // Regression: an out_frac = 0 config used to reach eval_f64's
+        // `1 << (out_frac - 1)` and panic with a shift underflow in
+        // debug builds; construction must fail cleanly instead.
+        let mut cfg = TanhConfig::s3_5();
+        cfg.out_frac = 0;
+        let err = SigmoidUnit::new(cfg).unwrap_err();
+        assert!(err.contains("out_frac"), "{err}");
+    }
+
+    #[test]
+    fn eval_f64_scale_matches_exhaustive_error_convention() {
+        // eval_f64 and exhaustive_error must agree on the word scale
+        // (u0.{out_frac}): sigma(0) = 0.5 exactly, and a direct word
+        // dequantization reproduces the float path.
+        let s = SigmoidUnit::new(TanhConfig::s3_12()).unwrap();
+        assert_eq!(s.eval_f64(0.0), 0.5);
+        let cfg = *s.config();
+        for x in [-2.0f64, -0.75, 0.25, 1.5] {
+            let w = cfg.in_format().quantize(x, crate::fixed::Round::Nearest);
+            let direct = s.eval(w) as f64 / (1i64 << cfg.out_frac) as f64;
+            assert_eq!(s.eval_f64(x), direct, "x={x}");
+            assert!(
+                (s.eval_f64(x) - 1.0 / (1.0 + (-x).exp())).abs() < 1e-3,
+                "x={x}"
+            );
+        }
     }
 
     #[test]

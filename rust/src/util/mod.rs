@@ -1,9 +1,10 @@
-//! Small shared utilities: JSON, errors, deterministic PRNG, table
-//! formatting.
+//! Small shared utilities: JSON, errors, deterministic PRNG, order
+//! statistics, table formatting.
 
 pub mod error;
 pub mod json;
 pub mod rng;
+pub mod stats;
 pub mod table;
 
 /// Repository-relative path helper: resolves `rel` against the crate root

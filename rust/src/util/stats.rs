@@ -1,0 +1,184 @@
+//! Order statistics shared by every latency reporter in the crate.
+//!
+//! Two pieces:
+//!
+//! * [`percentile`] — the nearest-rank (ceiling) percentile picker.
+//!   Both the coordinator metrics and the load generator used to
+//!   truncate `((len - 1) * q) as usize`, which rounds the rank *down*
+//!   and systematically under-reports upper quantiles (p99 of 10
+//!   samples read the 9th value, not the 10th). Nearest-rank is the
+//!   textbook definition: the smallest value with at least `q` of the
+//!   mass at or below it — never below the true quantile, exact at the
+//!   sample points.
+//! * [`Reservoir`] — a fixed-capacity ring of the newest samples, so a
+//!   long-running server keeps O(capacity) memory no matter how many
+//!   latencies it records.
+
+/// Nearest-rank percentile of an ascending-sorted slice.
+///
+/// `q` is clamped to `[0, 1]`; an empty slice yields 0. For non-empty
+/// data the rank is `ceil(q * n)` (minimum 1), so `q = 0.5` of
+/// `[10, 20, 30, 40]` is 20, `q = 1.0` is always the maximum, and
+/// `q = 0.99` of ten samples is the 10th value — not the 9th the old
+/// truncating picker returned.
+pub fn percentile(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let q = q.clamp(0.0, 1.0);
+    let rank = (q * sorted.len() as f64).ceil() as usize;
+    sorted[rank.max(1).min(sorted.len()) - 1]
+}
+
+/// Fixed-capacity ring buffer of `u64` samples: pushing past capacity
+/// overwrites the oldest sample in place (O(1), no reallocation), so
+/// the memory footprint of a metrics sink is bounded for the life of
+/// the process.
+#[derive(Clone, Debug)]
+pub struct Reservoir {
+    buf: Vec<u64>,
+    capacity: usize,
+    /// Next write position once the ring has wrapped.
+    head: usize,
+    /// Total samples ever pushed (not capped).
+    pushed: u64,
+}
+
+impl Reservoir {
+    pub fn new(capacity: usize) -> Reservoir {
+        Reservoir {
+            buf: Vec::new(),
+            capacity: capacity.max(1),
+            head: 0,
+            pushed: 0,
+        }
+    }
+
+    /// Record one sample, evicting the oldest when full.
+    pub fn push(&mut self, v: u64) {
+        self.pushed += 1;
+        if self.buf.len() < self.capacity {
+            self.buf.push(v);
+        } else {
+            self.buf[self.head] = v;
+            self.head = (self.head + 1) % self.capacity;
+        }
+    }
+
+    /// Samples currently held (<= capacity).
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Total samples ever pushed, including evicted ones.
+    pub fn total_pushed(&self) -> u64 {
+        self.pushed
+    }
+
+    /// The held samples, unordered — a cheap clone so callers holding
+    /// a lock around the reservoir can sort *outside* it.
+    pub fn samples(&self) -> Vec<u64> {
+        self.buf.clone()
+    }
+
+    /// The held samples, ascending — ready for [`percentile`].
+    pub fn sorted(&self) -> Vec<u64> {
+        let mut v = self.samples();
+        v.sort_unstable();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_pinned_on_known_distributions() {
+        // 1..=100: nearest-rank pX is exactly X.
+        let v: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile(&v, 0.50), 50);
+        assert_eq!(percentile(&v, 0.95), 95);
+        assert_eq!(percentile(&v, 0.99), 99);
+        assert_eq!(percentile(&v, 1.0), 100);
+        assert_eq!(percentile(&v, 0.0), 1);
+
+        // Ten samples: p99 must be the maximum (the old truncating
+        // picker returned the 9th value here).
+        let v: Vec<u64> = (1..=10).map(|i| i * 10).collect();
+        assert_eq!(percentile(&v, 0.99), 100);
+        assert_eq!(percentile(&v, 0.95), 100);
+        assert_eq!(percentile(&v, 0.90), 90);
+        assert_eq!(percentile(&v, 0.50), 50);
+
+        // Odd count: the median is the middle element.
+        assert_eq!(percentile(&[10, 20, 30, 40, 1000], 0.5), 30);
+        assert_eq!(percentile(&[10, 20, 30, 40, 1000], 0.99), 1000);
+    }
+
+    #[test]
+    fn percentile_edge_cases() {
+        assert_eq!(percentile(&[], 0.99), 0);
+        assert_eq!(percentile(&[7], 0.0), 7);
+        assert_eq!(percentile(&[7], 1.0), 7);
+        // Out-of-range q clamps instead of indexing out of bounds.
+        assert_eq!(percentile(&[1, 2, 3], 2.0), 3);
+        assert_eq!(percentile(&[1, 2, 3], -1.0), 1);
+    }
+
+    #[test]
+    fn percentile_never_below_truncating_picker() {
+        // The fix direction is monotone: nearest-rank is >= the old
+        // truncated index for every (n, q).
+        for n in [1usize, 2, 3, 7, 10, 50, 100, 997] {
+            let v: Vec<u64> = (0..n as u64).collect();
+            for q in [0.5, 0.9, 0.95, 0.99, 0.999] {
+                let old = v[((n - 1) as f64 * q) as usize];
+                assert!(
+                    percentile(&v, q) >= old,
+                    "n={n} q={q}: {} < {old}",
+                    percentile(&v, q)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn reservoir_keeps_newest_and_stays_bounded() {
+        let mut r = Reservoir::new(100);
+        for i in 0..1000u64 {
+            r.push(i);
+        }
+        assert_eq!(r.len(), 100);
+        assert_eq!(r.total_pushed(), 1000);
+        let s = r.sorted();
+        // Exactly the newest 100 samples survive.
+        assert_eq!(s, (900..1000).collect::<Vec<u64>>());
+        assert_eq!(percentile(&s, 1.0), 999);
+        assert_eq!(percentile(&s, 0.5), 949);
+    }
+
+    #[test]
+    fn reservoir_below_capacity_is_lossless() {
+        let mut r = Reservoir::new(8);
+        for v in [5u64, 3, 9] {
+            r.push(v);
+        }
+        assert_eq!(r.sorted(), vec![3, 5, 9]);
+        assert_eq!(r.len(), 3);
+        assert!(!r.is_empty());
+        assert!(Reservoir::new(4).is_empty());
+    }
+
+    #[test]
+    fn reservoir_zero_capacity_clamps_to_one() {
+        let mut r = Reservoir::new(0);
+        r.push(1);
+        r.push(2);
+        assert_eq!(r.sorted(), vec![2]);
+    }
+}

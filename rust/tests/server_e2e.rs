@@ -3,10 +3,11 @@
 //! bit-exactness against the golden model plus both 503 backpressure
 //! paths (connection limit, coordinator queue limit).
 
-use std::net::TcpStream;
-use std::time::Duration;
+use std::net::{TcpListener, TcpStream};
+use std::time::{Duration, Instant};
 
 use tanh_vf::coordinator::router::Route;
+use tanh_vf::server::cluster::{ClusterConfig, PeerHealth};
 use tanh_vf::server::http::HttpConn;
 use tanh_vf::server::loadgen::{self, LoadgenConfig};
 use tanh_vf::server::{named_config, parse_routes, Server, ServerConfig};
@@ -411,6 +412,310 @@ fn reactor_decouples_connections_from_workers() {
         assert_eq!(c.read_response(1 << 20).unwrap().0, 200);
     }
     assert!(srv.metrics_text().contains("tanhvf_http_requests_total"));
+}
+
+// ---------------------------------------------------------------------
+// Cluster tier (consistent-hash fronts + health-checked peers)
+// ---------------------------------------------------------------------
+
+/// Reserve `n` distinct loopback addresses: each front needs the full
+/// peer list before any of them starts.
+fn free_addrs(n: usize) -> Vec<String> {
+    let listeners: Vec<TcpListener> = (0..n)
+        .map(|_| TcpListener::bind("127.0.0.1:0").unwrap())
+        .collect();
+    listeners
+        .iter()
+        .map(|l| l.local_addr().unwrap().to_string())
+        .collect()
+}
+
+/// Start `n` cluster fronts, each serving `routes` and peering with
+/// all the others; probing is fast so eviction tests stay quick.
+/// Retries with a fresh port group if a concurrently running test
+/// snatched a reserved port between release and re-bind.
+fn start_cluster_fronts(n: usize, routes: &str) -> (Vec<Server>, Vec<String>) {
+    'attempt: for _ in 0..5 {
+        let addrs = free_addrs(n);
+        let mut fronts = Vec::with_capacity(n);
+        for i in 0..n {
+            let peers: Vec<String> = addrs
+                .iter()
+                .enumerate()
+                .filter(|&(j, _)| j != i)
+                .map(|(_, a)| a.clone())
+                .collect();
+            match Server::start_cluster(
+                ServerConfig {
+                    addr: addrs[i].clone(),
+                    ..Default::default()
+                },
+                parse_routes(routes).unwrap(),
+                ClusterConfig {
+                    advertise: addrs[i].clone(),
+                    peers,
+                    probe_interval: Duration::from_millis(100),
+                    probe_timeout: Duration::from_millis(500),
+                    failure_threshold: 2,
+                    recovery_threshold: 1,
+                    ..Default::default()
+                },
+            ) {
+                Ok(srv) => fronts.push(srv),
+                Err(_) => continue 'attempt, // port stolen; regroup
+            }
+        }
+        return (fronts, addrs);
+    }
+    panic!("could not bind a free port group for the cluster");
+}
+
+#[test]
+fn cluster_proxied_eval_is_bit_exact_vs_direct() {
+    // Two fronts, two models: whichever front a request lands on, the
+    // answer must be bit-identical to the golden model — i.e. the
+    // proxy hop is transparent. At least one (front, model) pair is
+    // necessarily remote, so the proxy path is provably exercised.
+    let (fronts, addrs) = start_cluster_fronts(2, "native:s3_12,native:s2_8");
+    let mut rng = Rng::new(0xC105);
+    for model in ["s3_12", "s2_8"] {
+        let cfg = named_config(model).unwrap();
+        let limit = 1i64 << cfg.mag_bits();
+        let words: Vec<i32> =
+            (0..97).map(|_| rng.range_i64(-limit, limit) as i32).collect();
+        let want = tanh_golden_batch(
+            &words.iter().map(|&w| w as i64).collect::<Vec<_>>(),
+            &cfg,
+        );
+        for addr in &addrs {
+            let got = loadgen::eval_words(addr, model, &words).unwrap();
+            assert_eq!(
+                got.iter().map(|&w| w as i64).collect::<Vec<_>>(),
+                want,
+                "model {model} via front {addr} not bit-exact"
+            );
+        }
+        // Single-word /v1/eval agrees too.
+        let (status, resp) = loadgen::http_post_json(
+            &addrs[0],
+            "/v1/eval",
+            &obj(&[
+                ("model", Json::Str(model.into())),
+                ("word", Json::Num(words[0] as f64)),
+            ]),
+        )
+        .unwrap();
+        assert_eq!(status, 200, "{resp:?}");
+        assert_eq!(resp.get("y_word").and_then(Json::as_i64), Some(want[0]));
+    }
+    let proxied: u64 = fronts
+        .iter()
+        .map(|f| {
+            f.cluster()
+                .unwrap()
+                .stats
+                .proxied
+                .load(std::sync::atomic::Ordering::Relaxed)
+        })
+        .sum();
+    assert!(proxied >= 1, "no request crossed the proxy path");
+}
+
+#[test]
+fn cluster_models_metrics_and_health_are_peer_aware() {
+    let (_fronts, addrs) = start_cluster_fronts(2, "native:s3_5");
+    let (status, body) = loadgen::http_get(&addrs[0], "/v1/models").unwrap();
+    assert_eq!(status, 200, "{body}");
+    let v = tanh_vf::util::json::parse(&body).unwrap();
+    let cluster = v.get("cluster").expect("cluster section");
+    assert_eq!(
+        cluster.get("self").and_then(Json::as_str),
+        Some(addrs[0].as_str())
+    );
+    let nodes = cluster.get("nodes").and_then(Json::as_arr).unwrap();
+    assert_eq!(nodes.len(), 2);
+    let model = &v.get("data").and_then(Json::as_arr).unwrap()[0];
+    let owner = model.get("owner").and_then(Json::as_str).unwrap();
+    assert!(addrs.iter().any(|a| a == owner), "owner {owner}");
+
+    let (status, body) = loadgen::http_get(&addrs[0], "/metrics").unwrap();
+    assert_eq!(status, 200);
+    assert!(body.contains("tanhvf_cluster_peer_up"), "{body}");
+    assert!(body.contains("tanhvf_cluster_ring_nodes 2"), "{body}");
+
+    let (status, body) = loadgen::http_get(&addrs[0], "/health").unwrap();
+    assert_eq!(status, 200);
+    assert!(body.contains("\"cluster_nodes\":2"), "{body}");
+}
+
+#[test]
+fn cluster_peer_death_evicts_and_only_owned_keys_move() {
+    let (mut fronts, addrs) = start_cluster_fronts(3, "native:s3_5");
+    let victim = addrs[2].clone();
+
+    // Placement before the death, as front 0 sees it (all nodes live).
+    let keys: Vec<String> = (0..300).map(|i| format!("model-{i}")).collect();
+    let before: Vec<String> = {
+        let cl = fronts[0].cluster().unwrap();
+        keys.iter().map(|k| cl.owner_name(k).unwrap()).collect()
+    };
+
+    // Kill the third front; its keys must move, everyone else's stay.
+    let dead = fronts.remove(2);
+    drop(dead);
+
+    // The prober (100 ms interval, threshold 2) evicts it shortly.
+    let cl = fronts[0].cluster().unwrap();
+    let t0 = Instant::now();
+    while cl.peer_health()[&victim] != PeerHealth::Down {
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "peer never evicted: {:?}",
+            cl.peer_health()
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    let mut moved = 0usize;
+    for (k, owner_before) in keys.iter().zip(&before) {
+        let owner_after = cl.owner_name(k).unwrap();
+        if owner_before == &victim {
+            moved += 1;
+            assert_ne!(owner_after, victim, "{k} still routed to dead peer");
+        } else {
+            assert_eq!(
+                &owner_after, owner_before,
+                "{k} moved off a live node"
+            );
+        }
+    }
+    // Rebalance bound: about a third of the keys (the victim's ring
+    // share, plus slack for the hash spread over random ephemeral
+    // ports) — never more than ~half, never none.
+    let frac = moved as f64 / keys.len() as f64;
+    assert!(
+        frac > 0.1 && frac < 1.0 / 3.0 + 0.2,
+        "moved fraction {frac}"
+    );
+
+    // And the cluster keeps serving every model, including remapped
+    // ones, with bit-exact answers.
+    let cfg = named_config("s3_5").unwrap();
+    let words = vec![1i32, -7, 13];
+    let want = tanh_golden_batch(&[1, -7, 13], &cfg);
+    for addr in &addrs[..2] {
+        let got = loadgen::eval_words(addr, "s3_5", &words).unwrap();
+        assert_eq!(got.iter().map(|&w| w as i64).collect::<Vec<_>>(), want);
+    }
+}
+
+#[test]
+fn cluster_survives_peer_death_before_eviction_via_failover() {
+    // Between a peer dying and the prober noticing, a forwarded
+    // request hits a dead socket: the front must fail over along the
+    // ring within the same request, not 502.
+    let (mut fronts, addrs) = start_cluster_fronts(2, "native:s3_5");
+    // Find which front owns s3_5 and kill it; ask the survivor.
+    let owner = fronts[0]
+        .cluster()
+        .unwrap()
+        .owner_name("s3_5")
+        .unwrap();
+    let (dead_idx, live_idx) =
+        if owner == addrs[0] { (0, 1) } else { (1, 0) };
+    let dead = fronts.remove(dead_idx);
+    drop(dead);
+    let live_addr = &addrs[live_idx];
+
+    let cfg = named_config("s3_5").unwrap();
+    let want = tanh_golden_batch(&[5, -5], &cfg);
+    let got = loadgen::eval_words(live_addr, "s3_5", &[5, -5]).unwrap();
+    assert_eq!(got.iter().map(|&w| w as i64).collect::<Vec<_>>(), want);
+    let live = &fronts[0];
+    let st = &live.cluster().unwrap().stats;
+    use std::sync::atomic::Ordering as O;
+    // Either the failure was already evicted by a probe tick (local
+    // from the start), or the request failed over mid-flight.
+    assert!(
+        st.local.load(O::Relaxed) >= 1,
+        "survivor must have answered locally"
+    );
+}
+
+#[test]
+fn cluster_proxied_chunked_body_is_bit_exact() {
+    // A chunked request to a front that does NOT own the model: the
+    // incremental parser decodes the chunked framing, the proxy hop
+    // re-frames it as Content-Length, and the answer is bit-exact.
+    let (fronts, addrs) = start_cluster_fronts(2, "native:s2_8");
+    let cl0 = fronts[0].cluster().unwrap();
+    let owner = cl0.owner_name("s2_8").unwrap();
+    // Send to the front that will have to proxy.
+    let send_to = if owner == addrs[0] { &addrs[1] } else { &addrs[0] };
+    let cfg = named_config("s2_8").unwrap();
+    let body = r#"{"model":"s2_8","words":[3,-11,19]}"#.as_bytes();
+
+    use std::io::Write;
+    let mut s = TcpStream::connect(send_to).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+    s.write_all(
+        b"POST /v1/batch HTTP/1.1\r\nHost: t\r\n\
+          Transfer-Encoding: chunked\r\n\r\n",
+    )
+    .unwrap();
+    let (a, b) = body.split_at(13);
+    s.write_all(format!("{:x}\r\n", a.len()).as_bytes()).unwrap();
+    s.write_all(&a[..5]).unwrap();
+    std::thread::sleep(Duration::from_millis(30));
+    s.write_all(&a[5..]).unwrap();
+    s.write_all(b"\r\n").unwrap();
+    s.write_all(format!("{:x}\r\n", b.len()).as_bytes()).unwrap();
+    s.write_all(b).unwrap();
+    s.write_all(b"\r\n0\r\n\r\n").unwrap();
+
+    let mut conn = HttpConn::new(s);
+    let (status, _, resp) = conn.read_response(1 << 20).unwrap();
+    let text = String::from_utf8_lossy(&resp).into_owned();
+    assert_eq!(status, 200, "{text}");
+    let v = tanh_vf::util::json::parse(&text).unwrap();
+    let got = v.get("words").and_then(Json::as_i64_vec).unwrap();
+    assert_eq!(got, tanh_golden_batch(&[3, -11, 19], &cfg));
+    // The hop really happened.
+    let sender = if send_to == &addrs[0] { &fronts[0] } else { &fronts[1] };
+    assert!(
+        sender
+            .cluster()
+            .unwrap()
+            .stats
+            .proxied
+            .load(std::sync::atomic::Ordering::Relaxed)
+            >= 1,
+        "request was not proxied"
+    );
+}
+
+#[test]
+fn cluster_loadgen_drives_every_front() {
+    let (fronts, addrs) = start_cluster_fronts(3, "native:s3_12,native:s3_5");
+    let mut cfg = LoadgenConfig::new(addrs[0].clone(), &["s3_12", "s3_5"]);
+    cfg.addrs = addrs.clone();
+    cfg.connections = 6;
+    cfg.requests_per_connection = 20;
+    cfg.words_per_request = 31;
+    cfg.word_range = 128;
+    let report = loadgen::run(&cfg).unwrap();
+    assert_eq!(report.failures, 0, "{}", report.render());
+    assert_eq!(report.requests, 6 * 20);
+    // Every front saw traffic (connections are dealt round-robin):
+    // each request it received was answered locally or proxied out.
+    use std::sync::atomic::Ordering as O;
+    for f in &fronts {
+        let st = &f.cluster().unwrap().stats;
+        let n = st.local.load(O::Relaxed)
+            + st.proxied.load(O::Relaxed)
+            + st.proxied_in.load(O::Relaxed);
+        assert!(n > 0, "a front saw no cluster traffic");
+    }
 }
 
 #[test]
