@@ -10,7 +10,7 @@ use std::collections::BTreeMap;
 use std::net::{TcpListener, TcpStream};
 use std::time::{Duration, Instant};
 
-use tanh_vf::server::cluster::ClusterConfig;
+use tanh_vf::server::cluster::{Cluster, ClusterConfig};
 use tanh_vf::server::http::HttpConn;
 use tanh_vf::server::loadgen::{self, LoadgenConfig};
 use tanh_vf::server::{parse_routes, Server, ServerConfig};
@@ -261,6 +261,73 @@ fn main() {
     );
     drop(fronts);
 
+    // -- proxy connection pooling: pooled vs per-request connect ------
+    // The same forward path against the same peer; the only variable
+    // is the pool (idle cap 4 vs 0 = fresh TcpStream::connect every
+    // request). The pooled point must measurably win — reuse saves a
+    // TCP handshake per forward.
+    const FWD_N: usize = 400;
+    println!("\n== proxy forward latency: pooled vs per-request connect ==");
+    let peer = Server::start(
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            workers: 8,
+            max_connections: 64,
+            ..Default::default()
+        },
+        parse_routes("native:s3_5").unwrap(),
+    )
+    .unwrap();
+    let peer_addr = peer.local_addr().to_string();
+    let fwd_body = br#"{"model":"s3_5","word":3}"#;
+    let mut fwd_stats: BTreeMap<&str, (f64, f64)> = BTreeMap::new();
+    for (label, idle) in [("unpooled", 0usize), ("pooled", 4)] {
+        let cl = Cluster::start(ClusterConfig {
+            advertise: "127.0.0.1:1".into(),
+            peers: vec![peer_addr.clone()],
+            probe_interval: Duration::from_secs(3600),
+            pool_idle_per_peer: idle,
+            ..Default::default()
+        })
+        .unwrap();
+        for _ in 0..20 {
+            // Warm the peer's route tables and the TCP stack.
+            cl.forward(&peer_addr, "/v1/eval", fwd_body).unwrap();
+        }
+        let mut lats: Vec<u64> = Vec::with_capacity(FWD_N);
+        for _ in 0..FWD_N {
+            let t = Instant::now();
+            let resp = cl.forward(&peer_addr, "/v1/eval", fwd_body).unwrap();
+            assert_eq!(resp.status, 200);
+            lats.push(t.elapsed().as_nanos() as u64);
+        }
+        lats.sort_unstable();
+        let mean =
+            lats.iter().sum::<u64>() as f64 / lats.len() as f64 / 1000.0;
+        let p50 = lats[lats.len() / 2] as f64 / 1000.0;
+        println!("{label:<9} mean {mean:.1} us, p50 {p50:.1} us per forward");
+        if label == "pooled" {
+            let hits =
+                cl.pool.stats.hits.load(std::sync::atomic::Ordering::Relaxed);
+            assert!(
+                hits as usize >= FWD_N,
+                "pooled run must actually reuse connections ({hits} hits)"
+            );
+        }
+        fwd_stats.insert(label, (mean, p50));
+        cl.stop();
+    }
+    drop(peer);
+    let (pooled_mean, pooled_p50) = fwd_stats["pooled"];
+    let (unpooled_mean, unpooled_p50) = fwd_stats["unpooled"];
+    let fwd_speedup = unpooled_mean / pooled_mean;
+    println!("pooled/unpooled forward speedup: {fwd_speedup:.2}x");
+    assert!(
+        fwd_speedup > 1.05,
+        "pooled forwards must measurably beat per-request connect \
+         (got {fwd_speedup:.2}x)"
+    );
+
     // -- persist ------------------------------------------------------
     let out = obj(vec![
         ("bench", Json::Str("http_serving".into())),
@@ -294,6 +361,17 @@ fn main() {
                 ("rps_ratio", Json::Num(scaling_ratio)),
                 ("proxied_requests", Json::Num(proxied as f64)),
                 ("local_requests", Json::Num(local_hits as f64)),
+            ]),
+        ),
+        (
+            "proxy_pooling",
+            obj(vec![
+                ("forwards", Json::Num(FWD_N as f64)),
+                ("pooled_mean_us", Json::Num(pooled_mean)),
+                ("pooled_p50_us", Json::Num(pooled_p50)),
+                ("unpooled_mean_us", Json::Num(unpooled_mean)),
+                ("unpooled_p50_us", Json::Num(unpooled_p50)),
+                ("speedup", Json::Num(fwd_speedup)),
             ]),
         ),
     ]);

@@ -13,8 +13,11 @@
 //! * L4 ([`server`]): HTTP/1.1 activation service over the precision
 //!   router — JSON eval/batch endpoints, model listing, health,
 //!   Prometheus metrics, connection + queue backpressure, and a
-//!   multi-node cluster tier (consistent-hash model routing across
-//!   health-checked peers, [`server::cluster`]).
+//!   multi-node cluster tier: consistent-hash model routing across
+//!   health-checked peers ([`server::cluster`]), gossip membership
+//!   with `--join` seeds ([`server::gossip`]), pooled proxy
+//!   connections ([`server::pool`]), and replicated routes with read
+//!   fan-out (`--replicas`).
 //! * L3 (this crate): coordinator, VLSI substrate, baselines, analysis.
 //! * L2 (`python/compile/model.py`): JAX model graphs, AOT-lowered to
 //!   `artifacts/*.hlo.txt`.

@@ -36,10 +36,18 @@ const SUBCOMMANDS: &[(&str, &str)] = &[
     ),
     (
         "serve-cluster",
-        "cluster front: serve-http plus consistent-hash routing across \
-         --peers host:port,host:port [--advertise host:port] \
+        "cluster front: serve-http plus consistent-hash routing. \
+         Membership: --peers host:port,... (static bootstrap) and/or \
+         --join host:port,... (gossip seeds; neither = seed node). \
+         [--advertise host:port] [--replicas 1] [--pool-idle 4] \
          [--virtual-nodes 64] [--probe-interval-ms 500] \
          [--failure-threshold 3] [--recovery-threshold 2]",
+    ),
+    (
+        "loadgen",
+        "closed-loop load generator: --addrs host:port,... \
+         [--connections 4] [--requests 100] [--words 64] \
+         [--models s3_12,s3_5] [--word-range 128] [--seed 42]",
     ),
     ("info", "artifact manifest summary"),
 ];
@@ -66,6 +74,7 @@ fn main() {
         "serve" => cmd_serve(&args),
         "serve-http" => cmd_serve_http(&args),
         "serve-cluster" => cmd_serve_cluster(&args),
+        "loadgen" => cmd_loadgen(&args),
         "info" => cmd_info(),
         _ => {
             println!("{}", usage("tanh-vf", SUBCOMMANDS));
@@ -379,11 +388,17 @@ fn run_http_server(
     println!("endpoints: /health /v1/models /v1/eval /v1/batch /metrics");
     if let Some(cl) = srv.cluster() {
         println!(
-            "cluster: self={} nodes={} virtual-nodes={}",
+            "cluster: self={} nodes={} virtual-nodes={} replicas={} \
+             pool-idle={}",
             cl.self_name(),
             cl.ring().nodes().len(),
-            cl.config().virtual_nodes
+            cl.config().virtual_nodes,
+            cl.config().replicas,
+            cl.pool.idle_per_peer()
         );
+        for seed in &cl.config().join {
+            println!("join seed: {seed}");
+        }
         for peer in cl.peer_health().keys() {
             println!("peer: {peer}");
         }
@@ -415,24 +430,41 @@ fn cmd_serve_http(args: &Args) -> R {
     run_http_server(srv, event_loop, duration_secs)
 }
 
-fn cmd_serve_cluster(args: &Args) -> R {
-    let (cfg, routes, duration_secs) = http_server_setup(args)?;
-    let peers_spec = args.required("peers").map_err(usage_err)?.to_string();
-    let peers: Vec<String> = peers_spec
+/// Split a comma-separated list flag (addresses, model names, …).
+fn csv_list(args: &Args, key: &str, default: &str) -> Vec<String> {
+    args.str_or(key, default)
         .split(',')
         .map(str::trim)
         .filter(|s| !s.is_empty())
         .map(str::to_string)
-        .collect();
-    if peers.is_empty() {
-        return Err(usage_err("--peers: need at least one host:port"));
+        .collect()
+}
+
+fn cmd_serve_cluster(args: &Args) -> R {
+    let (cfg, routes, duration_secs) = http_server_setup(args)?;
+    // Membership sources: --peers are static bootstrap members (part
+    // of the ring immediately), --join are gossip seeds (ring members
+    // only once they answer). Neither given = a seed node that waits
+    // for others to join it.
+    let peers = csv_list(args, "peers", "");
+    let join = csv_list(args, "join", "");
+    if peers.is_empty() && join.is_empty() {
+        println!(
+            "no --peers/--join: starting as a gossip seed node \
+             (others join via --join {})",
+            args.str_or("advertise", &cfg.addr)
+        );
     }
     // The identity this node hashes itself under; must match what the
-    // other fronts list in their --peers. Defaults to the bind address.
+    // other fronts know it by (their --peers entries, or what gossip
+    // spreads). Defaults to the bind address.
     let advertise = args.str_or("advertise", &cfg.addr).to_string();
     let ccfg = tanh_vf::server::cluster::ClusterConfig {
         advertise,
         peers,
+        join,
+        replicas: args.usize_or("replicas", 1)?,
+        pool_idle_per_peer: args.usize_or("pool-idle", 4)?,
         virtual_nodes: args.usize_or("virtual-nodes", 64)?,
         probe_interval: Duration::from_millis(
             args.u64_or("probe-interval-ms", 500)?,
@@ -444,6 +476,29 @@ fn cmd_serve_cluster(args: &Args) -> R {
     let event_loop = cfg.event_loop;
     let srv = tanh_vf::server::Server::start_cluster(cfg, routes, ccfg)?;
     run_http_server(srv, event_loop, duration_secs)
+}
+
+/// Drive one front (or a whole cluster of fronts) with the closed-loop
+/// generator and print both the human line and the JSON report.
+fn cmd_loadgen(args: &Args) -> R {
+    let addrs = csv_list(args, "addrs", "");
+    if addrs.is_empty() {
+        return Err(usage_err("--addrs: need at least one host:port"));
+    }
+    let models = csv_list(args, "models", "s3_12,s3_5");
+    let cfg = tanh_vf::server::loadgen::LoadgenConfig {
+        addrs,
+        connections: args.usize_or("connections", 4)?,
+        requests_per_connection: args.usize_or("requests", 100)?,
+        words_per_request: args.usize_or("words", 64)?,
+        models,
+        word_range: args.i64_or("word-range", 128)?,
+        seed: args.u64_or("seed", 42)?,
+    };
+    let report = tanh_vf::server::loadgen::run(&cfg)?;
+    println!("{}", report.render());
+    println!("{}", tanh_vf::util::json::write(&report.to_json()));
+    Ok(())
 }
 
 fn cmd_info() -> R {

@@ -19,16 +19,29 @@
 //! proxied there (transport failures fail over along the ring, ending
 //! in local service — this node is always its own live candidate),
 //! models owned here — and every request already tagged as forwarded —
-//! run through the local router unchanged.
+//! run through the local router unchanged. Two cluster-only behaviours
+//! layer on top:
+//!
+//! * `POST /v1/gossip` — the membership exchange endpoint
+//!   ([`super::gossip`]): merge the sender's member table, answer with
+//!   ours. 404 outside cluster mode.
+//! * **Batch read fan-out** — with `--replicas N > 1`, a `/v1/batch`
+//!   whose words outnumber the live replica set splits into contiguous
+//!   shards, evaluates one shard per replica concurrently (the local
+//!   shard on this thread), and merges in order. Bit-exactness makes
+//!   the merge trivial: every replica computes the identical
+//!   fixed-point function, so the split is invisible to the client.
+//!   Any shard failure falls back to serving the whole batch locally.
 
 use std::fmt::Write as _;
 use std::sync::atomic::Ordering;
 
 use crate::coordinator::router::RouteInfo;
 use crate::fixed::Round;
-use crate::util::json::Json;
+use crate::util::json::{self, Json};
 
 use super::cluster::{self, Node};
+use super::gossip;
 use super::http::{Request, Response};
 use super::AppState;
 
@@ -40,10 +53,11 @@ pub(crate) fn dispatch(state: &AppState, req: &Request) -> Response {
         ("GET", "/metrics") => render_metrics(state),
         ("POST", "/v1/eval") => clustered(state, req, eval),
         ("POST", "/v1/batch") => clustered(state, req, batch),
+        ("POST", "/v1/gossip") => gossip_exchange(state, req),
         (_, "/health" | "/v1/models" | "/metrics") => {
             error_resp(405, "method_not_allowed", "endpoint is GET-only")
         }
-        (_, "/v1/eval" | "/v1/batch") => {
+        (_, "/v1/eval" | "/v1/batch" | "/v1/gossip") => {
             error_resp(405, "method_not_allowed", "endpoint is POST-only")
         }
         (_, path) => {
@@ -84,6 +98,15 @@ fn clustered(
         Some(m) => m.to_string(),
         None => return local(state, &body),
     };
+    // Replicated routes: a large-enough batch splits across the live
+    // replica set instead of going to one owner. Returns None when the
+    // fan-out doesn't apply (or can't complete) — the plain walk below
+    // is the universal fallback.
+    if req.path() == "/v1/batch" && cl.config().replicas > 1 {
+        if let Some(resp) = fanout_batch(state, cl, &model, &body) {
+            return resp;
+        }
+    }
     let mut failed_hops = 0u64;
     for node in cl.candidates(&model) {
         match node {
@@ -143,6 +166,169 @@ fn clustered(
     local(state, &body)
 }
 
+/// Split a `/v1/batch` across the live replica set and merge in order.
+///
+/// Returns `None` whenever the fan-out doesn't apply — fewer than two
+/// live replicas, too few words to split, a body the plain path should
+/// reject with its exact error, or no spare forward permits — and the
+/// caller falls back to the ordinary ring walk. Mid-flight shard
+/// failures degrade to serving the whole batch locally (every node
+/// carries the full route table, and bit-exactness makes local service
+/// indistinguishable).
+fn fanout_batch(
+    state: &AppState,
+    cl: &cluster::Cluster,
+    model: &str,
+    body: &Json,
+) -> Option<Response> {
+    let arr = body.get("words").and_then(Json::as_arr)?;
+    let info = state.router.route_info(model)?;
+    if arr.is_empty() || arr.len() > info.batch_capacity {
+        return None;
+    }
+    let reps = cl.live_replicas(model);
+    if reps.len() < 2 || arr.len() < reps.len() {
+        return None;
+    }
+    let chunk = arr.len().div_ceil(reps.len());
+    let shards: Vec<&[Json]> = arr.chunks(chunk).collect();
+    // `chunks` can yield fewer shards than replicas; surplus replicas
+    // simply sit this request out.
+    let pairs: Vec<(&Node, &&[Json])> =
+        reps.iter().zip(&shards).collect();
+    // One permit per shard that actually goes remote, or no fan-out at
+    // all (the plain walk degrades more gracefully under forward
+    // pressure).
+    let remote_shards = pairs
+        .iter()
+        .filter(|(n, _)| **n != Node::Local)
+        .count();
+    let mut permits = Vec::with_capacity(remote_shards);
+    for _ in 0..remote_shards {
+        permits.push(cl.try_forward_permit()?);
+    }
+    let mut results: Vec<Option<Vec<Json>>> = vec![None; pairs.len()];
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for (i, (node, words)) in pairs.iter().enumerate() {
+            if let Node::Peer(addr) = node {
+                let wire = json::write(&obj([
+                    ("model", Json::Str(model.to_string())),
+                    ("words", Json::Arr(words.to_vec())),
+                ]));
+                let want = words.len();
+                handles.push((
+                    i,
+                    s.spawn(move || {
+                        match cl.forward(addr, "/v1/batch", wire.as_bytes())
+                        {
+                            Ok(resp) if resp.status == 200 => {
+                                cl.record_success(addr);
+                                cl.stats
+                                    .proxied
+                                    .fetch_add(1, Ordering::Relaxed);
+                                shard_words(&resp.body, want)
+                            }
+                            Ok(_) => None,
+                            Err(_) => {
+                                cl.stats
+                                    .proxy_errors
+                                    .fetch_add(1, Ordering::Relaxed);
+                                cl.record_failure(addr);
+                                None
+                            }
+                        }
+                    }),
+                ));
+            }
+        }
+        // The local shard (shard 0 whenever this node is a replica —
+        // live_replicas puts Local first) computes on this thread
+        // while the remote shards are in flight.
+        for (i, (node, words)) in pairs.iter().enumerate() {
+            if matches!(node, Node::Local) {
+                let sub = obj([
+                    ("model", Json::Str(model.to_string())),
+                    ("words", Json::Arr(words.to_vec())),
+                ]);
+                let resp = batch(state, &sub);
+                if resp.status == 200 {
+                    results[i] = shard_words(&resp.body, words.len());
+                }
+            }
+        }
+        for (i, h) in handles {
+            results[i] = h.join().unwrap_or(None);
+        }
+    });
+    drop(permits);
+    // The `local` path counter ticks at most once per client request
+    // (the per-shard `proxied` ticks are real extra round trips, but a
+    // locally computed shard plus a local fallback is still one local
+    // serving decision).
+    if results.iter().any(Option::is_none) {
+        // A shard failed: serve the whole batch locally, bit-exact.
+        cl.stats.fanout_fallbacks.fetch_add(1, Ordering::Relaxed);
+        cl.stats.local.fetch_add(1, Ordering::Relaxed);
+        return Some(batch(state, body));
+    }
+    cl.stats.fanout_batches.fetch_add(1, Ordering::Relaxed);
+    if pairs.iter().any(|(n, _)| matches!(n, Node::Local)) {
+        cl.stats.local.fetch_add(1, Ordering::Relaxed);
+    }
+    let words: Vec<Json> = results.into_iter().flatten().flatten().collect();
+    Some(Response::json(
+        200,
+        &obj([
+            ("model", Json::Str(model.to_string())),
+            ("count", Json::Num(words.len() as f64)),
+            ("words", Json::Arr(words)),
+        ]),
+    ))
+}
+
+/// Extract a successful shard response's word array (length-checked —
+/// a replica answering with the wrong count is treated as a failure).
+fn shard_words(body: &[u8], want: usize) -> Option<Vec<Json>> {
+    let text = std::str::from_utf8(body).ok()?;
+    let v = json::parse(text).ok()?;
+    let words = v.get("words")?.as_arr()?;
+    if words.len() != want {
+        return None;
+    }
+    Some(words.to_vec())
+}
+
+/// `POST /v1/gossip`: merge the sender's member table, answer with
+/// ours (see [`super::gossip`] for the merge rules). 404 outside
+/// cluster mode so a plain `serve-http` node is visibly not a gossip
+/// participant.
+fn gossip_exchange(state: &AppState, req: &Request) -> Response {
+    let Some(cl) = state.cluster.as_ref() else {
+        return error_resp(
+            404,
+            "not_found",
+            "gossip requires cluster mode (serve-cluster)",
+        );
+    };
+    let body = match req.json_body() {
+        Ok(b) => b,
+        Err(e) => {
+            return error_resp(400, "bad_request", &format!("body: {e}"))
+        }
+    };
+    let msg = match gossip::decode(&body) {
+        Ok(m) => m,
+        Err(e) => return error_resp(400, "bad_request", &e),
+    };
+    cl.stats.gossip_in.fetch_add(1, Ordering::Relaxed);
+    cl.apply_remote_members(&msg.members);
+    Response::json(
+        200,
+        &gossip::encode(cl.self_name(), &cl.member_entries()),
+    )
+}
+
 // ---------------------------------------------------------------------
 // Handlers
 // ---------------------------------------------------------------------
@@ -161,6 +347,24 @@ fn health(state: &AppState) -> Response {
         fields.push((
             "cluster_live_peers",
             Json::Num(cl.healthy_peers() as f64),
+        ));
+        fields.push((
+            "cluster_members",
+            Json::Num(cl.alive_members() as f64),
+        ));
+        fields.push((
+            "cluster_membership_version",
+            Json::Num(cl.membership_version() as f64),
+        ));
+        // The peer table: gossip-convergence checks read this.
+        fields.push((
+            "cluster_peers",
+            Json::Obj(
+                cl.peer_health()
+                    .into_iter()
+                    .map(|(a, h)| (a, Json::Str(h.name().into())))
+                    .collect(),
+            ),
         ));
     }
     Response::json(200, &obj(fields))
@@ -192,6 +396,15 @@ fn models(state: &AppState) -> Response {
                     Json::Bool(owner == cl.self_name()),
                 ));
                 fields.push(("owner", Json::Str(owner)));
+                fields.push((
+                    "replicas",
+                    Json::Arr(
+                        cl.replica_set(&i.name)
+                            .into_iter()
+                            .map(Json::Str)
+                            .collect(),
+                    ),
+                ));
             }
             obj(fields)
         })
@@ -229,6 +442,11 @@ fn models(state: &AppState) -> Response {
                 (
                     "virtual_nodes",
                     Json::Num(cl.config().virtual_nodes as f64),
+                ),
+                ("replicas", Json::Num(cl.config().replicas as f64)),
+                (
+                    "membership_version",
+                    Json::Num(cl.membership_version() as f64),
                 ),
             ]),
         ));
@@ -350,24 +568,55 @@ fn batch(state: &AppState, body: &Json) -> Response {
     }
 }
 
+/// Write one metric family's `# HELP`/`# TYPE` preamble. Prometheus
+/// exposition requires the pair once per family, before its samples;
+/// the wire test in `server_e2e` asserts the pairing for every family.
+fn family(s: &mut String, name: &str, typ: &str, help: &str) {
+    let _ = writeln!(s, "# HELP {name} {help}");
+    let _ = writeln!(s, "# TYPE {name} {typ}");
+}
+
 pub(crate) fn render_metrics(state: &AppState) -> Response {
     let mut s = String::new();
     let h = &state.http;
-    let _ = writeln!(s, "# TYPE tanhvf_http_connections_total counter");
+    family(
+        &mut s,
+        "tanhvf_http_connections_total",
+        "counter",
+        "TCP connections accepted by the front end.",
+    );
     let _ = writeln!(
         s,
         "tanhvf_http_connections_total {}",
         h.connections.load(Ordering::Relaxed)
+    );
+    family(
+        &mut s,
+        "tanhvf_http_rejected_connections_total",
+        "counter",
+        "Connections answered 503 at the open-connection limit.",
     );
     let _ = writeln!(
         s,
         "tanhvf_http_rejected_connections_total {}",
         h.rejected_connections.load(Ordering::Relaxed)
     );
+    family(
+        &mut s,
+        "tanhvf_http_requests_total",
+        "counter",
+        "HTTP requests parsed and dispatched.",
+    );
     let _ = writeln!(
         s,
         "tanhvf_http_requests_total {}",
         h.requests.load(Ordering::Relaxed)
+    );
+    family(
+        &mut s,
+        "tanhvf_http_responses_total",
+        "counter",
+        "HTTP responses by status class.",
     );
     for (class, v) in [
         ("2xx", &h.responses_2xx),
@@ -380,39 +629,93 @@ pub(crate) fn render_metrics(state: &AppState) -> Response {
             v.load(Ordering::Relaxed)
         );
     }
+    family(
+        &mut s,
+        "tanhvf_uptime_seconds",
+        "gauge",
+        "Seconds since this server started.",
+    );
     let _ = writeln!(
         s,
         "tanhvf_uptime_seconds {}",
         state.started.elapsed().as_secs()
     );
-    let _ = writeln!(s, "# TYPE tanhvf_requests_completed_total counter");
-    for (route, snap) in state.router.snapshots() {
-        let r = route.as_str();
+
+    // Per-route coordinator metrics: family preamble once, then one
+    // sample per route.
+    let snaps = state.router.snapshots();
+    family(
+        &mut s,
+        "tanhvf_requests_submitted_total",
+        "counter",
+        "Eval words admitted to a route's queue.",
+    );
+    for (route, snap) in &snaps {
         let _ = writeln!(
             s,
-            "tanhvf_requests_submitted_total{{route=\"{r}\"}} {}",
+            "tanhvf_requests_submitted_total{{route=\"{route}\"}} {}",
             snap.submitted
         );
+    }
+    family(
+        &mut s,
+        "tanhvf_requests_completed_total",
+        "counter",
+        "Requests completed by a route's workers.",
+    );
+    for (route, snap) in &snaps {
         let _ = writeln!(
             s,
-            "tanhvf_requests_completed_total{{route=\"{r}\"}} {}",
+            "tanhvf_requests_completed_total{{route=\"{route}\"}} {}",
             snap.completed
         );
+    }
+    family(
+        &mut s,
+        "tanhvf_requests_rejected_total",
+        "counter",
+        "Requests shed by queue-limit backpressure.",
+    );
+    for (route, snap) in &snaps {
         let _ = writeln!(
             s,
-            "tanhvf_requests_rejected_total{{route=\"{r}\"}} {}",
+            "tanhvf_requests_rejected_total{{route=\"{route}\"}} {}",
             snap.rejected
         );
+    }
+    family(
+        &mut s,
+        "tanhvf_batches_total",
+        "counter",
+        "Packed batches executed by a route's backend.",
+    );
+    for (route, snap) in &snaps {
         let _ = writeln!(
             s,
-            "tanhvf_batches_total{{route=\"{r}\"}} {}",
+            "tanhvf_batches_total{{route=\"{route}\"}} {}",
             snap.batches
         );
+    }
+    family(
+        &mut s,
+        "tanhvf_batch_fill_ratio",
+        "gauge",
+        "Mean fraction of batch capacity used.",
+    );
+    for (route, snap) in &snaps {
         let _ = writeln!(
             s,
-            "tanhvf_batch_fill_ratio{{route=\"{r}\"}} {:.4}",
+            "tanhvf_batch_fill_ratio{{route=\"{route}\"}} {:.4}",
             snap.mean_batch_fill
         );
+    }
+    family(
+        &mut s,
+        "tanhvf_latency_microseconds",
+        "gauge",
+        "Request latency quantiles over the retained window.",
+    );
+    for (route, snap) in &snaps {
         for (q, v) in [
             ("0.5", snap.p50_latency_us),
             ("0.95", snap.p95_latency_us),
@@ -421,12 +724,18 @@ pub(crate) fn render_metrics(state: &AppState) -> Response {
         ] {
             let _ = writeln!(
                 s,
-                "tanhvf_latency_microseconds{{route=\"{r}\",quantile=\"{q}\"}} {v}"
+                "tanhvf_latency_microseconds{{route=\"{route}\",quantile=\"{q}\"}} {v}"
             );
         }
     }
+
     if let Some(cl) = &state.cluster {
-        let _ = writeln!(s, "# TYPE tanhvf_cluster_peer_up gauge");
+        family(
+            &mut s,
+            "tanhvf_cluster_peer_up",
+            "gauge",
+            "1 when the peer is routable, 0 when evicted or dead.",
+        );
         for (addr, h) in cl.peer_health() {
             let up = (h != cluster::PeerHealth::Down) as u32;
             let _ = writeln!(
@@ -435,12 +744,52 @@ pub(crate) fn render_metrics(state: &AppState) -> Response {
                 h.name()
             );
         }
+        family(
+            &mut s,
+            "tanhvf_cluster_ring_nodes",
+            "gauge",
+            "Nodes currently hashed onto the ring (alive members).",
+        );
         let _ = writeln!(
             s,
             "tanhvf_cluster_ring_nodes {}",
             cl.ring().nodes().len()
         );
+        family(
+            &mut s,
+            "tanhvf_cluster_members",
+            "gauge",
+            "Gossip member table entries by liveness.",
+        );
+        let members = cl.members();
+        let alive = members.values().filter(|m| m.alive).count();
+        let _ = writeln!(
+            s,
+            "tanhvf_cluster_members{{state=\"alive\"}} {alive}"
+        );
+        let _ = writeln!(
+            s,
+            "tanhvf_cluster_members{{state=\"dead\"}} {}",
+            members.len() - alive
+        );
+        family(
+            &mut s,
+            "tanhvf_cluster_membership_version",
+            "gauge",
+            "Ring rebuild count (bumps on join, death, resurrection).",
+        );
+        let _ = writeln!(
+            s,
+            "tanhvf_cluster_membership_version {}",
+            cl.membership_version()
+        );
         let st = &cl.stats;
+        family(
+            &mut s,
+            "tanhvf_cluster_requests_total",
+            "counter",
+            "Eval/batch requests by serving path.",
+        );
         for (name, v) in [
             ("local", &st.local),
             ("proxied", &st.proxied),
@@ -452,14 +801,115 @@ pub(crate) fn render_metrics(state: &AppState) -> Response {
                 v.load(Ordering::Relaxed)
             );
         }
-        for (name, v) in [
-            ("tanhvf_cluster_proxy_errors_total", &st.proxy_errors),
-            ("tanhvf_cluster_failovers_total", &st.failovers),
-            ("tanhvf_cluster_evictions_total", &st.evictions),
-            ("tanhvf_cluster_readmissions_total", &st.readmissions),
+        for (name, v, help) in [
+            (
+                "tanhvf_cluster_proxy_errors_total",
+                &st.proxy_errors,
+                "Transport failures on the proxy leg.",
+            ),
+            (
+                "tanhvf_cluster_failovers_total",
+                &st.failovers,
+                "Requests served by a non-first ring candidate.",
+            ),
+            (
+                "tanhvf_cluster_evictions_total",
+                &st.evictions,
+                "Peer transitions into routing eviction.",
+            ),
+            (
+                "tanhvf_cluster_readmissions_total",
+                &st.readmissions,
+                "Evicted peers re-admitted to routing.",
+            ),
+            (
+                "tanhvf_cluster_fanout_batches_total",
+                &st.fanout_batches,
+                "Batches served by splitting across replicas.",
+            ),
+            (
+                "tanhvf_cluster_fanout_fallbacks_total",
+                &st.fanout_fallbacks,
+                "Fan-outs abandoned and served whole locally.",
+            ),
         ] {
+            family(&mut s, name, "counter", help);
             let _ = writeln!(s, "{name} {}", v.load(Ordering::Relaxed));
         }
+        family(
+            &mut s,
+            "tanhvf_cluster_gossip_total",
+            "counter",
+            "Gossip exchanges by direction and outcome.",
+        );
+        for (event, v) in [
+            ("sent_ok", &st.gossip_ok),
+            ("sent_fail", &st.gossip_fail),
+            ("received", &st.gossip_in),
+        ] {
+            let _ = writeln!(
+                s,
+                "tanhvf_cluster_gossip_total{{event=\"{event}\"}} {}",
+                v.load(Ordering::Relaxed)
+            );
+        }
+        family(
+            &mut s,
+            "tanhvf_cluster_membership_events_total",
+            "counter",
+            "Member table changes by kind.",
+        );
+        for (event, v) in [
+            ("join", &st.members_joined),
+            ("death", &st.members_died),
+            ("resurrection", &st.members_resurrected),
+        ] {
+            let _ = writeln!(
+                s,
+                "tanhvf_cluster_membership_events_total{{event=\"{event}\"}} {}",
+                v.load(Ordering::Relaxed)
+            );
+        }
+        let ps = &cl.pool.stats;
+        family(
+            &mut s,
+            "tanhvf_cluster_pool_checkouts_total",
+            "counter",
+            "Connection-pool checkouts by outcome (hit = reused).",
+        );
+        for (result, v) in [("hit", &ps.hits), ("miss", &ps.misses)] {
+            let _ = writeln!(
+                s,
+                "tanhvf_cluster_pool_checkouts_total{{result=\"{result}\"}} {}",
+                v.load(Ordering::Relaxed)
+            );
+        }
+        for (name, v, help) in [
+            (
+                "tanhvf_cluster_pool_discards_total",
+                &ps.discards,
+                "Pooled connections dropped instead of re-admitted.",
+            ),
+            (
+                "tanhvf_cluster_pool_evictions_total",
+                &ps.evictions,
+                "Idle connections evicted by the per-peer bound.",
+            ),
+        ] {
+            family(&mut s, name, "counter", help);
+            let _ = writeln!(s, "{name} {}", v.load(Ordering::Relaxed));
+        }
+        family(
+            &mut s,
+            "tanhvf_cluster_pool_idle_connections",
+            "gauge",
+            "Idle keep-alive connections currently pooled.",
+        );
+        let _ = writeln!(
+            s,
+            "tanhvf_cluster_pool_idle_connections {}",
+            cl.pool.idle_count()
+        );
     }
     Response::text(200, &s)
 }

@@ -1,6 +1,7 @@
 //! Cluster tier: consistent-hash routing of model names across several
-//! serving processes, with a health-checked peer table and an HTTP/1.1
-//! proxy path.
+//! serving processes, with dynamic gossip membership, a health-checked
+//! peer table, pooled proxy connections, and optional route
+//! replication with read fan-out.
 //!
 //! The paper frames one datapath generator serving *many* precision
 //! design points; the router (L3) places those points side by side in
@@ -9,21 +10,41 @@
 //! started in cluster mode additionally owns:
 //!
 //! * [`HashRing`] — consistent hashing with virtual nodes over the
-//!   dependency-free [`hash64`] (FNV-1a + splitmix64 finalizer, the
-//!   crate's `util::rng`-style mixing). Every node hashes the same
-//!   identifier set (its own advertised address plus `--peers`), so
-//!   all fronts agree on ownership. A key's candidate order is the
-//!   ring walk from its hash point: the owner first, then the nodes
-//!   that would inherit it — which is exactly the failover order, so
-//!   a dead node's keys move *only* to their next-in-ring successor
-//!   and every other key keeps its owner.
+//!   dependency-free [`hash64`] (FNV-1a + splitmix64 finalizer). Every
+//!   node hashes the same identifier set (the alive members of the
+//!   gossip table), so converged fronts agree on ownership. A key's
+//!   candidate order is the ring walk from its hash point: the owner
+//!   first, then the nodes that would inherit it — which is exactly
+//!   the failover order, so a dead node's keys move *only* to their
+//!   next-in-ring successor and every other key keeps its owner. The
+//!   ring is rebuilt only on *membership* changes (join, death,
+//!   resurrection — see [`super::gossip`]); short outages are handled
+//!   by liveness filtering at lookup time, so placement stays a pure
+//!   function of the alive-member set.
+//! * **Gossip membership** ([`super::gossip`]): the member table is
+//!   exchanged with one peer per probe round over `POST /v1/gossip`,
+//!   seeds from `--join` are contacted until merged, and `--peers`
+//!   degenerates to the static-bootstrap special case. Sustained probe
+//!   failure (`failure_threshold` × [`gossip::DEATH_FACTOR`]) declares
+//!   a member dead; direct probe recovery or a higher incarnation
+//!   resurrects it.
 //! * A peer table with a background prober: `GET /health` every
 //!   `probe_interval`, [`ClusterConfig::failure_threshold`] consecutive
-//!   failures evict a peer from routing (it stays in the ring, so
-//!   re-admission restores the exact original placement), and
-//!   `recovery_threshold` consecutive successes re-admit it. Proxy
-//!   traffic feeds the same accounting, so a dead peer is usually
-//!   evicted by the first failed forward, not a probe tick later.
+//!   failures evict a peer from routing, and `recovery_threshold`
+//!   consecutive successes re-admit it. Proxy traffic feeds the same
+//!   accounting, so a dead peer is usually evicted by the first failed
+//!   forward, not a probe tick later.
+//! * A per-peer keep-alive connection pool ([`super::pool`]) under
+//!   every client leg — proxy, probe, and gossip. A round trip that
+//!   fails on a *reused* connection is retried once on a fresh dial
+//!   (the peer may simply have closed the idle connection); pool
+//!   hit/miss/discard/eviction counters surface on `/metrics`.
+//! * Replicated routes: with [`ClusterConfig::replicas`] `= N > 1`, a
+//!   key maps to the N successor nodes on the ring. Reads are served
+//!   by *any* live replica (`/v1/eval` rotates across them;
+//!   bit-exactness makes every replica equivalent), and `/v1/batch`
+//!   requests can split across the replica set and merge (the fan-out
+//!   itself lives in [`super::api`]).
 //! * The proxy path: `/v1/eval` and `/v1/batch` bodies whose model is
 //!   owned elsewhere are forwarded verbatim (the incremental parser
 //!   has already decoded chunked or `Content-Length` framing, so the
@@ -32,12 +53,17 @@
 //!   which bounds any transient ring disagreement to one hop.
 
 use std::collections::BTreeMap;
-use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex, Weak};
+use std::sync::atomic::{
+    AtomicBool, AtomicU64, AtomicUsize, Ordering,
+};
+use std::sync::{Arc, Mutex, RwLock, Weak};
 use std::time::Duration;
 
-use super::http::{HttpConn, Response};
+use crate::util::json;
+
+use super::gossip::{self, Member, MemberEntry};
+use super::http::{HttpError, Response};
+use super::pool::ConnPool;
 
 /// Header marking a request as already forwarded once: the receiving
 /// node must answer locally, never re-proxy (loop guard).
@@ -45,6 +71,9 @@ pub const PROXIED_HEADER: &str = "x-tanhvf-proxied";
 
 /// Response-size bound for the proxy leg (mirrors the loadgen client).
 const MAX_PROXY_BODY: usize = 1 << 22;
+
+/// Response-size bound for probe/gossip control traffic.
+const MAX_CONTROL_BODY: usize = 1 << 20;
 
 /// FNV-1a 64-bit: the dependency-free byte hash.
 pub fn fnv1a64(bytes: &[u8]) -> u64 {
@@ -74,10 +103,13 @@ pub fn hash64(bytes: &[u8]) -> u64 {
 
 /// Consistent-hash ring with virtual nodes.
 ///
-/// Immutable once built: liveness is applied at lookup time by walking
-/// past dead nodes, so membership changes (eviction, re-admission)
-/// never rebuild the ring and the placement of keys on *live* nodes is
-/// a pure function of the configured node set.
+/// Each instance is immutable; membership changes build a *new* ring
+/// and swap it in atomically ([`Cluster::ring`] returns the current
+/// snapshot). Short-lived
+/// liveness changes (eviction, re-admission) never rebuild — they are
+/// applied at lookup time by walking past unroutable nodes — so the
+/// placement of keys on live nodes is a pure function of the
+/// alive-member set.
 pub struct HashRing {
     /// (hash point, node index), sorted by hash point.
     points: Vec<(u64, u32)>,
@@ -150,7 +182,7 @@ pub enum PeerHealth {
     /// Recent failures below the eviction threshold; still routable.
     Suspect,
     /// Evicted from routing until `recovery_threshold` consecutive
-    /// successful probes.
+    /// successful probes (or tombstoned in the membership table).
     Down,
 }
 
@@ -169,6 +201,16 @@ struct PeerSlot {
     health: PeerHealth,
     consecutive_failures: u32,
     consecutive_successes: u32,
+    /// Consecutive failed *probe rounds* (proxy traffic excluded):
+    /// the death-declaration clock. Proxy failures arrive at request
+    /// rate, so counting them would collapse the "sustained failure"
+    /// margin from ~10 probe intervals to milliseconds under load.
+    consecutive_probe_failures: u32,
+    /// Mirror of "the member table holds a tombstone for this peer".
+    /// Kept on the slot so the per-request success path can decide
+    /// whether a resurrection is even possible without ever touching
+    /// the membership mutex.
+    dead: bool,
 }
 
 impl PeerSlot {
@@ -177,6 +219,8 @@ impl PeerSlot {
             health: PeerHealth::Healthy,
             consecutive_failures: 0,
             consecutive_successes: 0,
+            consecutive_probe_failures: 0,
+            dead: false,
         }
     }
 }
@@ -198,6 +242,24 @@ pub struct ClusterStats {
     pub evictions: AtomicU64,
     /// Peer transitions out of `Down`.
     pub readmissions: AtomicU64,
+    /// Successful outbound gossip exchanges.
+    pub gossip_ok: AtomicU64,
+    /// Failed outbound gossip exchanges (transport, non-200, bad body).
+    pub gossip_fail: AtomicU64,
+    /// Inbound `POST /v1/gossip` messages merged.
+    pub gossip_in: AtomicU64,
+    /// Members added to the table alive (joins).
+    pub members_joined: AtomicU64,
+    /// Members tombstoned (local death declaration or gossiped
+    /// certificate).
+    pub members_died: AtomicU64,
+    /// Tombstoned members brought back (direct probe recovery or a
+    /// newer incarnation via gossip).
+    pub members_resurrected: AtomicU64,
+    /// `/v1/batch` requests served by splitting across replicas.
+    pub fanout_batches: AtomicU64,
+    /// Fan-outs abandoned mid-flight and served whole locally.
+    pub fanout_fallbacks: AtomicU64,
 }
 
 /// Where a key's next candidate lives.
@@ -210,18 +272,28 @@ pub enum Node {
 }
 
 /// Tuning for one cluster node. `advertise` is the identity this node
-/// hashes itself under — it must match what the other fronts list in
-/// their `--peers` for all rings to agree (an empty string is filled
-/// with the bound address by [`super::Server::start_cluster`]).
+/// hashes itself under — it must match what the other fronts know it
+/// by, whether learned from their `--peers` flags or over gossip (an
+/// empty string is filled with the bound address by
+/// [`super::Server::start_cluster`]).
 #[derive(Clone, Debug)]
 pub struct ClusterConfig {
     pub advertise: String,
+    /// Static bootstrap members (immediately part of the ring).
     pub peers: Vec<String>,
+    /// Gossip seeds: contacted every round until they appear in the
+    /// member table. Unlike `peers` they are *not* ring members until
+    /// they actually answer.
+    pub join: Vec<String>,
+    /// Nodes each route key lives on (the key's N ring successors).
+    /// `1` = classic single-owner sharding; `N > 1` lets any of the N
+    /// serve reads and `/v1/batch` split across them.
+    pub replicas: usize,
     /// Ring points per node; more points = tighter load spread per key
     /// at O(nodes * virtual_nodes * log) build cost.
     pub virtual_nodes: usize,
     pub probe_interval: Duration,
-    /// Connect/read budget for one probe.
+    /// Connect/read budget for one probe or gossip exchange.
     pub probe_timeout: Duration,
     /// Consecutive failures (probe or proxy) that evict a peer.
     pub failure_threshold: u32,
@@ -238,6 +310,12 @@ pub struct ClusterConfig {
     /// minimum 1, so at least half the pool always stays available for
     /// local and proxied-in work).
     pub max_inflight_forwards: usize,
+    /// Idle keep-alive connections kept per peer by the client-leg
+    /// pool; `0` disables pooling (every request dials fresh).
+    pub pool_idle_per_peer: usize,
+    /// Test override for the gossip incarnation; `None` stamps the
+    /// node with wall-clock millis at start.
+    pub incarnation: Option<u64>,
 }
 
 impl Default for ClusterConfig {
@@ -245,6 +323,8 @@ impl Default for ClusterConfig {
         ClusterConfig {
             advertise: String::new(),
             peers: Vec::new(),
+            join: Vec::new(),
+            replicas: 1,
             virtual_nodes: 64,
             probe_interval: Duration::from_millis(500),
             probe_timeout: Duration::from_secs(1),
@@ -252,25 +332,60 @@ impl Default for ClusterConfig {
             recovery_threshold: 2,
             proxy_timeout: Duration::from_secs(10),
             max_inflight_forwards: 0,
+            pool_idle_per_peer: 4,
+            incarnation: None,
         }
     }
 }
 
-/// A running cluster view: ring + peer table + prober thread.
+/// The gossip-owned membership view: who is in the cluster, under
+/// which incarnation, and whether they are ring members (`alive`).
+struct MembershipState {
+    table: BTreeMap<String, Member>,
+    self_inc: u64,
+    /// Bumped on every ring rebuild; exposed on `/metrics` so
+    /// convergence is observable.
+    version: u64,
+}
+
+/// A running cluster view: membership + ring + peer table + pool +
+/// prober/gossip thread.
 pub struct Cluster {
     cfg: ClusterConfig,
-    ring: HashRing,
+    membership: Mutex<MembershipState>,
+    ring: RwLock<Arc<HashRing>>,
     peers: Mutex<BTreeMap<String, PeerSlot>>,
+    /// Keep-alive client-leg pool (proxy + probe + gossip).
+    pub pool: ConnPool,
     pub stats: ClusterStats,
     /// Concurrent outbound forwards (bounded by
     /// `cfg.max_inflight_forwards`).
     inflight_forwards: AtomicUsize,
+    /// Round-robin cursor over gossip targets.
+    gossip_cursor: AtomicUsize,
+    /// Gossip rounds completed (the clock for seed backoff).
+    gossip_rounds: AtomicU64,
+    /// Per-seed retry backoff: (consecutive failures, next round the
+    /// seed may be contacted). A blackholed seed would otherwise cost
+    /// a full connect timeout on the shared membership thread every
+    /// round, forever.
+    seed_backoff: Mutex<BTreeMap<String, (u32, u64)>>,
+    /// Rotation cursor spreading replica reads.
+    replica_cursor: AtomicUsize,
     shutdown: Arc<AtomicBool>,
     prober: Mutex<Option<std::thread::JoinHandle<()>>>,
 }
 
+fn now_millis() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(1)
+}
+
 impl Cluster {
-    /// Validate, build the ring, and launch the prober.
+    /// Validate, build the bootstrap membership + ring, and launch the
+    /// membership thread (probe + gossip rounds).
     pub fn start(mut cfg: ClusterConfig) -> Result<Arc<Cluster>, String> {
         if cfg.advertise.is_empty() {
             return Err("cluster: advertise address must be set".into());
@@ -281,8 +396,17 @@ impl Cluster {
                 cfg.advertise
             ));
         }
+        if cfg.join.iter().any(|p| p == &cfg.advertise) {
+            return Err(format!(
+                "cluster: --join must not include the node itself ({})",
+                cfg.advertise
+            ));
+        }
         if cfg.failure_threshold == 0 || cfg.recovery_threshold == 0 {
             return Err("cluster: thresholds must be >= 1".into());
+        }
+        if cfg.replicas == 0 {
+            return Err("cluster: --replicas must be >= 1".into());
         }
         if cfg.max_inflight_forwards == 0 {
             // "Auto" without a known worker count: effectively
@@ -290,64 +414,87 @@ impl Cluster {
             // starting the cluster.
             cfg.max_inflight_forwards = usize::MAX;
         }
-        let mut nodes = cfg.peers.clone();
-        nodes.push(cfg.advertise.clone());
-        let ring = HashRing::new(&nodes, cfg.virtual_nodes);
+        let self_inc = cfg.incarnation.unwrap_or_else(now_millis);
+        let mut table = BTreeMap::new();
+        table.insert(
+            cfg.advertise.clone(),
+            Member { incarnation: self_inc, alive: true },
+        );
+        for p in &cfg.peers {
+            // Static peers bootstrap at incarnation 0: any gossip from
+            // the real node supersedes the placeholder.
+            table.insert(p.clone(), Member { incarnation: 0, alive: true });
+        }
+        let nodes: Vec<String> = table.keys().cloned().collect();
+        let ring = Arc::new(HashRing::new(&nodes, cfg.virtual_nodes));
         let peers = cfg
             .peers
             .iter()
             .map(|p| (p.clone(), PeerSlot::new()))
             .collect::<BTreeMap<_, _>>();
+        let pool = ConnPool::new(cfg.pool_idle_per_peer);
         let cluster = Arc::new(Cluster {
-            cfg,
-            ring,
+            membership: Mutex::new(MembershipState {
+                table,
+                self_inc,
+                version: 0,
+            }),
+            ring: RwLock::new(ring),
             peers: Mutex::new(peers),
+            pool,
             stats: ClusterStats::default(),
             inflight_forwards: AtomicUsize::new(0),
+            gossip_cursor: AtomicUsize::new(0),
+            gossip_rounds: AtomicU64::new(0),
+            seed_backoff: Mutex::new(BTreeMap::new()),
+            replica_cursor: AtomicUsize::new(0),
             shutdown: Arc::new(AtomicBool::new(false)),
             prober: Mutex::new(None),
+            cfg,
         });
-        if !cluster.cfg.peers.is_empty() {
-            // The prober holds only a Weak reference: a Cluster whose
-            // owners all drop without calling stop() still gets its
-            // Drop (the upgrade fails and the thread exits) instead of
-            // an Arc cycle keeping both alive forever.
-            let weak: Weak<Cluster> = Arc::downgrade(&cluster);
-            let shutdown = cluster.shutdown.clone();
-            let interval = cluster.cfg.probe_interval;
-            let t = std::thread::Builder::new()
-                .name("tanhvf-cluster-prober".into())
-                .spawn(move || loop {
-                    // Sleep first (in short slices so stop() is
-                    // prompt): freshly started peers keep the
-                    // optimistic Healthy default for one interval, and
-                    // deterministic tests see no startup probe race.
-                    let mut left = interval;
-                    while !left.is_zero() {
-                        if shutdown.load(Ordering::SeqCst) {
-                            return;
-                        }
-                        let step = left.min(Duration::from_millis(25));
-                        std::thread::sleep(step);
-                        left -= step;
-                    }
-                    let Some(c) = weak.upgrade() else { return };
+        // The membership thread always runs in cluster mode — even a
+        // seed node with no peers and no joins must probe/gossip the
+        // members that later announce themselves over /v1/gossip.
+        //
+        // It holds only a Weak reference: a Cluster whose owners all
+        // drop without calling stop() still gets its Drop (the upgrade
+        // fails and the thread exits) instead of an Arc cycle keeping
+        // both alive forever.
+        let weak: Weak<Cluster> = Arc::downgrade(&cluster);
+        let shutdown = cluster.shutdown.clone();
+        let interval = cluster.cfg.probe_interval;
+        let t = std::thread::Builder::new()
+            .name("tanhvf-cluster-prober".into())
+            .spawn(move || loop {
+                // Sleep first (in short slices so stop() is prompt):
+                // freshly started peers keep the optimistic Healthy
+                // default for one interval, and deterministic tests
+                // see no startup probe race.
+                let mut left = interval;
+                while !left.is_zero() {
                     if shutdown.load(Ordering::SeqCst) {
                         return;
                     }
-                    c.probe_round();
-                })
-                .map_err(|e| format!("spawn prober: {e}"))?;
-            *cluster.prober.lock().unwrap() = Some(t);
-        }
+                    let step = left.min(Duration::from_millis(25));
+                    std::thread::sleep(step);
+                    left -= step;
+                }
+                let Some(c) = weak.upgrade() else { return };
+                if shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                c.membership_round();
+            })
+            .map_err(|e| format!("spawn prober: {e}"))?;
+        *cluster.prober.lock().unwrap() = Some(t);
         Ok(cluster)
     }
 
-    /// Stop the prober and join it. Idempotent. Joining is skipped when
-    /// called *from* the prober thread (possible when the prober's
+    /// Stop the membership thread and join it. Idempotent. Joining is
+    /// skipped when called *from* that thread (possible when its
     /// transient strong reference is the last one and its drop runs
-    /// this via `Drop for Cluster`) — the thread exits on its own right
-    /// after.
+    /// this via `Drop for Cluster`) — the thread exits on its own
+    /// right after.
     pub fn stop(&self) {
         self.shutdown.store(true, Ordering::SeqCst);
         let handle = self.prober.lock().unwrap().take();
@@ -385,101 +532,436 @@ impl Cluster {
         &self.cfg.advertise
     }
 
-    pub fn ring(&self) -> &HashRing {
-        &self.ring
+    /// The current ring (an atomic snapshot: membership changes swap
+    /// in a new ring rather than mutating this one).
+    pub fn ring(&self) -> Arc<HashRing> {
+        self.ring.read().unwrap().clone()
     }
 
     pub fn config(&self) -> &ClusterConfig {
         &self.cfg
     }
 
-    /// Health of every peer, name-sorted.
-    pub fn peer_health(&self) -> BTreeMap<String, PeerHealth> {
-        self.peers
+    // -- membership ---------------------------------------------------
+
+    /// Snapshot of the gossip member table (includes self and
+    /// tombstones).
+    pub fn members(&self) -> BTreeMap<String, Member> {
+        self.membership.lock().unwrap().table.clone()
+    }
+
+    /// The member table as wire entries (what we gossip out).
+    pub fn member_entries(&self) -> Vec<MemberEntry> {
+        self.membership
             .lock()
             .unwrap()
+            .table
             .iter()
-            .map(|(k, v)| (k.clone(), v.health))
-            .collect()
-    }
-
-    pub fn healthy_peers(&self) -> usize {
-        self.peers
-            .lock()
-            .unwrap()
-            .values()
-            .filter(|s| s.health != PeerHealth::Down)
-            .count()
-    }
-
-    /// Candidate nodes for a key, in ring order, evicted peers
-    /// skipped. The first entry is the routing decision; the rest are
-    /// the failover order.
-    pub fn candidates(&self, key: &str) -> Vec<Node> {
-        let peers = self.peers.lock().unwrap();
-        self.ring
-            .successors(key)
-            .into_iter()
-            .filter_map(|n| {
-                if n == self.cfg.advertise {
-                    Some(Node::Local)
-                } else {
-                    match peers.get(n) {
-                        Some(s) if s.health != PeerHealth::Down => {
-                            Some(Node::Peer(n.to_string()))
-                        }
-                        _ => None,
-                    }
-                }
+            .map(|(a, m)| MemberEntry {
+                addr: a.clone(),
+                incarnation: m.incarnation,
+                alive: m.alive,
             })
             .collect()
     }
 
-    /// The node currently routed to for `key` (liveness applied).
-    pub fn owner_name(&self, key: &str) -> Option<String> {
-        match self.candidates(key).into_iter().next() {
-            Some(Node::Local) => Some(self.cfg.advertise.clone()),
-            Some(Node::Peer(p)) => Some(p),
-            None => None,
+    /// Alive members (ring size).
+    pub fn alive_members(&self) -> usize {
+        self.membership
+            .lock()
+            .unwrap()
+            .table
+            .values()
+            .filter(|m| m.alive)
+            .count()
+    }
+
+    /// Monotonic counter of ring rebuilds — `/metrics` exposes it so
+    /// convergence across fronts is observable.
+    pub fn membership_version(&self) -> u64 {
+        self.membership.lock().unwrap().version
+    }
+
+    /// Merge a remote member list (either side of a gossip exchange)
+    /// into the local table, sync peer-health slots, and rebuild the
+    /// ring if the alive set changed.
+    ///
+    /// Table mutation, slot sync, and ring rebuild all happen inside
+    /// one membership critical section: two concurrent merges would
+    /// otherwise interleave their slot updates out of order (e.g. a
+    /// death's slot removal racing an earlier join's slot insertion,
+    /// leaking a probed-forever slot for a tombstoned member).
+    /// Stats and pool purges run after, outside the lock.
+    pub fn apply_remote_members(&self, remote: &[MemberEntry]) {
+        let mut st = self.membership.lock().unwrap();
+        let mut self_inc = st.self_inc;
+        let outcome = gossip::merge(
+            &mut st.table,
+            &self.cfg.advertise,
+            &mut self_inc,
+            remote,
+        );
+        st.self_inc = self_inc;
+        if !outcome.added.is_empty()
+            || !outcome.resurrected.is_empty()
+            || !outcome.died.is_empty()
+        {
+            let mut peers = self.peers.lock().unwrap();
+            // Health slots exist for routable members (and always for
+            // static --peers, which may never gossip): joins and
+            // gossip-driven resurrections get one; members imported
+            // already-dead don't — they are not probed, they rejoin by
+            // gossiping to us with a newer incarnation.
+            for a in outcome.added.iter().chain(&outcome.resurrected) {
+                if st.table.get(a).map(|m| m.alive).unwrap_or(false) {
+                    let slot =
+                        peers.entry(a.clone()).or_insert_with(PeerSlot::new);
+                    // A resurrection claim clears the tombstone mirror
+                    // and restarts the death clock — a static peer's
+                    // slot survives its tombstone, and one
+                    // stale-counter probe failure must not be able to
+                    // re-tombstone a freshly rejoined member. (Routing
+                    // health still waits for real probe successes
+                    // before re-admission.)
+                    slot.dead = false;
+                    slot.consecutive_probe_failures = 0;
+                }
+            }
+            for d in &outcome.died {
+                sync_dead_slot(&mut peers, &self.cfg.peers, d);
+            }
+        }
+        if outcome.ring_changed {
+            self.rebuild_ring_locked(&mut st);
+        }
+        let joined = outcome
+            .added
+            .iter()
+            .filter(|a| st.table.get(*a).map(|m| m.alive).unwrap_or(false))
+            .count() as u64;
+        drop(st);
+        if joined > 0 {
+            self.stats.members_joined.fetch_add(joined, Ordering::Relaxed);
+        }
+        if !outcome.resurrected.is_empty() {
+            self.stats
+                .members_resurrected
+                .fetch_add(outcome.resurrected.len() as u64, Ordering::Relaxed);
+        }
+        for d in &outcome.died {
+            self.stats.members_died.fetch_add(1, Ordering::Relaxed);
+            self.pool.purge(d);
         }
     }
 
-    /// One failed probe/proxy against `addr`.
+    /// Rebuild the ring from the current alive-member set and swap it
+    /// in, under the caller's membership lock. Holding the lock across
+    /// the swap serializes rebuilds in version order — two concurrent
+    /// rebuilds could otherwise install rings out of order, leaving
+    /// routing permanently stale against the table. (No caller holds
+    /// the ring lock while acquiring the membership lock, so the
+    /// nesting cannot deadlock; the build itself is a few hundred hash
+    /// points.)
+    fn rebuild_ring_locked(&self, st: &mut MembershipState) {
+        st.version += 1;
+        let nodes: Vec<String> = st
+            .table
+            .iter()
+            .filter(|(_, m)| m.alive)
+            .map(|(a, _)| a.clone())
+            .collect();
+        let ring = Arc::new(HashRing::new(&nodes, self.cfg.virtual_nodes));
+        *self.ring.write().unwrap() = ring;
+    }
+
+    /// Tombstone a member after sustained probe failure (the local
+    /// node acts as the death certificate's origin).
+    fn declare_dead(&self, addr: &str) {
+        let mut st = self.membership.lock().unwrap();
+        let changed = match st.table.get_mut(addr) {
+            Some(m) if m.alive => {
+                m.alive = false;
+                true
+            }
+            _ => false,
+        };
+        if changed {
+            sync_dead_slot(
+                &mut self.peers.lock().unwrap(),
+                &self.cfg.peers,
+                addr,
+            );
+            self.rebuild_ring_locked(&mut st);
+        }
+        drop(st);
+        if changed {
+            self.stats.members_died.fetch_add(1, Ordering::Relaxed);
+            self.pool.purge(addr);
+        }
+    }
+
+    /// Resurrect a tombstoned member on direct probe recovery. The
+    /// incarnation is bumped past the death certificate so the
+    /// resurrection wins merges everywhere — the prober acts as a
+    /// proxy-refuter for peers that don't speak gossip themselves.
+    fn resurrect(&self, addr: &str) {
+        let mut st = self.membership.lock().unwrap();
+        let changed = match st.table.get_mut(addr) {
+            Some(m) if !m.alive => {
+                m.alive = true;
+                m.incarnation = m
+                    .incarnation
+                    .saturating_add(1)
+                    .min(gossip::MAX_INCARNATION);
+                true
+            }
+            Some(_) => false,
+            None => {
+                // The table entry was evicted (tombstone GC at the
+                // table bound) while the probe slot survived: the peer
+                // demonstrably answers at this address, so re-admit it
+                // under a fresh wall-clock incarnation that outranks
+                // any historical certificate.
+                st.table.insert(
+                    addr.to_string(),
+                    Member { incarnation: now_millis(), alive: true },
+                );
+                true
+            }
+        };
+        if changed {
+            if let Some(s) = self.peers.lock().unwrap().get_mut(addr) {
+                s.dead = false;
+                s.consecutive_probe_failures = 0;
+            }
+            self.rebuild_ring_locked(&mut st);
+        }
+        drop(st);
+        if changed {
+            self.stats.members_resurrected.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    // -- health -------------------------------------------------------
+
+    /// Health of every known peer, name-sorted. Tombstoned members
+    /// report `Down` regardless of their probe slot (they are not ring
+    /// members, so they are categorically unroutable).
+    pub fn peer_health(&self) -> BTreeMap<String, PeerHealth> {
+        let dead: Vec<String> = {
+            let st = self.membership.lock().unwrap();
+            st.table
+                .iter()
+                .filter(|(_, m)| !m.alive)
+                .map(|(a, _)| a.clone())
+                .collect()
+        };
+        self.peers
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| {
+                let h = if dead.contains(k) { PeerHealth::Down } else { v.health };
+                (k.clone(), h)
+            })
+            .collect()
+    }
+
+    pub fn healthy_peers(&self) -> usize {
+        self.peer_health()
+            .values()
+            .filter(|h| **h != PeerHealth::Down)
+            .count()
+    }
+
+    /// One failed probe/proxy against `addr`. Reaching
+    /// `failure_threshold` evicts the peer from routing. Death (the
+    /// gossip tombstone) is driven only by the probe clock — see
+    /// [`PeerSlot::consecutive_probe_failures`] — so proxy bursts can
+    /// evict fast but never tombstone.
     pub fn record_failure(&self, addr: &str) {
-        let mut peers = self.peers.lock().unwrap();
-        let Some(slot) = peers.get_mut(addr) else { return };
-        slot.consecutive_successes = 0;
-        slot.consecutive_failures = slot.consecutive_failures.saturating_add(1);
-        if slot.health != PeerHealth::Down {
-            slot.health = if slot.consecutive_failures
-                >= self.cfg.failure_threshold
-            {
-                self.stats.evictions.fetch_add(1, Ordering::Relaxed);
-                PeerHealth::Down
-            } else {
-                PeerHealth::Suspect
-            };
+        let newly_down = {
+            let mut peers = self.peers.lock().unwrap();
+            let Some(slot) = peers.get_mut(addr) else { return };
+            slot.consecutive_successes = 0;
+            slot.consecutive_failures =
+                slot.consecutive_failures.saturating_add(1);
+            let mut newly_down = false;
+            if slot.health != PeerHealth::Down {
+                if slot.consecutive_failures >= self.cfg.failure_threshold {
+                    slot.health = PeerHealth::Down;
+                    newly_down = true;
+                } else {
+                    slot.health = PeerHealth::Suspect;
+                }
+            }
+            newly_down
+        };
+        if newly_down {
+            self.stats.evictions.fetch_add(1, Ordering::Relaxed);
+            // Idle connections to an evicted peer are dead weight.
+            self.pool.purge(addr);
+        }
+    }
+
+    /// One failed *probe round* against `addr`: the eviction
+    /// accounting of [`Cluster::record_failure`] plus the death clock.
+    /// Sustaining `failure_threshold * DEATH_FACTOR` consecutive
+    /// failed probe rounds (≈ that many probe intervals) tombstones
+    /// the member.
+    fn record_probe_failure(&self, addr: &str) {
+        self.record_failure(addr);
+        let dead = {
+            let mut peers = self.peers.lock().unwrap();
+            let Some(slot) = peers.get_mut(addr) else { return };
+            slot.consecutive_probe_failures =
+                slot.consecutive_probe_failures.saturating_add(1);
+            let death_threshold = self
+                .cfg
+                .failure_threshold
+                .saturating_mul(gossip::DEATH_FACTOR);
+            slot.consecutive_probe_failures >= death_threshold
+        };
+        if dead {
+            self.declare_dead(addr);
         }
     }
 
     /// One successful probe/proxy against `addr`.
     pub fn record_success(&self, addr: &str) {
-        let mut peers = self.peers.lock().unwrap();
-        let Some(slot) = peers.get_mut(addr) else { return };
-        slot.consecutive_failures = 0;
-        slot.consecutive_successes =
-            slot.consecutive_successes.saturating_add(1);
-        match slot.health {
-            PeerHealth::Down => {
-                if slot.consecutive_successes >= self.cfg.recovery_threshold {
-                    slot.health = PeerHealth::Healthy;
-                    self.stats.readmissions.fetch_add(1, Ordering::Relaxed);
+        let recovered = {
+            let mut peers = self.peers.lock().unwrap();
+            let Some(slot) = peers.get_mut(addr) else { return };
+            slot.consecutive_failures = 0;
+            slot.consecutive_probe_failures = 0;
+            slot.consecutive_successes =
+                slot.consecutive_successes.saturating_add(1);
+            match slot.health {
+                PeerHealth::Down => {
+                    if slot.consecutive_successes >= self.cfg.recovery_threshold
+                    {
+                        slot.health = PeerHealth::Healthy;
+                        self.stats.readmissions.fetch_add(1, Ordering::Relaxed);
+                    }
                 }
+                PeerHealth::Suspect => slot.health = PeerHealth::Healthy,
+                PeerHealth::Healthy => {}
             }
-            PeerHealth::Suspect => slot.health = PeerHealth::Healthy,
-            PeerHealth::Healthy => {}
+            // `dead` keeps the steady-state hot path (every successful
+            // forward lands here) off the membership mutex: resurrect
+            // is only consulted while THIS peer's member entry is a
+            // tombstone, which the slot mirrors.
+            slot.dead
+                && slot.health == PeerHealth::Healthy
+                && slot.consecutive_successes >= self.cfg.recovery_threshold
+        };
+        if recovered {
+            self.resurrect(addr);
         }
     }
+
+    // -- routing ------------------------------------------------------
+
+    /// Map one ring node to a routable candidate — THE liveness filter,
+    /// shared by every routing view so they cannot drift: this node is
+    /// always `Local`; peers are skipped only when their health slot
+    /// says `Down`; an unknown slot (transient ring/peer-table race) is
+    /// treated optimistically. Tombstones never reach here: the ring
+    /// holds only alive members.
+    fn routable(
+        &self,
+        name: &str,
+        peers: &BTreeMap<String, PeerSlot>,
+    ) -> Option<Node> {
+        if name == self.cfg.advertise {
+            Some(Node::Local)
+        } else {
+            match peers.get(name) {
+                Some(s) if s.health == PeerHealth::Down => None,
+                _ => Some(Node::Peer(name.to_string())),
+            }
+        }
+    }
+
+    /// Candidate nodes for a key, in serving order, unroutable peers
+    /// skipped. The first `replicas` ring successors form the replica
+    /// set: if this node is among them it serves locally (no hop);
+    /// otherwise the live replicas are rotated so reads spread across
+    /// them. The remaining ring walk follows as the failover tail, so
+    /// the list always ends in workable fallbacks (and always contains
+    /// `Local` — this node is an alive ring member).
+    pub fn candidates(&self, key: &str) -> Vec<Node> {
+        let ring = self.ring();
+        let walk = ring.successors(key);
+        if walk.is_empty() {
+            return vec![Node::Local];
+        }
+        let peers = self.peers.lock().unwrap();
+        let r = self.cfg.replicas.min(walk.len());
+        let mut reps: Vec<Node> = walk[..r]
+            .iter()
+            .filter_map(|&n| self.routable(n, &peers))
+            .collect();
+        let tail: Vec<Node> = walk[r..]
+            .iter()
+            .filter_map(|&n| self.routable(n, &peers))
+            .collect();
+        if let Some(pos) = reps.iter().position(|n| *n == Node::Local) {
+            reps.rotate_left(pos);
+        } else if reps.len() > 1 {
+            let i = self.replica_cursor.fetch_add(1, Ordering::Relaxed)
+                % reps.len();
+            reps.rotate_left(i);
+        }
+        reps.extend(tail);
+        if reps.is_empty() {
+            reps.push(Node::Local);
+        }
+        reps
+    }
+
+    /// The live replica set for a key (first `replicas` ring
+    /// successors, unroutable ones dropped, `Local` first when
+    /// present). The `/v1/batch` fan-out splits across exactly this.
+    pub fn live_replicas(&self, key: &str) -> Vec<Node> {
+        let ring = self.ring();
+        let walk = ring.successors(key);
+        let peers = self.peers.lock().unwrap();
+        let r = self.cfg.replicas.min(walk.len());
+        let mut reps: Vec<Node> = walk[..r]
+            .iter()
+            .filter_map(|&n| self.routable(n, &peers))
+            .collect();
+        if let Some(pos) = reps.iter().position(|n| *n == Node::Local) {
+            reps.rotate_left(pos);
+        }
+        reps
+    }
+
+    /// The key's primary replica set ignoring liveness (`/v1/models`
+    /// display).
+    pub fn replica_set(&self, key: &str) -> Vec<String> {
+        let ring = self.ring();
+        let walk = ring.successors(key);
+        let r = self.cfg.replicas.min(walk.len());
+        walk[..r].iter().map(|n| n.to_string()).collect()
+    }
+
+    /// The node currently routed to first for `key` (liveness applied,
+    /// no read rotation — stable for display).
+    pub fn owner_name(&self, key: &str) -> Option<String> {
+        let ring = self.ring();
+        let walk = ring.successors(key);
+        let peers = self.peers.lock().unwrap();
+        walk.iter()
+            .find_map(|&n| self.routable(n, &peers))
+            .map(|node| match node {
+                Node::Local => self.cfg.advertise.clone(),
+                Node::Peer(p) => p,
+            })
+    }
+
+    // -- client legs (pooled) -----------------------------------------
 
     /// Forward a decoded request body to a peer and return its
     /// response. Transport failures are `Err` (the caller records them
@@ -490,33 +972,135 @@ impl Cluster {
         path: &str,
         body: &[u8],
     ) -> Result<Response, String> {
-        let sa = resolve(addr)?;
-        let stream = TcpStream::connect_timeout(&sa, self.cfg.proxy_timeout)
-            .map_err(|e| format!("connect {addr}: {e}"))?;
-        let _ = stream.set_nodelay(true);
-        let _ = stream.set_read_timeout(Some(self.cfg.proxy_timeout));
-        let _ = stream.set_write_timeout(Some(self.cfg.proxy_timeout));
-        let mut conn = HttpConn::new(stream);
-        conn.write_request_with_headers(
+        self.request(
+            addr,
             "POST",
             path,
             &[(PROXIED_HEADER, "1")],
             body,
+            self.cfg.proxy_timeout,
+            MAX_PROXY_BODY,
         )
-        .map_err(|e| format!("forward to {addr}: {e}"))?;
-        let (status, headers, body) = conn
-            .read_response(MAX_PROXY_BODY)
-            .map_err(|e| format!("response from {addr}: {e}"))?;
-        let content_type = headers
+    }
+
+    /// One pooled HTTP round trip with discard-and-redial: a failure
+    /// on a *reused* connection (the peer may have closed it while
+    /// idle) is retried exactly once on a fresh dial; a fresh dial's
+    /// failure is a real transport error.
+    #[allow(clippy::too_many_arguments)]
+    fn request(
+        &self,
+        addr: &str,
+        method: &str,
+        path: &str,
+        headers: &[(&str, &str)],
+        body: &[u8],
+        timeout: Duration,
+        max_body: usize,
+    ) -> Result<Response, String> {
+        let mut checked = self.pool.checkout(addr, timeout, timeout)?;
+        // Errors carry a retryable flag: a send failure or a
+        // connection the peer closed/reset before answering is the
+        // stale-keep-alive signature and safe to redial; a *timeout*
+        // means the request may be executing on the peer right now —
+        // re-sending it would double-execute (and double the latency
+        // bound), so it is surfaced as the failure it is.
+        let attempt = |c: &mut super::pool::Checked| {
+            c.conn
+                .write_request_with_headers(method, path, headers, body)
+                .map_err(|e| (true, format!("send to {addr}: {e}")))?;
+            c.conn.read_response(max_body).map_err(|e| {
+                (
+                    !matches!(e, HttpError::Timeout(_)),
+                    format!("response from {addr}: {e}"),
+                )
+            })
+        };
+        let (status, resp_headers, resp_body) = match attempt(&mut checked) {
+            Ok(r) => r,
+            Err((retryable, _)) if checked.reused && retryable => {
+                self.pool.note_discard();
+                checked = self.pool.dial_fresh(addr, timeout, timeout)?;
+                attempt(&mut checked).map_err(|(_, msg)| msg)?
+            }
+            Err((_, msg)) => {
+                // The connection is in an unknown state; it is dropped,
+                // not pooled — keep the discard counter honest.
+                self.pool.note_discard();
+                return Err(msg);
+            }
+        };
+        let keep = resp_headers
+            .get("connection")
+            .map(|v| !v.eq_ignore_ascii_case("close"))
+            .unwrap_or(true);
+        if keep {
+            self.pool.check_in(addr, checked.conn);
+        } else {
+            self.pool.note_discard();
+        }
+        let content_type = resp_headers
             .get("content-type")
             .cloned()
             .unwrap_or_else(|| "application/json".into());
-        Ok(Response { status, content_type, body })
+        Ok(Response { status, content_type, body: resp_body })
     }
 
-    /// One probe pass over every peer — including evicted ones, which
-    /// is the re-admission path. Proxy traffic feeds the same
-    /// accounting between rounds.
+    /// One liveness probe: `GET /health` must answer 200 within the
+    /// budget (shares the connection pool with the proxy path).
+    fn probe_peer(&self, addr: &str) -> bool {
+        matches!(
+            self.request(
+                addr,
+                "GET",
+                "/health",
+                &[],
+                b"",
+                self.cfg.probe_timeout,
+                MAX_CONTROL_BODY,
+            ),
+            Ok(resp) if resp.status == 200
+        )
+    }
+
+    /// One gossip exchange with `addr`: send the local table, merge
+    /// whatever comes back.
+    pub fn gossip_with(&self, addr: &str) -> bool {
+        let body =
+            json::write(&gossip::encode(self.self_name(), &self.member_entries()));
+        let resp = self.request(
+            addr,
+            "POST",
+            gossip::GOSSIP_PATH,
+            &[],
+            body.as_bytes(),
+            self.cfg.probe_timeout,
+            MAX_CONTROL_BODY,
+        );
+        let ok = match resp {
+            Ok(resp) if resp.status == 200 => {
+                let text = String::from_utf8_lossy(&resp.body).into_owned();
+                match json::parse(&text).map_err(|e| e.to_string()).and_then(
+                    |v| gossip::decode(&v),
+                ) {
+                    Ok(msg) => {
+                        self.apply_remote_members(&msg.members);
+                        true
+                    }
+                    Err(_) => false,
+                }
+            }
+            _ => false,
+        };
+        let counter =
+            if ok { &self.stats.gossip_ok } else { &self.stats.gossip_fail };
+        counter.fetch_add(1, Ordering::Relaxed);
+        ok
+    }
+
+    /// One probe pass over every known peer — including evicted and
+    /// tombstoned ones, which is the re-admission/resurrection path.
+    /// Proxy traffic feeds the same accounting between rounds.
     fn probe_round(&self) {
         let addrs: Vec<String> =
             self.peers.lock().unwrap().keys().cloned().collect();
@@ -524,12 +1108,111 @@ impl Cluster {
             if self.shutdown.load(Ordering::SeqCst) {
                 return;
             }
-            if probe(&addr, self.cfg.probe_timeout) {
+            if self.probe_peer(&addr) {
                 self.record_success(&addr);
             } else {
-                self.record_failure(&addr);
+                self.record_probe_failure(&addr);
             }
         }
+    }
+
+    /// One gossip pass: every `--join` seed that is not currently an
+    /// alive member, plus one alive member round-robin. Tombstoned
+    /// seeds stay targeted — ordinary gossip only reaches alive
+    /// members, so a restarted seed (which initiates nothing itself)
+    /// would otherwise be permanently unreachable and the cluster
+    /// would split-brain; the retry cost is bounded by the configured
+    /// join list.
+    fn gossip_round(&self) {
+        let round = self.gossip_rounds.fetch_add(1, Ordering::Relaxed);
+        // One membership snapshot for both target lists, so they can't
+        // disagree about a concurrently merged member.
+        let (mut targets, live): (Vec<String>, Vec<String>) = {
+            let st = self.membership.lock().unwrap();
+            let targets = self
+                .cfg
+                .join
+                .iter()
+                .filter(|s| {
+                    st.table.get(*s).map(|m| !m.alive).unwrap_or(true)
+                })
+                .cloned()
+                .collect();
+            let live = st
+                .table
+                .iter()
+                .filter(|(a, m)| m.alive && a.as_str() != self.cfg.advertise)
+                .map(|(a, _)| a.clone())
+                .collect();
+            (targets, live)
+        };
+        // Failing seeds are retried on an exponential schedule (2..32
+        // rounds) rather than every round: each attempt can block the
+        // shared membership thread for a full connect timeout.
+        {
+            let backoff = self.seed_backoff.lock().unwrap();
+            targets.retain(|t| {
+                backoff.get(t).map(|&(_, at)| round >= at).unwrap_or(true)
+            });
+        }
+        if !live.is_empty() {
+            let i = self.gossip_cursor.fetch_add(1, Ordering::Relaxed)
+                % live.len();
+            if !targets.contains(&live[i]) {
+                targets.push(live[i].clone());
+            }
+        }
+        for t in targets {
+            if self.shutdown.load(Ordering::SeqCst) {
+                return;
+            }
+            let ok = self.gossip_with(&t);
+            if self.cfg.join.contains(&t) {
+                let mut backoff = self.seed_backoff.lock().unwrap();
+                if ok {
+                    backoff.remove(&t);
+                } else {
+                    let fails = backoff
+                        .get(&t)
+                        .map(|&(f, _)| f)
+                        .unwrap_or(0)
+                        .saturating_add(1);
+                    let delay = 1u64 << fails.min(5);
+                    backoff.insert(t.clone(), (fails, round + delay));
+                }
+            }
+        }
+    }
+
+    /// One full membership round: probe health, then gossip.
+    fn membership_round(&self) {
+        self.probe_round();
+        if self.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        self.gossip_round();
+    }
+}
+
+/// Sync a member's death onto its probe slot (caller holds the peers
+/// lock, nested under the membership lock). Static `--peers` entries
+/// keep their slot with the tombstone mirrored onto it — they may not
+/// speak gossip, so the prober stays their only resurrection path.
+/// Gossip-learned members lose the slot entirely: they rejoin by
+/// announcing a newer incarnation themselves, and probing every
+/// departed node forever would let the probe round grow without bound
+/// as departures accumulate.
+fn sync_dead_slot(
+    peers: &mut BTreeMap<String, PeerSlot>,
+    static_peers: &[String],
+    addr: &str,
+) {
+    if static_peers.iter().any(|p| p == addr) {
+        if let Some(s) = peers.get_mut(addr) {
+            s.dead = true;
+        }
+    } else {
+        peers.remove(addr);
     }
 }
 
@@ -546,29 +1229,6 @@ impl Drop for ForwardPermit<'_> {
     fn drop(&mut self) {
         self.0.inflight_forwards.fetch_sub(1, Ordering::Release);
     }
-}
-
-fn resolve(addr: &str) -> Result<SocketAddr, String> {
-    addr.to_socket_addrs()
-        .map_err(|e| format!("resolve {addr}: {e}"))?
-        .next()
-        .ok_or_else(|| format!("resolve {addr}: no address"))
-}
-
-/// One liveness probe: `GET /health` must answer 200 within the budget.
-fn probe(addr: &str, timeout: Duration) -> bool {
-    let Ok(sa) = resolve(addr) else { return false };
-    let Ok(stream) = TcpStream::connect_timeout(&sa, timeout) else {
-        return false;
-    };
-    let _ = stream.set_nodelay(true);
-    let _ = stream.set_read_timeout(Some(timeout));
-    let _ = stream.set_write_timeout(Some(timeout));
-    let mut conn = HttpConn::new(stream);
-    if conn.write_request("GET", "/health", b"").is_err() {
-        return false;
-    }
-    matches!(conn.read_response(1 << 20), Ok((200, _, _)))
 }
 
 #[cfg(test)]
@@ -697,6 +1357,7 @@ mod tests {
             probe_timeout: Duration::from_millis(10),
             failure_threshold: 2,
             recovery_threshold: 2,
+            incarnation: Some(100),
             ..Default::default()
         })
         .unwrap()
@@ -724,6 +1385,94 @@ mod tests {
         c.record_success(peer);
         assert_eq!(c.peer_health()[peer], PeerHealth::Healthy);
         assert_eq!(c.stats.readmissions.load(Ordering::Relaxed), 1);
+        c.stop();
+    }
+
+    #[test]
+    fn sustained_failure_tombstones_and_recovery_resurrects() {
+        let c = test_cluster(2);
+        let peer = "127.0.0.1:2";
+        assert_eq!(c.alive_members(), 3);
+        let v0 = c.membership_version();
+        // Proxy-path failures alone must NEVER tombstone, no matter
+        // how many arrive (they come at request rate).
+        for _ in 0..(4 * gossip::DEATH_FACTOR) {
+            c.record_failure(peer);
+        }
+        assert_eq!(c.alive_members(), 3, "proxy failures tombstoned");
+        assert_eq!(c.peer_health()[peer], PeerHealth::Down, "but do evict");
+        // failure_threshold (2) x DEATH_FACTOR consecutive failed
+        // probe rounds: that is the death clock.
+        for _ in 0..(2 * gossip::DEATH_FACTOR) {
+            c.record_probe_failure(peer);
+        }
+        assert_eq!(c.alive_members(), 2, "member not tombstoned");
+        assert!(!c.members()[peer].alive);
+        assert_eq!(c.stats.members_died.load(Ordering::Relaxed), 1);
+        assert!(c.membership_version() > v0);
+        let inc_dead = c.members()[peer].incarnation;
+        // The ring no longer contains the tombstone.
+        assert!(!c.ring().nodes().contains(&peer.to_string()));
+        // Direct probe recovery resurrects with a bumped incarnation.
+        c.record_success(peer);
+        c.record_success(peer);
+        assert_eq!(c.alive_members(), 3, "member not resurrected");
+        assert_eq!(c.members()[peer].incarnation, inc_dead + 1);
+        assert_eq!(c.stats.members_resurrected.load(Ordering::Relaxed), 1);
+        assert!(c.ring().nodes().contains(&peer.to_string()));
+        c.stop();
+    }
+
+    #[test]
+    fn gossip_merge_adds_members_and_rebuilds_ring() {
+        let c = test_cluster(1);
+        assert_eq!(c.ring().nodes().len(), 2);
+        c.apply_remote_members(&[MemberEntry {
+            addr: "127.0.0.1:77".into(),
+            incarnation: 9,
+            alive: true,
+        }]);
+        assert_eq!(c.alive_members(), 3);
+        assert_eq!(c.ring().nodes().len(), 3);
+        assert_eq!(c.stats.members_joined.load(Ordering::Relaxed), 1);
+        // The new member gets a health slot (so the prober covers it).
+        assert!(c.peer_health().contains_key("127.0.0.1:77"));
+        // A death certificate tombstones it again — and, since it is
+        // gossip-learned (not a static --peers entry), its probe slot
+        // is dropped: departed dynamic members must not be probed
+        // forever.
+        c.apply_remote_members(&[MemberEntry {
+            addr: "127.0.0.1:77".into(),
+            incarnation: 9,
+            alive: false,
+        }]);
+        assert_eq!(c.alive_members(), 2);
+        assert!(!c.peer_health().contains_key("127.0.0.1:77"));
+        // A restart (newer incarnation, alive) re-adds both the ring
+        // entry and the probe slot, and counts as a resurrection.
+        c.apply_remote_members(&[MemberEntry {
+            addr: "127.0.0.1:77".into(),
+            incarnation: 10,
+            alive: true,
+        }]);
+        assert_eq!(c.alive_members(), 3);
+        assert!(c.peer_health().contains_key("127.0.0.1:77"));
+        assert_eq!(c.stats.members_resurrected.load(Ordering::Relaxed), 1);
+        c.stop();
+    }
+
+    #[test]
+    fn self_death_report_is_refuted() {
+        let c = test_cluster(1);
+        c.apply_remote_members(&[MemberEntry {
+            addr: "127.0.0.1:1".into(),
+            incarnation: 500,
+            alive: false,
+        }]);
+        let m = c.members();
+        assert!(m["127.0.0.1:1"].alive, "self must refute its own death");
+        assert_eq!(m["127.0.0.1:1"].incarnation, 501);
+        assert_eq!(c.alive_members(), 2);
         c.stop();
     }
 
@@ -764,6 +1513,55 @@ mod tests {
     }
 
     #[test]
+    fn replicas_rotate_reads_and_keep_local_first() {
+        let c = Cluster::start(ClusterConfig {
+            advertise: "127.0.0.1:1".into(),
+            peers: vec!["127.0.0.1:2".into(), "127.0.0.1:3".into()],
+            replicas: 2,
+            probe_interval: Duration::from_secs(3600),
+            incarnation: Some(100),
+            ..Default::default()
+        })
+        .unwrap();
+        // Across many keys: every candidate list has all 3 nodes
+        // (replica set + failover tail) and the replica set is the
+        // first 2 ring successors.
+        for i in 0..50 {
+            let k = format!("m{i}");
+            let cands = c.candidates(&k);
+            assert_eq!(cands.len(), 3, "{k}: {cands:?}");
+            let reps = c.replica_set(&k);
+            assert_eq!(reps.len(), 2);
+            // live_replicas is the liveness-filtered replica set with
+            // Local first when this node is a replica.
+            let live = c.live_replicas(&k);
+            assert_eq!(live.len(), 2);
+            if reps.contains(&"127.0.0.1:1".to_string()) {
+                assert_eq!(live[0], Node::Local, "{k}");
+                assert_eq!(cands[0], Node::Local, "{k}");
+            }
+        }
+        // For a key whose replica set excludes Local, reads rotate
+        // across the two replicas.
+        let remote_key = (0..200)
+            .map(|i| format!("r{i}"))
+            .find(|k| !c.replica_set(k).contains(&"127.0.0.1:1".to_string()))
+            .expect("some key has a fully remote replica set");
+        let firsts: std::collections::BTreeSet<String> = (0..8)
+            .filter_map(|_| match c.candidates(&remote_key).first() {
+                Some(Node::Peer(p)) => Some(p.clone()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(
+            firsts.len(),
+            2,
+            "read rotation must alternate replicas: {firsts:?}"
+        );
+        c.stop();
+    }
+
+    #[test]
     fn rejects_self_in_peer_list_and_empty_advertise() {
         let err = Cluster::start(ClusterConfig {
             advertise: "127.0.0.1:1".into(),
@@ -772,7 +1570,21 @@ mod tests {
         })
         .unwrap_err();
         assert!(err.contains("itself"), "{err}");
+        let err = Cluster::start(ClusterConfig {
+            advertise: "127.0.0.1:1".into(),
+            join: vec!["127.0.0.1:1".into()],
+            ..Default::default()
+        })
+        .unwrap_err();
+        assert!(err.contains("itself"), "{err}");
         assert!(Cluster::start(ClusterConfig::default()).is_err());
+        let err = Cluster::start(ClusterConfig {
+            advertise: "127.0.0.1:1".into(),
+            replicas: 0,
+            ..Default::default()
+        })
+        .unwrap_err();
+        assert!(err.contains("replicas"), "{err}");
     }
 
     #[test]
@@ -816,6 +1628,21 @@ mod tests {
         c.record_failure("127.0.0.1:999");
         c.record_success("127.0.0.1:999");
         assert_eq!(c.peer_health().len(), 1);
+        c.stop();
+    }
+
+    #[test]
+    fn seed_node_with_no_peers_starts_alone() {
+        let c = Cluster::start(ClusterConfig {
+            advertise: "127.0.0.1:1".into(),
+            probe_interval: Duration::from_secs(3600),
+            incarnation: Some(7),
+            ..Default::default()
+        })
+        .unwrap();
+        assert_eq!(c.alive_members(), 1);
+        assert_eq!(c.ring().nodes(), &["127.0.0.1:1".to_string()]);
+        assert_eq!(c.candidates("anything"), vec![Node::Local]);
         c.stop();
     }
 }

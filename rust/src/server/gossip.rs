@@ -1,0 +1,557 @@
+//! SWIM-lite gossip membership for the cluster tier (zero deps, over
+//! the existing HTTP plane).
+//!
+//! PR 4's cluster learned its node set once, from `--peers` flags.
+//! This module makes membership *dynamic*: every node keeps a table of
+//! `addr -> (incarnation, alive)` and periodically exchanges the whole
+//! table with one peer via `POST /v1/gossip` (full-state anti-entropy —
+//! the clusters this tier targets are a handful of fronts, so full
+//! state per round costs a few hundred bytes and converges in O(log n)
+//! rounds without SWIM's infection-style piggybacking). A node started
+//! with only `--join <seed>` announces itself to the seed, merges the
+//! response, and from then on participates like any statically
+//! configured peer — `--peers` is just the bootstrap special case of a
+//! pre-populated table.
+//!
+//! The SWIM ideas kept ("lite"):
+//!
+//! * **Incarnation numbers.** Each node stamps itself with a
+//!   wall-clock-derived incarnation at startup. A higher incarnation
+//!   always wins a merge, so a restarted node supersedes its own stale
+//!   entries everywhere without coordination.
+//! * **Death certificates beat life at equal incarnation.** Ties break
+//!   toward `alive = false`; only a *newer* incarnation resurrects.
+//!   Dead entries are kept (not purged) so a late gossip of an old
+//!   death can't re-add a removed node.
+//! * **Refutation.** A node that sees itself reported dead bumps its
+//!   own incarnation past the report and gossips the refutation.
+//! * **Suspicion reuse.** Short outages are handled by the existing
+//!   probe thread's eviction/re-admission thresholds (routing-level,
+//!   never gossiped); only *sustained* failure — the same
+//!   `failure_threshold`, times [`DEATH_FACTOR`] — declares a member
+//!   dead and disseminates it. Direct observation can resurrect: a
+//!   dead member that answers probes again is re-declared alive with a
+//!   bumped incarnation (the prober acts as the unreachable node's
+//!   proxy-refuter, which keeps gossip-free static peers rejoinable).
+//!
+//! Membership (this module) and health (the peer table in
+//! [`super::cluster`]) are deliberately separate planes: membership
+//! decides *who is in the ring*, health decides *who is routable right
+//! now*. Ring rebuilds happen only on membership changes, so routing
+//! stays a pure function of the alive-member set.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// Wire path for gossip exchanges (handled in [`super::api`]).
+pub const GOSSIP_PATH: &str = "/v1/gossip";
+
+/// Gossip protocol version tag (reject anything newer).
+pub const GOSSIP_VERSION: u64 = 1;
+
+/// Largest accepted incarnation: 2^53, the f64-exact integer ceiling
+/// (exactly representable, so the wire check and the `as u64` cast
+/// agree). Internal bumps ([`merge`]'s refutation and the prober's
+/// resurrection) clamp here too — a node pushed to the ceiling must
+/// still emit *decodable* gossip rather than poison every message it
+/// sends. Wall-clock-millis incarnations sit ~5 orders of magnitude
+/// below this.
+pub const MAX_INCARNATION: u64 = 1 << 53;
+
+/// Cap on *alive* members (ring size / probe fan-out). Gossip is
+/// perimeter-trusted (like the rest of the HTTP plane); the cap bounds
+/// what one crafted message can do to the ring and the probe round, at
+/// an order of magnitude above any realistic front count. Tombstones
+/// do not count against it — long-lived clusters with address churn
+/// must keep accepting joins.
+pub const MAX_MEMBERS: usize = 256;
+
+/// Total table bound, tombstones included, and the per-message wire
+/// cap. When the table is full, unknown *tombstone* imports are
+/// dropped first (they are merely protective: at worst a stale alive
+/// claim re-adds a dead member, which then dies again by probing).
+pub const MAX_TABLE: usize = 1024;
+
+/// Consecutive probe failures that declare a member dead, as a
+/// multiple of the routing-eviction threshold. Eviction (routing skips
+/// the peer) is cheap to undo, so it fires fast; death (ring rebuild,
+/// disseminated) is expensive to get wrong, so it fires an order of
+/// magnitude later.
+pub const DEATH_FACTOR: u32 = 10;
+
+/// One row of the membership table.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Member {
+    /// Startup stamp of the node (millis since epoch, or the test
+    /// override); higher always wins a merge.
+    pub incarnation: u64,
+    /// Dead members stay in the table as tombstones but leave the
+    /// ring.
+    pub alive: bool,
+}
+
+/// One member as carried on the wire.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MemberEntry {
+    pub addr: String,
+    pub incarnation: u64,
+    pub alive: bool,
+}
+
+/// A decoded gossip message (request and response share the shape).
+#[derive(Clone, Debug)]
+pub struct GossipMsg {
+    /// Sender's advertised identity (it also appears in `members`).
+    pub from: String,
+    pub members: Vec<MemberEntry>,
+}
+
+/// What a merge changed — the caller rebuilds the ring iff
+/// `ring_changed`.
+#[derive(Debug, Default, PartialEq, Eq)]
+pub struct MergeOutcome {
+    /// The alive-member set changed (join, death, or resurrection).
+    pub ring_changed: bool,
+    /// Addresses newly added to the table — alive joins and imported
+    /// tombstones alike (the caller checks the table for aliveness).
+    pub added: Vec<String>,
+    /// Members that *transitioned* alive → dead in this merge. Unknown
+    /// members imported already-dead are not listed: they are not
+    /// death events this node observed, only inherited history.
+    pub died: Vec<String>,
+    /// Tombstones flipped back alive by a newer incarnation (the
+    /// restart/rejoin path — they need their health slots back).
+    pub resurrected: Vec<String>,
+    /// This node saw itself reported dead and bumped its incarnation.
+    pub refuted: bool,
+}
+
+/// Merge a remote member list into `table`. `self_addr`/`self_inc`
+/// identify the local node; on refutation `self_inc` is bumped past
+/// the dead report and the table's own entry is refreshed.
+///
+/// Pure table logic — locking, ring rebuilds, and peer-slot bookkeeping
+/// stay in [`super::cluster::Cluster`].
+pub fn merge(
+    table: &mut BTreeMap<String, Member>,
+    self_addr: &str,
+    self_inc: &mut u64,
+    remote: &[MemberEntry],
+) -> MergeOutcome {
+    let mut out = MergeOutcome::default();
+    for e in remote {
+        if e.addr == self_addr {
+            // Refutation: only we may assert our own liveness. A dead
+            // report at `inc >= ours` would otherwise win ties forever.
+            // (Saturating: an at-the-limit report must not overflow —
+            // decode bounds the wire value, this guards direct callers.)
+            if !e.alive && e.incarnation >= *self_inc {
+                *self_inc =
+                    e.incarnation.saturating_add(1).min(MAX_INCARNATION);
+                table.insert(
+                    self_addr.to_string(),
+                    Member { incarnation: *self_inc, alive: true },
+                );
+                out.refuted = true;
+                out.ring_changed = true; // our ring entry was contested
+            }
+            continue;
+        }
+        match table.get_mut(&e.addr) {
+            None => {
+                // Bounded growth: alive members against MAX_MEMBERS
+                // (tombstones excluded, so churn can't block joins),
+                // everything against MAX_TABLE. At the table bound a
+                // join evicts one tombstone to make room — dropping a
+                // tombstone is merely un-protective (a stale alive
+                // claim could re-add the dead member, which then dies
+                // again by probing), whereas refusing joins forever
+                // would freeze a long-lived cluster's growth.
+                if e.alive {
+                    if table.values().filter(|m| m.alive).count()
+                        >= MAX_MEMBERS
+                    {
+                        continue;
+                    }
+                    if table.len() >= MAX_TABLE {
+                        let victim = table
+                            .iter()
+                            .find(|(_, m)| !m.alive)
+                            .map(|(a, _)| a.clone());
+                        match victim {
+                            Some(v) => {
+                                table.remove(&v);
+                            }
+                            None => continue,
+                        }
+                    }
+                } else if table.len() >= MAX_TABLE {
+                    // Never evict anything for an incoming tombstone.
+                    continue;
+                }
+                table.insert(
+                    e.addr.clone(),
+                    Member { incarnation: e.incarnation, alive: e.alive },
+                );
+                out.added.push(e.addr.clone());
+                if e.alive {
+                    out.ring_changed = true;
+                }
+            }
+            Some(m) => {
+                let newer = e.incarnation > m.incarnation
+                    || (e.incarnation == m.incarnation
+                        && !e.alive
+                        && m.alive);
+                if newer {
+                    if e.alive != m.alive {
+                        out.ring_changed = true;
+                        if e.alive {
+                            out.resurrected.push(e.addr.clone());
+                        } else {
+                            out.died.push(e.addr.clone());
+                        }
+                    }
+                    m.incarnation = e.incarnation;
+                    m.alive = e.alive;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Serialize a membership snapshot as the gossip wire message.
+pub fn encode(from: &str, members: &[MemberEntry]) -> Json {
+    let members = members
+        .iter()
+        .map(|e| {
+            Json::Obj(
+                [
+                    ("addr".to_string(), Json::Str(e.addr.clone())),
+                    (
+                        "incarnation".to_string(),
+                        Json::Num(e.incarnation as f64),
+                    ),
+                    ("alive".to_string(), Json::Bool(e.alive)),
+                ]
+                .into_iter()
+                .collect(),
+            )
+        })
+        .collect();
+    Json::Obj(
+        [
+            ("v".to_string(), Json::Num(GOSSIP_VERSION as f64)),
+            ("from".to_string(), Json::Str(from.to_string())),
+            ("members".to_string(), Json::Arr(members)),
+        ]
+        .into_iter()
+        .collect(),
+    )
+}
+
+/// Parse and validate a gossip wire message.
+pub fn decode(body: &Json) -> Result<GossipMsg, String> {
+    let v = body
+        .get("v")
+        .and_then(Json::as_f64)
+        .ok_or("gossip: missing protocol version")? as u64;
+    if v > GOSSIP_VERSION {
+        return Err(format!("gossip: unsupported protocol version {v}"));
+    }
+    let from = body
+        .get("from")
+        .and_then(Json::as_str)
+        .ok_or("gossip: missing from")?
+        .to_string();
+    let arr = body
+        .get("members")
+        .and_then(Json::as_arr)
+        .ok_or("gossip: missing members array")?;
+    if arr.len() > MAX_TABLE {
+        return Err(format!(
+            "gossip: {} members exceeds the {MAX_TABLE} cap",
+            arr.len()
+        ));
+    }
+    let mut members = Vec::with_capacity(arr.len());
+    for m in arr {
+        let addr = m
+            .get("addr")
+            .and_then(Json::as_str)
+            .ok_or("gossip: member without addr")?
+            .to_string();
+        // Bounded to [0, MAX_INCARNATION]: a crafted huge incarnation
+        // would otherwise saturate the `as u64` cast to u64::MAX and
+        // freeze the conflict-resolution order (nothing could ever
+        // supersede it).
+        let incarnation = m
+            .get("incarnation")
+            .and_then(Json::as_f64)
+            .filter(|n| {
+                *n >= 0.0 && *n <= MAX_INCARNATION as f64 && n.fract() == 0.0
+            })
+            .ok_or("gossip: member incarnation not an integer in bounds")?
+            as u64;
+        let alive = match m.get("alive") {
+            Some(Json::Bool(b)) => *b,
+            _ => return Err("gossip: member without alive flag".into()),
+        };
+        // Death certificates are clamped one below the ceiling so a
+        // refutation bump always has headroom: an at-the-ceiling death
+        // would otherwise win its tie-break forever and the victim
+        // could never rejoin.
+        let incarnation = if alive {
+            incarnation
+        } else {
+            incarnation.min(MAX_INCARNATION - 1)
+        };
+        members.push(MemberEntry { addr, incarnation, alive });
+    }
+    Ok(GossipMsg { from, members })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const ME: &str = "10.0.0.1:1";
+
+    fn table(entries: &[(&str, u64, bool)]) -> BTreeMap<String, Member> {
+        entries
+            .iter()
+            .map(|&(a, incarnation, alive)| {
+                (a.to_string(), Member { incarnation, alive })
+            })
+            .collect()
+    }
+
+    fn entry(addr: &str, incarnation: u64, alive: bool) -> MemberEntry {
+        MemberEntry { addr: addr.to_string(), incarnation, alive }
+    }
+
+    #[test]
+    fn unknown_members_are_added_and_change_the_ring() {
+        let mut t = table(&[(ME, 5, true)]);
+        let mut inc = 5;
+        let out = merge(&mut t, ME, &mut inc, &[entry("10.0.0.2:1", 7, true)]);
+        assert!(out.ring_changed);
+        assert_eq!(out.added, vec!["10.0.0.2:1"]);
+        assert_eq!(t["10.0.0.2:1"], Member { incarnation: 7, alive: true });
+    }
+
+    #[test]
+    fn higher_incarnation_wins_lower_is_ignored() {
+        let mut t = table(&[(ME, 5, true), ("b:1", 10, true)]);
+        let mut inc = 5;
+        // Stale news: ignored entirely.
+        let out = merge(&mut t, ME, &mut inc, &[entry("b:1", 9, false)]);
+        assert!(!out.ring_changed);
+        assert!(t["b:1"].alive);
+        // Newer incarnation flips it.
+        let out = merge(&mut t, ME, &mut inc, &[entry("b:1", 11, false)]);
+        assert!(out.ring_changed);
+        assert_eq!(out.died, vec!["b:1"]);
+        assert!(!t["b:1"].alive);
+        // And a yet-newer incarnation resurrects (node restarted).
+        let out = merge(&mut t, ME, &mut inc, &[entry("b:1", 12, true)]);
+        assert!(out.ring_changed);
+        assert_eq!(out.resurrected, vec!["b:1"]);
+        assert!(t["b:1"].alive);
+    }
+
+    #[test]
+    fn death_beats_life_at_equal_incarnation() {
+        let mut t = table(&[(ME, 5, true), ("b:1", 10, true)]);
+        let mut inc = 5;
+        let out = merge(&mut t, ME, &mut inc, &[entry("b:1", 10, false)]);
+        assert!(out.ring_changed && !t["b:1"].alive);
+        // The reverse tie (alive at the same incarnation) must NOT
+        // resurrect — only a new incarnation can.
+        let out = merge(&mut t, ME, &mut inc, &[entry("b:1", 10, true)]);
+        assert!(!out.ring_changed && !t["b:1"].alive);
+    }
+
+    #[test]
+    fn dead_unknowns_become_tombstones_not_ring_members() {
+        let mut t = table(&[(ME, 5, true)]);
+        let mut inc = 5;
+        let out = merge(&mut t, ME, &mut inc, &[entry("gone:1", 3, false)]);
+        assert!(!out.ring_changed, "a tombstone must not rebuild the ring");
+        assert!(!t["gone:1"].alive);
+        // Late arrival of the old alive claim can't resurrect it.
+        let out = merge(&mut t, ME, &mut inc, &[entry("gone:1", 3, true)]);
+        assert!(!out.ring_changed && !t["gone:1"].alive);
+    }
+
+    #[test]
+    fn member_table_growth_is_capped() {
+        let mut t = table(&[(ME, 5, true)]);
+        let mut inc = 5;
+        let flood: Vec<MemberEntry> = (0..(MAX_MEMBERS + 50))
+            .map(|i| {
+                entry(&format!("10.1.{}.{}:1", i / 256, i % 256), 1, true)
+            })
+            .collect();
+        merge(&mut t, ME, &mut inc, &flood);
+        assert!(t.len() <= MAX_MEMBERS, "table grew to {}", t.len());
+        // Known members still merge normally at the cap.
+        let known =
+            t.keys().find(|k| k.as_str() != ME).unwrap().clone();
+        let out = merge(&mut t, ME, &mut inc, &[entry(&known, 99, false)]);
+        assert!(out.ring_changed && !t[&known].alive);
+    }
+
+    #[test]
+    fn full_table_evicts_a_tombstone_for_a_join() {
+        // Table at MAX_TABLE, mostly tombstones: a fresh alive join
+        // must still be admitted (one tombstone evicted), and an
+        // incoming tombstone must not evict anything.
+        let mut t = table(&[(ME, 5, true)]);
+        let mut inc = 5;
+        for i in 0..(MAX_TABLE - 1) {
+            t.insert(
+                format!("10.3.{}.{}:1", i / 256, i % 256),
+                Member { incarnation: 1, alive: false },
+            );
+        }
+        assert_eq!(t.len(), MAX_TABLE);
+        let out = merge(&mut t, ME, &mut inc, &[entry("fresh:1", 9, true)]);
+        assert!(out.ring_changed, "join refused at the table bound");
+        assert!(t["fresh:1"].alive);
+        assert_eq!(t.len(), MAX_TABLE, "a tombstone must have been evicted");
+        let before = t.len();
+        merge(&mut t, ME, &mut inc, &[entry("late-tomb:1", 9, false)]);
+        assert_eq!(t.len(), before, "tombstone import must not evict");
+    }
+
+    #[test]
+    fn ceiling_death_certificate_is_refutable() {
+        // decode clamps dead certs below MAX_INCARNATION, so the
+        // refutation bump always has headroom.
+        let json = encode(
+            "a:1",
+            &[MemberEntry {
+                addr: ME.to_string(),
+                incarnation: MAX_INCARNATION,
+                alive: false,
+            }],
+        );
+        let msg = decode(&json).unwrap();
+        assert_eq!(msg.members[0].incarnation, MAX_INCARNATION - 1);
+        let mut t = table(&[(ME, 5, true)]);
+        let mut inc = 5;
+        let out = merge(&mut t, ME, &mut inc, &msg.members);
+        assert!(out.refuted);
+        assert_eq!(inc, MAX_INCARNATION, "bump must exceed the cert");
+        assert!(t[ME].alive);
+    }
+
+    #[test]
+    fn tombstones_do_not_block_new_joins() {
+        // A long-lived table full of departed members must keep
+        // accepting fresh alive joins (the alive cap ignores
+        // tombstones).
+        let mut t = table(&[(ME, 5, true)]);
+        let mut inc = 5;
+        let dead: Vec<MemberEntry> = (0..(MAX_MEMBERS + 20))
+            .map(|i| {
+                entry(&format!("10.2.{}.{}:1", i / 256, i % 256), 1, false)
+            })
+            .collect();
+        merge(&mut t, ME, &mut inc, &dead);
+        assert!(t.len() > MAX_MEMBERS, "tombstones should be retained");
+        let out =
+            merge(&mut t, ME, &mut inc, &[entry("fresh:1", 9, true)]);
+        assert!(out.ring_changed, "join blocked by tombstones");
+        assert!(t["fresh:1"].alive);
+    }
+
+    #[test]
+    fn self_death_report_is_refuted_with_a_bumped_incarnation() {
+        let mut t = table(&[(ME, 5, true), ("b:1", 1, true)]);
+        let mut inc = 5;
+        let out = merge(&mut t, ME, &mut inc, &[entry(ME, 8, false)]);
+        assert!(out.refuted);
+        assert_eq!(inc, 9, "incarnation must jump past the death report");
+        assert_eq!(t[ME], Member { incarnation: 9, alive: true });
+        // An older report about ourselves is ignored.
+        let out = merge(&mut t, ME, &mut inc, &[entry(ME, 4, false)]);
+        assert!(!out.refuted && inc == 9);
+    }
+
+    #[test]
+    fn wire_roundtrip_preserves_the_table() {
+        let entries = vec![
+            entry("a:1", 17, true),
+            entry("b:2", 99, false),
+            entry("c:3", 3, true),
+        ];
+        let json = encode("a:1", &entries);
+        let msg = decode(&json).unwrap();
+        assert_eq!(msg.from, "a:1");
+        assert_eq!(msg.members, entries);
+    }
+
+    fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(
+            pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect(),
+        )
+    }
+
+    #[test]
+    fn decode_rejects_malformed_messages() {
+        for bad in [
+            obj(vec![]), // no version
+            obj(vec![
+                ("v", Json::Num(99.0)), // future version
+                ("from", Json::Str("a".into())),
+                ("members", Json::Arr(vec![])),
+            ]),
+            obj(vec![
+                ("v", Json::Num(1.0)),
+                ("from", Json::Str("a".into())),
+                (
+                    "members",
+                    // member missing the alive flag
+                    Json::Arr(vec![obj(vec![
+                        ("addr", Json::Str("x".into())),
+                        ("incarnation", Json::Num(1.0)),
+                    ])]),
+                ),
+            ]),
+            obj(vec![
+                ("v", Json::Num(1.0)),
+                ("from", Json::Str("a".into())),
+                (
+                    "members",
+                    // fractional incarnation
+                    Json::Arr(vec![obj(vec![
+                        ("addr", Json::Str("x".into())),
+                        ("incarnation", Json::Num(1.5)),
+                        ("alive", Json::Bool(true)),
+                    ])]),
+                ),
+            ]),
+            obj(vec![
+                ("v", Json::Num(1.0)),
+                ("from", Json::Str("a".into())),
+                (
+                    "members",
+                    // incarnation beyond the f64-exact bound: the
+                    // saturating `as u64` cast would freeze conflict
+                    // resolution at u64::MAX, so it must be rejected.
+                    Json::Arr(vec![obj(vec![
+                        ("addr", Json::Str("x".into())),
+                        ("incarnation", Json::Num(1.0e300)),
+                        ("alive", Json::Bool(false)),
+                    ])]),
+                ),
+            ]),
+        ] {
+            assert!(decode(&bad).is_err(), "{bad:?}");
+        }
+    }
+}

@@ -2,8 +2,8 @@
 //!
 //! The core is [`Parser`], an *incremental* message parser: feed it
 //! bytes as they arrive and it resumes mid-request-line, mid-header,
-//! mid-body — exactly what the nonblocking reactor in
-//! [`super::conn`]/[`super::reactor`] needs. It handles request-line +
+//! mid-body — exactly what the nonblocking reactor (the crate-private
+//! `conn`/`reactor` modules) needs. It handles request-line +
 //! header parsing with hard limits, `Content-Length` bodies, and
 //! `Transfer-Encoding: chunked` bodies (with trailer handling and the
 //! same max-body bound as fixed-length bodies). Malformed input maps to
@@ -614,6 +614,15 @@ impl HttpConn {
 
     pub fn stream(&self) -> &TcpStream {
         &self.stream
+    }
+
+    /// True when the connection sits cleanly between messages: no
+    /// partial message in flight and no unread pipelined bytes. The
+    /// cluster connection pool ([`super::pool`]) only re-admits clean
+    /// connections — anything else would hand the next request a
+    /// desynchronized byte stream.
+    pub fn is_clean(&self) -> bool {
+        self.parser.is_clean()
     }
 
     /// Read more bytes from the socket into the parser.

@@ -1,11 +1,41 @@
 //! Closed-loop HTTP load generator + tiny blocking client helpers.
 //!
+//! ## Why closed-loop
+//!
 //! Each connection thread sends `POST /v1/batch` requests back-to-back
-//! on one keep-alive connection (closed-loop: next request only after
-//! the previous response), cycling through the configured model names —
-//! so a two-route server sees genuinely mixed-precision traffic. Reports
-//! req/s and p50/p99/max latency; used by the `http_serving` bench, the
-//! serving example, and the e2e test.
+//! on one keep-alive connection: the next request leaves only after the
+//! previous response has fully arrived. A closed loop cannot overrun
+//! the server — offered load self-limits to (connections / latency) —
+//! which makes it the right shape for *capacity* measurement: observed
+//! req/s is the service rate at that concurrency, and latency
+//! percentiles are honest (no coordinated-omission skew from a
+//! timer-driven open loop silently queueing send times).
+//!
+//! ## Workload shape
+//!
+//! * [`LoadgenConfig::models`] is cycled per request (offset by the
+//!   connection index), so a two-route server sees genuinely
+//!   mixed-precision traffic and a cluster front sees keys that hash
+//!   to different owners.
+//! * [`LoadgenConfig::addrs`] may list several fronts: connections are
+//!   dealt round-robin across them, so one run drives a whole cluster
+//!   through every entry point at once.
+//! * Words are drawn uniformly from `[-word_range, word_range)` by the
+//!   crate's deterministic [`Rng`] (seeded per connection), keeping
+//!   runs reproducible.
+//!
+//! ## Outputs
+//!
+//! [`LoadReport`] carries req/s, words/s, failure count, and
+//! nearest-rank p50/p95/p99/max latency; [`LoadReport::render`] is the
+//! human line, [`LoadReport::to_json`] the machine record persisted by
+//! the `http_serving` bench into `BENCH_http_serving.json`. Consumers:
+//! the `loadgen` CLI subcommand, the bench, the serving example, and
+//! the e2e tests.
+//!
+//! The single-shot helpers at the bottom ([`http_get`],
+//! [`http_post_json`], [`eval_words`]) are the blocking client surface
+//! shared by tests, examples, and the CI smoke scripts.
 
 use std::net::TcpStream;
 use std::time::{Duration, Instant};

@@ -12,12 +12,13 @@
 //!   feed bytes, resume mid-header/mid-body, chunked transfer coding
 //!   with trailers) plus the blocking [`http::HttpConn`] wrapper shared
 //!   with the client side used by tests and the load generator.
-//! * [`conn`]    — per-connection state machine for the reactor:
-//!   read → parse → dispatch → write → keep-alive, with per-state
-//!   deadlines (slow-loris 408, write-stall close, idle budget, and a
-//!   dispatch backstop so a lost completion can never leak the
-//!   connection).
-//! * [`reactor`] — readiness event loop: raw `epoll` bindings with a
+//! * `conn`      — per-connection state machine for the reactor
+//!   (crate-private): read → parse → dispatch → write → keep-alive,
+//!   with per-state deadlines (slow-loris 408, write-stall close,
+//!   idle budget, and a dispatch backstop so a lost completion can
+//!   never leak the connection).
+//! * `reactor`   — readiness event loop (crate-private): raw `epoll`
+//!   bindings with a
 //!   portable `poll(2)` fallback (`TANHVF_POLLER=poll`), a self-pipe
 //!   [`Waker`](crate::exec::Waker), and the accept/dispatch/deadline
 //!   loop. One thread multiplexes every connection.
@@ -26,9 +27,19 @@
 //! * [`cluster`] — multi-node tier ([`Server::start_cluster`]):
 //!   consistent-hash routing of model names across several fronts
 //!   (FNV-1a ring with virtual nodes), a health-checked peer table
-//!   (probe thread, failure-threshold eviction, re-admission), and the
+//!   (probe thread, failure-threshold eviction, re-admission), the
 //!   proxy path that forwards `/v1/eval`/`/v1/batch` to the owning
-//!   peer while answering locally for keys this node owns.
+//!   peer while answering locally for keys this node owns, and
+//!   optional route replication with read fan-out (`--replicas`).
+//! * [`gossip`]  — SWIM-lite membership over `POST /v1/gossip`:
+//!   incarnation-numbered member table, full-state anti-entropy
+//!   exchange each probe round, `--join` seeds, death certificates
+//!   and refutation. Ring rebuilds happen on membership changes;
+//!   `--peers` is the static-bootstrap special case.
+//! * [`pool`]    — per-peer keep-alive connection pool under every
+//!   cluster client leg (proxy, probe, gossip): bounded idle lists,
+//!   LRU eviction, discard-and-redial on broken reuse, hit/miss
+//!   counters on `/metrics`.
 //! * [`loadgen`] — closed-loop multi-connection load generator (one
 //!   address or a whole cluster of fronts) with a machine-readable
 //!   JSON report.
@@ -58,8 +69,10 @@ pub mod api;
 pub mod cluster;
 #[cfg(unix)]
 pub(crate) mod conn;
+pub mod gossip;
 pub mod http;
 pub mod loadgen;
+pub mod pool;
 #[cfg(unix)]
 pub(crate) mod reactor;
 

@@ -1,0 +1,288 @@
+//! Per-peer keep-alive connection pool for the cluster's client legs.
+//!
+//! Before this module every proxied request, health probe, and gossip
+//! exchange paid a fresh `TcpStream::connect` — a full TCP handshake on
+//! the hot forward path. The pool amortizes that: after a successful
+//! round trip the connection is checked back in and the next request to
+//! the same peer reuses it.
+//!
+//! Design:
+//!
+//! * **Bounded idle list per peer.** At most
+//!   [`ConnPool::idle_per_peer`] connections are kept per address;
+//!   checking in beyond the bound evicts the *least-recently-used*
+//!   idle connection (the one most likely to have been dropped by the
+//!   peer's keep-alive timer). `idle_per_peer == 0` disables pooling
+//!   entirely — every checkout dials, every check-in discards — which
+//!   is the control arm of the pooled-vs-unpooled bench point.
+//! * **LIFO reuse.** [`ConnPool::checkout`] pops the most-recently-used
+//!   idle connection, maximizing the chance it is still open on the
+//!   peer side.
+//! * **Clean connections only.** A connection is re-admitted only when
+//!   its parser sits between messages ([`HttpConn::is_clean`]) and the
+//!   peer didn't announce `Connection: close`; anything else is
+//!   discarded so a desynchronized byte stream can never be handed to
+//!   the next request.
+//! * **Discard-and-redial is the caller's loop.**
+//!   [`super::cluster::Cluster`] retries a failed round trip on a
+//!   *reused* connection exactly once with a freshly dialed one — a
+//!   pooled connection may have been closed by the peer at any time,
+//!   so its first failure is expected background noise, while a fresh
+//!   dial's failure is a real transport error.
+//! * **Counters, not logs.** Hits/misses/discards/evictions are
+//!   surfaced on `/metrics` (`tanhvf_cluster_pool_*`), so the reuse
+//!   rate is observable in production.
+//!
+//! The pool is transport-only: it knows nothing about rings, health,
+//! or request semantics. Those live in [`super::cluster`].
+
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use super::http::HttpConn;
+
+/// Pool observability counters, surfaced on `/metrics`.
+#[derive(Default)]
+pub struct PoolStats {
+    /// Checkouts served by an idle pooled connection.
+    pub hits: AtomicU64,
+    /// Checkouts that had to dial a fresh connection.
+    pub misses: AtomicU64,
+    /// Connections dropped instead of re-admitted (broken mid-request,
+    /// dirty parser state, peer sent `Connection: close`, pool
+    /// disabled).
+    pub discards: AtomicU64,
+    /// Idle connections evicted by the per-peer bound (LRU).
+    pub evictions: AtomicU64,
+}
+
+/// A checked-out connection plus its provenance: `reused` tells the
+/// caller whether a transport failure should trigger the
+/// discard-and-redial retry (pooled connections fail benignly; fresh
+/// ones don't).
+pub struct Checked {
+    pub conn: HttpConn,
+    pub reused: bool,
+}
+
+/// Keep-alive connection pool keyed by peer address.
+pub struct ConnPool {
+    idle_per_peer: usize,
+    /// Idle connections per peer, in last-used order (reuse pops the
+    /// tail, eviction removes the front).
+    idle: Mutex<HashMap<String, Vec<HttpConn>>>,
+    pub stats: PoolStats,
+}
+
+impl ConnPool {
+    /// `idle_per_peer` bounds the idle list per address; `0` disables
+    /// pooling (every checkout dials fresh).
+    pub fn new(idle_per_peer: usize) -> ConnPool {
+        ConnPool {
+            idle_per_peer,
+            idle: Mutex::new(HashMap::new()),
+            stats: PoolStats::default(),
+        }
+    }
+
+    /// The configured per-peer idle bound.
+    pub fn idle_per_peer(&self) -> usize {
+        self.idle_per_peer
+    }
+
+    /// Idle connections currently pooled (all peers) — the `/metrics`
+    /// gauge.
+    pub fn idle_count(&self) -> usize {
+        self.idle.lock().unwrap().values().map(Vec::len).sum()
+    }
+
+    /// Get a connection to `addr`: the most-recently-used idle one if
+    /// available (hit), else a fresh dial (miss). Read/write timeouts
+    /// are (re)applied on every checkout, so probe and proxy legs can
+    /// share pooled connections under different budgets.
+    pub fn checkout(
+        &self,
+        addr: &str,
+        connect_timeout: Duration,
+        io_timeout: Duration,
+    ) -> Result<Checked, String> {
+        if let Some(conn) = self.pop_idle(addr) {
+            self.stats.hits.fetch_add(1, Ordering::Relaxed);
+            apply_timeouts(&conn, io_timeout);
+            return Ok(Checked { conn, reused: true });
+        }
+        self.dial_fresh(addr, connect_timeout, io_timeout)
+    }
+
+    /// Dial a fresh connection, bypassing the idle list — the redial
+    /// half of discard-and-redial (counted as a miss).
+    pub fn dial_fresh(
+        &self,
+        addr: &str,
+        connect_timeout: Duration,
+        io_timeout: Duration,
+    ) -> Result<Checked, String> {
+        self.stats.misses.fetch_add(1, Ordering::Relaxed);
+        let conn = dial(addr, connect_timeout)?;
+        apply_timeouts(&conn, io_timeout);
+        Ok(Checked { conn, reused: false })
+    }
+
+    /// Return a connection after a successful round trip. Re-admits
+    /// only clean connections; beyond the per-peer bound the
+    /// least-recently-used idle connection is evicted.
+    pub fn check_in(&self, addr: &str, conn: HttpConn) {
+        if self.idle_per_peer == 0 || !conn.is_clean() {
+            self.stats.discards.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let mut idle = self.idle.lock().unwrap();
+        let list = idle.entry(addr.to_string()).or_default();
+        list.push(conn);
+        if list.len() > self.idle_per_peer {
+            // Entries are appended in last_used order and only popped
+            // from the tail, so the front is always the LRU — and one
+            // push can overshoot the cap by at most one.
+            list.remove(0);
+            self.stats.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Record a connection dropped instead of returned (broken on the
+    /// wire). The caller just drops the `HttpConn`; this keeps the
+    /// counter honest.
+    pub fn note_discard(&self) {
+        self.stats.discards.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Drop every idle connection to `addr` (the peer was evicted from
+    /// routing — its pooled connections are dead weight). Returns how
+    /// many were dropped.
+    pub fn purge(&self, addr: &str) -> usize {
+        let purged = self
+            .idle
+            .lock()
+            .unwrap()
+            .remove(addr)
+            .map(|l| l.len())
+            .unwrap_or(0);
+        self.stats.discards.fetch_add(purged as u64, Ordering::Relaxed);
+        purged
+    }
+
+    fn pop_idle(&self, addr: &str) -> Option<HttpConn> {
+        let mut idle = self.idle.lock().unwrap();
+        let list = idle.get_mut(addr)?;
+        let conn = list.pop();
+        if list.is_empty() {
+            idle.remove(addr);
+        }
+        conn
+    }
+}
+
+fn resolve(addr: &str) -> Result<SocketAddr, String> {
+    addr.to_socket_addrs()
+        .map_err(|e| format!("resolve {addr}: {e}"))?
+        .next()
+        .ok_or_else(|| format!("resolve {addr}: no address"))
+}
+
+fn dial(addr: &str, connect_timeout: Duration) -> Result<HttpConn, String> {
+    let sa = resolve(addr)?;
+    let stream = TcpStream::connect_timeout(&sa, connect_timeout)
+        .map_err(|e| format!("connect {addr}: {e}"))?;
+    let _ = stream.set_nodelay(true);
+    Ok(HttpConn::new(stream))
+}
+
+fn apply_timeouts(conn: &HttpConn, io_timeout: Duration) {
+    let _ = conn.stream().set_read_timeout(Some(io_timeout));
+    let _ = conn.stream().set_write_timeout(Some(io_timeout));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    /// A loopback socket wrapped as a clean HttpConn (the accept side
+    /// is parked in the listener's backlog; these tests only exercise
+    /// pool bookkeeping, not the wire).
+    fn loopback_conn(l: &TcpListener) -> HttpConn {
+        let s = TcpStream::connect(l.local_addr().unwrap()).unwrap();
+        HttpConn::new(s)
+    }
+
+    #[test]
+    fn checkin_caps_idle_list_and_evicts_lru() {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let pool = ConnPool::new(2);
+        for _ in 0..3 {
+            pool.check_in("peer-a", loopback_conn(&l));
+        }
+        assert_eq!(pool.idle_count(), 2);
+        assert_eq!(pool.stats.evictions.load(Ordering::Relaxed), 1);
+        // A different peer has its own bound.
+        pool.check_in("peer-b", loopback_conn(&l));
+        assert_eq!(pool.idle_count(), 3);
+    }
+
+    #[test]
+    fn zero_cap_disables_pooling() {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let pool = ConnPool::new(0);
+        pool.check_in("peer", loopback_conn(&l));
+        assert_eq!(pool.idle_count(), 0);
+        assert_eq!(pool.stats.discards.load(Ordering::Relaxed), 1);
+        // And checkout always dials (against the live listener).
+        let addr = l.local_addr().unwrap().to_string();
+        let c = pool
+            .checkout(&addr, Duration::from_secs(1), Duration::from_secs(1))
+            .unwrap();
+        assert!(!c.reused);
+        assert_eq!(pool.stats.misses.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn checkout_prefers_pooled_connection() {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap().to_string();
+        let pool = ConnPool::new(4);
+        pool.check_in(&addr, loopback_conn(&l));
+        let c = pool
+            .checkout(&addr, Duration::from_secs(1), Duration::from_secs(1))
+            .unwrap();
+        assert!(c.reused);
+        assert_eq!(pool.stats.hits.load(Ordering::Relaxed), 1);
+        assert_eq!(pool.stats.misses.load(Ordering::Relaxed), 0);
+        assert_eq!(pool.idle_count(), 0);
+    }
+
+    #[test]
+    fn purge_drops_all_idle_for_a_peer() {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let pool = ConnPool::new(4);
+        pool.check_in("dead", loopback_conn(&l));
+        pool.check_in("dead", loopback_conn(&l));
+        pool.check_in("live", loopback_conn(&l));
+        assert_eq!(pool.purge("dead"), 2);
+        assert_eq!(pool.idle_count(), 1);
+        assert_eq!(pool.stats.discards.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn unresolvable_address_is_an_error() {
+        let pool = ConnPool::new(1);
+        assert!(pool
+            .checkout(
+                "definitely-not-a-host:0",
+                Duration::from_millis(50),
+                Duration::from_millis(50)
+            )
+            .is_err());
+    }
+}

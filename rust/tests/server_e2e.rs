@@ -7,7 +7,7 @@ use std::net::{TcpListener, TcpStream};
 use std::time::{Duration, Instant};
 
 use tanh_vf::coordinator::router::Route;
-use tanh_vf::server::cluster::{ClusterConfig, PeerHealth};
+use tanh_vf::server::cluster::{Cluster, ClusterConfig, PeerHealth};
 use tanh_vf::server::http::HttpConn;
 use tanh_vf::server::loadgen::{self, LoadgenConfig};
 use tanh_vf::server::{named_config, parse_routes, Server, ServerConfig};
@@ -432,9 +432,14 @@ fn free_addrs(n: usize) -> Vec<String> {
 
 /// Start `n` cluster fronts, each serving `routes` and peering with
 /// all the others; probing is fast so eviction tests stay quick.
+/// `tweak` adjusts each node's `ClusterConfig` (replicas, pool size…).
 /// Retries with a fresh port group if a concurrently running test
 /// snatched a reserved port between release and re-bind.
-fn start_cluster_fronts(n: usize, routes: &str) -> (Vec<Server>, Vec<String>) {
+fn start_cluster_fronts_with(
+    n: usize,
+    routes: &str,
+    tweak: impl Fn(&mut ClusterConfig),
+) -> (Vec<Server>, Vec<String>) {
     'attempt: for _ in 0..5 {
         let addrs = free_addrs(n);
         let mut fronts = Vec::with_capacity(n);
@@ -445,21 +450,23 @@ fn start_cluster_fronts(n: usize, routes: &str) -> (Vec<Server>, Vec<String>) {
                 .filter(|&(j, _)| j != i)
                 .map(|(_, a)| a.clone())
                 .collect();
+            let mut ccfg = ClusterConfig {
+                advertise: addrs[i].clone(),
+                peers,
+                probe_interval: Duration::from_millis(100),
+                probe_timeout: Duration::from_millis(500),
+                failure_threshold: 2,
+                recovery_threshold: 1,
+                ..Default::default()
+            };
+            tweak(&mut ccfg);
             match Server::start_cluster(
                 ServerConfig {
                     addr: addrs[i].clone(),
                     ..Default::default()
                 },
                 parse_routes(routes).unwrap(),
-                ClusterConfig {
-                    advertise: addrs[i].clone(),
-                    peers,
-                    probe_interval: Duration::from_millis(100),
-                    probe_timeout: Duration::from_millis(500),
-                    failure_threshold: 2,
-                    recovery_threshold: 1,
-                    ..Default::default()
-                },
+                ccfg,
             ) {
                 Ok(srv) => fronts.push(srv),
                 Err(_) => continue 'attempt, // port stolen; regroup
@@ -468,6 +475,10 @@ fn start_cluster_fronts(n: usize, routes: &str) -> (Vec<Server>, Vec<String>) {
         return (fronts, addrs);
     }
     panic!("could not bind a free port group for the cluster");
+}
+
+fn start_cluster_fronts(n: usize, routes: &str) -> (Vec<Server>, Vec<String>) {
+    start_cluster_fronts_with(n, routes, |_| {})
 }
 
 #[test]
@@ -716,6 +727,348 @@ fn cluster_loadgen_drives_every_front() {
             + st.proxied_in.load(O::Relaxed);
         assert!(n > 0, "a front saw no cluster traffic");
     }
+}
+
+// ---------------------------------------------------------------------
+// Gossip membership (dynamic join via --join seeds)
+// ---------------------------------------------------------------------
+
+#[test]
+fn gossip_join_discovers_all_peers_and_serves_bit_exact() {
+    // A seed front with no peers at all; two more nodes join knowing
+    // only the seed. Gossip must spread full membership to everyone.
+    let mk = |join: Vec<String>| -> Server {
+        Server::start_cluster(
+            ServerConfig { addr: "127.0.0.1:0".into(), ..Default::default() },
+            parse_routes("native:s3_12,native:s2_8").unwrap(),
+            ClusterConfig {
+                join,
+                probe_interval: Duration::from_millis(100),
+                probe_timeout: Duration::from_millis(500),
+                failure_threshold: 2,
+                recovery_threshold: 1,
+                ..Default::default()
+            },
+        )
+        .unwrap()
+    };
+    let seed = mk(vec![]);
+    let seed_addr = seed.local_addr().to_string();
+    let b = mk(vec![seed_addr.clone()]);
+    let c = mk(vec![seed_addr.clone()]);
+    let fronts = [&seed, &b, &c];
+    let addrs: Vec<String> =
+        fronts.iter().map(|f| f.local_addr().to_string()).collect();
+
+    // Convergence: every front's member table reaches 3 alive members
+    // within a bounded number of probe intervals (100 ms each; the
+    // 15 s ceiling is ~150 rounds of slack for a loaded CI box).
+    let t0 = Instant::now();
+    while !fronts
+        .iter()
+        .all(|f| f.cluster().unwrap().alive_members() == 3)
+    {
+        assert!(
+            t0.elapsed() < Duration::from_secs(15),
+            "gossip never converged: {:?}",
+            fronts
+                .iter()
+                .map(|f| f.cluster().unwrap().members())
+                .collect::<Vec<_>>()
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    // The /health peer table on every front lists both other nodes,
+    // and every ring has all three (the joiner owns shards).
+    for (i, addr) in addrs.iter().enumerate() {
+        let (status, body) = loadgen::http_get(addr, "/health").unwrap();
+        assert_eq!(status, 200, "{body}");
+        let v = tanh_vf::util::json::parse(&body).unwrap();
+        let peers = v.get("cluster_peers").and_then(Json::as_obj).unwrap();
+        for (j, other) in addrs.iter().enumerate() {
+            if i != j {
+                assert!(
+                    peers.contains_key(other),
+                    "front {i} /health missing {other}: {body}"
+                );
+            }
+        }
+        assert_eq!(v.get("cluster_members").and_then(Json::as_f64), Some(3.0));
+        assert_eq!(
+            fronts[i].cluster().unwrap().ring().nodes().len(),
+            3,
+            "front {i} ring incomplete"
+        );
+    }
+
+    // Whatever front a request lands on, the answer is bit-exact —
+    // i.e. gossip-discovered peers serve proxied traffic correctly.
+    let cfg = named_config("s3_12").unwrap();
+    let words = vec![100i32, -3000, 4096];
+    let want = tanh_golden_batch(&[100, -3000, 4096], &cfg);
+    for addr in &addrs {
+        let got = loadgen::eval_words(addr, "s3_12", &words).unwrap();
+        assert_eq!(
+            got.iter().map(|&w| w as i64).collect::<Vec<_>>(),
+            want,
+            "via front {addr}"
+        );
+    }
+    use std::sync::atomic::Ordering as O;
+    let proxied: u64 = fronts
+        .iter()
+        .map(|f| f.cluster().unwrap().stats.proxied.load(O::Relaxed))
+        .sum();
+    assert!(proxied >= 1, "no request crossed the proxy path");
+}
+
+// ---------------------------------------------------------------------
+// Replicated routes (read fan-out)
+// ---------------------------------------------------------------------
+
+#[test]
+fn replicated_routes_fan_out_batches_and_stay_bit_exact() {
+    // 3 fronts, static full mesh, replicas=2: each model lives on two
+    // ring successors; batches big enough to split fan out across the
+    // live replica set and merge in order.
+    let (fronts, addrs) =
+        start_cluster_fronts_with(3, "native:s3_5", |c| c.replicas = 2);
+    let cfg = named_config("s3_5").unwrap();
+    let limit = 1i64 << cfg.mag_bits();
+    let mut rng = Rng::new(0xFA20);
+    let words: Vec<i32> =
+        (0..60).map(|_| rng.range_i64(-limit, limit) as i32).collect();
+    let want = tanh_golden_batch(
+        &words.iter().map(|&w| w as i64).collect::<Vec<_>>(),
+        &cfg,
+    );
+    for addr in &addrs {
+        let got = loadgen::eval_words(addr, "s3_5", &words).unwrap();
+        assert_eq!(
+            got.iter().map(|&w| w as i64).collect::<Vec<_>>(),
+            want,
+            "fan-out merge not bit-exact via {addr}"
+        );
+    }
+    use std::sync::atomic::Ordering as O;
+    let fanouts: u64 = fronts
+        .iter()
+        .map(|f| f.cluster().unwrap().stats.fanout_batches.load(O::Relaxed))
+        .sum();
+    assert!(fanouts >= 1, "no batch was fanned out across replicas");
+
+    // Single-word evals are served by any replica — and stay bit-exact
+    // from every entry point.
+    for addr in &addrs {
+        let (status, resp) = loadgen::http_post_json(
+            addr,
+            "/v1/eval",
+            &obj(&[
+                ("model", Json::Str("s3_5".into())),
+                ("word", Json::Num(words[0] as f64)),
+            ]),
+        )
+        .unwrap();
+        assert_eq!(status, 200, "{resp:?}");
+        assert_eq!(resp.get("y_word").and_then(Json::as_i64), Some(want[0]));
+    }
+
+    // /v1/models reports a two-node replica set per model.
+    let (status, body) = loadgen::http_get(&addrs[0], "/v1/models").unwrap();
+    assert_eq!(status, 200);
+    let v = tanh_vf::util::json::parse(&body).unwrap();
+    let model = &v.get("data").and_then(Json::as_arr).unwrap()[0];
+    let reps = model.get("replicas").and_then(Json::as_arr).unwrap();
+    assert_eq!(reps.len(), 2, "{body}");
+}
+
+// ---------------------------------------------------------------------
+// Proxy connection pool
+// ---------------------------------------------------------------------
+
+#[test]
+fn pooled_forward_reuses_connections_across_sequential_requests() {
+    // A plain single-node server acts as the peer; a bare Cluster
+    // drives its client leg.
+    let peer = Server::start(
+        ephemeral_cfg(),
+        parse_routes("native:s3_5").unwrap(),
+    )
+    .unwrap();
+    let peer_addr = peer.local_addr().to_string();
+    let cl = Cluster::start(ClusterConfig {
+        advertise: "127.0.0.1:1".into(),
+        peers: vec![peer_addr.clone()],
+        probe_interval: Duration::from_secs(3600),
+        ..Default::default()
+    })
+    .unwrap();
+    let body = br#"{"model":"s3_5","words":[1,2,3]}"#;
+    for _ in 0..3 {
+        let resp = cl.forward(&peer_addr, "/v1/batch", body).unwrap();
+        assert_eq!(resp.status, 200);
+    }
+    use std::sync::atomic::Ordering as O;
+    assert_eq!(
+        cl.pool.stats.misses.load(O::Relaxed),
+        1,
+        "only the first forward may dial"
+    );
+    assert_eq!(cl.pool.stats.hits.load(O::Relaxed), 2);
+    assert_eq!(cl.pool.idle_count(), 1);
+    cl.stop();
+}
+
+/// A minimal HTTP peer that *claims* keep-alive but closes after one
+/// response per connection — the worst keep-alive liar a pool can
+/// meet, and a stand-in for a peer restarting between forwards.
+fn one_shot_keepalive_peer() -> (String, std::thread::JoinHandle<()>) {
+    use std::io::{Read, Write};
+    let l = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = l.local_addr().unwrap().to_string();
+    let t = std::thread::spawn(move || {
+        for _ in 0..8 {
+            let Ok((mut s, _)) = l.accept() else { return };
+            let _ = s.set_read_timeout(Some(Duration::from_secs(5)));
+            // Read one full request: headers + Content-Length body.
+            let mut buf = Vec::new();
+            let mut chunk = [0u8; 2048];
+            let (mut head_end, mut want) = (None, 0usize);
+            loop {
+                match s.read(&mut chunk) {
+                    Ok(0) | Err(_) => break,
+                    Ok(n) => buf.extend_from_slice(&chunk[..n]),
+                }
+                if head_end.is_none() {
+                    if let Some(p) =
+                        buf.windows(4).position(|w| w == b"\r\n\r\n")
+                    {
+                        head_end = Some(p + 4);
+                        let head =
+                            String::from_utf8_lossy(&buf[..p]).to_lowercase();
+                        want = head
+                            .lines()
+                            .find_map(|l| {
+                                l.strip_prefix("content-length:")
+                                    .and_then(|v| v.trim().parse().ok())
+                            })
+                            .unwrap_or(0);
+                    }
+                }
+                if let Some(he) = head_end {
+                    if buf.len() >= he + want {
+                        break;
+                    }
+                }
+            }
+            let body = br#"{"ok":true}"#;
+            let resp = format!(
+                "HTTP/1.1 200 OK\r\nContent-Type: application/json\r\n\
+                 Content-Length: {}\r\nConnection: keep-alive\r\n\r\n",
+                body.len()
+            );
+            let _ = s.write_all(resp.as_bytes());
+            let _ = s.write_all(body);
+            // Drop the socket: the advertised keep-alive was a lie.
+        }
+    });
+    (addr, t)
+}
+
+#[test]
+fn pooled_forward_discards_and_redials_when_peer_drops_connections() {
+    let (peer_addr, peer_thread) = one_shot_keepalive_peer();
+    let cl = Cluster::start(ClusterConfig {
+        advertise: "127.0.0.1:1".into(),
+        peers: vec![peer_addr.clone()],
+        probe_interval: Duration::from_secs(3600),
+        ..Default::default()
+    })
+    .unwrap();
+    // First forward dials and pools the connection (the peer said
+    // keep-alive).
+    let r1 = cl.forward(&peer_addr, "/v1/batch", b"{}").unwrap();
+    assert_eq!(r1.status, 200);
+    assert_eq!(cl.pool.idle_count(), 1);
+    // Second forward checks the dead connection out, fails on it, and
+    // must transparently redial — the caller sees one clean success.
+    let r2 = cl.forward(&peer_addr, "/v1/batch", b"{}").unwrap();
+    assert_eq!(r2.status, 200);
+    use std::sync::atomic::Ordering as O;
+    assert_eq!(cl.pool.stats.hits.load(O::Relaxed), 1);
+    assert_eq!(
+        cl.pool.stats.misses.load(O::Relaxed),
+        2,
+        "redial after the broken reuse must be a fresh dial"
+    );
+    assert!(cl.pool.stats.discards.load(O::Relaxed) >= 1);
+    cl.stop();
+    drop(peer_thread);
+}
+
+// ---------------------------------------------------------------------
+// Prometheus exposition compliance
+// ---------------------------------------------------------------------
+
+#[test]
+fn metrics_help_and_type_pair_for_every_family() {
+    let (fronts, addrs) = start_cluster_fronts(2, "native:s3_5");
+    // Touch the eval path so the cluster counters are exercised.
+    let _ = loadgen::eval_words(&addrs[0], "s3_5", &[1, 2]);
+    let (status, body) = loadgen::http_get(&addrs[0], "/metrics").unwrap();
+    assert_eq!(status, 200);
+    let mut helped = std::collections::BTreeSet::new();
+    let mut typed = std::collections::BTreeSet::new();
+    let mut sampled = std::collections::BTreeSet::new();
+    let mut premature = Vec::new();
+    for line in body.lines() {
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let name = rest.split_whitespace().next().unwrap().to_string();
+            assert!(
+                rest.len() > name.len() + 1,
+                "HELP without any text: {line}"
+            );
+            helped.insert(name);
+        } else if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let name = it.next().unwrap().to_string();
+            let typ = it.next().unwrap_or("");
+            assert!(
+                matches!(typ, "counter" | "gauge"),
+                "unexpected metric type: {line}"
+            );
+            typed.insert(name);
+        } else if !line.trim().is_empty() {
+            let name = line.split(['{', ' ']).next().unwrap().to_string();
+            if !helped.contains(&name) || !typed.contains(&name) {
+                premature.push(name.clone());
+            }
+            sampled.insert(name);
+        }
+    }
+    assert!(
+        premature.is_empty(),
+        "samples before their HELP/TYPE preamble: {premature:?}"
+    );
+    assert_eq!(helped, typed, "every family needs both HELP and TYPE");
+    for name in &sampled {
+        assert!(helped.contains(name), "{name} sampled without metadata");
+    }
+    // The new cluster-tier families are present.
+    for fam in [
+        "tanhvf_cluster_pool_checkouts_total",
+        "tanhvf_cluster_gossip_total",
+        "tanhvf_cluster_members",
+        "tanhvf_cluster_membership_events_total",
+        "tanhvf_cluster_fanout_batches_total",
+    ] {
+        assert!(
+            sampled.contains(&fam.to_string()),
+            "missing family {fam}"
+        );
+    }
+    drop(fronts);
 }
 
 #[test]
