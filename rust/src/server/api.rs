@@ -311,6 +311,20 @@ fn gossip_exchange(state: &AppState, req: &Request) -> Response {
             "gossip requires cluster mode (serve-cluster)",
         );
     };
+    // Gossip is a control-plane message with a known maximal size; the
+    // server-wide body limit is sized for eval batches and far too
+    // generous here.
+    if req.body.len() > gossip::MAX_GOSSIP_BODY {
+        return error_resp(
+            413,
+            "payload_too_large",
+            &format!(
+                "gossip body {} bytes exceeds the {} cap",
+                req.body.len(),
+                gossip::MAX_GOSSIP_BODY
+            ),
+        );
+    }
     let body = match req.json_body() {
         Ok(b) => b,
         Err(e) => {
@@ -831,6 +845,16 @@ pub(crate) fn render_metrics(state: &AppState) -> Response {
                 "tanhvf_cluster_fanout_fallbacks_total",
                 &st.fanout_fallbacks,
                 "Fan-outs abandoned and served whole locally.",
+            ),
+            (
+                "tanhvf_cluster_gossip_refutations_total",
+                &st.gossip_refutations,
+                "Dead reports about this node refuted with a bumped incarnation.",
+            ),
+            (
+                "tanhvf_cluster_tombstone_evictions_total",
+                &st.tombstone_evictions,
+                "Tombstones evicted to admit joins at the member-table bound.",
             ),
         ] {
             family(&mut s, name, "counter", help);

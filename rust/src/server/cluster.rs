@@ -62,8 +62,9 @@ use std::time::Duration;
 use crate::util::json;
 
 use super::gossip::{self, Member, MemberEntry};
-use super::http::{HttpError, Response};
+use super::http::Response;
 use super::pool::ConnPool;
+use super::transport::{Deadlines, TcpTransport, Transport};
 
 /// Header marking a request as already forwarded once: the receiving
 /// node must answer locally, never re-proxy (loop guard).
@@ -256,6 +257,12 @@ pub struct ClusterStats {
     /// Tombstoned members brought back (direct probe recovery or a
     /// newer incarnation via gossip).
     pub members_resurrected: AtomicU64,
+    /// Times this node saw itself reported dead and bumped its
+    /// incarnation past the report.
+    pub gossip_refutations: AtomicU64,
+    /// Tombstones evicted from the member table to admit a join at the
+    /// table bound.
+    pub tombstone_evictions: AtomicU64,
     /// `/v1/batch` requests served by splitting across replicas.
     pub fanout_batches: AtomicU64,
     /// Fan-outs abandoned mid-flight and served whole locally.
@@ -316,6 +323,10 @@ pub struct ClusterConfig {
     /// Test override for the gossip incarnation; `None` stamps the
     /// node with wall-clock millis at start.
     pub incarnation: Option<u64>,
+    /// When true no membership thread is spawned — a deterministic
+    /// driver (the [`super::sim`] harness) calls
+    /// [`Cluster::membership_round`] itself, under virtual time.
+    pub manual_rounds: bool,
 }
 
 impl Default for ClusterConfig {
@@ -334,6 +345,7 @@ impl Default for ClusterConfig {
             max_inflight_forwards: 0,
             pool_idle_per_peer: 4,
             incarnation: None,
+            manual_rounds: false,
         }
     }
 }
@@ -385,8 +397,18 @@ fn now_millis() -> u64 {
 
 impl Cluster {
     /// Validate, build the bootstrap membership + ring, and launch the
-    /// membership thread (probe + gossip rounds).
-    pub fn start(mut cfg: ClusterConfig) -> Result<Arc<Cluster>, String> {
+    /// membership thread (probe + gossip rounds) over real TCP.
+    pub fn start(cfg: ClusterConfig) -> Result<Arc<Cluster>, String> {
+        Cluster::start_with_transport(cfg, Arc::new(TcpTransport))
+    }
+
+    /// [`Cluster::start`] with an explicit client-leg transport — the
+    /// seam the deterministic simulation injects its virtual network
+    /// through ([`super::sim::SimTransport`]).
+    pub fn start_with_transport(
+        mut cfg: ClusterConfig,
+        transport: Arc<dyn Transport>,
+    ) -> Result<Arc<Cluster>, String> {
         if cfg.advertise.is_empty() {
             return Err("cluster: advertise address must be set".into());
         }
@@ -432,7 +454,8 @@ impl Cluster {
             .iter()
             .map(|p| (p.clone(), PeerSlot::new()))
             .collect::<BTreeMap<_, _>>();
-        let pool = ConnPool::new(cfg.pool_idle_per_peer);
+        let pool =
+            ConnPool::with_transport(cfg.pool_idle_per_peer, transport);
         let cluster = Arc::new(Cluster {
             membership: Mutex::new(MembershipState {
                 table,
@@ -452,6 +475,12 @@ impl Cluster {
             prober: Mutex::new(None),
             cfg,
         });
+        if cluster.cfg.manual_rounds {
+            // Deterministic drivers own the round clock; spawning (and
+            // later joining) a thread per simulated node would also
+            // dominate the sim harness's wall time.
+            return Ok(cluster);
+        }
         // The membership thread always runs in cluster mode — even a
         // seed node with no peers and no joins must probe/gossip the
         // members that later announce themselves over /v1/gossip.
@@ -648,6 +677,14 @@ impl Cluster {
                 .members_resurrected
                 .fetch_add(outcome.resurrected.len() as u64, Ordering::Relaxed);
         }
+        if outcome.refuted {
+            self.stats.gossip_refutations.fetch_add(1, Ordering::Relaxed);
+        }
+        if outcome.evicted_tombstones > 0 {
+            self.stats
+                .tombstone_evictions
+                .fetch_add(outcome.evicted_tombstones, Ordering::Relaxed);
+        }
         for d in &outcome.died {
             self.stats.members_died.fetch_add(1, Ordering::Relaxed);
             self.pool.purge(d);
@@ -777,7 +814,7 @@ impl Cluster {
     /// One failed probe/proxy against `addr`. Reaching
     /// `failure_threshold` evicts the peer from routing. Death (the
     /// gossip tombstone) is driven only by the probe clock — see
-    /// [`PeerSlot::consecutive_probe_failures`] — so proxy bursts can
+    /// `PeerSlot::consecutive_probe_failures` — so proxy bursts can
     /// evict fast but never tombstone.
     pub fn record_failure(&self, addr: &str) {
         let newly_down = {
@@ -978,7 +1015,7 @@ impl Cluster {
             path,
             &[(PROXIED_HEADER, "1")],
             body,
-            self.cfg.proxy_timeout,
+            &Deadlines::uniform(self.cfg.proxy_timeout),
             MAX_PROXY_BODY,
         )
     }
@@ -995,11 +1032,12 @@ impl Cluster {
         path: &str,
         headers: &[(&str, &str)],
         body: &[u8],
-        timeout: Duration,
+        deadlines: &Deadlines,
         max_body: usize,
     ) -> Result<Response, String> {
-        let mut checked = self.pool.checkout(addr, timeout, timeout)?;
-        // Errors carry a retryable flag: a send failure or a
+        let mut checked = self.pool.checkout(addr, deadlines)?;
+        // Transport errors carry a retryable flag (see
+        // [`super::transport::TransportError`]): a send failure or a
         // connection the peer closed/reset before answering is the
         // stale-keep-alive signature and safe to redial; a *timeout*
         // means the request may be executing on the peer right now —
@@ -1007,20 +1045,17 @@ impl Cluster {
         // bound), so it is surfaced as the failure it is.
         let attempt = |c: &mut super::pool::Checked| {
             c.conn
-                .write_request_with_headers(method, path, headers, body)
-                .map_err(|e| (true, format!("send to {addr}: {e}")))?;
-            c.conn.read_response(max_body).map_err(|e| {
-                (
-                    !matches!(e, HttpError::Timeout(_)),
-                    format!("response from {addr}: {e}"),
-                )
+                .send(method, path, headers, body)
+                .map_err(|e| (e.retryable, format!("send to {addr}: {}", e.msg)))?;
+            c.conn.recv(max_body).map_err(|e| {
+                (e.retryable, format!("response from {addr}: {}", e.msg))
             })
         };
         let (status, resp_headers, resp_body) = match attempt(&mut checked) {
             Ok(r) => r,
             Err((retryable, _)) if checked.reused && retryable => {
                 self.pool.note_discard();
-                checked = self.pool.dial_fresh(addr, timeout, timeout)?;
+                checked = self.pool.dial_fresh(addr, deadlines)?;
                 attempt(&mut checked).map_err(|(_, msg)| msg)?
             }
             Err((_, msg)) => {
@@ -1056,11 +1091,25 @@ impl Cluster {
                 "/health",
                 &[],
                 b"",
-                self.cfg.probe_timeout,
+                &Deadlines::uniform(self.cfg.probe_timeout),
                 MAX_CONTROL_BODY,
             ),
             Ok(resp) if resp.status == 200
         )
+    }
+
+    /// Per-leg budgets for one gossip exchange: connect, write, and
+    /// read each get a third of the whole-exchange budget, which is
+    /// capped at one seed-backoff period (two probe intervals — the
+    /// shortest retry delay [`Cluster::gossip_round`] hands a failing
+    /// seed). A stalled/blackholed `--join` seed therefore costs the
+    /// shared membership thread at most one backoff period per
+    /// attempt, instead of up to three full probe timeouts.
+    fn gossip_deadlines(&self) -> Deadlines {
+        let budget =
+            (self.cfg.probe_interval * 2).min(self.cfg.probe_timeout * 3);
+        let leg = (budget / 3).min(self.cfg.probe_timeout);
+        Deadlines::split(leg, leg, leg)
     }
 
     /// One gossip exchange with `addr`: send the local table, merge
@@ -1074,7 +1123,7 @@ impl Cluster {
             gossip::GOSSIP_PATH,
             &[],
             body.as_bytes(),
-            self.cfg.probe_timeout,
+            &self.gossip_deadlines(),
             MAX_CONTROL_BODY,
         );
         let ok = match resp {
@@ -1100,8 +1149,10 @@ impl Cluster {
 
     /// One probe pass over every known peer — including evicted and
     /// tombstoned ones, which is the re-admission/resurrection path.
-    /// Proxy traffic feeds the same accounting between rounds.
-    fn probe_round(&self) {
+    /// Proxy traffic feeds the same accounting between rounds. Public
+    /// so deterministic drivers (the sim harness, with
+    /// [`ClusterConfig::manual_rounds`]) can step it without a thread.
+    pub fn probe_round(&self) {
         let addrs: Vec<String> =
             self.peers.lock().unwrap().keys().cloned().collect();
         for addr in addrs {
@@ -1123,7 +1174,7 @@ impl Cluster {
     /// would otherwise be permanently unreachable and the cluster
     /// would split-brain; the retry cost is bounded by the configured
     /// join list.
-    fn gossip_round(&self) {
+    pub fn gossip_round(&self) {
         let round = self.gossip_rounds.fetch_add(1, Ordering::Relaxed);
         // One membership snapshot for both target lists, so they can't
         // disagree about a concurrently merged member.
@@ -1184,8 +1235,11 @@ impl Cluster {
         }
     }
 
-    /// One full membership round: probe health, then gossip.
-    fn membership_round(&self) {
+    /// One full membership round: probe health, then gossip. The
+    /// membership thread calls this every `probe_interval`; with
+    /// [`ClusterConfig::manual_rounds`] a deterministic driver calls it
+    /// instead.
+    pub fn membership_round(&self) {
         self.probe_round();
         if self.shutdown.load(Ordering::SeqCst) {
             return;

@@ -73,6 +73,13 @@ pub const MAX_MEMBERS: usize = 256;
 /// claim re-adds a dead member, which then dies again by probing).
 pub const MAX_TABLE: usize = 1024;
 
+/// Request-body cap for `POST /v1/gossip`, rejected with 413 above it.
+/// A maximal legitimate message is `MAX_TABLE` entries of address +
+/// incarnation + flag — generously under 256 KiB — so anything bigger
+/// is garbage or abuse and must not be buffered toward the server-wide
+/// body limit on the control plane.
+pub const MAX_GOSSIP_BODY: usize = 256 * 1024;
+
 /// Consecutive probe failures that declare a member dead, as a
 /// multiple of the routing-eviction threshold. Eviction (routing skips
 /// the peer) is cheap to undo, so it fires fast; death (ring rebuild,
@@ -125,6 +132,9 @@ pub struct MergeOutcome {
     pub resurrected: Vec<String>,
     /// This node saw itself reported dead and bumped its incarnation.
     pub refuted: bool,
+    /// Tombstones evicted to admit joins at the table bound
+    /// (surfaced as `tanhvf_cluster_tombstone_evictions_total`).
+    pub evicted_tombstones: u64,
 }
 
 /// Merge a remote member list into `table`. `self_addr`/`self_inc`
@@ -182,6 +192,7 @@ pub fn merge(
                         match victim {
                             Some(v) => {
                                 table.remove(&v);
+                                out.evicted_tombstones += 1;
                             }
                             None => continue,
                         }
@@ -422,6 +433,7 @@ mod tests {
         assert!(out.ring_changed, "join refused at the table bound");
         assert!(t["fresh:1"].alive);
         assert_eq!(t.len(), MAX_TABLE, "a tombstone must have been evicted");
+        assert_eq!(out.evicted_tombstones, 1);
         let before = t.len();
         merge(&mut t, ME, &mut inc, &[entry("late-tomb:1", 9, false)]);
         assert_eq!(t.len(), before, "tombstone import must not evict");

@@ -36,10 +36,21 @@
 //!   exchange each probe round, `--join` seeds, death certificates
 //!   and refutation. Ring rebuilds happen on membership changes;
 //!   `--peers` is the static-bootstrap special case.
+//! * [`transport`] — the client-leg seam: [`transport::Transport`] /
+//!   [`transport::Connection`] (connect/send/recv under explicit
+//!   per-leg [`transport::Deadlines`]) with the production
+//!   [`transport::TcpTransport`] on one side and the simulation's
+//!   virtual network on the other.
 //! * [`pool`]    — per-peer keep-alive connection pool under every
 //!   cluster client leg (proxy, probe, gossip): bounded idle lists,
 //!   LRU eviction, discard-and-redial on broken reuse, hit/miss
-//!   counters on `/metrics`.
+//!   counters on `/metrics`. Dials through a [`transport::Transport`].
+//! * [`sim`]     — deterministic cluster simulation: an in-process
+//!   [`sim::SimNet`] under a **virtual clock** with seeded fault
+//!   injection (partitions, delay, loss, slow peers, crash/restart).
+//!   N-node clusters run in one process with no real sockets; the
+//!   `sim_*` test suites assert membership/retry/fan-out invariants
+//!   over thousands of seeded schedules.
 //! * [`loadgen`] — closed-loop multi-connection load generator (one
 //!   address or a whole cluster of fronts) with a machine-readable
 //!   JSON report.
@@ -75,6 +86,8 @@ pub mod loadgen;
 pub mod pool;
 #[cfg(unix)]
 pub(crate) mod reactor;
+pub mod sim;
+pub mod transport;
 
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};

@@ -8,6 +8,11 @@
 //!
 //! Design:
 //!
+//! * **Transport-generic.** The pool dials through a
+//!   [`Transport`] and stores boxed [`Connection`]s: production uses
+//!   [`TcpTransport`], the deterministic cluster simulation
+//!   ([`super::sim`]) injects its virtual-time transport, and the pool
+//!   bookkeeping (and every caller above it) is identical for both.
 //! * **Bounded idle list per peer.** At most
 //!   [`ConnPool::idle_per_peer`] connections are kept per address;
 //!   checking in beyond the bound evicts the *least-recently-used*
@@ -19,7 +24,7 @@
 //!   idle connection, maximizing the chance it is still open on the
 //!   peer side.
 //! * **Clean connections only.** A connection is re-admitted only when
-//!   its parser sits between messages ([`HttpConn::is_clean`]) and the
+//!   it sits between messages ([`Connection::is_clean`]) and the
 //!   peer didn't announce `Connection: close`; anything else is
 //!   discarded so a desynchronized byte stream can never be handed to
 //!   the next request.
@@ -37,12 +42,10 @@
 //! or request semantics. Those live in [`super::cluster`].
 
 use std::collections::HashMap;
-use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
-use std::time::Duration;
+use std::sync::{Arc, Mutex};
 
-use super::http::HttpConn;
+use super::transport::{Connection, Deadlines, TcpTransport, Transport};
 
 /// Pool observability counters, surfaced on `/metrics`.
 #[derive(Default)]
@@ -64,25 +67,36 @@ pub struct PoolStats {
 /// discard-and-redial retry (pooled connections fail benignly; fresh
 /// ones don't).
 pub struct Checked {
-    pub conn: HttpConn,
+    pub conn: Box<dyn Connection>,
     pub reused: bool,
 }
 
 /// Keep-alive connection pool keyed by peer address.
 pub struct ConnPool {
     idle_per_peer: usize,
+    transport: Arc<dyn Transport>,
     /// Idle connections per peer, in last-used order (reuse pops the
     /// tail, eviction removes the front).
-    idle: Mutex<HashMap<String, Vec<HttpConn>>>,
+    idle: Mutex<HashMap<String, Vec<Box<dyn Connection>>>>,
     pub stats: PoolStats,
 }
 
 impl ConnPool {
-    /// `idle_per_peer` bounds the idle list per address; `0` disables
-    /// pooling (every checkout dials fresh).
+    /// TCP-backed pool. `idle_per_peer` bounds the idle list per
+    /// address; `0` disables pooling (every checkout dials fresh).
     pub fn new(idle_per_peer: usize) -> ConnPool {
+        ConnPool::with_transport(idle_per_peer, Arc::new(TcpTransport))
+    }
+
+    /// Pool over an explicit transport (the simulation harness injects
+    /// its virtual-time one here).
+    pub fn with_transport(
+        idle_per_peer: usize,
+        transport: Arc<dyn Transport>,
+    ) -> ConnPool {
         ConnPool {
             idle_per_peer,
+            transport,
             idle: Mutex::new(HashMap::new()),
             stats: PoolStats::default(),
         }
@@ -100,21 +114,20 @@ impl ConnPool {
     }
 
     /// Get a connection to `addr`: the most-recently-used idle one if
-    /// available (hit), else a fresh dial (miss). Read/write timeouts
-    /// are (re)applied on every checkout, so probe and proxy legs can
+    /// available (hit), else a fresh dial (miss). Deadlines are
+    /// (re)applied on every checkout, so probe and proxy legs can
     /// share pooled connections under different budgets.
     pub fn checkout(
         &self,
         addr: &str,
-        connect_timeout: Duration,
-        io_timeout: Duration,
+        deadlines: &Deadlines,
     ) -> Result<Checked, String> {
-        if let Some(conn) = self.pop_idle(addr) {
+        if let Some(mut conn) = self.pop_idle(addr) {
             self.stats.hits.fetch_add(1, Ordering::Relaxed);
-            apply_timeouts(&conn, io_timeout);
+            conn.set_deadlines(deadlines);
             return Ok(Checked { conn, reused: true });
         }
-        self.dial_fresh(addr, connect_timeout, io_timeout)
+        self.dial_fresh(addr, deadlines)
     }
 
     /// Dial a fresh connection, bypassing the idle list — the redial
@@ -122,19 +135,17 @@ impl ConnPool {
     pub fn dial_fresh(
         &self,
         addr: &str,
-        connect_timeout: Duration,
-        io_timeout: Duration,
+        deadlines: &Deadlines,
     ) -> Result<Checked, String> {
         self.stats.misses.fetch_add(1, Ordering::Relaxed);
-        let conn = dial(addr, connect_timeout)?;
-        apply_timeouts(&conn, io_timeout);
+        let conn = self.transport.connect(addr, deadlines)?;
         Ok(Checked { conn, reused: false })
     }
 
     /// Return a connection after a successful round trip. Re-admits
     /// only clean connections; beyond the per-peer bound the
     /// least-recently-used idle connection is evicted.
-    pub fn check_in(&self, addr: &str, conn: HttpConn) {
+    pub fn check_in(&self, addr: &str, conn: Box<dyn Connection>) {
         if self.idle_per_peer == 0 || !conn.is_clean() {
             self.stats.discards.fetch_add(1, Ordering::Relaxed);
             return;
@@ -152,7 +163,7 @@ impl ConnPool {
     }
 
     /// Record a connection dropped instead of returned (broken on the
-    /// wire). The caller just drops the `HttpConn`; this keeps the
+    /// wire). The caller just drops the connection; this keeps the
     /// counter honest.
     pub fn note_discard(&self) {
         self.stats.discards.fetch_add(1, Ordering::Relaxed);
@@ -173,7 +184,7 @@ impl ConnPool {
         purged
     }
 
-    fn pop_idle(&self, addr: &str) -> Option<HttpConn> {
+    fn pop_idle(&self, addr: &str) -> Option<Box<dyn Connection>> {
         let mut idle = self.idle.lock().unwrap();
         let list = idle.get_mut(addr)?;
         let conn = list.pop();
@@ -184,37 +195,23 @@ impl ConnPool {
     }
 }
 
-fn resolve(addr: &str) -> Result<SocketAddr, String> {
-    addr.to_socket_addrs()
-        .map_err(|e| format!("resolve {addr}: {e}"))?
-        .next()
-        .ok_or_else(|| format!("resolve {addr}: no address"))
-}
-
-fn dial(addr: &str, connect_timeout: Duration) -> Result<HttpConn, String> {
-    let sa = resolve(addr)?;
-    let stream = TcpStream::connect_timeout(&sa, connect_timeout)
-        .map_err(|e| format!("connect {addr}: {e}"))?;
-    let _ = stream.set_nodelay(true);
-    Ok(HttpConn::new(stream))
-}
-
-fn apply_timeouts(conn: &HttpConn, io_timeout: Duration) {
-    let _ = conn.stream().set_read_timeout(Some(io_timeout));
-    let _ = conn.stream().set_write_timeout(Some(io_timeout));
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::net::TcpListener;
+    use super::super::transport::TcpConnection;
+    use std::net::{TcpListener, TcpStream};
+    use std::time::Duration;
 
-    /// A loopback socket wrapped as a clean HttpConn (the accept side
+    fn budget() -> Deadlines {
+        Deadlines::uniform(Duration::from_secs(1))
+    }
+
+    /// A loopback socket wrapped as a clean connection (the accept side
     /// is parked in the listener's backlog; these tests only exercise
     /// pool bookkeeping, not the wire).
-    fn loopback_conn(l: &TcpListener) -> HttpConn {
+    fn loopback_conn(l: &TcpListener) -> Box<dyn Connection> {
         let s = TcpStream::connect(l.local_addr().unwrap()).unwrap();
-        HttpConn::new(s)
+        Box::new(TcpConnection::from_stream(s))
     }
 
     #[test]
@@ -240,9 +237,7 @@ mod tests {
         assert_eq!(pool.stats.discards.load(Ordering::Relaxed), 1);
         // And checkout always dials (against the live listener).
         let addr = l.local_addr().unwrap().to_string();
-        let c = pool
-            .checkout(&addr, Duration::from_secs(1), Duration::from_secs(1))
-            .unwrap();
+        let c = pool.checkout(&addr, &budget()).unwrap();
         assert!(!c.reused);
         assert_eq!(pool.stats.misses.load(Ordering::Relaxed), 1);
     }
@@ -253,9 +248,7 @@ mod tests {
         let addr = l.local_addr().unwrap().to_string();
         let pool = ConnPool::new(4);
         pool.check_in(&addr, loopback_conn(&l));
-        let c = pool
-            .checkout(&addr, Duration::from_secs(1), Duration::from_secs(1))
-            .unwrap();
+        let c = pool.checkout(&addr, &budget()).unwrap();
         assert!(c.reused);
         assert_eq!(pool.stats.hits.load(Ordering::Relaxed), 1);
         assert_eq!(pool.stats.misses.load(Ordering::Relaxed), 0);
@@ -280,8 +273,7 @@ mod tests {
         assert!(pool
             .checkout(
                 "definitely-not-a-host:0",
-                Duration::from_millis(50),
-                Duration::from_millis(50)
+                &Deadlines::uniform(Duration::from_millis(50))
             )
             .is_err());
     }

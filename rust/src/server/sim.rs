@@ -1,0 +1,1046 @@
+//! Deterministic cluster simulation: a virtual-time, in-process
+//! network implementing [`super::transport::Transport`], plus seeded
+//! fault injection and the invariant checkers the `sim_*` test suites
+//! assert over thousands of schedules.
+//!
+//! Everything the cluster tier sends — proxied evals, health probes,
+//! gossip exchanges — goes through the transport seam, so an N-node
+//! cluster can run entirely inside one process with **no real sockets
+//! and no real time**: every [`Cluster`] is started with
+//! [`manual_rounds`](super::cluster::ClusterConfig::manual_rounds) and
+//! a [`SimTransport`], the test
+//! driver steps [`Cluster::membership_round`] explicitly, and waiting
+//! for a deadline merely advances the shared [`SimNet`] clock by that
+//! many virtual milliseconds. A thousand multi-round schedules finish
+//! in seconds.
+//!
+//! ## Fault model
+//!
+//! Faults are scripted per *directed* link (`from -> to`) or per node:
+//!
+//! * [`SimNet::partition`] — blackhole: dialing costs the full connect
+//!   deadline and fails; requests already in flight on the link time
+//!   out at the read deadline (not retryable — exactly like a real
+//!   blackholed TCP connection). One-sided calls give asymmetric
+//!   partitions; [`SimNet::partition_pair`] cuts both directions.
+//! * [`SimNet::crash`] / [`SimNet::restart`] — a crashed node refuses
+//!   dials instantly; a restart bumps its connection generation, so
+//!   every *pooled* connection to it fails retryably on next use (the
+//!   stale-keep-alive signature the discard-and-redial retry exists
+//!   for).
+//! * [`SimNet::drop_requests`] / [`SimNet::drop_responses`] — lose the
+//!   next `n` messages on a link. A dropped request never executes and
+//!   surfaces as a (non-retryable) response timeout; a dropped
+//!   response *executes on the peer* and surfaces as a retryable
+//!   "closed before response" — the dangerous half of the
+//!   re-execution space.
+//! * [`SimNet::set_delay`] / [`SimNet::set_slow`] — add per-link or
+//!   per-node response latency in virtual ms; a response slower than
+//!   the caller's read deadline becomes a timeout.
+//!
+//! Randomized schedules draw from [`SplitMix64`] seeded per scenario;
+//! every invariant panic embeds the seed, and
+//! `TANHVF_SIM_SEED=<seed> cargo test -q sim_<name>` replays exactly
+//! one schedule. `TANHVF_SIM_BASE_SEED` shifts whole suites (the CI
+//! randomized pass logs it).
+//!
+//! ## Determinism rule
+//!
+//! The transport itself never draws randomness — all faults are staged
+//! by the single-threaded driver *between* operations, so concurrent
+//! phases (the `/v1/batch` fan-out spawns scoped threads) stay
+//! reproducible: thread interleaving can reorder clock ticks but never
+//! outcomes.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, Weak};
+
+use crate::util::json;
+use crate::util::rng::SplitMix64;
+
+use super::cluster::Cluster;
+use super::gossip::{self, Member};
+use super::transport::{
+    Connection, Deadlines, Transport, TransportError,
+};
+
+/// An inbound request handler: `(method, path, headers, body)` to
+/// `(status, response body)` — the sim-level stand-in for one node's
+/// HTTP front end.
+pub type Handler = Arc<
+    dyn Fn(&str, &str, &[(&str, &str)], &[u8]) -> (u16, Vec<u8>)
+        + Send
+        + Sync,
+>;
+
+struct NodeState {
+    handler: Handler,
+    up: bool,
+    /// Bumped on restart: connections dialed before the bump fail
+    /// retryably on next use, like keep-alive sockets into a restarted
+    /// process.
+    generation: u64,
+    /// Extra response latency for everything this node serves.
+    slow_ms: u64,
+    /// Requests that actually reached the handler (executions).
+    executions: u64,
+}
+
+#[derive(Default)]
+struct LinkState {
+    partitioned: bool,
+    delay_ms: u64,
+    drop_requests: u64,
+    drop_responses: u64,
+}
+
+#[derive(Default)]
+struct NetState {
+    nodes: BTreeMap<String, NodeState>,
+    links: BTreeMap<(String, String), LinkState>,
+}
+
+/// The in-process network: registered nodes, directed link faults, and
+/// the virtual clock.
+pub struct SimNet {
+    clock_ms: AtomicU64,
+    state: Mutex<NetState>,
+}
+
+impl SimNet {
+    /// A fresh net at virtual time zero (shared: every node's
+    /// transport and the test driver hold the same `Arc`).
+    #[allow(clippy::new_ret_no_self)]
+    pub fn new() -> Arc<SimNet> {
+        Arc::new(SimNet {
+            clock_ms: AtomicU64::new(0),
+            state: Mutex::new(NetState::default()),
+        })
+    }
+
+    /// Current virtual time in milliseconds.
+    pub fn now_ms(&self) -> u64 {
+        self.clock_ms.load(Ordering::SeqCst)
+    }
+
+    /// Advance the virtual clock (ops advance it themselves; drivers
+    /// use this for idle time between rounds).
+    pub fn advance(&self, ms: u64) {
+        self.clock_ms.fetch_add(ms, Ordering::SeqCst);
+    }
+
+    /// Register (or replace) a node's request handler; the node starts
+    /// up.
+    pub fn register(&self, addr: &str, handler: Handler) {
+        let mut st = self.state.lock().unwrap();
+        let generation = st
+            .nodes
+            .get(addr)
+            .map(|n| n.generation + 1)
+            .unwrap_or(0);
+        st.nodes.insert(
+            addr.to_string(),
+            NodeState {
+                handler,
+                up: true,
+                generation,
+                slow_ms: 0,
+                executions: 0,
+            },
+        );
+    }
+
+    /// Register a [`Cluster`] node: serves `GET /health` and
+    /// `POST /v1/gossip` exactly like the HTTP endpoint (including the
+    /// oversized-body 413). Holds only a `Weak` reference — a dropped
+    /// cluster answers 503 rather than keeping itself alive through
+    /// the net.
+    pub fn register_cluster(&self, addr: &str, cluster: &Arc<Cluster>) {
+        let weak: Weak<Cluster> = Arc::downgrade(cluster);
+        self.register(
+            addr,
+            Arc::new(move |method, path, _headers, body| {
+                let Some(cl) = weak.upgrade() else {
+                    return (503, Vec::new());
+                };
+                match (method, path) {
+                    ("GET", "/health") => {
+                        (200, br#"{"status":"ok"}"#.to_vec())
+                    }
+                    ("POST", gossip::GOSSIP_PATH) => {
+                        if body.len() > gossip::MAX_GOSSIP_BODY {
+                            return (413, Vec::new());
+                        }
+                        let parsed = std::str::from_utf8(body)
+                            .map_err(|e| e.to_string())
+                            .and_then(|t| {
+                                json::parse(t).map_err(|e| e.to_string())
+                            })
+                            .and_then(|v| gossip::decode(&v));
+                        match parsed {
+                            Ok(msg) => {
+                                cl.apply_remote_members(&msg.members);
+                                let reply = json::write(&gossip::encode(
+                                    cl.self_name(),
+                                    &cl.member_entries(),
+                                ));
+                                (200, reply.into_bytes())
+                            }
+                            Err(_) => (400, Vec::new()),
+                        }
+                    }
+                    _ => (404, Vec::new()),
+                }
+            }),
+        );
+    }
+
+    /// A transport dialing out of `from` over this net (one per node).
+    pub fn transport(self: &Arc<Self>, from: &str) -> Arc<SimTransport> {
+        Arc::new(SimTransport { net: self.clone(), from: from.to_string() })
+    }
+
+    /// Requests that actually reached `addr`'s handler.
+    pub fn executions(&self, addr: &str) -> u64 {
+        self.state
+            .lock()
+            .unwrap()
+            .nodes
+            .get(addr)
+            .map(|n| n.executions)
+            .unwrap_or(0)
+    }
+
+    /// Take the node down: new dials are refused instantly, requests
+    /// on existing connections fail retryably.
+    pub fn crash(&self, addr: &str) {
+        if let Some(n) = self.state.lock().unwrap().nodes.get_mut(addr) {
+            n.up = false;
+        }
+    }
+
+    /// Bring a crashed node back with a new connection generation:
+    /// connections pooled before the restart fail retryably on next
+    /// use.
+    pub fn restart(&self, addr: &str) {
+        if let Some(n) = self.state.lock().unwrap().nodes.get_mut(addr) {
+            n.up = true;
+            n.generation += 1;
+        }
+    }
+
+    pub fn is_up(&self, addr: &str) -> bool {
+        self.state
+            .lock()
+            .unwrap()
+            .nodes
+            .get(addr)
+            .map(|n| n.up)
+            .unwrap_or(false)
+    }
+
+    /// Blackhole the directed link `from -> to`.
+    pub fn partition(&self, from: &str, to: &str) {
+        self.link(from, to, |l| l.partitioned = true);
+    }
+
+    /// Blackhole both directions between `a` and `b`.
+    pub fn partition_pair(&self, a: &str, b: &str) {
+        self.partition(a, b);
+        self.partition(b, a);
+    }
+
+    /// Heal the directed link `from -> to`.
+    pub fn heal(&self, from: &str, to: &str) {
+        self.link(from, to, |l| l.partitioned = false);
+    }
+
+    /// Heal every partition (link delays and pending drops persist).
+    pub fn heal_all(&self) {
+        for l in self.state.lock().unwrap().links.values_mut() {
+            l.partitioned = false;
+        }
+    }
+
+    /// Add `ms` of virtual latency to responses on `from -> to`.
+    pub fn set_delay(&self, from: &str, to: &str, ms: u64) {
+        self.link(from, to, |l| l.delay_ms = ms);
+    }
+
+    /// Drop the next `n` requests on `from -> to` (never executed;
+    /// the caller sees a response timeout).
+    pub fn drop_requests(&self, from: &str, to: &str, n: u64) {
+        self.link(from, to, |l| l.drop_requests += n);
+    }
+
+    /// Drop the next `n` responses on `from -> to` (executed on the
+    /// peer; the caller sees a retryable close).
+    pub fn drop_responses(&self, from: &str, to: &str, n: u64) {
+        self.link(from, to, |l| l.drop_responses += n);
+    }
+
+    /// Add `ms` of virtual latency to everything `addr` serves.
+    pub fn set_slow(&self, addr: &str, ms: u64) {
+        if let Some(n) = self.state.lock().unwrap().nodes.get_mut(addr) {
+            n.slow_ms = ms;
+        }
+    }
+
+    fn link(&self, from: &str, to: &str, f: impl FnOnce(&mut LinkState)) {
+        let mut st = self.state.lock().unwrap();
+        f(st.links
+            .entry((from.to_string(), to.to_string()))
+            .or_default());
+    }
+}
+
+/// [`Transport`] over a [`SimNet`], dialing out of one node identity.
+pub struct SimTransport {
+    net: Arc<SimNet>,
+    from: String,
+}
+
+impl Transport for SimTransport {
+    fn connect(
+        &self,
+        addr: &str,
+        deadlines: &Deadlines,
+    ) -> Result<Box<dyn Connection>, String> {
+        let (partitioned, generation) = {
+            let st = self.net.state.lock().unwrap();
+            let key = (self.from.clone(), addr.to_string());
+            let partitioned =
+                st.links.get(&key).map(|l| l.partitioned).unwrap_or(false);
+            let generation = st
+                .nodes
+                .get(addr)
+                .and_then(|n| if n.up { Some(n.generation) } else { None });
+            (partitioned, generation)
+        };
+        if partitioned {
+            // A blackholed dial burns the whole connect budget.
+            self.net.advance(deadlines.connect.as_millis() as u64);
+            return Err(format!("connect {addr}: timed out (partitioned)"));
+        }
+        let Some(generation) = generation else {
+            self.net.advance(1);
+            return Err(format!("connect {addr}: connection refused"));
+        };
+        self.net.advance(1);
+        Ok(Box::new(SimConnection {
+            net: self.net.clone(),
+            from: self.from.clone(),
+            to: addr.to_string(),
+            generation,
+            deadlines: *deadlines,
+            clean: true,
+            pending: None,
+        }))
+    }
+}
+
+enum Pending {
+    /// The request vanished (partition or request loss): it never
+    /// executed, and the caller can only time out — which is exactly
+    /// why response timeouts must never be retried blindly.
+    RequestLost,
+    /// The peer executed the request but its response was lost: the
+    /// retryable "closed before response" signature.
+    ResponseLost,
+    Ready { delay_ms: u64, status: u16, body: Vec<u8> },
+}
+
+/// One established sim connection (poolable, like its TCP twin).
+pub struct SimConnection {
+    net: Arc<SimNet>,
+    from: String,
+    to: String,
+    generation: u64,
+    deadlines: Deadlines,
+    clean: bool,
+    pending: Option<Pending>,
+}
+
+impl Connection for SimConnection {
+    fn set_deadlines(&mut self, deadlines: &Deadlines) {
+        self.deadlines = *deadlines;
+    }
+
+    fn send(
+        &mut self,
+        method: &str,
+        path: &str,
+        headers: &[(&str, &str)],
+        body: &[u8],
+    ) -> Result<(), TransportError> {
+        self.clean = false;
+        self.pending = None;
+        let (handler, response_lost, delay_ms) = {
+            let mut st = self.net.state.lock().unwrap();
+            let key = (self.from.clone(), self.to.clone());
+            let link = st.links.entry(key).or_default();
+            if link.partitioned {
+                self.pending = Some(Pending::RequestLost);
+                drop(st);
+                self.net.advance(1);
+                return Ok(());
+            }
+            if link.drop_requests > 0 {
+                link.drop_requests -= 1;
+                self.pending = Some(Pending::RequestLost);
+                drop(st);
+                self.net.advance(1);
+                return Ok(());
+            }
+            let response_lost = if link.drop_responses > 0 {
+                link.drop_responses -= 1;
+                true
+            } else {
+                false
+            };
+            let link_delay = link.delay_ms;
+            let Some(node) = st.nodes.get_mut(&self.to) else {
+                return Err(TransportError::new(
+                    true,
+                    "connection reset (node gone)",
+                ));
+            };
+            if !node.up || node.generation != self.generation {
+                return Err(TransportError::new(
+                    true,
+                    "connection closed by peer",
+                ));
+            }
+            node.executions += 1;
+            (
+                node.handler.clone(),
+                response_lost,
+                1 + link_delay + node.slow_ms,
+            )
+        };
+        // Handler runs outside the net lock: a fan-out shard's handler
+        // does real router work and must not serialize the whole net.
+        let (status, resp_body) = handler(method, path, headers, body);
+        self.pending = Some(if response_lost {
+            Pending::ResponseLost
+        } else {
+            Pending::Ready { delay_ms, status, body: resp_body }
+        });
+        self.net.advance(1);
+        Ok(())
+    }
+
+    fn recv(
+        &mut self,
+        _max_body: usize,
+    ) -> Result<(u16, BTreeMap<String, String>, Vec<u8>), TransportError>
+    {
+        let read_ms = self.deadlines.read.as_millis() as u64;
+        match self.pending.take() {
+            None => Err(TransportError::new(
+                false,
+                "recv with no request in flight",
+            )),
+            Some(Pending::RequestLost) => {
+                self.net.advance(read_ms);
+                Err(TransportError::new(
+                    false,
+                    "timed out waiting for response",
+                ))
+            }
+            Some(Pending::ResponseLost) => {
+                self.net.advance(1);
+                Err(TransportError::new(true, "closed before response"))
+            }
+            Some(Pending::Ready { delay_ms, status, body }) => {
+                if delay_ms > read_ms {
+                    self.net.advance(read_ms);
+                    return Err(TransportError::new(
+                        false,
+                        "timed out waiting for response (slow peer)",
+                    ));
+                }
+                self.net.advance(delay_ms);
+                self.clean = true;
+                let mut headers = BTreeMap::new();
+                headers.insert(
+                    "content-type".to_string(),
+                    "application/json".to_string(),
+                );
+                Ok((status, headers, body))
+            }
+        }
+    }
+
+    fn is_clean(&self) -> bool {
+        self.clean
+    }
+}
+
+// ---------------------------------------------------------------------
+// Seeds
+// ---------------------------------------------------------------------
+
+/// The seed list for one scenario: `count` consecutive seeds from
+/// `default_base`, overridable for reproduction —
+/// `TANHVF_SIM_SEED=<seed>` replays exactly that schedule,
+/// `TANHVF_SIM_BASE_SEED=<base>` shifts the whole suite (the CI
+/// randomized pass sets it and logs the value).
+pub fn schedule_seeds(default_base: u64, count: u64) -> Vec<u64> {
+    if let Some(one) = env_u64("TANHVF_SIM_SEED") {
+        return vec![one];
+    }
+    let base = env_u64("TANHVF_SIM_BASE_SEED").unwrap_or(default_base);
+    (0..count).map(|i| base.wrapping_add(i)).collect()
+}
+
+fn env_u64(name: &str) -> Option<u64> {
+    std::env::var(name).ok()?.trim().parse().ok()
+}
+
+/// A scenario-local RNG forked from the schedule seed.
+pub fn scenario_rng(seed: u64) -> SplitMix64 {
+    SplitMix64::new(seed)
+}
+
+// ---------------------------------------------------------------------
+// Invariants
+// ---------------------------------------------------------------------
+
+/// Check the post-heal convergence invariants over the up-node set;
+/// `None` means converged, `Some(why)` names the first violation.
+///
+/// * **I1 (ring agreement):** every up node's ring node-set equals the
+///   up set exactly.
+/// * **I2 (observer agreement):** all observers agree on
+///   `(incarnation, alive)` for every third-party member. A member's
+///   *own* self-entry is exempt: a probe-driven resurrection bumps its
+///   incarnation at the observers, and gossip merges never overwrite a
+///   node's live self-entry (only a refutation does), so the member's
+///   table may lag behind what the rest of the cluster agrees on.
+/// * **I4 (refutation):** every up node is alive in every up observer's
+///   table (a running node never stays dead once partitions heal).
+pub fn converged(
+    clusters: &[Arc<Cluster>],
+    up: &std::collections::BTreeSet<String>,
+) -> Option<String> {
+    let tables: BTreeMap<&str, BTreeMap<String, Member>> = clusters
+        .iter()
+        .filter(|c| up.contains(c.self_name()))
+        .map(|c| (c.self_name(), c.members()))
+        .collect();
+    for c in clusters.iter().filter(|c| up.contains(c.self_name())) {
+        let ring: std::collections::BTreeSet<String> =
+            c.ring().nodes().iter().cloned().collect();
+        let want: std::collections::BTreeSet<String> = up.clone();
+        if ring != want {
+            return Some(format!(
+                "I1: ring of {} is {ring:?}, want {want:?}",
+                c.self_name()
+            ));
+        }
+        for m in up {
+            if m == c.self_name() {
+                continue;
+            }
+            match tables[c.self_name()].get(m) {
+                Some(e) if e.alive => {}
+                other => {
+                    return Some(format!(
+                        "I4: up member {m} is {other:?} at {}",
+                        c.self_name()
+                    ))
+                }
+            }
+        }
+    }
+    // I2: pairwise agreement on third-party entries.
+    let observers: Vec<&str> = tables.keys().copied().collect();
+    for (i, &a) in observers.iter().enumerate() {
+        for &b in &observers[i + 1..] {
+            for (m, ea) in &tables[a] {
+                if m == a || m == b {
+                    continue;
+                }
+                if let Some(eb) = tables[b].get(m) {
+                    if ea != eb {
+                        return Some(format!(
+                            "I2: {a} sees {m} as {ea:?}, {b} sees {eb:?}"
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    None
+}
+
+/// Panic (embedding the seed for one-command reproduction) if the
+/// cluster set has not converged.
+pub fn assert_converged(
+    clusters: &[Arc<Cluster>],
+    up: &std::collections::BTreeSet<String>,
+    seed: u64,
+    ctx: &str,
+) {
+    if let Some(why) = converged(clusters, up) {
+        panic!(
+            "sim invariant violated [seed {seed}] {ctx}: {why} \
+             (replay: TANHVF_SIM_SEED={seed} cargo test -q sim)"
+        );
+    }
+}
+
+/// Incremental observer: feeds on every node's member table once per
+/// round and asserts **I3** — no observer ever sees a member's
+/// incarnation decrease, nor flip dead -> alive at the same
+/// incarnation (death certificates win ties). Also records the highest
+/// death-certificate incarnation per member so the final refutation
+/// check can assert the rejoin really outbid it.
+#[derive(Default)]
+pub struct IncarnationMonitor {
+    seen: BTreeMap<(String, String), Member>,
+    max_death_cert: BTreeMap<String, u64>,
+}
+
+impl IncarnationMonitor {
+    pub fn new() -> IncarnationMonitor {
+        IncarnationMonitor::default()
+    }
+
+    /// Ingest `observer`'s current table; panics (with the seed) on a
+    /// monotonicity violation.
+    pub fn observe(
+        &mut self,
+        observer: &str,
+        table: &BTreeMap<String, Member>,
+        seed: u64,
+    ) {
+        for (member, e) in table {
+            if !e.alive {
+                let cert = self.max_death_cert.entry(member.clone()).or_insert(0);
+                *cert = (*cert).max(e.incarnation);
+            }
+            let key = (observer.to_string(), member.clone());
+            if let Some(prev) = self.seen.get(&key) {
+                let regressed = e.incarnation < prev.incarnation
+                    || (e.incarnation == prev.incarnation
+                        && !prev.alive
+                        && e.alive);
+                if regressed {
+                    panic!(
+                        "sim invariant violated [seed {seed}] I3: {observer} \
+                         saw {member} go {prev:?} -> {e:?} \
+                         (replay: TANHVF_SIM_SEED={seed} cargo test -q sim)"
+                    );
+                }
+            }
+            self.seen.insert(key, *e);
+        }
+    }
+
+    /// Highest death-certificate incarnation ever observed for
+    /// `member` (0 when never reported dead).
+    pub fn death_cert(&self, member: &str) -> u64 {
+        self.max_death_cert.get(member).copied().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::router::{Route, Router};
+    use crate::server::api;
+    use crate::server::cluster::{ClusterConfig, Node};
+    use crate::server::http::Request;
+    use crate::server::pool::ConnPool;
+    use crate::server::{AppState, HttpCounters};
+    use crate::tanh::TanhConfig;
+    use crate::util::json::Json;
+    use std::time::{Duration, Instant};
+
+    fn ms(n: u64) -> Duration {
+        Duration::from_millis(n)
+    }
+
+    fn echo_handler() -> Handler {
+        Arc::new(|_m, _p, _h, body: &[u8]| (200, body.to_vec()))
+    }
+
+    #[test]
+    fn sim_round_trip_advances_virtual_clock_only() {
+        let net = SimNet::new();
+        net.register("a:1", echo_handler());
+        let t = net.transport("cli:0");
+        let d = Deadlines::uniform(ms(100));
+        let mut c = t.connect("a:1", &d).unwrap();
+        c.send("POST", "/x", &[], b"ping").unwrap();
+        let (status, _h, body) = c.recv(1 << 20).unwrap();
+        assert_eq!((status, body.as_slice()), (200, b"ping".as_slice()));
+        assert!(c.is_clean());
+        assert_eq!(net.executions("a:1"), 1);
+        // connect(1) + send(1) + recv(1): three virtual ms, no real
+        // sleeping anywhere.
+        assert_eq!(net.now_ms(), 3);
+    }
+
+    #[test]
+    fn sim_partition_costs_connect_deadline_and_heals() {
+        let net = SimNet::new();
+        net.register("a:1", echo_handler());
+        let t = net.transport("cli:0");
+        let d = Deadlines::split(ms(70), ms(10), ms(10));
+        net.partition("cli:0", "a:1");
+        let t0 = net.now_ms();
+        assert!(t.connect("a:1", &d).is_err());
+        assert_eq!(net.now_ms() - t0, 70, "blackhole burns connect budget");
+        // Asymmetric: the reverse direction still works.
+        let back = net.transport("a:1");
+        assert!(back.connect("cli:0", &d).is_err(), "no handler at cli:0");
+        net.heal("cli:0", "a:1");
+        assert!(t.connect("a:1", &d).is_ok());
+    }
+
+    #[test]
+    fn sim_request_loss_times_out_not_retryable() {
+        let net = SimNet::new();
+        net.register("a:1", echo_handler());
+        let t = net.transport("cli:0");
+        let d = Deadlines::uniform(ms(50));
+        net.drop_requests("cli:0", "a:1", 1);
+        let mut c = t.connect("a:1", &d).unwrap();
+        c.send("POST", "/x", &[], b"lost").unwrap();
+        let err = c.recv(1 << 20).unwrap_err();
+        assert!(!err.retryable, "{}", err.msg);
+        assert_eq!(net.executions("a:1"), 0, "dropped request must not run");
+        // The next request goes through.
+        c.send("POST", "/x", &[], b"ok").unwrap();
+        assert!(c.recv(1 << 20).is_ok());
+    }
+
+    #[test]
+    fn sim_response_loss_executes_and_is_retryable() {
+        let net = SimNet::new();
+        net.register("a:1", echo_handler());
+        let t = net.transport("cli:0");
+        let d = Deadlines::uniform(ms(50));
+        net.drop_responses("cli:0", "a:1", 1);
+        let mut c = t.connect("a:1", &d).unwrap();
+        c.send("POST", "/x", &[], b"x").unwrap();
+        let err = c.recv(1 << 20).unwrap_err();
+        assert!(err.retryable, "{}", err.msg);
+        assert_eq!(net.executions("a:1"), 1, "the peer DID execute it");
+    }
+
+    #[test]
+    fn sim_slow_peer_exceeding_read_deadline_times_out() {
+        let net = SimNet::new();
+        net.register("a:1", echo_handler());
+        net.set_slow("a:1", 500);
+        let t = net.transport("cli:0");
+        let mut c = t.connect("a:1", &Deadlines::uniform(ms(100))).unwrap();
+        c.send("GET", "/x", &[], b"").unwrap();
+        let t0 = net.now_ms();
+        let err = c.recv(1 << 20).unwrap_err();
+        assert!(!err.retryable);
+        assert_eq!(net.now_ms() - t0, 100, "cost is the read deadline");
+        // Within the deadline it is just latency.
+        net.set_slow("a:1", 20);
+        let mut c = t.connect("a:1", &Deadlines::uniform(ms(100))).unwrap();
+        c.send("GET", "/x", &[], b"").unwrap();
+        assert!(c.recv(1 << 20).is_ok());
+    }
+
+    #[test]
+    fn sim_restart_invalidates_pooled_connections() {
+        let net = SimNet::new();
+        net.register("a:1", echo_handler());
+        let t = net.transport("cli:0");
+        let d = Deadlines::uniform(ms(50));
+        let mut c = t.connect("a:1", &d).unwrap();
+        c.send("GET", "/x", &[], b"").unwrap();
+        c.recv(1 << 20).unwrap();
+        net.crash("a:1");
+        assert!(t.connect("a:1", &d).is_err(), "crashed node refuses");
+        net.restart("a:1");
+        // The pre-restart connection is stale: retryable failure.
+        let err = c.send("GET", "/x", &[], b"").unwrap_err();
+        assert!(err.retryable, "{}", err.msg);
+        // A fresh dial works.
+        let mut c2 = t.connect("a:1", &d).unwrap();
+        c2.send("GET", "/x", &[], b"").unwrap();
+        assert!(c2.recv(1 << 20).is_ok());
+    }
+
+    #[test]
+    fn sim_pool_reuses_sim_connections() {
+        let net = SimNet::new();
+        net.register("a:1", echo_handler());
+        let pool = ConnPool::with_transport(2, net.transport("cli:0"));
+        let d = Deadlines::uniform(ms(50));
+        let mut c = pool.checkout("a:1", &d).unwrap();
+        assert!(!c.reused);
+        c.conn.send("GET", "/x", &[], b"").unwrap();
+        c.conn.recv(1 << 20).unwrap();
+        pool.check_in("a:1", c.conn);
+        let c2 = pool.checkout("a:1", &d).unwrap();
+        assert!(c2.reused, "clean sim connection must be poolable");
+    }
+
+    #[test]
+    fn sim_cluster_gossip_handler_round_trips() {
+        let net = SimNet::new();
+        let mk = |addr: &str, peer: &str, inc: u64| {
+            Cluster::start_with_transport(
+                ClusterConfig {
+                    advertise: addr.into(),
+                    peers: vec![peer.into()],
+                    probe_timeout: ms(50),
+                    probe_interval: ms(100),
+                    incarnation: Some(inc),
+                    manual_rounds: true,
+                    ..Default::default()
+                },
+                net.transport(addr),
+            )
+            .unwrap()
+        };
+        let a = mk("a:1", "b:1", 10);
+        let b = mk("b:1", "a:1", 20);
+        net.register_cluster("a:1", &a);
+        net.register_cluster("b:1", &b);
+        assert!(a.gossip_with("b:1"), "gossip exchange over the sim net");
+        // Both sides now know both real incarnations.
+        assert_eq!(a.members()["b:1"].incarnation, 20);
+        assert_eq!(b.members()["a:1"].incarnation, 10);
+        // Oversized gossip is rejected with 413 (and counted a failed
+        // exchange) without crashing anything.
+        let big = vec![b'x'; gossip::MAX_GOSSIP_BODY + 1];
+        let mut c = net
+            .transport("a:1")
+            .connect("b:1", &Deadlines::uniform(ms(50)))
+            .unwrap();
+        c.send("POST", gossip::GOSSIP_PATH, &[], &big).unwrap();
+        let (status, _, _) = c.recv(1 << 20).unwrap();
+        assert_eq!(status, 413);
+    }
+
+    // -- fan-out bit-exactness under shard failure ---------------------
+
+    struct SimFront {
+        state: Arc<AppState>,
+        cluster: Arc<Cluster>,
+    }
+
+    fn start_front(
+        net: &Arc<SimNet>,
+        addr: &str,
+        peers: Vec<String>,
+        replicas: usize,
+    ) -> SimFront {
+        let cluster = Cluster::start_with_transport(
+            ClusterConfig {
+                advertise: addr.into(),
+                peers,
+                replicas,
+                virtual_nodes: 16,
+                probe_timeout: ms(50),
+                probe_interval: ms(100),
+                proxy_timeout: ms(200),
+                incarnation: Some(100),
+                manual_rounds: true,
+                ..Default::default()
+            },
+            net.transport(addr),
+        )
+        .unwrap();
+        let router =
+            Router::start(vec![Route::native("s3_5", TanhConfig::s3_5())])
+                .unwrap();
+        let state = Arc::new(AppState {
+            router,
+            http: HttpCounters::default(),
+            started: Instant::now(),
+            request_timeout: Duration::from_secs(5),
+            cluster: Some(cluster.clone()),
+        });
+        let weak = Arc::downgrade(&state);
+        net.register(
+            addr,
+            Arc::new(move |method: &str,
+                           path: &str,
+                           headers: &[(&str, &str)],
+                           body: &[u8]| {
+                let Some(state) = weak.upgrade() else {
+                    return (503, Vec::new());
+                };
+                let req = Request {
+                    method: method.to_string(),
+                    target: path.to_string(),
+                    version: "HTTP/1.1".to_string(),
+                    headers: headers
+                        .iter()
+                        .map(|(k, v)| {
+                            (k.to_ascii_lowercase(), v.to_string())
+                        })
+                        .collect(),
+                    body: body.to_vec(),
+                };
+                let resp = api::dispatch(&state, &req);
+                (resp.status, resp.body)
+            }),
+        );
+        SimFront { state, cluster }
+    }
+
+    fn batch_req(words: &[i64]) -> Request {
+        let body = json::write(&Json::Obj(
+            [
+                ("model".to_string(), Json::Str("s3_5".into())),
+                (
+                    "words".to_string(),
+                    Json::Arr(
+                        words.iter().map(|&w| Json::Num(w as f64)).collect(),
+                    ),
+                ),
+            ]
+            .into_iter()
+            .collect(),
+        ));
+        Request {
+            method: "POST".into(),
+            target: "/v1/batch".into(),
+            version: "HTTP/1.1".into(),
+            headers: BTreeMap::new(),
+            body: body.into_bytes(),
+        }
+    }
+
+    fn words_of(body: &[u8]) -> Vec<i64> {
+        let v = json::parse(std::str::from_utf8(body).unwrap()).unwrap();
+        v.get("words")
+            .and_then(Json::as_arr)
+            .expect("words array")
+            .iter()
+            .map(|w| w.as_f64().unwrap() as i64)
+            .collect()
+    }
+
+    /// ≥ 64 seeded schedules: random batches fanned out across three
+    /// replicas with a randomly injected shard fault (response loss,
+    /// crash, or a healthy run) must merge bit-exactly with an
+    /// unclustered single-node reference — shard failures degrade to
+    /// whole-batch local service, never to wrong answers.
+    #[test]
+    fn sim_fanout_merge_is_bit_exact_under_shard_faults() {
+        // Unclustered reference front.
+        let reference = Arc::new(AppState {
+            router: Router::start(vec![Route::native(
+                "s3_5",
+                TanhConfig::s3_5(),
+            )])
+            .unwrap(),
+            http: HttpCounters::default(),
+            started: Instant::now(),
+            request_timeout: Duration::from_secs(5),
+            cluster: None,
+        });
+        let addrs: Vec<String> =
+            (1..=3).map(|i| format!("n{i}:1")).collect();
+        for seed in schedule_seeds(0xfa0, 64) {
+            let mut rng = scenario_rng(seed);
+            let net = SimNet::new();
+            let fronts: Vec<SimFront> = addrs
+                .iter()
+                .map(|a| {
+                    let peers: Vec<String> = addrs
+                        .iter()
+                        .filter(|p| *p != a)
+                        .cloned()
+                        .collect();
+                    start_front(&net, a, peers, 3)
+                })
+                .collect();
+            // 3..=24 random in-range words for the s3_5 format
+            // (mag_bits = 3 + 5 -> words in [-256, 256)).
+            let n = 3 + rng.below(22) as usize;
+            let words: Vec<i64> =
+                (0..n).map(|_| rng.below(512) as i64 - 256).collect();
+            // Stage at most one fault, chosen by the seed.
+            match rng.below(4) {
+                0 => {
+                    let victim = &addrs[1 + rng.below(2) as usize];
+                    net.drop_responses("n1:1", victim, 1);
+                }
+                1 => {
+                    let victim = &addrs[1 + rng.below(2) as usize];
+                    net.crash(victim);
+                }
+                2 => {
+                    let victim = &addrs[1 + rng.below(2) as usize];
+                    net.set_slow(victim, 1000); // beyond proxy read budget
+                }
+                _ => {}
+            }
+            let resp =
+                api::dispatch(&fronts[0].state, &batch_req(&words));
+            assert_eq!(
+                resp.status, 200,
+                "[seed {seed}] fan-out request failed: {}",
+                String::from_utf8_lossy(&resp.body)
+            );
+            let want = api::dispatch(&reference, &batch_req(&words));
+            assert_eq!(
+                words_of(&resp.body),
+                words_of(&want.body),
+                "[seed {seed}] fan-out merge diverged from the \
+                 single-node reference (replay: TANHVF_SIM_SEED={seed} \
+                 cargo test -q sim_fanout)"
+            );
+            for f in &fronts {
+                f.cluster.stop();
+            }
+        }
+    }
+
+    /// Healthy fan-out actually splits: with no faults and a local
+    /// replica, the batch is served by shards (fanout_batches ticks)
+    /// and remote peers execute.
+    #[test]
+    fn sim_fanout_splits_across_replicas_when_healthy() {
+        let net = SimNet::new();
+        let addrs: Vec<String> =
+            (1..=3).map(|i| format!("m{i}:1")).collect();
+        let fronts: Vec<SimFront> = addrs
+            .iter()
+            .map(|a| {
+                let peers: Vec<String> =
+                    addrs.iter().filter(|p| *p != a).cloned().collect();
+                start_front(&net, a, peers, 3)
+            })
+            .collect();
+        let words: Vec<i64> = (0..24).map(|i| i * 9 - 100).collect();
+        let resp = api::dispatch(&fronts[0].state, &batch_req(&words));
+        assert_eq!(resp.status, 200);
+        assert_eq!(
+            fronts[0]
+                .cluster
+                .stats
+                .fanout_batches
+                .load(Ordering::Relaxed),
+            1
+        );
+        let remote_execs: u64 =
+            addrs[1..].iter().map(|a| net.executions(a)).sum();
+        assert!(
+            remote_execs >= 2,
+            "both remote replicas should serve a shard, got {remote_execs}"
+        );
+        // And every replica is in the live set seen by node 1.
+        assert_eq!(fronts[0].cluster.live_replicas("s3_5")[0], Node::Local);
+        for f in &fronts {
+            f.cluster.stop();
+        }
+    }
+}

@@ -1,0 +1,248 @@
+//! Client-leg transport abstraction for the cluster tier.
+//!
+//! Every outbound round trip a cluster node makes — proxying an eval,
+//! probing `/health`, exchanging `POST /v1/gossip` — goes through the
+//! [`Transport`]/[`Connection`] pair defined here instead of touching
+//! `TcpStream` directly. Two implementations exist:
+//!
+//! * [`TcpTransport`] — the production path: resolve, dial with a
+//!   connect deadline, `TCP_NODELAY`, and per-leg read/write socket
+//!   timeouts over the shared [`HttpConn`] HTTP/1.1 codec.
+//! * [`super::sim`] — an in-process network with a **virtual clock**
+//!   and scripted fault injection (partitions, delay, loss, slow
+//!   peers, crash/restart). The whole cluster test matrix runs on it
+//!   with no real sockets and no real time.
+//!
+//! The seam is deliberately narrow: connect/send/recv with explicit
+//! [`Deadlines`], plus the two properties the pool and the
+//! discard-and-redial retry actually depend on — [`Connection::is_clean`]
+//! (safe to re-admit to the idle pool) and
+//! [`TransportError::retryable`] (safe to redial and re-send). A
+//! *retryable* failure is the stale-keep-alive signature: the send
+//! failed outright, or the peer closed/reset before answering. A
+//! timeout while awaiting the response is **not** retryable — the
+//! request may be executing on the peer right now, and re-sending it
+//! would double-execute.
+
+use std::collections::BTreeMap;
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use super::http::{HttpConn, HttpError};
+
+/// Per-leg time budgets for one round trip. The connect leg applies to
+/// dialing only; write and read bound each direction of an established
+/// exchange separately, so a caller can give a gossip exchange a total
+/// wall bound (connect + write + read) independent of the per-probe
+/// budget.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Deadlines {
+    pub connect: Duration,
+    pub write: Duration,
+    pub read: Duration,
+}
+
+impl Deadlines {
+    /// The same budget on every leg (the probe/proxy default).
+    pub fn uniform(d: Duration) -> Deadlines {
+        Deadlines { connect: d, write: d, read: d }
+    }
+
+    /// Explicit per-leg budgets.
+    pub fn split(connect: Duration, write: Duration, read: Duration) -> Deadlines {
+        Deadlines { connect, write, read }
+    }
+
+    /// Worst-case wall time for one full round trip on these budgets.
+    pub fn total(&self) -> Duration {
+        self.connect + self.write + self.read
+    }
+}
+
+/// A failed send/recv, classified for the discard-and-redial loop.
+#[derive(Debug)]
+pub struct TransportError {
+    /// True when retrying the round trip on a fresh connection cannot
+    /// double-execute the request (send failed, or the peer closed
+    /// before answering). False for response timeouts: the request may
+    /// already be executing on the peer.
+    pub retryable: bool,
+    pub msg: String,
+}
+
+impl TransportError {
+    pub fn new(retryable: bool, msg: impl Into<String>) -> TransportError {
+        TransportError { retryable, msg: msg.into() }
+    }
+}
+
+/// One established client connection. Implementations pair with a
+/// [`Transport`]; the pool stores them boxed and re-admits only clean
+/// ones.
+pub trait Connection: Send {
+    /// (Re)apply per-leg budgets — called on every pool checkout so
+    /// probe and proxy legs can share pooled connections under
+    /// different budgets.
+    fn set_deadlines(&mut self, deadlines: &Deadlines);
+
+    /// Serialize and send one request.
+    fn send(
+        &mut self,
+        method: &str,
+        path: &str,
+        headers: &[(&str, &str)],
+        body: &[u8],
+    ) -> Result<(), TransportError>;
+
+    /// Await the response: `(status, headers, body)`.
+    fn recv(
+        &mut self,
+        max_body: usize,
+    ) -> Result<(u16, BTreeMap<String, String>, Vec<u8>), TransportError>;
+
+    /// True when the connection sits cleanly between messages — the
+    /// pool's re-admission gate.
+    fn is_clean(&self) -> bool;
+}
+
+/// Dials [`Connection`]s to peer addresses.
+pub trait Transport: Send + Sync {
+    fn connect(
+        &self,
+        addr: &str,
+        deadlines: &Deadlines,
+    ) -> Result<Box<dyn Connection>, String>;
+}
+
+// ---------------------------------------------------------------------
+// TCP (production)
+// ---------------------------------------------------------------------
+
+/// The real-socket transport: what every cluster node uses unless a
+/// test injects [`super::sim::SimTransport`].
+pub struct TcpTransport;
+
+impl Transport for TcpTransport {
+    fn connect(
+        &self,
+        addr: &str,
+        deadlines: &Deadlines,
+    ) -> Result<Box<dyn Connection>, String> {
+        let sa = resolve(addr)?;
+        let stream = TcpStream::connect_timeout(&sa, deadlines.connect)
+            .map_err(|e| format!("connect {addr}: {e}"))?;
+        let _ = stream.set_nodelay(true);
+        let mut conn = TcpConnection::new(HttpConn::new(stream));
+        conn.set_deadlines(deadlines);
+        Ok(Box::new(conn))
+    }
+}
+
+/// [`HttpConn`] adapted to the [`Connection`] trait (also the wrapper
+/// pool tests use around raw loopback sockets).
+pub struct TcpConnection {
+    conn: HttpConn,
+}
+
+impl TcpConnection {
+    pub fn new(conn: HttpConn) -> TcpConnection {
+        TcpConnection { conn }
+    }
+
+    pub fn from_stream(stream: TcpStream) -> TcpConnection {
+        TcpConnection::new(HttpConn::new(stream))
+    }
+}
+
+impl Connection for TcpConnection {
+    fn set_deadlines(&mut self, deadlines: &Deadlines) {
+        let _ = self.conn.stream().set_read_timeout(Some(deadlines.read));
+        let _ = self.conn.stream().set_write_timeout(Some(deadlines.write));
+    }
+
+    fn send(
+        &mut self,
+        method: &str,
+        path: &str,
+        headers: &[(&str, &str)],
+        body: &[u8],
+    ) -> Result<(), TransportError> {
+        self.conn
+            .write_request_with_headers(method, path, headers, body)
+            // A failed send never reached a complete request; redial
+            // and re-send cannot double-execute.
+            .map_err(|e| TransportError::new(true, e.to_string()))
+    }
+
+    fn recv(
+        &mut self,
+        max_body: usize,
+    ) -> Result<(u16, BTreeMap<String, String>, Vec<u8>), TransportError> {
+        self.conn.read_response(max_body).map_err(|e| {
+            // Timeout = the peer may be executing the request right
+            // now; anything else (closed, reset, malformed) means no
+            // response will ever come for *this* send.
+            TransportError::new(
+                !matches!(e, HttpError::Timeout(_)),
+                e.to_string(),
+            )
+        })
+    }
+
+    fn is_clean(&self) -> bool {
+        self.conn.is_clean()
+    }
+}
+
+fn resolve(addr: &str) -> Result<SocketAddr, String> {
+    addr.to_socket_addrs()
+        .map_err(|e| format!("resolve {addr}: {e}"))?
+        .next()
+        .ok_or_else(|| format!("resolve {addr}: no address"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    #[test]
+    fn deadlines_constructors() {
+        let u = Deadlines::uniform(Duration::from_millis(100));
+        assert_eq!(u.connect, u.read);
+        assert_eq!(u.total(), Duration::from_millis(300));
+        let s = Deadlines::split(
+            Duration::from_millis(10),
+            Duration::from_millis(20),
+            Duration::from_millis(30),
+        );
+        assert_eq!(s.total(), Duration::from_millis(60));
+    }
+
+    #[test]
+    fn tcp_transport_dials_and_applies_deadlines() {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap().to_string();
+        let t = TcpTransport;
+        let d = Deadlines::uniform(Duration::from_millis(200));
+        let conn = t.connect(&addr, &d).unwrap();
+        assert!(conn.is_clean());
+        // Unreachable port: the connect deadline turns into an error.
+        drop(l);
+        assert!(t.connect(&addr, &d).is_err());
+    }
+
+    #[test]
+    fn recv_timeout_is_not_retryable() {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap().to_string();
+        let mut conn = TcpTransport
+            .connect(&addr, &Deadlines::uniform(Duration::from_millis(50)))
+            .unwrap();
+        conn.send("GET", "/health", &[], b"").unwrap();
+        // Nobody answers (the accept side sits in the backlog): the
+        // read deadline fires and must NOT be classified retryable.
+        let err = conn.recv(1024).unwrap_err();
+        assert!(!err.retryable, "{}", err.msg);
+    }
+}

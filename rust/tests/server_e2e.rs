@@ -823,6 +823,127 @@ fn gossip_join_discovers_all_peers_and_serves_bit_exact() {
     assert!(proxied >= 1, "no request crossed the proxy path");
 }
 
+#[test]
+fn gossip_killed_seed_rejoins_with_bumped_incarnation_and_ring_share() {
+    // A seed and two joiners with a tight death clock (threshold 1 →
+    // tombstone after DEATH_FACTOR failed probe rounds ≈ 1 s). The
+    // seed is killed, tombstoned by both survivors, then restarted on
+    // the SAME address with a deliberately stale incarnation — re-entry
+    // must go through gossip refutation and win back ring ranges.
+    fn wait(what: &str, mut cond: impl FnMut() -> bool) {
+        let t0 = Instant::now();
+        while !cond() {
+            assert!(
+                t0.elapsed() < Duration::from_secs(20),
+                "timed out waiting for {what}"
+            );
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    }
+    let mk = |addr: String, join: Vec<String>, inc: Option<u64>| {
+        Server::start_cluster(
+            ServerConfig { addr, ..Default::default() },
+            parse_routes("native:s3_5").unwrap(),
+            ClusterConfig {
+                join,
+                probe_interval: Duration::from_millis(100),
+                probe_timeout: Duration::from_millis(500),
+                failure_threshold: 1,
+                recovery_threshold: 1,
+                incarnation: inc,
+                ..Default::default()
+            },
+        )
+    };
+    let seed = mk("127.0.0.1:0".into(), vec![], None).unwrap();
+    let seed_addr = seed.local_addr().to_string();
+    let b = mk("127.0.0.1:0".into(), vec![seed_addr.clone()], None).unwrap();
+    let c = mk("127.0.0.1:0".into(), vec![seed_addr.clone()], None).unwrap();
+    wait("initial 3-member convergence", || {
+        [&seed, &b, &c]
+            .iter()
+            .all(|f| f.cluster().unwrap().alive_members() == 3)
+    });
+
+    // Kill the seed; both survivors must tombstone it and shrink their
+    // rings to two nodes. (The seed was gossip-learned, so its probe
+    // slot dies with it — nothing can probe-resurrect it.)
+    drop(seed);
+    let survivors = [&b, &c];
+    wait("seed tombstoned on both survivors", || {
+        survivors.iter().all(|f| {
+            let cl = f.cluster().unwrap();
+            let dead = cl
+                .members()
+                .get(&seed_addr)
+                .map(|m| !m.alive)
+                .unwrap_or(false);
+            dead && cl.ring().nodes().len() == 2
+        })
+    });
+    let cert = b.cluster().unwrap().members()[&seed_addr].incarnation;
+
+    // Restart on the same address with an incarnation far below the
+    // death certificate (a rebooted process remembers nothing). It has
+    // no join list either: the survivors keep targeting their
+    // tombstoned seed, deliver the death certificate, and the reborn
+    // seed must refute it to get back in. The bind can briefly race
+    // the dying listener's shutdown, hence the retry loop.
+    let mut reborn = None;
+    let t0 = Instant::now();
+    while reborn.is_none() {
+        match mk(seed_addr.clone(), vec![], Some(1)) {
+            Ok(s) => reborn = Some(s),
+            Err(e) => {
+                assert!(
+                    t0.elapsed() < Duration::from_secs(10),
+                    "could not rebind {seed_addr}: {e}"
+                );
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        }
+    }
+    let reborn = reborn.unwrap();
+    wait("reborn seed alive past its death certificate everywhere", || {
+        survivors.iter().all(|f| {
+            let cl = f.cluster().unwrap();
+            let back = cl
+                .members()
+                .get(&seed_addr)
+                .map(|m| m.alive && m.incarnation > cert)
+                .unwrap_or(false);
+            back && cl.ring().nodes().len() == 3
+        }) && reborn.cluster().unwrap().alive_members() == 3
+    });
+    use std::sync::atomic::Ordering as O;
+    let refutations =
+        reborn.cluster().unwrap().stats.gossip_refutations.load(O::Relaxed);
+    assert!(
+        refutations >= 1,
+        "stale-incarnation rejoin must go through refutation"
+    );
+
+    // It reclaims real ring ranges (owns some keys again)…
+    let cl = b.cluster().unwrap();
+    let owned = (0..300)
+        .filter(|i| cl.owner_name(&format!("model-{i}")).unwrap() == seed_addr)
+        .count();
+    assert!(owned > 0, "reborn seed owns no ring range");
+
+    // …and every front serves bit-exact answers again.
+    let cfg = named_config("s3_5").unwrap();
+    let want = tanh_golden_batch(&[9, -9, 77], &cfg);
+    let addrs = [&b, &c].map(|f| f.local_addr().to_string());
+    for addr in [seed_addr.clone()].iter().chain(addrs.iter()) {
+        let got = loadgen::eval_words(addr, "s3_5", &[9i32, -9, 77]).unwrap();
+        assert_eq!(
+            got.iter().map(|&w| w as i64).collect::<Vec<_>>(),
+            want,
+            "via front {addr} after rejoin"
+        );
+    }
+}
+
 // ---------------------------------------------------------------------
 // Replicated routes (read fan-out)
 // ---------------------------------------------------------------------
