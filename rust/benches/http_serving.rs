@@ -292,12 +292,12 @@ fn main() {
         .unwrap();
         for _ in 0..20 {
             // Warm the peer's route tables and the TCP stack.
-            cl.forward(&peer_addr, "/v1/eval", fwd_body).unwrap();
+            cl.forward(&peer_addr, "/v1/eval", fwd_body, &[]).unwrap();
         }
         let mut lats: Vec<u64> = Vec::with_capacity(FWD_N);
         for _ in 0..FWD_N {
             let t = Instant::now();
-            let resp = cl.forward(&peer_addr, "/v1/eval", fwd_body).unwrap();
+            let resp = cl.forward(&peer_addr, "/v1/eval", fwd_body, &[]).unwrap();
             assert_eq!(resp.status, 200);
             lats.push(t.elapsed().as_nanos() as u64);
         }

@@ -1,4 +1,5 @@
-//! Serving metrics: counters + latency/batch-fill statistics.
+//! Serving metrics: counters, latency histograms, and latency/
+//! batch-fill statistics.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -11,6 +12,97 @@ use crate::util::stats::{percentile, Reservoir};
 /// traffic can never grow the allocation past this).
 const LATENCY_RESERVOIR: usize = 100_000;
 
+/// Upper bounds (µs, inclusive) of the log-spaced latency buckets
+/// shared by every histogram family the service exposes — per-route
+/// request latency and the cluster client legs (forward, fan-out
+/// shard, pool dial, gossip round). One shared scheme keeps `/metrics`
+/// families directly comparable; the implicit `+Inf` terminal bucket
+/// is tracked separately in [`Histogram`].
+///
+/// 100µs … 10s in 1–2.5–5 steps: wide enough for a local LUT hit at
+/// the bottom and a cross-node failover chain at the top.
+pub const HIST_BOUNDS_US: [u64; 16] = [
+    100,
+    250,
+    500,
+    1_000,
+    2_500,
+    5_000,
+    10_000,
+    25_000,
+    50_000,
+    100_000,
+    250_000,
+    500_000,
+    1_000_000,
+    2_500_000,
+    5_000_000,
+    10_000_000,
+];
+
+/// Lock-free fixed-bucket latency histogram (Prometheus `histogram`
+/// semantics: rendered as cumulative `_bucket{le=...}` lines plus
+/// `_sum`/`_count`). Buckets here store *per-bucket* counts; the
+/// cumulative sum is computed at render time so the hot path is one
+/// `fetch_add` per observation.
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BOUNDS_US.len()],
+    /// Observations above the last finite bound (`+Inf` residue).
+    inf: AtomicU64,
+    sum_us: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            inf: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    pub fn observe_us(&self, us: u64) {
+        match HIST_BOUNDS_US.iter().position(|&b| us <= b) {
+            Some(i) => self.buckets[i].fetch_add(1, Ordering::Relaxed),
+            None => self.inf.fetch_add(1, Ordering::Relaxed),
+        };
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn observe(&self, d: Duration) {
+        self.observe_us(d.as_micros() as u64);
+    }
+
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            buckets: std::array::from_fn(|i| {
+                self.buckets[i].load(Ordering::Relaxed)
+            }),
+            inf: self.inf.load(Ordering::Relaxed),
+            sum_us: self.sum_us.load(Ordering::Relaxed),
+            count: self.count.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+/// Point-in-time histogram state (per-bucket counts, not cumulative).
+#[derive(Clone, Debug)]
+pub struct HistSnapshot {
+    pub buckets: [u64; HIST_BOUNDS_US.len()],
+    pub inf: u64,
+    pub sum_us: u64,
+    pub count: u64,
+}
+
 /// Lock-light metrics sink shared by the coordinator's threads.
 pub struct Metrics {
     pub submitted: AtomicU64,
@@ -22,6 +114,10 @@ pub struct Metrics {
     /// Sum of padded capacity across batches.
     pub batch_capacity: AtomicU64,
     latencies_us: Mutex<Reservoir>,
+    /// Full-distribution latency histogram (the reservoir above keeps
+    /// only a recent window for the quantile gauges; the histogram is
+    /// cumulative over the process lifetime, as Prometheus expects).
+    pub latency_hist: Histogram,
 }
 
 impl Default for Metrics {
@@ -34,6 +130,7 @@ impl Default for Metrics {
             batched_words: AtomicU64::new(0),
             batch_capacity: AtomicU64::new(0),
             latencies_us: Mutex::new(Reservoir::new(LATENCY_RESERVOIR)),
+            latency_hist: Histogram::new(),
         }
     }
 }
@@ -50,11 +147,13 @@ pub struct Snapshot {
     pub p95_latency_us: u64,
     pub p99_latency_us: u64,
     pub max_latency_us: u64,
+    pub latency_hist: HistSnapshot,
 }
 
 impl Metrics {
     pub fn record_latency(&self, d: Duration) {
         self.latencies_us.lock().unwrap().push(d.as_micros() as u64);
+        self.latency_hist.observe(d);
     }
 
     pub fn record_batch(&self, words: u64, capacity: u64) {
@@ -84,6 +183,7 @@ impl Metrics {
             p95_latency_us: percentile(&lats, 0.95),
             p99_latency_us: percentile(&lats, 0.99),
             max_latency_us: lats.last().copied().unwrap_or(0),
+            latency_hist: self.latency_hist.snapshot(),
         }
     }
 }
@@ -105,6 +205,38 @@ mod tests {
         // maximum, not the second-largest the truncating picker chose.
         assert_eq!(s.p95_latency_us, 1000);
         assert_eq!(s.p99_latency_us, 1000);
+    }
+
+    #[test]
+    fn histogram_buckets_sum_count() {
+        let h = Histogram::new();
+        h.observe_us(50); // <= 100 -> bucket 0
+        h.observe_us(100); // inclusive bound -> bucket 0
+        h.observe_us(101); // -> bucket 1 (250)
+        h.observe_us(9_999_999); // -> last finite bucket (10s)
+        h.observe_us(10_000_001); // -> +Inf
+        let s = h.snapshot();
+        assert_eq!(s.buckets[0], 2);
+        assert_eq!(s.buckets[1], 1);
+        assert_eq!(s.buckets[HIST_BOUNDS_US.len() - 1], 1);
+        assert_eq!(s.inf, 1);
+        assert_eq!(s.count, 5);
+        assert_eq!(s.sum_us, 50 + 100 + 101 + 9_999_999 + 10_000_001);
+        // The bounds themselves must be strictly increasing — the
+        // `/metrics` lint checks the rendered form, this checks the
+        // source of truth.
+        for w in HIST_BOUNDS_US.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+    }
+
+    #[test]
+    fn record_latency_feeds_histogram() {
+        let m = Metrics::default();
+        m.record_latency(Duration::from_micros(300));
+        let s = m.snapshot();
+        assert_eq!(s.latency_hist.count, 1);
+        assert_eq!(s.latency_hist.buckets[2], 1); // 300µs -> le=500µs
     }
 
     #[test]

@@ -26,8 +26,9 @@ use std::time::{Duration, Instant};
 use crate::exec::{oneshot, Receiver, Sender};
 use crate::runtime::{Runtime, Tensor};
 use crate::tanh::{TanhConfig, TanhUnit};
+use crate::util::log;
 
-pub use metrics::{Metrics, Snapshot};
+pub use metrics::{HistSnapshot, Histogram, Metrics, Snapshot, HIST_BOUNDS_US};
 
 /// A per-worker execution engine for packed tanh batches.
 pub enum Backend {
@@ -310,7 +311,11 @@ fn worker_loop(
             // no request is ever stranded (other workers may be healthy
             // and will race us for batches; liveness is preserved either
             // way).
-            eprintln!("tanh-vf worker: backend construction failed: {e}");
+            log::error(
+                "coordinator",
+                "backend construction failed; worker draining with errors",
+                &[("error", e.clone())],
+            );
             loop {
                 let batch = {
                     let mut q = shared.q.lock().unwrap();

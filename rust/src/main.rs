@@ -47,7 +47,9 @@ const SUBCOMMANDS: &[(&str, &str)] = &[
         "loadgen",
         "closed-loop load generator: --addrs host:port,... \
          [--connections 4] [--requests 100] [--words 64] \
-         [--models s3_12,s3_5] [--word-range 128] [--seed 42]",
+         [--models s3_12,s3_5] [--word-range 128] [--seed 42] \
+         [--trace-sample 0] (sample every Nth request's trace; the \
+         report includes the slowest sampled span tree)",
     ),
     ("info", "artifact manifest summary"),
 ];
@@ -494,6 +496,7 @@ fn cmd_loadgen(args: &Args) -> R {
         models,
         word_range: args.i64_or("word-range", 128)?,
         seed: args.u64_or("seed", 42)?,
+        trace_sample: args.usize_or("trace-sample", 0)?,
     };
     let report = tanh_vf::server::loadgen::run(&cfg)?;
     println!("{}", report.render());

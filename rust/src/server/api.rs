@@ -4,12 +4,20 @@
 //! related inference-endpoint repos: model listing + health + metrics
 //! next to the eval routes, with per-request model (= precision) names:
 //!
-//! * `GET  /health`     — liveness + uptime.
+//! * `GET  /health`     — liveness + uptime + build/backend identity.
 //! * `GET  /v1/models`  — the route table, name-sorted.
 //! * `POST /v1/eval`    — one word (or a float `x`) through one route.
 //! * `POST /v1/batch`   — a packed word batch through one route.
 //! * `GET  /metrics`    — Prometheus text: per-route coordinator
-//!   [`Snapshot`](crate::coordinator::Snapshot)s + HTTP counters.
+//!   [`Snapshot`](crate::coordinator::Snapshot)s + HTTP counters +
+//!   latency histograms.
+//! * `GET  /debug/trace/{id}` — the span tree this node holds for one
+//!   trace ([`super::trace`]): 404 never seen, 410 evicted.
+//!
+//! The eval routes are traced: each dispatch opens a server span
+//! (joining the sender's trace when `x-tanhvf-trace` is present),
+//! every proxy forward and fan-out shard records a client-leg span,
+//! and the response echoes the bare trace ID.
 //!
 //! Coordinator backpressure ("queue full") surfaces as 503 so closed-loop
 //! clients can shed load; malformed bodies are 400, unknown models 404.
@@ -35,7 +43,9 @@
 
 use std::fmt::Write as _;
 use std::sync::atomic::Ordering;
+use std::time::Instant;
 
+use crate::coordinator::metrics::{HistSnapshot, HIST_BOUNDS_US};
 use crate::coordinator::router::RouteInfo;
 use crate::fixed::Round;
 use crate::util::json::{self, Json};
@@ -43,6 +53,7 @@ use crate::util::json::{self, Json};
 use super::cluster::{self, Node};
 use super::gossip;
 use super::http::{Request, Response};
+use super::trace::{self, Span, TraceQuery};
 use super::AppState;
 
 /// Route an HTTP request to its handler.
@@ -51,9 +62,12 @@ pub(crate) fn dispatch(state: &AppState, req: &Request) -> Response {
         ("GET", "/health") => health(state),
         ("GET", "/v1/models") => models(state),
         ("GET", "/metrics") => render_metrics(state),
-        ("POST", "/v1/eval") => clustered(state, req, eval),
-        ("POST", "/v1/batch") => clustered(state, req, batch),
+        ("POST", "/v1/eval") => traced(state, req, eval),
+        ("POST", "/v1/batch") => traced(state, req, batch),
         ("POST", "/v1/gossip") => gossip_exchange(state, req),
+        ("GET", path) if path.starts_with("/debug/trace/") => {
+            debug_trace(state, path)
+        }
         (_, "/health" | "/v1/models" | "/metrics") => {
             error_resp(405, "method_not_allowed", "endpoint is GET-only")
         }
@@ -66,6 +80,49 @@ pub(crate) fn dispatch(state: &AppState, req: &Request) -> Response {
     }
 }
 
+/// Per-request trace context threaded through the routing shims: the
+/// trace this request joined (or started) and the server span every
+/// client leg nests under.
+struct TraceCtx {
+    trace: trace::TraceId,
+    span: u64,
+}
+
+/// Tracing shim around the eval endpoints: open a server span —
+/// joining the sender's trace when the request carries
+/// [`trace::TRACE_HEADER`], else minting a fresh trace ID — run the
+/// cluster routing shim under it, and stamp the bare trace ID on the
+/// response so clients can fetch the tree from `/debug/trace/{id}`.
+fn traced(
+    state: &AppState,
+    req: &Request,
+    local: fn(&AppState, &Json) -> Response,
+) -> Response {
+    let (trace_id, parent) = req
+        .header(trace::TRACE_HEADER)
+        .and_then(trace::decode_header)
+        .unwrap_or_else(|| (state.trace.new_trace_id(), 0));
+    let ctx = TraceCtx {
+        trace: trace_id,
+        span: state.trace.next_span_id(),
+    };
+    let mut span = Span::new(trace_id, ctx.span, parent, "server", req.path());
+    span.start_us = state.clock.now_us();
+    let resp = clustered(state, req, &ctx, local);
+    span.end_us = state.clock.now_us();
+    span.status = resp.status;
+    // Slow-request logging keys on the client-facing root only —
+    // proxied legs already surface as the caller's child spans.
+    let is_root = parent == 0;
+    if is_root {
+        state.trace.push(span.clone());
+        state.trace.maybe_log_slow(&span);
+    } else {
+        state.trace.push(span);
+    }
+    resp.with_header(trace::TRACE_HEADER, &trace_id.hex())
+}
+
 /// Cluster routing shim around an eval endpoint: parse the body once,
 /// serve locally when the ring says so (or when not clustered), else
 /// forward to the owning peer, failing over along the ring on
@@ -73,6 +130,7 @@ pub(crate) fn dispatch(state: &AppState, req: &Request) -> Response {
 fn clustered(
     state: &AppState,
     req: &Request,
+    ctx: &TraceCtx,
     local: fn(&AppState, &Json) -> Response,
 ) -> Response {
     let body = match req.json_body() {
@@ -103,7 +161,7 @@ fn clustered(
     // fan-out doesn't apply (or can't complete) — the plain walk below
     // is the universal fallback.
     if req.path() == "/v1/batch" && cl.config().replicas > 1 {
-        if let Some(resp) = fanout_batch(state, cl, &model, &body) {
+        if let Some(resp) = fanout_batch(state, cl, ctx, &model, &body) {
             return resp;
         }
     }
@@ -138,11 +196,36 @@ fn clustered(
                         "proxy capacity exhausted, retry later",
                     );
                 };
-                match cl.forward(&addr, req.path(), &req.body) {
+                let fwd_id = state.trace.next_span_id();
+                let hdr = trace::encode_header(ctx.trace, fwd_id);
+                let mut fspan = Span::new(
+                    ctx.trace,
+                    fwd_id,
+                    ctx.span,
+                    "forward",
+                    req.path(),
+                );
+                fspan.peer = addr.clone();
+                if failed_hops > 0 {
+                    fspan.note = format!("failover hop {failed_hops}");
+                }
+                fspan.start_us = state.clock.now_us();
+                let started = Instant::now();
+                let result = cl.forward(
+                    &addr,
+                    req.path(),
+                    &req.body,
+                    &[(trace::TRACE_HEADER, &hdr)],
+                );
+                cl.stats.forward_hist.observe(started.elapsed());
+                fspan.end_us = state.clock.now_us();
+                match result {
                     Ok(resp) => {
                         // HTTP-level statuses (including the peer's own
                         // 4xx/5xx) pass through untouched; only
                         // transport failures fail over.
+                        fspan.status = resp.status;
+                        state.trace.push(fspan);
                         cl.record_success(&addr);
                         cl.stats.proxied.fetch_add(1, Ordering::Relaxed);
                         if failed_hops > 0 {
@@ -150,7 +233,16 @@ fn clustered(
                         }
                         return resp;
                     }
-                    Err(_) => {
+                    Err(e) => {
+                        // Transport failure: status 0 marks a leg that
+                        // died below HTTP; the next attempt is a
+                        // sibling span annotated with its hop count.
+                        if fspan.note.is_empty() {
+                            fspan.note = e;
+                        } else {
+                            let _ = write!(fspan.note, ": {e}");
+                        }
+                        state.trace.push(fspan);
                         cl.stats.proxy_errors.fetch_add(1, Ordering::Relaxed);
                         cl.record_failure(&addr);
                         failed_hops += 1;
@@ -178,6 +270,7 @@ fn clustered(
 fn fanout_batch(
     state: &AppState,
     cl: &cluster::Cluster,
+    ctx: &TraceCtx,
     model: &str,
     body: &Json,
 ) -> Option<Response> {
@@ -207,7 +300,42 @@ fn fanout_batch(
     for _ in 0..remote_shards {
         permits.push(cl.try_forward_permit()?);
     }
+    // Shard span IDs are allocated here, in shard order, before any
+    // shard thread spawns — the ID stream is shared mutable state, and
+    // a deterministic replay needs a deterministic allocation order.
+    let shard_ids: Vec<u64> =
+        pairs.iter().map(|_| state.trace.next_span_id()).collect();
     let mut results: Vec<Option<Vec<Json>>> = vec![None; pairs.len()];
+    // The local shard (shard 0 whenever this node is a replica —
+    // live_replicas puts Local first) computes before the remote
+    // shards spawn: local compute is microseconds against a remote
+    // leg's network round trip, and running it first keeps its span
+    // timestamps off the simulator's in-flight virtual clock, so a
+    // replayed seed renders a bit-identical span tree.
+    for (i, (node, words)) in pairs.iter().enumerate() {
+        if matches!(node, Node::Local) {
+            let mut lspan = Span::new(
+                ctx.trace,
+                shard_ids[i],
+                ctx.span,
+                "local",
+                "/v1/batch",
+            );
+            lspan.note = format!("shard {i}");
+            lspan.start_us = state.clock.now_us();
+            let sub = obj([
+                ("model", Json::Str(model.to_string())),
+                ("words", Json::Arr(words.to_vec())),
+            ]);
+            let resp = batch(state, &sub);
+            lspan.end_us = state.clock.now_us();
+            lspan.status = resp.status;
+            if resp.status == 200 {
+                results[i] = shard_words(&resp.body, words.len());
+            }
+            state.trace.push(lspan);
+        }
+    }
     std::thread::scope(|s| {
         let mut handles = Vec::new();
         for (i, (node, words)) in pairs.iter().enumerate() {
@@ -217,44 +345,61 @@ fn fanout_batch(
                     ("words", Json::Arr(words.to_vec())),
                 ]));
                 let want = words.len();
+                let span_id = shard_ids[i];
                 handles.push((
                     i,
                     s.spawn(move || {
-                        match cl.forward(addr, "/v1/batch", wire.as_bytes())
-                        {
+                        let hdr = trace::encode_header(ctx.trace, span_id);
+                        let mut sspan = Span::new(
+                            ctx.trace,
+                            span_id,
+                            ctx.span,
+                            "shard",
+                            "/v1/batch",
+                        );
+                        sspan.peer = addr.clone();
+                        sspan.note = format!("shard {i}");
+                        sspan.start_us = state.clock.now_us();
+                        let started = Instant::now();
+                        let result = cl.forward(
+                            addr,
+                            "/v1/batch",
+                            wire.as_bytes(),
+                            &[(trace::TRACE_HEADER, &hdr)],
+                        );
+                        cl.stats.shard_hist.observe(started.elapsed());
+                        sspan.end_us = state.clock.now_us();
+                        let out = match result {
                             Ok(resp) if resp.status == 200 => {
+                                sspan.status = resp.status;
                                 cl.record_success(addr);
                                 cl.stats
                                     .proxied
                                     .fetch_add(1, Ordering::Relaxed);
-                                shard_words(&resp.body, want)
+                                let w = shard_words(&resp.body, want);
+                                if w.is_none() {
+                                    sspan.note =
+                                        format!("shard {i}: bad shard body");
+                                }
+                                w
                             }
-                            Ok(_) => None,
-                            Err(_) => {
+                            Ok(resp) => {
+                                sspan.status = resp.status;
+                                None
+                            }
+                            Err(e) => {
+                                sspan.note = format!("shard {i}: {e}");
                                 cl.stats
                                     .proxy_errors
                                     .fetch_add(1, Ordering::Relaxed);
                                 cl.record_failure(addr);
                                 None
                             }
-                        }
+                        };
+                        state.trace.push(sspan);
+                        out
                     }),
                 ));
-            }
-        }
-        // The local shard (shard 0 whenever this node is a replica —
-        // live_replicas puts Local first) computes on this thread
-        // while the remote shards are in flight.
-        for (i, (node, words)) in pairs.iter().enumerate() {
-            if matches!(node, Node::Local) {
-                let sub = obj([
-                    ("model", Json::Str(model.to_string())),
-                    ("words", Json::Arr(words.to_vec())),
-                ]);
-                let resp = batch(state, &sub);
-                if resp.status == 200 {
-                    results[i] = shard_words(&resp.body, words.len());
-                }
             }
         }
         for (i, h) in handles {
@@ -347,10 +492,50 @@ fn gossip_exchange(state: &AppState, req: &Request) -> Response {
 // Handlers
 // ---------------------------------------------------------------------
 
+/// `GET /debug/trace/{id}`: whatever span tree this node still holds
+/// for one trace. 404 for IDs never seen here, 410 once the ring has
+/// evicted every span of a trace it did see.
+fn debug_trace(state: &AppState, path: &str) -> Response {
+    let hex = &path["/debug/trace/".len()..];
+    let Some(id) = trace::TraceId::parse(hex) else {
+        return error_resp(
+            400,
+            "bad_request",
+            "trace id must be 32 hex characters",
+        );
+    };
+    match state.trace.lookup(id) {
+        TraceQuery::Found(spans) => Response::json(
+            200,
+            &obj([
+                ("trace_id", Json::Str(id.hex())),
+                ("span_count", Json::Num(spans.len() as f64)),
+                ("spans", trace::span_tree_json(&spans)),
+            ]),
+        ),
+        TraceQuery::Evicted => error_resp(
+            410,
+            "gone",
+            "spans for this trace were evicted from the ring buffer",
+        ),
+        TraceQuery::Unknown => error_resp(
+            404,
+            "not_found",
+            "no spans recorded here for this trace id",
+        ),
+    }
+}
+
 fn health(state: &AppState) -> Response {
+    let uptime = state.started.elapsed().as_secs() as f64;
     let mut fields = vec![
         ("status", Json::Str("ok".into())),
-        ("uptime_s", Json::Num(state.started.elapsed().as_secs() as f64)),
+        ("version", Json::Str(env!("CARGO_PKG_VERSION").into())),
+        ("backend", Json::Str(state.backend.into())),
+        // `uptime_s` predates `uptime_seconds`; both stay because
+        // external checks grep for either spelling.
+        ("uptime_s", Json::Num(uptime)),
+        ("uptime_seconds", Json::Num(uptime)),
         ("routes", Json::Num(state.router.route_infos().len() as f64)),
     ];
     if let Some(cl) = &state.cluster {
@@ -590,6 +775,41 @@ fn family(s: &mut String, name: &str, typ: &str, help: &str) {
     let _ = writeln!(s, "# TYPE {name} {typ}");
 }
 
+/// Write one histogram's samples: cumulative `_bucket`s over the fixed
+/// log-spaced bounds (`le` in seconds), the `+Inf` bucket, `_sum`, and
+/// `_count`. `labels` is either empty or a ready `k="v"` list without
+/// braces. The caller emits the `family` preamble once per family.
+fn hist_samples(
+    s: &mut String,
+    name: &str,
+    labels: &str,
+    snap: &HistSnapshot,
+) {
+    let sep = if labels.is_empty() { "" } else { "," };
+    let mut cum = 0u64;
+    for (i, &bound_us) in HIST_BOUNDS_US.iter().enumerate() {
+        cum += snap.buckets[i];
+        let _ = writeln!(
+            s,
+            "{name}_bucket{{{labels}{sep}le=\"{}\"}} {cum}",
+            bound_us as f64 / 1e6
+        );
+    }
+    let _ = writeln!(
+        s,
+        "{name}_bucket{{{labels}{sep}le=\"+Inf\"}} {}",
+        cum + snap.inf
+    );
+    let sum_s = snap.sum_us as f64 / 1e6;
+    if labels.is_empty() {
+        let _ = writeln!(s, "{name}_sum {sum_s}");
+        let _ = writeln!(s, "{name}_count {}", snap.count);
+    } else {
+        let _ = writeln!(s, "{name}_sum{{{labels}}} {sum_s}");
+        let _ = writeln!(s, "{name}_count{{{labels}}} {}", snap.count);
+    }
+}
+
 pub(crate) fn render_metrics(state: &AppState) -> Response {
     let mut s = String::new();
     let h = &state.http;
@@ -742,6 +962,41 @@ pub(crate) fn render_metrics(state: &AppState) -> Response {
             );
         }
     }
+    family(
+        &mut s,
+        "tanhvf_request_duration_seconds",
+        "histogram",
+        "End-to-end request latency through a route's coordinator.",
+    );
+    for (route, snap) in &snaps {
+        hist_samples(
+            &mut s,
+            "tanhvf_request_duration_seconds",
+            &format!("route=\"{route}\""),
+            &snap.latency_hist,
+        );
+    }
+
+    // Trace-store accounting: present on every node (single-node
+    // fronts trace too).
+    family(
+        &mut s,
+        "tanhvf_spans_dropped_total",
+        "counter",
+        "Trace spans evicted by the bounded span ring.",
+    );
+    let _ = writeln!(
+        s,
+        "tanhvf_spans_dropped_total {}",
+        state.trace.spans_dropped()
+    );
+    family(
+        &mut s,
+        "tanhvf_trace_store_bytes",
+        "gauge",
+        "Approximate bytes currently held by the trace span ring.",
+    );
+    let _ = writeln!(s, "tanhvf_trace_store_bytes {}", state.trace.bytes());
 
     if let Some(cl) = &state.cluster {
         family(
@@ -934,6 +1189,32 @@ pub(crate) fn render_metrics(state: &AppState) -> Response {
             "tanhvf_cluster_pool_idle_connections {}",
             cl.pool.idle_count()
         );
+        // Client-leg latency histograms: one family per leg kind.
+        for (name, hist, help) in [
+            (
+                "tanhvf_cluster_forward_duration_seconds",
+                &st.forward_hist,
+                "Proxy-forward round trips to the ring owner.",
+            ),
+            (
+                "tanhvf_cluster_shard_duration_seconds",
+                &st.shard_hist,
+                "Remote fan-out shard round trips.",
+            ),
+            (
+                "tanhvf_cluster_gossip_round_duration_seconds",
+                &st.gossip_round_hist,
+                "Full outbound gossip rounds (all fan-out targets).",
+            ),
+            (
+                "tanhvf_cluster_pool_dial_seconds",
+                &ps.dial_hist,
+                "Fresh connection dials (pool misses and redials).",
+            ),
+        ] {
+            family(&mut s, name, "histogram", help);
+            hist_samples(&mut s, name, "", &hist.snapshot());
+        }
     }
     Response::text(200, &s)
 }

@@ -57,9 +57,11 @@ use std::sync::atomic::{
     AtomicBool, AtomicU64, AtomicUsize, Ordering,
 };
 use std::sync::{Arc, Mutex, RwLock, Weak};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
+use crate::coordinator::metrics::Histogram;
 use crate::util::json;
+use crate::util::log;
 
 use super::gossip::{self, Member, MemberEntry};
 use super::http::Response;
@@ -267,6 +269,13 @@ pub struct ClusterStats {
     pub fanout_batches: AtomicU64,
     /// Fan-outs abandoned mid-flight and served whole locally.
     pub fanout_fallbacks: AtomicU64,
+    /// Latency of proxy forward legs (the `clustered()` walk in
+    /// [`super::api`] observes these; failures count too).
+    pub forward_hist: Histogram,
+    /// Latency of remote `/v1/batch` fan-out shard legs.
+    pub shard_hist: Histogram,
+    /// Wall time of one whole gossip round (all targets).
+    pub gossip_round_hist: Histogram,
 }
 
 /// Where a key's next candidate lives.
@@ -663,14 +672,28 @@ impl Cluster {
         if outcome.ring_changed {
             self.rebuild_ring_locked(&mut st);
         }
-        let joined = outcome
+        // Alive joins only — `added` also lists imported tombstones,
+        // which are inherited history, not join events.
+        let joined_addrs: Vec<&String> = outcome
             .added
             .iter()
             .filter(|a| st.table.get(*a).map(|m| m.alive).unwrap_or(false))
-            .count() as u64;
+            .collect();
         drop(st);
-        if joined > 0 {
-            self.stats.members_joined.fetch_add(joined, Ordering::Relaxed);
+        if !joined_addrs.is_empty() {
+            self.stats
+                .members_joined
+                .fetch_add(joined_addrs.len() as u64, Ordering::Relaxed);
+            for a in joined_addrs {
+                log::info(
+                    "cluster",
+                    "member joined",
+                    &[
+                        ("peer", a.clone()),
+                        ("node", self.cfg.advertise.clone()),
+                    ],
+                );
+            }
         }
         if !outcome.resurrected.is_empty() {
             self.stats
@@ -679,6 +702,11 @@ impl Cluster {
         }
         if outcome.refuted {
             self.stats.gossip_refutations.fetch_add(1, Ordering::Relaxed);
+            log::warn(
+                "cluster",
+                "refuted own death certificate",
+                &[("node", self.cfg.advertise.clone())],
+            );
         }
         if outcome.evicted_tombstones > 0 {
             self.stats
@@ -688,6 +716,11 @@ impl Cluster {
         for d in &outcome.died {
             self.stats.members_died.fetch_add(1, Ordering::Relaxed);
             self.pool.purge(d);
+            log::warn(
+                "cluster",
+                "member died (gossiped certificate)",
+                &[("peer", d.clone()), ("node", self.cfg.advertise.clone())],
+            );
         }
     }
 
@@ -734,6 +767,14 @@ impl Cluster {
         if changed {
             self.stats.members_died.fetch_add(1, Ordering::Relaxed);
             self.pool.purge(addr);
+            log::warn(
+                "cluster",
+                "member died (sustained probe failure)",
+                &[
+                    ("peer", addr.to_string()),
+                    ("node", self.cfg.advertise.clone()),
+                ],
+            );
         }
     }
 
@@ -776,6 +817,14 @@ impl Cluster {
         drop(st);
         if changed {
             self.stats.members_resurrected.fetch_add(1, Ordering::Relaxed);
+            log::info(
+                "cluster",
+                "member resurrected",
+                &[
+                    ("peer", addr.to_string()),
+                    ("node", self.cfg.advertise.clone()),
+                ],
+            );
         }
     }
 
@@ -838,6 +887,14 @@ impl Cluster {
             self.stats.evictions.fetch_add(1, Ordering::Relaxed);
             // Idle connections to an evicted peer are dead weight.
             self.pool.purge(addr);
+            log::warn(
+                "cluster",
+                "peer evicted from routing",
+                &[
+                    ("peer", addr.to_string()),
+                    ("node", self.cfg.advertise.clone()),
+                ],
+            );
         }
     }
 
@@ -879,6 +936,14 @@ impl Cluster {
                     {
                         slot.health = PeerHealth::Healthy;
                         self.stats.readmissions.fetch_add(1, Ordering::Relaxed);
+                        log::info(
+                            "cluster",
+                            "peer readmitted to routing",
+                            &[
+                                ("peer", addr.to_string()),
+                                ("node", self.cfg.advertise.clone()),
+                            ],
+                        );
                     }
                 }
                 PeerHealth::Suspect => slot.health = PeerHealth::Healthy,
@@ -1003,17 +1068,22 @@ impl Cluster {
     /// Forward a decoded request body to a peer and return its
     /// response. Transport failures are `Err` (the caller records them
     /// and fails over); HTTP-level errors pass through as responses.
+    /// `extra_headers` ride along after the proxy loop-guard tag (the
+    /// trace-propagation header travels here).
     pub fn forward(
         &self,
         addr: &str,
         path: &str,
         body: &[u8],
+        extra_headers: &[(&str, &str)],
     ) -> Result<Response, String> {
+        let mut headers: Vec<(&str, &str)> = vec![(PROXIED_HEADER, "1")];
+        headers.extend_from_slice(extra_headers);
         self.request(
             addr,
             "POST",
             path,
-            &[(PROXIED_HEADER, "1")],
+            &headers,
             body,
             &Deadlines::uniform(self.cfg.proxy_timeout),
             MAX_PROXY_BODY,
@@ -1078,7 +1148,15 @@ impl Cluster {
             .get("content-type")
             .cloned()
             .unwrap_or_else(|| "application/json".into());
-        Ok(Response { status, content_type, body: resp_body })
+        // Peer response headers (including its trace echo) are not
+        // propagated: the receiving dispatch stamps its own trace
+        // header on whatever it returns.
+        Ok(Response {
+            status,
+            content_type,
+            body: resp_body,
+            headers: Vec::new(),
+        })
     }
 
     /// One liveness probe: `GET /health` must answer 200 within the
@@ -1175,6 +1253,12 @@ impl Cluster {
     /// would split-brain; the retry cost is bounded by the configured
     /// join list.
     pub fn gossip_round(&self) {
+        let started = Instant::now();
+        self.gossip_round_inner();
+        self.stats.gossip_round_hist.observe(started.elapsed());
+    }
+
+    fn gossip_round_inner(&self) {
         let round = self.gossip_rounds.fetch_add(1, Ordering::Relaxed);
         // One membership snapshot for both target lists, so they can't
         // disagree about a concurrently merged member.

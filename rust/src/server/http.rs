@@ -566,15 +566,22 @@ pub fn response_from_message(
 /// Serialize a response head+body into one buffer (single `write_all`:
 /// no mid-message gap for the peer's read timeout to land in).
 pub fn encode_response(resp: &Response, keep_alive: bool) -> Vec<u8> {
-    let head = format!(
+    let mut head = format!(
         "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n\
-         Connection: {}\r\n\r\n",
+         Connection: {}\r\n",
         resp.status,
         reason(resp.status),
         resp.content_type,
         resp.body.len(),
         if keep_alive { "keep-alive" } else { "close" },
     );
+    for (name, value) in &resp.headers {
+        head.push_str(name);
+        head.push_str(": ");
+        head.push_str(value);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
     let mut msg = head.into_bytes();
     msg.extend_from_slice(&resp.body);
     msg
@@ -772,6 +779,11 @@ pub struct Response {
     pub status: u16,
     pub content_type: String,
     pub body: Vec<u8>,
+    /// Extra response headers beyond the Content-Type/Content-Length/
+    /// Connection trio that [`encode_response`] always emits (e.g. the
+    /// `x-tanhvf-trace` propagation header). Names must not collide
+    /// with the built-in three.
+    pub headers: Vec<(String, String)>,
 }
 
 impl Response {
@@ -780,6 +792,7 @@ impl Response {
             status,
             content_type: "application/json".into(),
             body: json::write(v).into_bytes(),
+            headers: Vec::new(),
         }
     }
 
@@ -788,7 +801,14 @@ impl Response {
             status,
             content_type: "text/plain; charset=utf-8".into(),
             body: body.as_bytes().to_vec(),
+            headers: Vec::new(),
         }
+    }
+
+    /// Attach an extra response header (builder-style).
+    pub fn with_header(mut self, name: &str, value: &str) -> Response {
+        self.headers.push((name.to_string(), value.to_string()));
+        self
     }
 }
 
@@ -800,6 +820,7 @@ pub fn reason(status: u16) -> &'static str {
         404 => "Not Found",
         405 => "Method Not Allowed",
         408 => "Request Timeout",
+        410 => "Gone",
         413 => "Payload Too Large",
         431 => "Request Header Fields Too Large",
         500 => "Internal Server Error",

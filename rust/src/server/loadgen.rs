@@ -45,6 +45,7 @@ use crate::util::rng::Rng;
 use crate::util::stats::percentile;
 
 use super::http::HttpConn;
+use super::trace;
 
 /// Workload description for [`run`].
 #[derive(Clone, Debug)]
@@ -65,6 +66,10 @@ pub struct LoadgenConfig {
     /// (keep within the smallest route's input format).
     pub word_range: i64,
     pub seed: u64,
+    /// Record the server-assigned trace ID of every Nth request per
+    /// connection (0 disables sampling). The report then fetches the
+    /// slowest sampled request's span tree from `/debug/trace/{id}`.
+    pub trace_sample: usize,
 }
 
 impl LoadgenConfig {
@@ -77,6 +82,7 @@ impl LoadgenConfig {
             models: models.iter().map(|m| m.to_string()).collect(),
             word_range: 128,
             seed: 42,
+            trace_sample: 0,
         }
     }
 }
@@ -92,6 +98,10 @@ pub struct LoadReport {
     pub p95_us: u64,
     pub p99_us: u64,
     pub max_us: u64,
+    /// Trace ID of the slowest sampled request (trace sampling on).
+    pub slowest_trace_id: Option<String>,
+    /// That trace's span tree as served by `/debug/trace/{id}`.
+    pub slowest_trace: Option<Json>,
 }
 
 impl LoadReport {
@@ -122,22 +132,26 @@ impl LoadReport {
     /// Machine-readable form: the perf-trajectory record the
     /// `http_serving` bench persists to `BENCH_http_serving.json`.
     pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("requests", Json::Num(self.requests as f64)),
+            ("failures", Json::Num(self.failures as f64)),
+            ("words", Json::Num(self.words as f64)),
+            ("wall_s", Json::Num(self.wall.as_secs_f64())),
+            ("rps", Json::Num(self.req_per_s())),
+            ("words_per_s", Json::Num(self.words_per_s())),
+            ("p50_us", Json::Num(self.p50_us as f64)),
+            ("p95_us", Json::Num(self.p95_us as f64)),
+            ("p99_us", Json::Num(self.p99_us as f64)),
+            ("max_us", Json::Num(self.max_us as f64)),
+        ];
+        if let Some(id) = &self.slowest_trace_id {
+            fields.push(("slowest_trace_id", Json::Str(id.clone())));
+        }
+        if let Some(tree) = &self.slowest_trace {
+            fields.push(("slowest_trace", tree.clone()));
+        }
         Json::Obj(
-            [
-                ("requests", Json::Num(self.requests as f64)),
-                ("failures", Json::Num(self.failures as f64)),
-                ("words", Json::Num(self.words as f64)),
-                ("wall_s", Json::Num(self.wall.as_secs_f64())),
-                ("rps", Json::Num(self.req_per_s())),
-                ("words_per_s", Json::Num(self.words_per_s())),
-                ("p50_us", Json::Num(self.p50_us as f64)),
-                ("p95_us", Json::Num(self.p95_us as f64)),
-                ("p99_us", Json::Num(self.p99_us as f64)),
-                ("max_us", Json::Num(self.max_us as f64)),
-            ]
-            .into_iter()
-            .map(|(k, v)| (k.to_string(), v))
-            .collect(),
+            fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect(),
         )
     }
 }
@@ -154,22 +168,37 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport, String> {
     for ci in 0..cfg.connections {
         let cfg = cfg.clone();
         handles.push(std::thread::spawn(
-            move || -> Result<(u64, u64, Vec<u64>), String> {
-                connection_loop(&cfg, ci)
-            },
+            move || -> Result<ConnResult, String> { connection_loop(&cfg, ci) },
         ));
     }
     let mut words = 0u64;
     let mut failures = 0u64;
     let mut lats: Vec<u64> = Vec::new();
+    let mut sampled: Vec<(u64, String)> = Vec::new();
     for h in handles {
-        let (w, f, l) =
+        let (w, f, l, t) =
             h.join().map_err(|_| "loadgen thread panicked".to_string())??;
         words += w;
         failures += f;
         lats.extend(l);
+        sampled.extend(t);
     }
     let wall = t0.elapsed();
+    // Slowest sampled request: fetch its span tree from the first
+    // front so the report carries one concrete worst-case breakdown.
+    // Best-effort — a 404/410 (evicted under load) just drops the tree.
+    let slowest = sampled.into_iter().max_by_key(|(us, _)| *us);
+    let (slowest_trace_id, slowest_trace) = match slowest {
+        Some((_, id)) => {
+            let tree =
+                http_get(&cfg.addrs[0], &format!("/debug/trace/{id}"))
+                    .ok()
+                    .filter(|(status, _)| *status == 200)
+                    .and_then(|(_, body)| json::parse(&body).ok());
+            (Some(id), tree)
+        }
+        None => (None, None),
+    };
     // Nearest-rank percentiles via the shared helper (the old local
     // picker truncated the rank and under-reported p95/p99).
     lats.sort_unstable();
@@ -182,13 +211,19 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport, String> {
         p95_us: percentile(&lats, 0.95),
         p99_us: percentile(&lats, 0.99),
         max_us: lats.last().copied().unwrap_or(0),
+        slowest_trace_id,
+        slowest_trace,
     })
 }
+
+/// Per-connection totals: (words, failures, latencies, sampled
+/// latency/trace-ID pairs).
+type ConnResult = (u64, u64, Vec<u64>, Vec<(u64, String)>);
 
 fn connection_loop(
     cfg: &LoadgenConfig,
     ci: usize,
-) -> Result<(u64, u64, Vec<u64>), String> {
+) -> Result<ConnResult, String> {
     let addr = &cfg.addrs[ci % cfg.addrs.len()];
     let stream = TcpStream::connect(addr)
         .map_err(|e| format!("connect {addr}: {e}"))?;
@@ -197,6 +232,7 @@ fn connection_loop(
     let mut conn = HttpConn::new(stream);
     let mut rng = Rng::new(cfg.seed ^ (ci as u64).wrapping_mul(0x9E3779B9));
     let mut lats = Vec::with_capacity(cfg.requests_per_connection);
+    let mut sampled: Vec<(u64, String)> = Vec::new();
     let mut failures = 0u64;
     let mut words_done = 0u64;
     for r in 0..cfg.requests_per_connection {
@@ -217,16 +253,22 @@ fn connection_loop(
         let t = Instant::now();
         conn.write_request("POST", "/v1/batch", body.as_bytes())
             .map_err(|e| format!("write: {e}"))?;
-        let (status, _, _) =
+        let (status, headers, _) =
             conn.read_response(1 << 22).map_err(|e| format!("read: {e}"))?;
         if status == 200 {
-            lats.push(t.elapsed().as_micros() as u64);
+            let lat_us = t.elapsed().as_micros() as u64;
+            lats.push(lat_us);
             words_done += cfg.words_per_request as u64;
+            if cfg.trace_sample > 0 && r % cfg.trace_sample == 0 {
+                if let Some(id) = headers.get(trace::TRACE_HEADER) {
+                    sampled.push((lat_us, id.clone()));
+                }
+            }
         } else {
             failures += 1;
         }
     }
-    Ok((words_done, failures, lats))
+    Ok((words_done, failures, lats, sampled))
 }
 
 // ---------------------------------------------------------------------

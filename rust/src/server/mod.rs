@@ -45,6 +45,12 @@
 //!   cluster client leg (proxy, probe, gossip): bounded idle lists,
 //!   LRU eviction, discard-and-redial on broken reuse, hit/miss
 //!   counters on `/metrics`. Dials through a [`transport::Transport`].
+//! * [`trace`]   — end-to-end distributed tracing: 128-bit trace IDs
+//!   propagated across proxy/fan-out legs via the `x-tanhvf-trace`
+//!   header, per-node bounded span ring served at
+//!   `GET /debug/trace/{id}`, slow-request logging, and the
+//!   virtual-clock seam that keeps span trees deterministic under the
+//!   simulator.
 //! * [`sim`]     — deterministic cluster simulation: an in-process
 //!   [`sim::SimNet`] under a **virtual clock** with seeded fault
 //!   injection (partitions, delay, loss, slow peers, crash/restart).
@@ -87,6 +93,7 @@ pub mod pool;
 #[cfg(unix)]
 pub(crate) mod reactor;
 pub mod sim;
+pub mod trace;
 pub mod transport;
 
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -165,6 +172,22 @@ fn default_event_loop() -> bool {
     }
 }
 
+/// The `/health` name of the transport backend a server with this
+/// `event_loop` setting runs on.
+#[cfg(unix)]
+fn backend_name(event_loop: bool) -> &'static str {
+    if event_loop {
+        reactor::backend_name()
+    } else {
+        "threaded"
+    }
+}
+
+#[cfg(not(unix))]
+fn backend_name(_event_loop: bool) -> &'static str {
+    "threaded"
+}
+
 /// HTTP-level counters (the coordinator keeps per-route metrics).
 #[derive(Default)]
 pub(crate) struct HttpCounters {
@@ -196,6 +219,14 @@ pub(crate) struct AppState {
     /// Present when this node runs in cluster mode: ring + peer table
     /// + proxy path (see [`cluster`]).
     pub cluster: Option<Arc<cluster::Cluster>>,
+    /// Per-node span ring + trace/span ID generator (see [`trace`]).
+    pub trace: Arc<trace::TraceStore>,
+    /// Span timestamp source: wall-monotonic in production, the
+    /// simulator's virtual clock in `sim_*` tests.
+    pub clock: trace::Clock,
+    /// Transport backend actually selected (`threaded`/`epoll`/`poll`)
+    /// — reported on `/health`.
+    pub backend: &'static str,
 }
 
 /// A running HTTP activation service. Dropping it (or calling
@@ -262,6 +293,11 @@ impl Server {
             started: Instant::now(),
             request_timeout: cfg.request_timeout,
             cluster,
+            trace: Arc::new(trace::TraceStore::with_entropy(
+                trace::DEFAULT_SPAN_CAPACITY,
+            )),
+            clock: trace::Clock::wall(),
+            backend: backend_name(cfg.event_loop),
         });
         let pool = Arc::new(ThreadPool::new(cfg.workers.max(1)));
         let shutdown = Arc::new(AtomicBool::new(false));

@@ -44,8 +44,10 @@
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use super::transport::{Connection, Deadlines, TcpTransport, Transport};
+use crate::coordinator::metrics::Histogram;
 
 /// Pool observability counters, surfaced on `/metrics`.
 #[derive(Default)]
@@ -60,6 +62,9 @@ pub struct PoolStats {
     pub discards: AtomicU64,
     /// Idle connections evicted by the per-peer bound (LRU).
     pub evictions: AtomicU64,
+    /// Wall-clock latency of fresh dials (pool misses and redials) —
+    /// `tanhvf_cluster_pool_dial_seconds` on `/metrics`.
+    pub dial_hist: Histogram,
 }
 
 /// A checked-out connection plus its provenance: `reused` tells the
@@ -138,7 +143,9 @@ impl ConnPool {
         deadlines: &Deadlines,
     ) -> Result<Checked, String> {
         self.stats.misses.fetch_add(1, Ordering::Relaxed);
+        let started = Instant::now();
         let conn = self.transport.connect(addr, deadlines)?;
+        self.stats.dial_hist.observe(started.elapsed());
         Ok(Checked { conn, reused: false })
     }
 

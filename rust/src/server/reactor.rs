@@ -515,6 +515,16 @@ pub(crate) fn force_poll_from_env() -> bool {
     std::env::var("TANHVF_POLLER").as_deref() == Ok("poll")
 }
 
+/// Human name of the readiness mechanism the reactor will select —
+/// surfaced on `/health` so a running node's backend is discoverable.
+pub(crate) fn backend_name() -> &'static str {
+    if cfg!(target_os = "linux") && !force_poll_from_env() {
+        "epoll"
+    } else {
+        "poll"
+    }
+}
+
 /// Prepare the poller *before* the reactor thread spawns, so setup
 /// failures (epoll/pipe fd exhaustion, fcntl errors) surface as
 /// `Server::start` errors instead of a silently dead server.

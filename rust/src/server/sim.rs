@@ -655,6 +655,7 @@ mod tests {
     use crate::server::cluster::{ClusterConfig, Node};
     use crate::server::http::Request;
     use crate::server::pool::ConnPool;
+    use crate::server::trace;
     use crate::server::{AppState, HttpCounters};
     use crate::tanh::TanhConfig;
     use crate::util::json::Json;
@@ -833,6 +834,16 @@ mod tests {
         cluster: Arc<Cluster>,
     }
 
+    /// Seed a front's trace/span-ID stream from its address: stable
+    /// across runs (the determinism test replays it), distinct across
+    /// fronts.
+    fn trace_seed(addr: &str) -> u64 {
+        addr.bytes()
+            .fold(0x5eed_u64, |a, b| {
+                a.wrapping_mul(31).wrapping_add(b as u64)
+            })
+    }
+
     fn start_front(
         net: &Arc<SimNet>,
         addr: &str,
@@ -858,12 +869,23 @@ mod tests {
         let router =
             Router::start(vec![Route::native("s3_5", TanhConfig::s3_5())])
                 .unwrap();
+        let clock = {
+            let net = Arc::clone(net);
+            trace::Clock::virtual_ms(Arc::new(move || net.now_ms()))
+        };
         let state = Arc::new(AppState {
             router,
             http: HttpCounters::default(),
             started: Instant::now(),
             request_timeout: Duration::from_secs(5),
             cluster: Some(cluster.clone()),
+            trace: Arc::new(trace::TraceStore::new(
+                trace::DEFAULT_SPAN_CAPACITY,
+                trace_seed(addr),
+                u64::MAX,
+            )),
+            clock,
+            backend: "sim",
         });
         let weak = Arc::downgrade(&state);
         net.register(
@@ -945,6 +967,13 @@ mod tests {
             started: Instant::now(),
             request_timeout: Duration::from_secs(5),
             cluster: None,
+            trace: Arc::new(trace::TraceStore::new(
+                trace::DEFAULT_SPAN_CAPACITY,
+                7,
+                u64::MAX,
+            )),
+            clock: trace::Clock::wall(),
+            backend: "sim",
         });
         let addrs: Vec<String> =
             (1..=3).map(|i| format!("n{i}:1")).collect();
@@ -1041,6 +1070,93 @@ mod tests {
         assert_eq!(fronts[0].cluster.live_replicas("s3_5")[0], Node::Local);
         for f in &fronts {
             f.cluster.stop();
+        }
+    }
+
+    // -- trace determinism ---------------------------------------------
+
+    fn get_req(path: &str) -> Request {
+        Request {
+            method: "GET".into(),
+            target: path.into(),
+            version: "HTTP/1.1".into(),
+            headers: BTreeMap::new(),
+            body: Vec::new(),
+        }
+    }
+
+    /// Same build twice → bit-identical span trees: trace/span IDs come
+    /// from pinned seeds, timestamps from the virtual clock, and the
+    /// fan-out allocates shard span IDs (and runs its local shard)
+    /// before any shard thread spawns, so nothing in the tree depends
+    /// on thread interleaving.
+    #[test]
+    fn sim_trace_span_tree_is_deterministic() {
+        let run = || {
+            let net = SimNet::new();
+            let addrs = ["t1:1".to_string(), "t2:1".to_string()];
+            let fronts: Vec<SimFront> = addrs
+                .iter()
+                .map(|a| {
+                    let peers: Vec<String> = addrs
+                        .iter()
+                        .filter(|p| *p != a)
+                        .cloned()
+                        .collect();
+                    start_front(&net, a, peers, 2)
+                })
+                .collect();
+            let words: Vec<i64> = (0..16).map(|i| i * 11 - 80).collect();
+            let resp = api::dispatch(&fronts[0].state, &batch_req(&words));
+            assert_eq!(resp.status, 200);
+            let trace_hex = resp
+                .headers
+                .iter()
+                .find(|(k, _)| k == trace::TRACE_HEADER)
+                .map(|(_, v)| v.clone())
+                .expect("traced response carries the trace header");
+            let tree = api::dispatch(
+                &fronts[0].state,
+                &get_req(&format!("/debug/trace/{trace_hex}")),
+            );
+            assert_eq!(tree.status, 200);
+            for f in &fronts {
+                f.cluster.stop();
+            }
+            (trace_hex, String::from_utf8(tree.body).unwrap())
+        };
+        let (id1, tree1) = run();
+        let (id2, tree2) = run();
+        assert_eq!(id1, id2, "trace IDs must replay identically");
+        assert_eq!(tree1, tree2, "span trees must replay bit-identically");
+        // Structure: one server root whose children are the fan-out's
+        // local shard and the remote shard leg.
+        let v = json::parse(&tree1).unwrap();
+        let roots = v.get("spans").unwrap().as_arr().unwrap();
+        assert_eq!(roots.len(), 1, "single server root");
+        let root = &roots[0];
+        assert_eq!(root.get("kind").unwrap().as_str().unwrap(), "server");
+        let kids = root.get("children").unwrap().as_arr().unwrap();
+        let kinds: Vec<&str> = kids
+            .iter()
+            .map(|k| k.get("kind").unwrap().as_str().unwrap())
+            .collect();
+        assert!(kinds.contains(&"local"), "local shard child: {kinds:?}");
+        assert!(kinds.contains(&"shard"), "remote shard child: {kinds:?}");
+        // Virtual-clock timestamps: the remote shard leg spans virtual
+        // time (connect+send+recv each tick the clock), the server span
+        // encloses its children.
+        let root_start =
+            root.get("start_us").unwrap().as_f64().unwrap() as u64;
+        let root_end = root.get("end_us").unwrap().as_f64().unwrap() as u64;
+        for k in kids {
+            let ks = k.get("start_us").unwrap().as_f64().unwrap() as u64;
+            let ke = k.get("end_us").unwrap().as_f64().unwrap() as u64;
+            assert!(ks <= ke, "child span runs backwards");
+            assert!(
+                root_start <= ks && ke <= root_end,
+                "child span escapes the server span"
+            );
         }
     }
 }

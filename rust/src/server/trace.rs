@@ -1,0 +1,563 @@
+//! End-to-end distributed tracing for the serving stack.
+//!
+//! Every traced request gets a 128-bit trace ID; every leg of its
+//! execution (server dispatch, proxy forward, fan-out shard) records a
+//! [`Span`] with start/end timestamps, peer, route, status, and a
+//! free-form annotation (failover hops, transport errors). The trace
+//! ID plus the caller's span ID ride the `x-tanhvf-trace` header
+//! ([`TRACE_HEADER`]) across cluster legs, so the receiving node's
+//! server span nests under the sender's client span; the response
+//! carries the bare trace ID back to the external client. Gossip and
+//! health probes are deliberately untraced — they are periodic
+//! background chatter, not request work.
+//!
+//! Spans land in a per-node bounded ring buffer ([`TraceStore`]):
+//! overflow evicts the oldest span (visible as
+//! `tanhvf_spans_dropped_total` / `tanhvf_trace_store_bytes` on
+//! `/metrics`), and `GET /debug/trace/{id}` renders whatever the node
+//! still holds as a JSON span tree — 404 for never-seen IDs, 410 for
+//! IDs the ring remembers evicting.
+//!
+//! Two determinism seams matter for the simulator
+//! ([`super::sim`]):
+//!
+//! * **Time** goes through [`Clock`]: wall-monotonic in production,
+//!   the simulator's virtual clock under `SimNet` — so a replayed
+//!   seed yields bit-identical span timestamps.
+//! * **IDs** come from a seeded [`SplitMix64`] stream. Production
+//!   seeds from boot entropy; tests pin the seed. Callers on a
+//!   deterministic path must allocate IDs in a deterministic order
+//!   (the fan-out path allocates shard span IDs before spawning shard
+//!   threads for exactly this reason).
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::json::{self, Json};
+use crate::util::log;
+use crate::util::rng::SplitMix64;
+
+/// Request *and* response header carrying trace context.
+///
+/// Request form: `<trace-id:32 hex>-<parent-span-id:16 hex>` — the
+/// parent is the sender's client-leg span, so the receiver's server
+/// span nests under it. Response form: bare `<trace-id:32 hex>`.
+pub const TRACE_HEADER: &str = "x-tanhvf-trace";
+
+/// Default span-ring capacity (spans, not traces). At ~200 bytes per
+/// span this bounds the store near 1 MiB.
+pub const DEFAULT_SPAN_CAPACITY: usize = 4096;
+
+/// Evicted-trace memory: how many distinct trace IDs the store
+/// remembers having dropped spans for (the 410-vs-404 distinction).
+const EVICTED_IDS_KEPT: usize = 512;
+
+/// Default slow-request threshold when `TANHVF_SLOW_REQUEST_MS` is
+/// unset: completed root traces slower than this are logged.
+const DEFAULT_SLOW_REQUEST_MS: u64 = 500;
+
+// ---------------------------------------------------------------------
+// Clock
+// ---------------------------------------------------------------------
+
+/// Span timestamp source: microseconds since an arbitrary per-node
+/// origin. Production uses a monotonic wall anchor; the simulator
+/// injects its virtual clock so span trees replay bit-identically.
+#[derive(Clone)]
+pub struct Clock(ClockKind);
+
+#[derive(Clone)]
+enum ClockKind {
+    Wall(Instant),
+    /// Closure returning virtual *milliseconds* (the simulator's
+    /// native unit).
+    Virtual(Arc<dyn Fn() -> u64 + Send + Sync>),
+}
+
+impl Clock {
+    /// Monotonic wall clock anchored at construction.
+    pub fn wall() -> Clock {
+        Clock(ClockKind::Wall(Instant::now()))
+    }
+
+    /// Virtual clock: `now_ms` returns the simulator's current virtual
+    /// millisecond.
+    pub fn virtual_ms(now_ms: Arc<dyn Fn() -> u64 + Send + Sync>) -> Clock {
+        Clock(ClockKind::Virtual(now_ms))
+    }
+
+    /// Current time in microseconds since the clock's origin.
+    pub fn now_us(&self) -> u64 {
+        match &self.0 {
+            ClockKind::Wall(origin) => origin.elapsed().as_micros() as u64,
+            ClockKind::Virtual(f) => f().saturating_mul(1000),
+        }
+    }
+}
+
+impl std::fmt::Debug for Clock {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match &self.0 {
+            ClockKind::Wall(_) => f.write_str("Clock::Wall"),
+            ClockKind::Virtual(_) => f.write_str("Clock::Virtual"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// IDs and header codec
+// ---------------------------------------------------------------------
+
+/// 128-bit trace identifier (hex-rendered, 32 chars on the wire).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct TraceId(pub u128);
+
+impl TraceId {
+    pub fn hex(&self) -> String {
+        format!("{:032x}", self.0)
+    }
+
+    pub fn parse(s: &str) -> Option<TraceId> {
+        if s.len() != 32 {
+            return None;
+        }
+        u128::from_str_radix(s, 16).ok().map(TraceId)
+    }
+}
+
+/// Render a span ID as its 16-hex-char wire form.
+pub fn span_id_hex(id: u64) -> String {
+    format!("{id:016x}")
+}
+
+/// Encode the request-side header value: trace ID plus the sender's
+/// span (the receiver's parent).
+pub fn encode_header(trace: TraceId, parent_span: u64) -> String {
+    format!("{}-{}", trace.hex(), span_id_hex(parent_span))
+}
+
+/// Decode an incoming header. Accepts the full `trace-parent` request
+/// form and the bare-trace response form (parent 0).
+pub fn decode_header(value: &str) -> Option<(TraceId, u64)> {
+    match value.split_once('-') {
+        Some((t, p)) => {
+            if p.len() != 16 {
+                return None;
+            }
+            let trace = TraceId::parse(t)?;
+            let parent = u64::from_str_radix(p, 16).ok()?;
+            Some((trace, parent))
+        }
+        None => TraceId::parse(value).map(|t| (t, 0)),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Spans
+// ---------------------------------------------------------------------
+
+/// One completed leg of a traced request.
+#[derive(Clone, Debug)]
+pub struct Span {
+    pub trace: TraceId,
+    pub id: u64,
+    /// Parent span ID; 0 marks a root (no parent known to this node).
+    pub parent: u64,
+    /// Leg kind: `server` (dispatch on this node), `forward` (proxy
+    /// leg to the ring owner), `shard` (one fan-out shard), `local`
+    /// (the fan-out's locally-evaluated shard).
+    pub kind: &'static str,
+    /// HTTP route (`/v1/batch`) the leg served.
+    pub route: String,
+    /// Remote peer address for client legs, empty for local work.
+    pub peer: String,
+    /// HTTP status of the leg; 0 for legs that failed below HTTP.
+    pub status: u16,
+    pub start_us: u64,
+    pub end_us: u64,
+    /// Retry/failover annotation (`failover hop 1`, transport errors).
+    pub note: String,
+}
+
+impl Span {
+    pub fn new(
+        trace: TraceId,
+        id: u64,
+        parent: u64,
+        kind: &'static str,
+        route: &str,
+    ) -> Span {
+        Span {
+            trace,
+            id,
+            parent,
+            kind,
+            route: route.to_string(),
+            peer: String::new(),
+            status: 0,
+            start_us: 0,
+            end_us: 0,
+            note: String::new(),
+        }
+    }
+
+    /// Approximate heap+inline footprint, for the store-bytes gauge.
+    fn cost(&self) -> u64 {
+        (std::mem::size_of::<Span>()
+            + self.route.len()
+            + self.peer.len()
+            + self.note.len()) as u64
+    }
+}
+
+// ---------------------------------------------------------------------
+// Store
+// ---------------------------------------------------------------------
+
+/// `GET /debug/trace/{id}` resolution.
+pub enum TraceQuery {
+    /// Spans this node still holds for the trace (possibly partial if
+    /// eviction already claimed early legs).
+    Found(Vec<Span>),
+    /// The node held spans for this trace once, but the ring evicted
+    /// them all (HTTP 410).
+    Evicted,
+    /// Never seen here (HTTP 404).
+    Unknown,
+}
+
+struct StoreInner {
+    spans: VecDeque<Span>,
+    /// Trace IDs with at least one evicted span, newest last.
+    evicted: VecDeque<TraceId>,
+}
+
+/// Per-node bounded span ring plus the trace-ID generator.
+pub struct TraceStore {
+    cap_spans: usize,
+    slow_threshold_us: u64,
+    ids: Mutex<SplitMix64>,
+    inner: Mutex<StoreInner>,
+    dropped: AtomicU64,
+    bytes: AtomicU64,
+}
+
+impl TraceStore {
+    /// Fully pinned constructor (tests and the simulator): same seed →
+    /// same ID stream.
+    pub fn new(
+        cap_spans: usize,
+        id_seed: u64,
+        slow_threshold_us: u64,
+    ) -> TraceStore {
+        TraceStore {
+            cap_spans: cap_spans.max(1),
+            slow_threshold_us,
+            ids: Mutex::new(SplitMix64::new(id_seed)),
+            inner: Mutex::new(StoreInner {
+                spans: VecDeque::new(),
+                evicted: VecDeque::new(),
+            }),
+            dropped: AtomicU64::new(0),
+            bytes: AtomicU64::new(0),
+        }
+    }
+
+    /// Production constructor: boot-entropy ID seed, slow threshold
+    /// from `TANHVF_SLOW_REQUEST_MS` (milliseconds, default 500).
+    pub fn with_entropy(cap_spans: usize) -> TraceStore {
+        let threshold_ms = std::env::var("TANHVF_SLOW_REQUEST_MS")
+            .ok()
+            .and_then(|v| v.parse::<u64>().ok())
+            .unwrap_or(DEFAULT_SLOW_REQUEST_MS);
+        TraceStore::new(
+            cap_spans,
+            entropy_seed(),
+            threshold_ms.saturating_mul(1000),
+        )
+    }
+
+    /// Completed root traces at least this long get a slow-request log
+    /// line.
+    pub fn slow_threshold_us(&self) -> u64 {
+        self.slow_threshold_us
+    }
+
+    /// Fresh nonzero span ID.
+    pub fn next_span_id(&self) -> u64 {
+        let mut g = self.ids.lock().unwrap();
+        loop {
+            let id = g.next_u64();
+            if id != 0 {
+                return id;
+            }
+        }
+    }
+
+    /// Fresh nonzero 128-bit trace ID.
+    pub fn new_trace_id(&self) -> TraceId {
+        let mut g = self.ids.lock().unwrap();
+        loop {
+            let hi = g.next_u64();
+            let lo = g.next_u64();
+            let id = ((hi as u128) << 64) | (lo as u128);
+            if id != 0 {
+                return TraceId(id);
+            }
+        }
+    }
+
+    /// Record a completed span, evicting the oldest past capacity.
+    pub fn push(&self, span: Span) {
+        self.bytes.fetch_add(span.cost(), Ordering::Relaxed);
+        let mut inner = self.inner.lock().unwrap();
+        inner.spans.push_back(span);
+        while inner.spans.len() > self.cap_spans {
+            let old = inner.spans.pop_front().unwrap();
+            self.bytes.fetch_sub(old.cost(), Ordering::Relaxed);
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            if !inner.evicted.contains(&old.trace) {
+                inner.evicted.push_back(old.trace);
+                if inner.evicted.len() > EVICTED_IDS_KEPT {
+                    inner.evicted.pop_front();
+                }
+            }
+        }
+    }
+
+    /// Spans evicted by the ring bound since boot
+    /// (`tanhvf_spans_dropped_total`).
+    pub fn spans_dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Approximate bytes currently held (`tanhvf_trace_store_bytes`).
+    pub fn bytes(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+
+    /// Spans currently held.
+    pub fn span_count(&self) -> usize {
+        self.inner.lock().unwrap().spans.len()
+    }
+
+    /// Resolve a trace ID against the ring (the `/debug/trace/{id}`
+    /// backend).
+    pub fn lookup(&self, id: TraceId) -> TraceQuery {
+        let inner = self.inner.lock().unwrap();
+        let spans: Vec<Span> = inner
+            .spans
+            .iter()
+            .filter(|s| s.trace == id)
+            .cloned()
+            .collect();
+        if !spans.is_empty() {
+            TraceQuery::Found(spans)
+        } else if inner.evicted.contains(&id) {
+            TraceQuery::Evicted
+        } else {
+            TraceQuery::Unknown
+        }
+    }
+
+    /// Slow-request log: called with the just-completed *root* span.
+    /// Emits one structured line carrying the whole local span tree if
+    /// the root exceeded the threshold.
+    pub fn maybe_log_slow(&self, root: &Span) {
+        let duration = root.end_us.saturating_sub(root.start_us);
+        if duration < self.slow_threshold_us {
+            return;
+        }
+        if !log::enabled(log::Level::Warn) {
+            return;
+        }
+        let spans = match self.lookup(root.trace) {
+            TraceQuery::Found(s) => s,
+            _ => vec![root.clone()],
+        };
+        log::warn(
+            "trace",
+            "slow request",
+            &[
+                ("trace_id", root.trace.hex()),
+                ("route", root.route.clone()),
+                ("status", root.status.to_string()),
+                ("duration_us", duration.to_string()),
+                ("spans", json::write(&span_tree_json(&spans))),
+            ],
+        );
+    }
+}
+
+/// Boot-entropy seed for production trace/span IDs: wall nanoseconds
+/// mixed with a stack address (ASLR), then finalized through splitmix.
+fn entropy_seed() -> u64 {
+    let t = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    let marker = 0u8;
+    let addr = &marker as *const u8 as u64;
+    SplitMix64::new(t ^ addr.rotate_left(29)).next_u64()
+}
+
+// ---------------------------------------------------------------------
+// Span-tree rendering
+// ---------------------------------------------------------------------
+
+/// Render spans as a canonical JSON forest: children nested under
+/// their parent, siblings ordered by `(start_us, span_id)`. Spans
+/// whose parent isn't in the set (evicted, or recorded on another
+/// node) surface as roots, so a partially-evicted trace still renders.
+pub fn span_tree_json(spans: &[Span]) -> Json {
+    let mut order: Vec<usize> = (0..spans.len()).collect();
+    order.sort_by_key(|&i| (spans[i].start_us, spans[i].id));
+    let ids: BTreeSet<u64> = spans.iter().map(|s| s.id).collect();
+    let mut children: BTreeMap<u64, Vec<usize>> = BTreeMap::new();
+    let mut roots: Vec<usize> = Vec::new();
+    for &i in &order {
+        let s = &spans[i];
+        if s.parent != 0 && s.parent != s.id && ids.contains(&s.parent) {
+            children.entry(s.parent).or_default().push(i);
+        } else {
+            roots.push(i);
+        }
+    }
+    fn build(
+        spans: &[Span],
+        children: &BTreeMap<u64, Vec<usize>>,
+        i: usize,
+    ) -> Json {
+        let s = &spans[i];
+        let mut m = BTreeMap::new();
+        m.insert("span_id".to_string(), Json::Str(span_id_hex(s.id)));
+        m.insert(
+            "parent_id".to_string(),
+            if s.parent == 0 {
+                Json::Null
+            } else {
+                Json::Str(span_id_hex(s.parent))
+            },
+        );
+        m.insert("kind".to_string(), Json::Str(s.kind.to_string()));
+        m.insert("route".to_string(), Json::Str(s.route.clone()));
+        m.insert("peer".to_string(), Json::Str(s.peer.clone()));
+        m.insert("status".to_string(), Json::Num(s.status as f64));
+        m.insert("start_us".to_string(), Json::Num(s.start_us as f64));
+        m.insert("end_us".to_string(), Json::Num(s.end_us as f64));
+        m.insert("note".to_string(), Json::Str(s.note.clone()));
+        let kids = children
+            .get(&s.id)
+            .map(|v| v.iter().map(|&c| build(spans, children, c)).collect())
+            .unwrap_or_default();
+        m.insert("children".to_string(), Json::Arr(kids));
+        Json::Obj(m)
+    }
+    Json::Arr(roots.iter().map(|&i| build(spans, &children, i)).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store() -> TraceStore {
+        TraceStore::new(8, 42, u64::MAX)
+    }
+
+    #[test]
+    fn header_roundtrip() {
+        let s = store();
+        let t = s.new_trace_id();
+        let parent = s.next_span_id();
+        let h = encode_header(t, parent);
+        assert_eq!(h.len(), 32 + 1 + 16);
+        assert_eq!(decode_header(&h), Some((t, parent)));
+        // Response (bare) form decodes with parent 0.
+        assert_eq!(decode_header(&t.hex()), Some((t, 0)));
+        assert_eq!(decode_header("nonsense"), None);
+        assert_eq!(decode_header(""), None);
+    }
+
+    #[test]
+    fn id_streams_are_seed_deterministic() {
+        let a = TraceStore::new(8, 7, 0);
+        let b = TraceStore::new(8, 7, 0);
+        assert_eq!(a.new_trace_id(), b.new_trace_id());
+        assert_eq!(a.next_span_id(), b.next_span_id());
+    }
+
+    #[test]
+    fn ring_evicts_counts_and_answers_410_vs_404() {
+        let s = store(); // capacity 8
+        let first = s.new_trace_id();
+        let mut sp = Span::new(first, 1, 0, "server", "/v1/eval");
+        sp.start_us = 1;
+        sp.end_us = 2;
+        s.push(sp.clone());
+        assert!(matches!(s.lookup(first), TraceQuery::Found(_)));
+        assert!(s.bytes() > 0);
+        // Flood the ring with other traces until `first` is evicted.
+        for i in 0..16u64 {
+            let t = s.new_trace_id();
+            let mut other = Span::new(t, i + 2, 0, "server", "/v1/eval");
+            other.start_us = 10 + i;
+            other.end_us = 11 + i;
+            s.push(other);
+        }
+        assert_eq!(s.span_count(), 8);
+        assert_eq!(s.spans_dropped(), 9);
+        assert!(matches!(s.lookup(first), TraceQuery::Evicted));
+        assert!(matches!(
+            s.lookup(TraceId(0xdead_beef)),
+            TraceQuery::Unknown
+        ));
+    }
+
+    #[test]
+    fn bytes_gauge_shrinks_on_eviction() {
+        let s = TraceStore::new(1, 3, 0);
+        let t = s.new_trace_id();
+        let mut big = Span::new(t, 1, 0, "server", "/v1/batch");
+        big.note = "x".repeat(1000);
+        s.push(big);
+        let with_big = s.bytes();
+        let mut small = Span::new(t, 2, 0, "server", "/v1/batch");
+        small.start_us = 5;
+        s.push(small); // evicts `big`
+        assert!(s.bytes() < with_big);
+        assert_eq!(s.spans_dropped(), 1);
+    }
+
+    #[test]
+    fn tree_nests_children_and_orders_siblings() {
+        let t = TraceId(9);
+        let mut root = Span::new(t, 10, 0, "server", "/v1/batch");
+        root.start_us = 0;
+        root.end_us = 100;
+        let mut shard_b = Span::new(t, 12, 10, "shard", "/v1/batch");
+        shard_b.start_us = 20;
+        shard_b.end_us = 40;
+        let mut shard_a = Span::new(t, 11, 10, "shard", "/v1/batch");
+        shard_a.start_us = 10;
+        shard_a.end_us = 30;
+        // Storage order scrambled on purpose; rendering must sort.
+        let tree = span_tree_json(&[shard_b.clone(), root, shard_a.clone()]);
+        let roots = tree.as_arr().unwrap();
+        assert_eq!(roots.len(), 1);
+        let kids = roots[0].get("children").unwrap().as_arr().unwrap();
+        assert_eq!(kids.len(), 2);
+        assert_eq!(
+            kids[0].get("span_id").unwrap().as_str().unwrap(),
+            span_id_hex(shard_a.id)
+        );
+        assert_eq!(
+            kids[1].get("span_id").unwrap().as_str().unwrap(),
+            span_id_hex(shard_b.id)
+        );
+        // An orphaned parent reference renders as a root, not a loss.
+        let orphan_tree = span_tree_json(&[shard_a]);
+        assert_eq!(orphan_tree.as_arr().unwrap().len(), 1);
+    }
+}

@@ -1,0 +1,163 @@
+//! Structured leveled JSON logging (zero-dep `tracing` stand-in).
+//!
+//! Every line is one JSON object on stderr:
+//!
+//! ```text
+//! {"ts_ms":1731571200123,"level":"info","target":"cluster",
+//!  "msg":"member died","peer":"127.0.0.1:8791"}
+//! ```
+//!
+//! The level is read once from `TANHVF_LOG`
+//! (`error|warn|info|debug`, default `info`); anything below the
+//! configured level is dropped before any formatting work happens, so
+//! disabled `debug` call sites cost one relaxed atomic load.
+//!
+//! Fields are flat string pairs — callers format numbers themselves.
+//! Keys are written as-is (callers use plain identifiers); values are
+//! JSON-escaped. `ts_ms` is wall-clock Unix milliseconds: log lines
+//! are for operators correlating with the outside world, unlike trace
+//! spans (`server::trace`) whose clock is virtualized under the
+//! simulator.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use super::json::{self, Json};
+
+/// Severity, ordered so that a numeric comparison implements "at least
+/// as severe as".
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl Level {
+    fn name(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+
+    fn parse(s: &str) -> Option<Level> {
+        match s {
+            "error" => Some(Level::Error),
+            "warn" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            _ => None,
+        }
+    }
+}
+
+/// Cached threshold: 0xff = not yet initialized from the environment.
+static THRESHOLD: AtomicU8 = AtomicU8::new(0xff);
+
+fn threshold() -> u8 {
+    let t = THRESHOLD.load(Ordering::Relaxed);
+    if t != 0xff {
+        return t;
+    }
+    let level = std::env::var("TANHVF_LOG")
+        .ok()
+        .and_then(|v| Level::parse(&v))
+        .unwrap_or(Level::Info);
+    THRESHOLD.store(level as u8, Ordering::Relaxed);
+    level as u8
+}
+
+/// Would a record at `level` be emitted? Lets callers skip expensive
+/// field construction for disabled levels.
+pub fn enabled(level: Level) -> bool {
+    level as u8 <= threshold()
+}
+
+/// Override the threshold programmatically (tests; wins over the
+/// environment for the rest of the process lifetime).
+pub fn set_level(level: Level) {
+    THRESHOLD.store(level as u8, Ordering::Relaxed);
+}
+
+fn now_ms() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+/// Emit one structured record. Prefer the [`error`]/[`warn`]/[`info`]/
+/// [`debug`] wrappers.
+pub fn log(level: Level, target: &str, msg: &str, fields: &[(&str, String)]) {
+    if !enabled(level) {
+        return;
+    }
+    let mut line = String::with_capacity(96);
+    line.push_str("{\"ts_ms\":");
+    line.push_str(&now_ms().to_string());
+    line.push_str(",\"level\":\"");
+    line.push_str(level.name());
+    line.push_str("\",\"target\":");
+    line.push_str(&json::write(&Json::Str(target.to_string())));
+    line.push_str(",\"msg\":");
+    line.push_str(&json::write(&Json::Str(msg.to_string())));
+    for (k, v) in fields {
+        line.push(',');
+        line.push_str(&json::write(&Json::Str((*k).to_string())));
+        line.push(':');
+        line.push_str(&json::write(&Json::Str(v.clone())));
+    }
+    line.push('}');
+    // One eprintln per record: the write is a single syscall for
+    // typical line lengths, so concurrent threads don't interleave.
+    eprintln!("{line}");
+}
+
+pub fn error(target: &str, msg: &str, fields: &[(&str, String)]) {
+    log(Level::Error, target, msg, fields);
+}
+
+pub fn warn(target: &str, msg: &str, fields: &[(&str, String)]) {
+    log(Level::Warn, target, msg, fields);
+}
+
+pub fn info(target: &str, msg: &str, fields: &[(&str, String)]) {
+    log(Level::Info, target, msg, fields);
+}
+
+pub fn debug(target: &str, msg: &str, fields: &[(&str, String)]) {
+    log(Level::Debug, target, msg, fields);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_order_matches_severity() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+    }
+
+    #[test]
+    fn parse_rejects_unknown() {
+        assert_eq!(Level::parse("warn"), Some(Level::Warn));
+        assert_eq!(Level::parse("verbose"), None);
+    }
+
+    #[test]
+    fn threshold_gates_levels() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+        set_level(Level::Debug);
+        assert!(enabled(Level::Debug));
+    }
+}

@@ -1,8 +1,9 @@
-//! Small shared utilities: JSON, errors, deterministic PRNG, order
-//! statistics, table formatting.
+//! Small shared utilities: JSON, errors, structured logging,
+//! deterministic PRNG, order statistics, table formatting.
 
 pub mod error;
 pub mod json;
+pub mod log;
 pub mod rng;
 pub mod stats;
 pub mod table;

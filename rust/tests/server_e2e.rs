@@ -1027,7 +1027,7 @@ fn pooled_forward_reuses_connections_across_sequential_requests() {
     .unwrap();
     let body = br#"{"model":"s3_5","words":[1,2,3]}"#;
     for _ in 0..3 {
-        let resp = cl.forward(&peer_addr, "/v1/batch", body).unwrap();
+        let resp = cl.forward(&peer_addr, "/v1/batch", body, &[]).unwrap();
         assert_eq!(resp.status, 200);
     }
     use std::sync::atomic::Ordering as O;
@@ -1109,12 +1109,12 @@ fn pooled_forward_discards_and_redials_when_peer_drops_connections() {
     .unwrap();
     // First forward dials and pools the connection (the peer said
     // keep-alive).
-    let r1 = cl.forward(&peer_addr, "/v1/batch", b"{}").unwrap();
+    let r1 = cl.forward(&peer_addr, "/v1/batch", b"{}", &[]).unwrap();
     assert_eq!(r1.status, 200);
     assert_eq!(cl.pool.idle_count(), 1);
     // Second forward checks the dead connection out, fails on it, and
     // must transparently redial — the caller sees one clean success.
-    let r2 = cl.forward(&peer_addr, "/v1/batch", b"{}").unwrap();
+    let r2 = cl.forward(&peer_addr, "/v1/batch", b"{}", &[]).unwrap();
     assert_eq!(r2.status, 200);
     use std::sync::atomic::Ordering as O;
     assert_eq!(cl.pool.stats.hits.load(O::Relaxed), 1);
@@ -1141,6 +1141,7 @@ fn metrics_help_and_type_pair_for_every_family() {
     assert_eq!(status, 200);
     let mut helped = std::collections::BTreeSet::new();
     let mut typed = std::collections::BTreeSet::new();
+    let mut histograms = std::collections::BTreeSet::new();
     let mut sampled = std::collections::BTreeSet::new();
     let mut premature = Vec::new();
     for line in body.lines() {
@@ -1156,12 +1157,25 @@ fn metrics_help_and_type_pair_for_every_family() {
             let name = it.next().unwrap().to_string();
             let typ = it.next().unwrap_or("");
             assert!(
-                matches!(typ, "counter" | "gauge"),
+                matches!(typ, "counter" | "gauge" | "histogram"),
                 "unexpected metric type: {line}"
             );
+            if typ == "histogram" {
+                histograms.insert(name.clone());
+            }
             typed.insert(name);
         } else if !line.trim().is_empty() {
-            let name = line.split(['{', ' ']).next().unwrap().to_string();
+            let mut name = line.split(['{', ' ']).next().unwrap().to_string();
+            // Histogram samples carry the family name plus a
+            // _bucket/_sum/_count suffix; resolve them to the family.
+            for suffix in ["_bucket", "_sum", "_count"] {
+                if let Some(base) = name.strip_suffix(suffix) {
+                    if histograms.contains(base) {
+                        name = base.to_string();
+                        break;
+                    }
+                }
+            }
             if !helped.contains(&name) || !typed.contains(&name) {
                 premature.push(name.clone());
             }
@@ -1183,12 +1197,26 @@ fn metrics_help_and_type_pair_for_every_family() {
         "tanhvf_cluster_members",
         "tanhvf_cluster_membership_events_total",
         "tanhvf_cluster_fanout_batches_total",
+        "tanhvf_request_duration_seconds",
+        "tanhvf_cluster_forward_duration_seconds",
+        "tanhvf_cluster_pool_dial_seconds",
+        "tanhvf_spans_dropped_total",
+        "tanhvf_trace_store_bytes",
     ] {
         assert!(
             sampled.contains(&fam.to_string()),
             "missing family {fam}"
         );
     }
+    // Histogram buckets are cumulative and end in +Inf == _count.
+    assert!(
+        body.contains("tanhvf_request_duration_seconds_bucket"),
+        "request histogram has bucket samples"
+    );
+    assert!(
+        body.contains("le=\"+Inf\""),
+        "histograms must expose the +Inf bucket"
+    );
     drop(fronts);
 }
 
@@ -1210,4 +1238,197 @@ fn keep_alive_and_graceful_shutdown() {
         TcpStream::connect(&addr).is_err(),
         "listener must be closed after shutdown"
     );
+}
+
+// ---------------------------------------------------------------------
+// Distributed tracing
+// ---------------------------------------------------------------------
+
+const TRACE_HEADER: &str = "x-tanhvf-trace";
+
+/// GET a trace's span tree from `/debug/trace/{id}` and return the
+/// parsed root spans.
+fn fetch_trace(addr: &str, id: &str) -> Vec<Json> {
+    let (status, body) =
+        loadgen::http_get(addr, &format!("/debug/trace/{id}")).unwrap();
+    assert_eq!(status, 200, "trace {id} not found on {addr}: {body}");
+    let v = tanh_vf::util::json::parse(&body).unwrap();
+    v.get("spans").and_then(Json::as_arr).unwrap().to_vec()
+}
+
+fn span_field<'a>(span: &'a Json, key: &str) -> &'a Json {
+    span.get(key).unwrap_or_else(|| panic!("span missing {key}"))
+}
+
+fn span_str<'a>(span: &'a Json, key: &str) -> &'a str {
+    span_field(span, key).as_str().unwrap()
+}
+
+fn span_num(span: &Json, key: &str) -> u64 {
+    span_field(span, key).as_f64().unwrap() as u64
+}
+
+#[test]
+fn trace_propagates_across_proxied_chunked_eval() {
+    let (fronts, addrs) = start_cluster_fronts(2, "native:s2_8");
+    let cl0 = fronts[0].cluster().unwrap();
+    let owner = cl0.owner_name("s2_8").unwrap();
+    let (send_to, owner_addr) = if owner == addrs[0] {
+        (&addrs[1], &addrs[0])
+    } else {
+        (&addrs[0], &addrs[1])
+    };
+
+    // Chunked POST /v1/eval to the non-owner: the proxy hop re-frames
+    // the body as Content-Length while the trace context rides the
+    // forward leg's header.
+    use std::io::Write;
+    let body = r#"{"model":"s2_8","word":7}"#.as_bytes();
+    let mut s = TcpStream::connect(send_to.as_str()).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+    s.write_all(
+        b"POST /v1/eval HTTP/1.1\r\nHost: t\r\n\
+          Transfer-Encoding: chunked\r\n\r\n",
+    )
+    .unwrap();
+    let (a, b) = body.split_at(9);
+    s.write_all(format!("{:x}\r\n", a.len()).as_bytes()).unwrap();
+    s.write_all(a).unwrap();
+    s.write_all(b"\r\n").unwrap();
+    s.write_all(format!("{:x}\r\n", b.len()).as_bytes()).unwrap();
+    s.write_all(b).unwrap();
+    s.write_all(b"\r\n0\r\n\r\n").unwrap();
+    let mut conn = HttpConn::new(s);
+    let (status, headers, resp) = conn.read_response(1 << 20).unwrap();
+    assert_eq!(status, 200, "{}", String::from_utf8_lossy(&resp));
+    let trace_id = headers
+        .get(TRACE_HEADER)
+        .expect("response carries the trace id")
+        .clone();
+    assert_eq!(trace_id.len(), 32, "bare trace id: {trace_id}");
+
+    // Front: one server root with a forward child aimed at the owner.
+    let roots = fetch_trace(send_to, &trace_id);
+    assert_eq!(roots.len(), 1, "front holds one root");
+    let root = &roots[0];
+    assert_eq!(span_str(root, "kind"), "server");
+    assert_eq!(span_str(root, "route"), "/v1/eval");
+    let kids = span_field(root, "children").as_arr().unwrap();
+    let fwd = kids
+        .iter()
+        .find(|k| span_str(k, "kind") == "forward")
+        .expect("forward child span");
+    assert_eq!(span_str(fwd, "peer"), owner_addr.as_str());
+    assert_eq!(span_num(fwd, "status"), 200);
+    // Monotone within the node: the forward leg nests in the root.
+    assert!(span_num(root, "start_us") <= span_num(fwd, "start_us"));
+    assert!(span_num(fwd, "start_us") <= span_num(fwd, "end_us"));
+    assert!(span_num(fwd, "end_us") <= span_num(root, "end_us"));
+
+    // Owner: its server span joined the same trace, parented by the
+    // front's forward span (cross-node propagation by IDs; clocks are
+    // per-node, so timestamps only order within one node).
+    let owner_roots = fetch_trace(owner_addr, &trace_id);
+    assert_eq!(owner_roots.len(), 1, "owner holds one root");
+    let oroot = &owner_roots[0];
+    assert_eq!(span_str(oroot, "kind"), "server");
+    assert_eq!(
+        span_str(oroot, "parent_id"),
+        span_str(fwd, "span_id"),
+        "owner's server span must nest under the forward leg"
+    );
+    drop(fronts);
+}
+
+#[test]
+fn trace_covers_replica_fanout_shards() {
+    let (fronts, addrs) =
+        start_cluster_fronts_with(2, "native:s2_8", |c| c.replicas = 2);
+    // 8 words across 2 replicas → one local shard plus one remote
+    // shard leg, all under one trace.
+    let words: Vec<Json> =
+        (0..8).map(|i| Json::Num((i * 3 - 12) as f64)).collect();
+    let mut conn = connect(&addrs[0]);
+    let body = tanh_vf::util::json::write(&obj(&[
+        ("model", Json::Str("s2_8".into())),
+        ("words", Json::Arr(words)),
+    ]));
+    conn.write_request("POST", "/v1/batch", body.as_bytes()).unwrap();
+    let (status, headers, resp) = conn.read_response(1 << 20).unwrap();
+    assert_eq!(status, 200, "{}", String::from_utf8_lossy(&resp));
+    assert_eq!(
+        fronts[0]
+            .cluster()
+            .unwrap()
+            .stats
+            .fanout_batches
+            .load(std::sync::atomic::Ordering::Relaxed),
+        1,
+        "batch must fan out"
+    );
+    let trace_id = headers.get(TRACE_HEADER).unwrap().clone();
+
+    // Front tree: server root with the local shard and the remote
+    // shard leg as children.
+    let roots = fetch_trace(&addrs[0], &trace_id);
+    assert_eq!(roots.len(), 1);
+    let root = &roots[0];
+    assert_eq!(span_str(root, "kind"), "server");
+    assert_eq!(span_str(root, "route"), "/v1/batch");
+    let kids = span_field(root, "children").as_arr().unwrap();
+    let local = kids
+        .iter()
+        .find(|k| span_str(k, "kind") == "local")
+        .expect("local shard span");
+    let shard = kids
+        .iter()
+        .find(|k| span_str(k, "kind") == "shard")
+        .expect("remote shard span");
+    assert_eq!(span_str(shard, "peer"), addrs[1].as_str());
+    for leg in [local, shard] {
+        assert!(span_num(leg, "start_us") <= span_num(leg, "end_us"));
+        assert!(span_num(root, "start_us") <= span_num(leg, "start_us"));
+        assert!(span_num(leg, "end_us") <= span_num(root, "end_us"));
+    }
+
+    // Replica: its server span nests under the front's shard leg —
+    // client → front → shard, stitched across nodes by span IDs.
+    let rep_roots = fetch_trace(&addrs[1], &trace_id);
+    assert_eq!(rep_roots.len(), 1);
+    assert_eq!(
+        span_str(&rep_roots[0], "parent_id"),
+        span_str(shard, "span_id")
+    );
+    drop(fronts);
+}
+
+#[test]
+fn debug_trace_answers_404_for_unknown_and_400_for_garbage() {
+    let (_srv, addr) = start_two_precision();
+    let unknown = "0123456789abcdef0123456789abcdef";
+    let (status, _) =
+        loadgen::http_get(&addr, &format!("/debug/trace/{unknown}")).unwrap();
+    assert_eq!(status, 404);
+    let (status, _) =
+        loadgen::http_get(&addr, "/debug/trace/not-a-trace-id").unwrap();
+    assert_eq!(status, 400);
+}
+
+#[test]
+fn loadgen_trace_sampling_captures_slowest_span_tree() {
+    let (_srv, addr) = start_two_precision();
+    let mut cfg = LoadgenConfig::new(addr, &["s3_12"]);
+    cfg.connections = 2;
+    cfg.requests_per_connection = 10;
+    cfg.words_per_request = 16;
+    cfg.trace_sample = 2;
+    let report = loadgen::run(&cfg).unwrap();
+    assert_eq!(report.failures, 0, "{}", report.render());
+    let id = report.slowest_trace_id.as_deref().expect("sampled trace id");
+    assert_eq!(id.len(), 32);
+    let tree = report.slowest_trace.as_ref().expect("sampled span tree");
+    let spans = tree.get("spans").and_then(Json::as_arr).unwrap();
+    assert!(!spans.is_empty(), "slowest trace renders at least one span");
+    let json = tanh_vf::util::json::write(&report.to_json());
+    assert!(json.contains("slowest_trace_id"), "{json}");
 }

@@ -492,7 +492,7 @@ fn sim_pool_redial_request_invariants() {
             let m0 = client.pool.stats.misses.load(Ordering::Relaxed);
             let e0 = net.executions(&server);
 
-            let result = client.forward(&server, "/op", b"{}");
+            let result = client.forward(&server, "/op", b"{}", &[]);
 
             let dh = client.pool.stats.hits.load(Ordering::Relaxed) - h0;
             let dm = client.pool.stats.misses.load(Ordering::Relaxed) - m0;

@@ -1,0 +1,142 @@
+#!/usr/bin/env python3
+"""Lint a Prometheus text exposition read from stdin.
+
+Checks the invariants the scrape pipeline relies on:
+
+  * every sample belongs to a family announced by a HELP/TYPE pair
+    (``_bucket``/``_sum``/``_count`` resolve to their histogram family);
+  * TYPE is one of counter, gauge, histogram;
+  * histogram bucket ``le`` bounds are finite, strictly increasing, and
+    terminated by ``+Inf``;
+  * cumulative bucket counts are non-decreasing per label set;
+  * the ``+Inf`` bucket equals ``_count``, and ``_sum``/``_count`` exist
+    for every histogram label set.
+
+Usage:  curl -sf http://host:port/metrics | python3 metrics_lint.py
+Exits non-zero with one line per violation.
+"""
+
+import re
+import sys
+
+SAMPLE_RE = re.compile(
+    r"^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)"
+    r"(?:\{(?P<labels>[^}]*)\})?"
+    r"\s+(?P<value>[^ ]+)$"
+)
+LABEL_RE = re.compile(r'([a-zA-Z_][a-zA-Z0-9_]*)="((?:[^"\\]|\\.)*)"')
+
+
+def parse_labels(raw):
+    if not raw:
+        return ()
+    return tuple(sorted(LABEL_RE.findall(raw)))
+
+
+def main():
+    text = sys.stdin.read()
+    helps, types = {}, {}
+    # family -> {label_set_without_le: {"buckets": [(le, count)],
+    #            "sum": float|None, "count": float|None}}
+    histograms = {}
+    errors = []
+
+    for ln, line in enumerate(text.splitlines(), 1):
+        line = line.strip()
+        if not line:
+            continue
+        if line.startswith("# HELP "):
+            helps[line.split(None, 3)[2]] = True
+            continue
+        if line.startswith("# TYPE "):
+            parts = line.split()
+            fam, typ = parts[2], parts[3]
+            if typ not in ("counter", "gauge", "histogram"):
+                errors.append(f"line {ln}: unknown TYPE {typ} for {fam}")
+            types[fam] = typ
+            continue
+        if line.startswith("#"):
+            continue
+
+        m = SAMPLE_RE.match(line)
+        if not m:
+            errors.append(f"line {ln}: unparseable sample: {line}")
+            continue
+        name = m.group("name")
+        labels = parse_labels(m.group("labels"))
+        try:
+            value = float(m.group("value"))
+        except ValueError:
+            errors.append(f"line {ln}: non-numeric value in: {line}")
+            continue
+
+        fam = name
+        for suffix in ("_bucket", "_sum", "_count"):
+            base = name[: -len(suffix)] if name.endswith(suffix) else None
+            if base and types.get(base) == "histogram":
+                fam = base
+                break
+        if fam not in types or fam not in helps:
+            errors.append(f"line {ln}: sample {name} has no HELP/TYPE pair")
+            continue
+
+        if types[fam] == "histogram":
+            series = histograms.setdefault(fam, {})
+            key = tuple(kv for kv in labels if kv[0] != "le")
+            entry = series.setdefault(
+                key, {"buckets": [], "sum": None, "count": None}
+            )
+            if name.endswith("_bucket"):
+                le = dict(labels).get("le")
+                if le is None:
+                    errors.append(f"line {ln}: bucket without le: {line}")
+                    continue
+                bound = float("inf") if le == "+Inf" else float(le)
+                entry["buckets"].append((bound, value, ln))
+            elif name.endswith("_sum"):
+                entry["sum"] = value
+            elif name.endswith("_count"):
+                entry["count"] = value
+            else:
+                errors.append(
+                    f"line {ln}: bare sample {name} on histogram {fam}"
+                )
+
+    for fam, series in histograms.items():
+        for key, entry in series.items():
+            where = f"{fam}{{{', '.join('='.join(kv) for kv in key)}}}"
+            buckets = entry["buckets"]
+            if not buckets:
+                errors.append(f"{where}: histogram with no buckets")
+                continue
+            bounds = [b for b, _, _ in buckets]
+            if sorted(bounds) != bounds or len(set(bounds)) != len(bounds):
+                errors.append(f"{where}: le bounds not strictly increasing")
+            if bounds[-1] != float("inf"):
+                errors.append(f"{where}: missing terminal +Inf bucket")
+            counts = [c for _, c, _ in buckets]
+            if any(b > a for a, b in zip(counts[1:], counts)):
+                errors.append(f"{where}: cumulative counts decrease")
+            if entry["count"] is None:
+                errors.append(f"{where}: missing _count")
+            elif bounds[-1] == float("inf") and counts[-1] != entry["count"]:
+                errors.append(
+                    f"{where}: +Inf bucket {counts[-1]} != _count "
+                    f"{entry['count']}"
+                )
+            if entry["sum"] is None:
+                errors.append(f"{where}: missing _sum")
+
+    if errors:
+        for e in errors:
+            print(f"metrics-lint: {e}", file=sys.stderr)
+        sys.exit(1)
+    nhist = sum(len(s) for s in histograms.values())
+    print(
+        f"metrics-lint: ok — {len(types)} families "
+        f"({len(histograms)} histogram families, {nhist} label sets)"
+    )
+
+
+if __name__ == "__main__":
+    main()
