@@ -1,9 +1,21 @@
 //! Serving-path throughput: golden model vs optimized unit vs memoized
 //! unit vs RTL simulation vs PJRT executable vs the full coordinator.
 //! This is the §Perf benchmark of EXPERIMENTS.md.
+//!
+//! The SIMD section pins the batch kernels to each [`SimdMode`] so the
+//! vector path is measured against the exact scalar loop it replaces,
+//! asserts the AVX2 live-datapath speedup floor (>= 1.5x) on hosts
+//! that have the feature, and persists every row's elements/sec to
+//! `BENCH_throughput.json` for the CI smoke leg. `TANHVF_BENCH_QUICK=1`
+//! trades statistical depth for wall-clock time.
 
 use std::time::Duration;
 
+use tanh_vf::analysis::TanhImpl;
+use tanh_vf::baselines::dctif::Dctif;
+use tanh_vf::baselines::fmt16;
+use tanh_vf::baselines::pwl::Pwl;
+use tanh_vf::baselines::ralut::RangeLut;
 use tanh_vf::bench::{black_box, Bench};
 use tanh_vf::coordinator::{native_factory, Config, Coordinator};
 use tanh_vf::rtl::RtlSim;
@@ -11,7 +23,8 @@ use tanh_vf::runtime::{artifacts_dir, Runtime, Tensor};
 use tanh_vf::synth::datapath::build_tanh_datapath;
 use tanh_vf::synth::pipeline::assign_stages;
 use tanh_vf::tanh::golden::tanh_golden_batch;
-use tanh_vf::tanh::{TanhConfig, TanhUnit};
+use tanh_vf::tanh::{simd, SigmoidUnit, SimdMode, TanhConfig, TanhUnit};
+use tanh_vf::util::json::{self, Json};
 use tanh_vf::util::rng::Rng;
 
 fn main() {
@@ -22,14 +35,15 @@ fn main() {
         (0..n).map(|_| rng.range_i64(-32768, 32768)).collect();
     let words32: Vec<i32> = words.iter().map(|&w| w as i32).collect();
 
-    let mut b = Bench::default();
+    let quick = std::env::var("TANHVF_BENCH_QUICK").is_ok();
+    let mut b = if quick { Bench::quick() } else { Bench::default() };
 
     // 1. Golden model (rebuilds tables per batch — the readable spec).
     b.run_elems("golden_model_batch_1k", n as u64, || {
         black_box(tanh_golden_batch(&words, &cfg))
     });
 
-    // 2. Optimized unit, live datapath.
+    // 2. Optimized unit, live datapath (auto SIMD mode).
     let unit = TanhUnit::new(cfg).unwrap();
     let mut out = vec![0i64; n];
     b.run_elems("tanh_unit_live_batch_1k", n as u64, || {
@@ -37,7 +51,7 @@ fn main() {
         black_box(out[0])
     });
 
-    // 3. Fully memoized unit (ROM-compiled shape).
+    // 3. Fully memoized unit (ROM-compiled shape, auto SIMD mode).
     let mut memo = TanhUnit::new(cfg).unwrap();
     memo.precompute_all();
     b.run_elems("tanh_unit_memo_batch_1k", n as u64, || {
@@ -79,6 +93,66 @@ fn main() {
         black_box(c.eval_blocking(words32[..256].to_vec()).unwrap())
     });
 
+    // 7. SIMD kernel matrix: the same batch pinned to each mode, so
+    //    the vector path is measured against the exact scalar loop it
+    //    replaces. `eval_batch_mode(Avx2)` silently falls back on
+    //    hosts without the feature, so those rows are gated on
+    //    detection rather than emitting dishonest numbers.
+    let avx2 = simd::avx2_supported();
+    b.run_elems("tanh_unit_live_off_batch_1k", n as u64, || {
+        unit.eval_batch_mode(SimdMode::Off, &words, &mut out);
+        black_box(out[0])
+    });
+    b.run_elems("tanh_unit_live_scalar_batch_1k", n as u64, || {
+        unit.eval_batch_mode(SimdMode::Scalar, &words, &mut out);
+        black_box(out[0])
+    });
+    b.run_elems("tanh_unit_memo_scalar_batch_1k", n as u64, || {
+        memo.eval_batch_mode(SimdMode::Scalar, &words, &mut out);
+        black_box(out[0])
+    });
+    if avx2 {
+        b.run_elems("tanh_unit_live_avx2_batch_1k", n as u64, || {
+            unit.eval_batch_mode(SimdMode::Avx2, &words, &mut out);
+            black_box(out[0])
+        });
+        b.run_elems("tanh_unit_memo_avx2_batch_1k", n as u64, || {
+            memo.eval_batch_mode(SimdMode::Avx2, &words, &mut out);
+            black_box(out[0])
+        });
+    }
+    // The i32 wire-type path (what the coordinator backend calls).
+    let mut out32 = vec![0i32; n];
+    b.run_elems("tanh_unit_i32_batch_1k", n as u64, || {
+        memo.eval_batch_i32_into(&words32, &mut out32);
+        black_box(out32[0])
+    });
+    // Sigmoid rides the tanh kernels through its halving pre-pass.
+    let sig = SigmoidUnit::new(cfg).unwrap();
+    b.run_elems("sigmoid_batch_1k", n as u64, || {
+        sig.eval_batch_into(&words, &mut out);
+        black_box(out[0])
+    });
+    // Top published baselines, hoisted batch loops vs per-word calls.
+    let (fi, fo) = fmt16();
+    let pwl = Pwl::new(fi, fo, 64);
+    let dctif = Dctif::new(fi, fo, 4, 64);
+    let ralut = RangeLut::new(fi, fo, 6);
+    let impls: [(&str, &dyn TanhImpl); 3] =
+        [("pwl", &pwl), ("dctif", &dctif), ("ralut", &ralut)];
+    for (name, imp) in impls {
+        b.run_elems(&format!("{name}_batch_1k"), n as u64, || {
+            imp.eval_batch_words(&words, &mut out);
+            black_box(out[0])
+        });
+        b.run_elems(&format!("{name}_per_word_1k"), n as u64, || {
+            for (o, &x) in out.iter_mut().zip(&words) {
+                *o = imp.eval_word(x);
+            }
+            black_box(out[0])
+        });
+    }
+
     // Perf summary vs targets (DESIGN.md §9).
     println!("\n--- perf targets ---");
     if let Some(m) = b.get("tanh_unit_memo_batch_1k") {
@@ -101,4 +175,74 @@ fn main() {
             per_word_coord, per_word_unit
         );
     }
+
+    // SIMD speedup: the PR's acceptance floor. Only enforced where the
+    // vector path actually runs; elsewhere the skip is recorded both
+    // on stdout and in the JSON artifact (ratio: null).
+    let ratio = if avx2 {
+        let scalar = b
+            .get("tanh_unit_live_scalar_batch_1k")
+            .and_then(|m| m.throughput());
+        let vector = b
+            .get("tanh_unit_live_avx2_batch_1k")
+            .and_then(|m| m.throughput());
+        match (scalar, vector) {
+            (Some(s), Some(v)) if s > 0.0 => Some(v / s),
+            _ => None,
+        }
+    } else {
+        None
+    };
+    match ratio {
+        Some(r) => {
+            println!("simd live-datapath speedup (avx2/scalar): {r:.2}x");
+            assert!(
+                r >= 1.5,
+                "AVX2 live-datapath speedup {r:.2}x is below the 1.5x floor"
+            );
+        }
+        None => println!(
+            "simd live-datapath speedup: skipped (host has no AVX2)"
+        ),
+    }
+
+    // Machine-readable artifact for the CI smoke leg (cwd is rust/
+    // under `cargo bench`, matching the other BENCH_* artifacts).
+    let rows: Vec<Json> = b
+        .results
+        .iter()
+        .map(|m| {
+            Json::Obj(
+                [
+                    ("name".to_string(), Json::Str(m.name.clone())),
+                    ("mean_ns".to_string(), Json::Num(m.mean_ns)),
+                    (
+                        "elems_per_sec".to_string(),
+                        m.throughput().map_or(Json::Null, Json::Num),
+                    ),
+                ]
+                .into_iter()
+                .collect(),
+            )
+        })
+        .collect();
+    let doc = Json::Obj(
+        [
+            (
+                "simd_mode".to_string(),
+                Json::Str(simd::active().name().to_string()),
+            ),
+            ("avx2_host".to_string(), Json::Bool(avx2)),
+            (
+                "live_avx2_over_scalar".to_string(),
+                ratio.map_or(Json::Null, Json::Num),
+            ),
+            ("kernels".to_string(), Json::Arr(rows)),
+        ]
+        .into_iter()
+        .collect(),
+    );
+    std::fs::write("BENCH_throughput.json", json::write(&doc))
+        .expect("write BENCH_throughput.json");
+    println!("wrote BENCH_throughput.json ({} kernels)", b.results.len());
 }

@@ -11,6 +11,16 @@ pub trait TanhImpl {
     fn out_format(&self) -> QFormat;
     fn name(&self) -> String;
 
+    /// Batch evaluation into a caller buffer. The default is the plain
+    /// per-word loop; implementations with a hoisted or vectorized
+    /// batch kernel override it (must stay bit-exact vs `eval_word`).
+    fn eval_batch_words(&self, xs: &[i64], out: &mut [i64]) {
+        assert_eq!(xs.len(), out.len());
+        for (o, &x) in out.iter_mut().zip(xs) {
+            *o = self.eval_word(x);
+        }
+    }
+
     /// Hardware cost summary for comparison tables (optional).
     fn cost(&self) -> Cost {
         Cost::default()
@@ -33,6 +43,10 @@ pub struct Cost {
 impl TanhImpl for crate::tanh::TanhUnit {
     fn eval_word(&self, x: i64) -> i64 {
         self.eval(x)
+    }
+
+    fn eval_batch_words(&self, xs: &[i64], out: &mut [i64]) {
+        self.eval_batch_into(xs, out);
     }
 
     fn in_format(&self) -> QFormat {

@@ -116,6 +116,39 @@ impl TanhImpl for Dctif {
         }
     }
 
+    /// Hoisted batch loop: window offset, phase scale and rounding
+    /// constants are loop-invariant; only the 4-tap gather + dot
+    /// product stays per word.
+    fn eval_batch_words(&self, xs: &[i64], out: &mut [i64]) {
+        assert_eq!(xs.len(), out.len());
+        let shift = self.step_shift;
+        let mask = (1i64 << shift) - 1;
+        let phases = self.phases as i64;
+        let round = 1i64 << (self.coeff_frac - 1);
+        let max = self.fo.max_word();
+        // Window starts at idx - taps/2 + 1, plus the guard offset.
+        let off = self.taps as i64 + 1 - self.taps as i64 / 2;
+        for (o, &x) in out.iter_mut().zip(xs) {
+            let neg = x < 0;
+            let n = x.unsigned_abs() as i64;
+            let idx = n >> shift;
+            let phase = (((n & mask) * phases) >> shift) as usize;
+            let w = &self.coeff[phase];
+            let base = idx + off;
+            let mut acc = 0i64;
+            for (k, &wk) in w.iter().enumerate() {
+                let s = self
+                    .samples
+                    .get((base + k as i64) as usize)
+                    .copied()
+                    .unwrap_or(max);
+                acc += wk * s;
+            }
+            let t = ((acc + round) >> self.coeff_frac).clamp(0, max);
+            *o = if neg { -t } else { t };
+        }
+    }
+
     fn in_format(&self) -> QFormat {
         self.fi
     }

@@ -50,6 +50,27 @@ impl TanhImpl for Pwl {
         }
     }
 
+    /// Hoisted batch loop: the segment geometry is loop-invariant, so
+    /// lifting it (and ditching the per-word dyn dispatch) leaves a
+    /// branch-light body the autovectorizer handles well.
+    fn eval_batch_words(&self, xs: &[i64], out: &mut [i64]) {
+        assert_eq!(xs.len(), out.len());
+        let last = self.segments() - 1;
+        let shift = self.step_shift;
+        let mask = (1i64 << shift) - 1;
+        let round = 1i64 << (shift - 1);
+        let knots = &self.knots[..];
+        for (o, &x) in out.iter_mut().zip(xs) {
+            let neg = x < 0;
+            let n = x.unsigned_abs() as i64;
+            let idx = ((n >> shift) as usize).min(last);
+            let frac = n & mask;
+            let (y0, y1) = (knots[idx], knots[idx + 1]);
+            let t = y0 + (((y1 - y0) * frac + round) >> shift);
+            *o = if neg { -t } else { t };
+        }
+    }
+
     fn in_format(&self) -> QFormat {
         self.fi
     }

@@ -65,6 +65,29 @@ impl TanhImpl for RangeLut {
         }
     }
 
+    /// Hoisted batch loop (drops the per-word dyn dispatch; the range
+    /// decode itself is already a handful of scalar ops).
+    fn eval_batch_words(&self, xs: &[i64], out: &mut [i64]) {
+        assert_eq!(xs.len(), out.len());
+        let top = self.banks.len() - 1;
+        for (o, &x) in out.iter_mut().zip(xs) {
+            let neg = x < 0;
+            let n = x.unsigned_abs() as i64;
+            let t = if n == 0 {
+                0
+            } else {
+                let r = ((63 - n.leading_zeros()) as usize).min(top);
+                let bank = &self.banks[r];
+                let span_shift = if r == 0 { 1 } else { r as u32 };
+                let lo = if r == 0 { 0 } else { 1i64 << r };
+                let idx = (((n - lo) << bank.len().trailing_zeros())
+                    >> span_shift) as usize;
+                bank[idx.min(bank.len() - 1)]
+            };
+            *o = if neg { -t } else { t };
+        }
+    }
+
     fn in_format(&self) -> QFormat {
         self.fi
     }

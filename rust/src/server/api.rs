@@ -40,6 +40,13 @@
 //!   the merge trivial: every replica computes the identical
 //!   fixed-point function, so the split is invisible to the client.
 //!   Any shard failure falls back to serving the whole batch locally.
+//!
+//! The eval routes parse bodies on a zero-copy path: the `words` array
+//! (the dominant payload) streams straight into a reusable per-thread
+//! [`arena`] buffer instead of materializing per-element [`Json`]
+//! nodes, and the 200 batch body is written from that buffer without
+//! an intermediate tree. Arena accounting surfaces in `/metrics` as
+//! the `tanhvf_word_arena_*` families.
 
 use std::fmt::Write as _;
 use std::sync::atomic::Ordering;
@@ -48,8 +55,9 @@ use std::time::Instant;
 use crate::coordinator::metrics::{HistSnapshot, HIST_BOUNDS_US};
 use crate::coordinator::router::RouteInfo;
 use crate::fixed::Round;
-use crate::util::json::{self, Json};
+use crate::util::json::{self, Json, WordsField};
 
+use super::arena;
 use super::cluster::{self, Node};
 use super::gossip;
 use super::http::{Request, Response};
@@ -96,7 +104,7 @@ struct TraceCtx {
 fn traced(
     state: &AppState,
     req: &Request,
-    local: fn(&AppState, &Json) -> Response,
+    local: fn(&AppState, &ReqBody) -> Response,
 ) -> Response {
     let (trace_id, parent) = req
         .header(trace::TRACE_HEADER)
@@ -123,24 +131,68 @@ fn traced(
     resp.with_header(trace::TRACE_HEADER, &trace_id.hex())
 }
 
-/// Cluster routing shim around an eval endpoint: parse the body once,
-/// serve locally when the ring says so (or when not clustered), else
-/// forward to the owning peer, failing over along the ring on
-/// transport errors.
+/// A request body parsed once per eval dispatch: the JSON document
+/// (carrying an empty placeholder array under `words`), where the
+/// `words` field went during parsing, and the arena-checked-out buffer
+/// holding the decoded words themselves. [`clustered`] owns the
+/// checkout/return lifecycle; handlers only borrow.
+struct ReqBody {
+    json: Json,
+    words: WordsField,
+    word_buf: Vec<i64>,
+}
+
+/// Parse an eval-route body on the zero-copy path: the `words` array
+/// streams directly into this thread's arena buffer. Error responses
+/// are byte-identical to the old `json_body()`-based path.
+fn parse_body(raw: &[u8]) -> Result<ReqBody, Response> {
+    let Ok(text) = std::str::from_utf8(raw) else {
+        return Err(error_resp(
+            400,
+            "bad_request",
+            "body: body is not valid UTF-8",
+        ));
+    };
+    let mut word_buf = arena::take_words();
+    match json::parse_request_words(text, &mut word_buf) {
+        Ok((json, words)) => Ok(ReqBody { json, words, word_buf }),
+        Err(e) => {
+            arena::put_words(word_buf);
+            Err(error_resp(400, "bad_request", &format!("body: {e}")))
+        }
+    }
+}
+
+/// Cluster routing shim around an eval endpoint: parse the body once
+/// (words into the arena), route, and return the buffer whatever the
+/// outcome.
 fn clustered(
     state: &AppState,
     req: &Request,
     ctx: &TraceCtx,
-    local: fn(&AppState, &Json) -> Response,
+    local: fn(&AppState, &ReqBody) -> Response,
 ) -> Response {
-    let body = match req.json_body() {
+    let body = match parse_body(&req.body) {
         Ok(b) => b,
-        Err(e) => {
-            return error_resp(400, "bad_request", &format!("body: {e}"))
-        }
+        Err(resp) => return resp,
     };
+    let resp = routed(state, req, ctx, local, &body);
+    arena::put_words(body.word_buf);
+    resp
+}
+
+/// The routing decision proper: serve locally when the ring says so
+/// (or when not clustered), else forward to the owning peer, failing
+/// over along the ring on transport errors.
+fn routed(
+    state: &AppState,
+    req: &Request,
+    ctx: &TraceCtx,
+    local: fn(&AppState, &ReqBody) -> Response,
+    body: &ReqBody,
+) -> Response {
     let Some(cl) = state.cluster.as_ref() else {
-        return local(state, &body);
+        return local(state, body);
     };
     // Loop guard: a request that already crossed one hop is answered
     // here no matter what this node's ring says — transient ring
@@ -148,20 +200,20 @@ fn clustered(
     // cycle.
     if req.header(cluster::PROXIED_HEADER).is_some() {
         cl.stats.proxied_in.fetch_add(1, Ordering::Relaxed);
-        return local(state, &body);
+        return local(state, body);
     }
     // The ring keys on the model name; bodies without one fall through
     // to the local handler, whose 400 is exact.
-    let model = match body.get("model").and_then(Json::as_str) {
+    let model = match body.json.get("model").and_then(Json::as_str) {
         Some(m) => m.to_string(),
-        None => return local(state, &body),
+        None => return local(state, body),
     };
     // Replicated routes: a large-enough batch splits across the live
     // replica set instead of going to one owner. Returns None when the
     // fan-out doesn't apply (or can't complete) — the plain walk below
     // is the universal fallback.
     if req.path() == "/v1/batch" && cl.config().replicas > 1 {
-        if let Some(resp) = fanout_batch(state, cl, ctx, &model, &body) {
+        if let Some(resp) = fanout_batch(state, cl, ctx, &model, body) {
             return resp;
         }
     }
@@ -173,7 +225,7 @@ fn clustered(
                 if failed_hops > 0 {
                     cl.stats.failovers.fetch_add(1, Ordering::Relaxed);
                 }
-                return local(state, &body);
+                return local(state, body);
             }
             Node::Peer(addr) => {
                 // Bounded outbound-proxy concurrency: a forward blocks
@@ -188,7 +240,7 @@ fn clustered(
                     if state.router.route_info(&model).is_some() {
                         cl.stats.local.fetch_add(1, Ordering::Relaxed);
                         cl.stats.failovers.fetch_add(1, Ordering::Relaxed);
-                        return local(state, &body);
+                        return local(state, body);
                     }
                     return error_resp(
                         503,
@@ -255,7 +307,7 @@ fn clustered(
     // so the walk above always returns from inside the loop; this tail
     // is a defensive fallback, not a reachable error path.
     cl.stats.local.fetch_add(1, Ordering::Relaxed);
-    local(state, &body)
+    local(state, body)
 }
 
 /// Split a `/v1/batch` across the live replica set and merge in order.
@@ -272,23 +324,28 @@ fn fanout_batch(
     cl: &cluster::Cluster,
     ctx: &TraceCtx,
     model: &str,
-    body: &Json,
+    body: &ReqBody,
 ) -> Option<Response> {
-    let arr = body.get("words").and_then(Json::as_arr)?;
+    // Anything other than a non-empty integer array is the plain
+    // path's problem (its 400s are exact).
+    let words: &[i64] = match body.words {
+        WordsField::Ints { len } if len > 0 => &body.word_buf[..],
+        _ => return None,
+    };
     let info = state.router.route_info(model)?;
-    if arr.is_empty() || arr.len() > info.batch_capacity {
+    if words.len() > info.batch_capacity {
         return None;
     }
     let reps = cl.live_replicas(model);
-    if reps.len() < 2 || arr.len() < reps.len() {
+    if reps.len() < 2 || words.len() < reps.len() {
         return None;
     }
-    let chunk = arr.len().div_ceil(reps.len());
-    let shards: Vec<&[Json]> = arr.chunks(chunk).collect();
+    let chunk = words.len().div_ceil(reps.len());
+    let shards: Vec<&[i64]> = words.chunks(chunk).collect();
     // `chunks` can yield fewer shards than replicas; surplus replicas
     // simply sit this request out.
-    let pairs: Vec<(&Node, &&[Json])> =
-        reps.iter().zip(&shards).collect();
+    let pairs: Vec<(&Node, &[i64])> =
+        reps.iter().zip(shards).collect();
     // One permit per shard that actually goes remote, or no fan-out at
     // all (the plain walk degrades more gracefully under forward
     // pressure).
@@ -305,7 +362,16 @@ fn fanout_batch(
     // a deterministic replay needs a deterministic allocation order.
     let shard_ids: Vec<u64> =
         pairs.iter().map(|_| state.trace.next_span_id()).collect();
-    let mut results: Vec<Option<Vec<Json>>> = vec![None; pairs.len()];
+    // Local shards keep their coordinator output; remote shards hand
+    // back the raw response body, parsed into the merge buffer after
+    // the join (the arena is thread-local, so shard threads can't
+    // stream into it directly).
+    enum ShardOut {
+        Local(Vec<i32>),
+        Remote(Vec<u8>),
+    }
+    let mut results: Vec<Option<ShardOut>> =
+        (0..pairs.len()).map(|_| None).collect();
     // The local shard (shard 0 whenever this node is a replica —
     // live_replicas puts Local first) computes before the remote
     // shards spawn: local compute is microseconds against a remote
@@ -323,15 +389,17 @@ fn fanout_batch(
             );
             lspan.note = format!("shard {i}");
             lspan.start_us = state.clock.now_us();
-            let sub = obj([
-                ("model", Json::Str(model.to_string())),
-                ("words", Json::Arr(words.to_vec())),
-            ]);
-            let resp = batch(state, &sub);
+            // Straight into range-check + submit: the model resolved
+            // above and a shard of an integer batch is an integer
+            // batch within capacity.
+            let out = run_batch_words(state, &info, words);
             lspan.end_us = state.clock.now_us();
-            lspan.status = resp.status;
-            if resp.status == 200 {
-                results[i] = shard_words(&resp.body, words.len());
+            match out {
+                Ok(ws) => {
+                    lspan.status = 200;
+                    results[i] = Some(ShardOut::Local(ws));
+                }
+                Err(resp) => lspan.status = resp.status,
             }
             state.trace.push(lspan);
         }
@@ -340,11 +408,7 @@ fn fanout_batch(
         let mut handles = Vec::new();
         for (i, (node, words)) in pairs.iter().enumerate() {
             if let Node::Peer(addr) = node {
-                let wire = json::write(&obj([
-                    ("model", Json::Str(model.to_string())),
-                    ("words", Json::Arr(words.to_vec())),
-                ]));
-                let want = words.len();
+                let wire = shard_wire(model, words);
                 let span_id = shard_ids[i];
                 handles.push((
                     i,
@@ -376,12 +440,9 @@ fn fanout_batch(
                                 cl.stats
                                     .proxied
                                     .fetch_add(1, Ordering::Relaxed);
-                                let w = shard_words(&resp.body, want);
-                                if w.is_none() {
-                                    sspan.note =
-                                        format!("shard {i}: bad shard body");
-                                }
-                                w
+                                // Body validity is checked at merge
+                                // time, on the requesting thread.
+                                Some(resp.body)
                             }
                             Ok(resp) => {
                                 sspan.status = resp.status;
@@ -403,16 +464,39 @@ fn fanout_batch(
             }
         }
         for (i, h) in handles {
-            results[i] = h.join().unwrap_or(None);
+            results[i] = h.join().unwrap_or(None).map(ShardOut::Remote);
         }
     });
     drop(permits);
+    // Merge in shard order into the thread's reusable merge buffer
+    // (remote bodies parse here, so wrong counts and garbage bodies
+    // surface as fallbacks exactly as before).
+    let mut merged = arena::take_merge();
+    let mut complete = true;
+    for (i, r) in results.iter().enumerate() {
+        let want = pairs[i].1.len();
+        let ok = match r {
+            Some(ShardOut::Local(ws)) => {
+                merged.extend(ws.iter().map(|&w| w as i64));
+                true // the coordinator answers word-for-word
+            }
+            Some(ShardOut::Remote(raw)) => {
+                append_shard_words(raw, want, &mut merged)
+            }
+            None => false,
+        };
+        if !ok {
+            complete = false;
+            break;
+        }
+    }
     // The `local` path counter ticks at most once per client request
     // (the per-shard `proxied` ticks are real extra round trips, but a
     // locally computed shard plus a local fallback is still one local
     // serving decision).
-    if results.iter().any(Option::is_none) {
+    if !complete {
         // A shard failed: serve the whole batch locally, bit-exact.
+        arena::put_merge(merged);
         cl.stats.fanout_fallbacks.fetch_add(1, Ordering::Relaxed);
         cl.stats.local.fetch_add(1, Ordering::Relaxed);
         return Some(batch(state, body));
@@ -421,27 +505,40 @@ fn fanout_batch(
     if pairs.iter().any(|(n, _)| matches!(n, Node::Local)) {
         cl.stats.local.fetch_add(1, Ordering::Relaxed);
     }
-    let words: Vec<Json> = results.into_iter().flatten().flatten().collect();
-    Some(Response::json(
-        200,
-        &obj([
-            ("model", Json::Str(model.to_string())),
-            ("count", Json::Num(words.len() as f64)),
-            ("words", Json::Arr(words)),
-        ]),
-    ))
+    let resp =
+        batch_ok_response(model, merged.len(), merged.iter().copied());
+    arena::put_merge(merged);
+    Some(resp)
 }
 
-/// Extract a successful shard response's word array (length-checked —
-/// a replica answering with the wrong count is treated as a failure).
-fn shard_words(body: &[u8], want: usize) -> Option<Vec<Json>> {
-    let text = std::str::from_utf8(body).ok()?;
-    let v = json::parse(text).ok()?;
-    let words = v.get("words")?.as_arr()?;
-    if words.len() != want {
-        return None;
+/// The wire body for one remote shard, written straight from the word
+/// slice (byte-identical to serializing the equivalent `Json` tree).
+fn shard_wire(model: &str, words: &[i64]) -> String {
+    let mut s = String::with_capacity(24 + model.len() + 8 * words.len());
+    s.push_str("{\"model\":");
+    s.push_str(&json::write(&Json::Str(model.to_string())));
+    s.push_str(",\"words\":");
+    json::write_i64_array(words, &mut s);
+    s.push('}');
+    s
+}
+
+/// Parse a successful shard response and append its words (which must
+/// number `want` — a replica answering with the wrong count is treated
+/// as a failure) to the merge buffer. Leaves the buffer untouched on
+/// failure.
+fn append_shard_words(raw: &[u8], want: usize, sink: &mut Vec<i64>) -> bool {
+    let Ok(text) = std::str::from_utf8(raw) else {
+        return false;
+    };
+    let start = sink.len();
+    match json::parse_request_words(text, sink) {
+        Ok((_, WordsField::Ints { len })) if len == want => true,
+        _ => {
+            sink.truncate(start);
+            false
+        }
     }
-    Some(words.to_vec())
 }
 
 /// `POST /v1/gossip`: merge the sender's member table, answer with
@@ -653,7 +750,8 @@ fn models(state: &AppState) -> Response {
     Response::json(200, &obj(top))
 }
 
-fn eval(state: &AppState, body: &Json) -> Response {
+fn eval(state: &AppState, body: &ReqBody) -> Response {
+    let body = &body.json;
     let info = match resolve_model(state, body) {
         Ok(v) => v,
         Err(resp) => return resp,
@@ -709,61 +807,89 @@ fn eval(state: &AppState, body: &Json) -> Response {
     }
 }
 
-fn batch(state: &AppState, body: &Json) -> Response {
-    let info = match resolve_model(state, body) {
+fn batch(state: &AppState, body: &ReqBody) -> Response {
+    let info = match resolve_model(state, &body.json) {
         Ok(v) => v,
         Err(resp) => return resp,
     };
-    let Some(arr) = body.get("words").and_then(Json::as_arr) else {
-        return error_resp(400, "bad_request", "words must be an array");
+    // Error precedence matches the old tree-walking validator exactly:
+    // array-ness, emptiness, capacity (on the raw element count), then
+    // element types.
+    let len = match body.words {
+        WordsField::Absent | WordsField::NotArray => {
+            return error_resp(400, "bad_request", "words must be an array")
+        }
+        WordsField::NotInt { len } | WordsField::Ints { len } => len,
     };
-    if arr.is_empty() {
+    if len == 0 {
         return error_resp(400, "bad_request", "words must be non-empty");
     }
-    if arr.len() > info.batch_capacity {
+    if len > info.batch_capacity {
         return error_resp(
             400,
             "bad_request",
             &format!(
-                "{} words exceeds batch_capacity {} of model '{}'",
-                arr.len(),
-                info.batch_capacity,
-                info.name
+                "{len} words exceeds batch_capacity {} of model '{}'",
+                info.batch_capacity, info.name
             ),
         );
     }
-    let mut words = Vec::with_capacity(arr.len());
-    for v in arr {
-        match as_exact_i64(v) {
-            Some(w) => words.push(w),
-            None => {
-                return error_resp(
-                    400,
-                    "bad_request",
-                    "words must all be integers",
-                )
-            }
-        }
+    if !matches!(body.words, WordsField::Ints { .. }) {
+        return error_resp(400, "bad_request", "words must all be integers");
     }
-    if let Some(resp) = check_words(&info, &words) {
-        return resp;
+    match run_batch_words(state, &info, &body.word_buf) {
+        Err(resp) => resp,
+        Ok(out) => batch_ok_response(
+            &info.name,
+            out.len(),
+            out.iter().map(|&w| w as i64),
+        ),
+    }
+}
+
+/// The post-validation core of [`batch`]: range-check and submit a
+/// word slice (shared with the per-shard local path of
+/// [`fanout_batch`], which has already validated shape and capacity).
+fn run_batch_words(
+    state: &AppState,
+    info: &RouteInfo,
+    words: &[i64],
+) -> Result<Vec<i32>, Response> {
+    if let Some(resp) = check_words(info, words) {
+        return Err(resp);
     }
     let words32: Vec<i32> = words.iter().map(|&w| w as i32).collect();
-    match submit(state, &info.name, words32) {
-        Err(resp) => resp,
-        Ok(out) => Response::json(
-            200,
-            &obj([
-                ("model", Json::Str(info.name.clone())),
-                ("count", Json::Num(out.len() as f64)),
-                (
-                    "words",
-                    Json::Arr(
-                        out.iter().map(|&w| Json::Num(w as f64)).collect(),
-                    ),
-                ),
-            ]),
-        ),
+    submit(state, &info.name, words32)
+}
+
+/// The 200 batch body, written straight from the output words — no
+/// intermediate `Json` tree. Field order (alphabetical) and number
+/// formatting are byte-identical to the old `BTreeMap`-backed writer;
+/// the multi-node CI byte-compares fan-out responses against
+/// single-node ones, so this parity is load-bearing.
+fn batch_ok_response(
+    model: &str,
+    count: usize,
+    words: impl Iterator<Item = i64>,
+) -> Response {
+    let mut body = String::with_capacity(48 + model.len() + 8 * count);
+    body.push_str("{\"count\":");
+    let _ = write!(body, "{count}");
+    body.push_str(",\"model\":");
+    body.push_str(&json::write(&Json::Str(model.to_string())));
+    body.push_str(",\"words\":[");
+    for (i, w) in words.enumerate() {
+        if i > 0 {
+            body.push(',');
+        }
+        let _ = write!(body, "{w}");
+    }
+    body.push_str("]}");
+    Response {
+        status: 200,
+        content_type: "application/json".into(),
+        body: body.into_bytes(),
+        headers: Vec::new(),
     }
 }
 
@@ -997,6 +1123,32 @@ pub(crate) fn render_metrics(state: &AppState) -> Response {
         "Approximate bytes currently held by the trace span ring.",
     );
     let _ = writeln!(s, "tanhvf_trace_store_bytes {}", state.trace.bytes());
+
+    // Request-arena accounting: the zero-copy word path. A warm server
+    // shows checkouts rising with request count while allocs stay flat
+    // — that flatness is what `tests/zero_copy.rs` asserts.
+    let (checkouts, allocs, bytes) = arena::stats();
+    family(
+        &mut s,
+        "tanhvf_word_arena_checkouts_total",
+        "counter",
+        "Word-buffer checkouts by the eval routes (one per request).",
+    );
+    let _ = writeln!(s, "tanhvf_word_arena_checkouts_total {checkouts}");
+    family(
+        &mut s,
+        "tanhvf_word_arena_allocs_total",
+        "counter",
+        "Checkouts that grew an arena buffer (flat once warm).",
+    );
+    let _ = writeln!(s, "tanhvf_word_arena_allocs_total {allocs}");
+    family(
+        &mut s,
+        "tanhvf_word_arena_bytes",
+        "gauge",
+        "Bytes currently held by all per-thread word arenas.",
+    );
+    let _ = writeln!(s, "tanhvf_word_arena_bytes {bytes}");
 
     if let Some(cl) = &state.cluster {
         family(
@@ -1293,12 +1445,11 @@ fn submit(
     }
 }
 
-/// Integer-valued JSON number (rejects 1.5 and non-numbers).
+/// Integer-valued JSON number (rejects 1.5 and non-numbers). Shares
+/// [`json::exact_i64`] so the scalar `word` field and the streamed
+/// `words` array agree on what counts as an integer.
 fn as_exact_i64(v: &Json) -> Option<i64> {
-    match v {
-        Json::Num(n) if n.fract() == 0.0 && n.abs() <= 9e15 => Some(*n as i64),
-        _ => None,
-    }
+    json::exact_i64(v)
 }
 
 fn obj(pairs: impl IntoIterator<Item = (&'static str, Json)>) -> Json {

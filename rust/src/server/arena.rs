@@ -1,0 +1,169 @@
+//! Reusable per-thread word buffers for the request path.
+//!
+//! Every `/v1/eval` and `/v1/batch` request used to allocate fresh
+//! `Vec`s for the decoded input words and (on the fan-out path) the
+//! merged shard outputs. This module replaces those with a per-thread
+//! arena slot: two `i64` buffers that are checked out at request start,
+//! grown on demand, and returned — **never shrunk** — so a warm thread
+//! serves requests with zero heap allocation on the word path.
+//!
+//! Thread affinity is the unit of reuse: under the threaded backend a
+//! connection is pinned to one pool thread, so the slot is effectively
+//! per-connection; under the reactor backend dispatch also runs on the
+//! worker pool, so the slot is per-worker (same steady-state: at most
+//! `workers + max_connections` slots exist, each converging to the
+//! largest request it has served).
+//!
+//! Accounting (exported as `/metrics` families by the API layer):
+//! * `checkouts` — word-buffer checkouts (== requests on the path);
+//! * `allocs`    — checkouts that had to grow a buffer. Once warm this
+//!   stays flat, which is exactly what `tests/zero_copy.rs` asserts;
+//! * `bytes`     — live bytes across all slots (gauge; slot drops
+//!   subtract their capacity).
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Word-buffer checkouts since process start.
+static CHECKOUTS: AtomicU64 = AtomicU64::new(0);
+/// Checkouts (of either buffer) that grew the slot's capacity.
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+/// Live arena bytes across all thread slots.
+static BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// One thread's buffers plus the capacities already accounted in
+/// [`BYTES`]. The `Cell<Vec<_>>` holders let a checkout `take` the
+/// buffer without holding any borrow across the request (the fan-out
+/// path re-enters the arena from the same thread for its merge buffer).
+struct Slot {
+    words: Cell<Vec<i64>>,
+    merge: Cell<Vec<i64>>,
+    words_cap: Cell<usize>,
+    merge_cap: Cell<usize>,
+}
+
+impl Drop for Slot {
+    fn drop(&mut self) {
+        let bytes = 8 * (self.words_cap.get() + self.merge_cap.get()) as u64;
+        BYTES.fetch_sub(bytes, Ordering::Relaxed);
+    }
+}
+
+thread_local! {
+    static SLOT: Slot = Slot {
+        words: Cell::new(Vec::new()),
+        merge: Cell::new(Vec::new()),
+        words_cap: Cell::new(0),
+        merge_cap: Cell::new(0),
+    };
+}
+
+/// Check out this thread's request word buffer (cleared, capacity
+/// preserved). Pair with [`put_words`].
+pub fn take_words() -> Vec<i64> {
+    CHECKOUTS.fetch_add(1, Ordering::Relaxed);
+    SLOT.with(|s| {
+        let mut v = s.words.take();
+        v.clear();
+        v
+    })
+}
+
+/// Return the request word buffer, folding any growth into the stats.
+pub fn put_words(buf: Vec<i64>) {
+    SLOT.with(|s| {
+        account_growth(buf.capacity(), &s.words_cap);
+        s.words.set(buf);
+    });
+}
+
+/// Check out this thread's merge buffer (the fan-out shard-merge
+/// scratch — a second buffer so it can coexist with the word buffer
+/// within one request). Pair with [`put_merge`].
+pub fn take_merge() -> Vec<i64> {
+    SLOT.with(|s| {
+        let mut v = s.merge.take();
+        v.clear();
+        v
+    })
+}
+
+/// Return the merge buffer, folding any growth into the stats.
+pub fn put_merge(buf: Vec<i64>) {
+    SLOT.with(|s| {
+        account_growth(buf.capacity(), &s.merge_cap);
+        s.merge.set(buf);
+    });
+}
+
+fn account_growth(cap: usize, accounted: &Cell<usize>) {
+    let old = accounted.get();
+    if cap > old {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(8 * (cap - old) as u64, Ordering::Relaxed);
+        accounted.set(cap);
+    }
+}
+
+/// (checkouts, allocs, live bytes) for `/metrics`.
+pub fn stats() -> (u64, u64, u64) {
+    (
+        CHECKOUTS.load(Ordering::Relaxed),
+        ALLOCS.load(Ordering::Relaxed),
+        BYTES.load(Ordering::Relaxed),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // One test function: the counters are process-global, so separate
+    // #[test]s (which run on parallel threads) would race on them.
+    #[test]
+    fn lifecycle_reuse_and_accounting() {
+        // Warm reuse: after the first growth to the high-water mark,
+        // further checkouts from this thread must not count allocs.
+        let (c0, a0, _) = stats();
+        let mut v = take_words();
+        v.extend(0..1000);
+        put_words(v);
+        let (_, a1, b1) = stats();
+        assert!(a1 > a0, "first growth must be counted");
+        assert!(b1 >= 8000);
+        for _ in 0..10 {
+            let mut v = take_words();
+            assert!(v.is_empty(), "checkout must be cleared");
+            assert!(v.capacity() >= 1000, "capacity must be retained");
+            v.extend(0..1000);
+            put_words(v);
+        }
+        let (c1, a2, b2) = stats();
+        assert_eq!(a1, a2, "warm reuse must not allocate");
+        assert_eq!(b1, b2, "warm reuse must not grow the arena");
+        assert_eq!(c1, c0 + 11, "every checkout is counted");
+
+        // Both buffers coexist within one request.
+        let mut w = take_words();
+        let mut m = take_merge();
+        w.push(1);
+        m.extend(0..500);
+        put_merge(m);
+        put_words(w);
+        let m = take_merge();
+        assert!(m.is_empty() && m.capacity() >= 500);
+        put_merge(m);
+
+        // A dying thread's slot returns its bytes to the gauge.
+        let (_, _, before) = stats();
+        std::thread::spawn(|| {
+            let mut v = take_words();
+            v.extend(0..4096);
+            put_words(v);
+        })
+        .join()
+        .unwrap();
+        let (_, _, after) = stats();
+        assert_eq!(before, after);
+    }
+}

@@ -24,6 +24,10 @@
 //!   loop. One thread multiplexes every connection.
 //! * [`api`]     — JSON endpoints: `/health`, `/v1/models`, `/v1/eval`,
 //!   `/v1/batch`, `/metrics`.
+//! * [`arena`]   — reusable per-thread word buffers behind the eval
+//!   routes' zero-copy body path: the `words` array streams straight
+//!   into an arena buffer that is grown but never shrunk, with
+//!   checkout/alloc/bytes accounting on `/metrics`.
 //! * [`cluster`] — multi-node tier ([`Server::start_cluster`]):
 //!   consistent-hash routing of model names across several fronts
 //!   (FNV-1a ring with virtual nodes), a health-checked peer table
@@ -83,6 +87,7 @@
 //! loopback connect for the blocking accept), then join.
 
 pub mod api;
+pub mod arena;
 pub mod cluster;
 #[cfg(unix)]
 pub(crate) mod conn;

@@ -9,6 +9,8 @@
 //! * [`published`]— the unmodified Doerfler-style method of fig. 3
 //!   (per-bit registers + eq. 3 residual compensation), kept as the
 //!   ablation baseline that §IV.B.1 improves upon.
+//! * [`simd`]     — runtime-selected AVX2 batch kernels (bit-exact,
+//!   `TANHVF_SIMD` selectable) behind the `eval_batch_*` APIs.
 
 pub mod config;
 pub mod golden;
@@ -16,9 +18,11 @@ pub mod lut;
 pub mod newton;
 pub mod published;
 pub mod sigmoid;
+pub mod simd;
 pub mod unit;
 
 pub use config::{Subtractor, TanhConfig};
 pub use golden::{tanh_golden, tanh_golden_batch};
 pub use sigmoid::{ExpUnit, SigmoidUnit};
+pub use simd::SimdMode;
 pub use unit::TanhUnit;

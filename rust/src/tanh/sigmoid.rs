@@ -57,6 +57,28 @@ impl SigmoidUnit {
         (one + t) >> 1
     }
 
+    /// Batch sigmoid into a caller buffer: the rounding pre-shift and
+    /// the `(1 + t) >> 1` recombination are cheap linear passes; the
+    /// tanh core between them runs the batch (SIMD-dispatched) path.
+    /// Bit-exact vs per-word [`Self::eval`].
+    pub fn eval_batch_into(&self, xs: &[i64], out: &mut [i64]) {
+        assert_eq!(xs.len(), out.len());
+        for (o, &x) in out.iter_mut().zip(xs) {
+            *o = if x >= 0 { (x + 1) >> 1 } else { -((1 - x) >> 1) };
+        }
+        self.tanh.eval_batch_in_place(out);
+        let one = 1i64 << self.tanh.config().out_frac;
+        for o in out.iter_mut() {
+            *o = (one + *o) >> 1;
+        }
+    }
+
+    pub fn eval_batch(&self, xs: &[i64]) -> Vec<i64> {
+        let mut out = vec![0i64; xs.len()];
+        self.eval_batch_into(xs, &mut out);
+        out
+    }
+
     /// Float convenience.
     pub fn eval_f64(&self, x: f64) -> f64 {
         let cfg = self.tanh.config();
@@ -186,6 +208,14 @@ mod tests {
                 "x={x}"
             );
         }
+    }
+
+    #[test]
+    fn sigmoid_batch_matches_per_word() {
+        let s = SigmoidUnit::new(TanhConfig::s3_12()).unwrap();
+        let xs: Vec<i64> = (-32768..32768).step_by(37).collect();
+        let want: Vec<i64> = xs.iter().map(|&x| s.eval(x)).collect();
+        assert_eq!(s.eval_batch(&xs), want);
     }
 
     #[test]

@@ -1,0 +1,348 @@
+//! Runtime-selected SIMD batch kernels for the serving hot path.
+//!
+//! Three process-wide modes, selected once via `TANHVF_SIMD`:
+//!
+//! * `off`    — per-word [`super::unit::TanhUnit::eval`] calls (the
+//!   pre-vectorization behavior, kept as a CI leg).
+//! * `scalar` — the portable hoisted batch loops (no intrinsics).
+//! * `avx2`   — 4x64-bit-lane AVX2 kernels (`std::arch`), used only
+//!   when the CPU reports the feature at runtime; requesting `avx2` on
+//!   a host without it degrades to `scalar`. Unset picks `avx2` when
+//!   available, else `scalar`.
+//!
+//! Every AVX2 kernel is **bit-exact** against the scalar datapath — the
+//! property tests in `tests/simd_bitexact.rs` enforce this against
+//! [`super::golden`] for every precision preset. Bit-exactness is load
+//! bearing: the multi-node CI byte-compares `/v1/batch` responses
+//! across nodes, so a node that vectorizes and a node that doesn't must
+//! agree on every word.
+//!
+//! ## Lane layout and shift discipline
+//!
+//! The datapath kernel processes 4 input words per iteration as packed
+//! 64-bit lanes. AVX2 has no 64-bit *arithmetic* right shift
+//! (`_mm256_srai_epi64` is AVX-512), so every shifted intermediate is
+//! proven non-negative and shifted logically:
+//!
+//! * LUT chain: `f, e` are u0.L words in `(0, 2^L]`, so the rounded
+//!   product `(f*e + 2^(L-1))` is positive.
+//! * NR: the seed `2.75*2^M - 2d` with `d` in `(2^(M-1), 2^M]` is in
+//!   `(0.75*2^M, 1.75*2^M)`; iterates stay in `(0, ~2^(M+1))` and
+//!   `2^(M+1) - t0 > 0` (NR for `2^(2M)/d` converges from below).
+//! * Recompose: with `L >= out_frac + 3` the rounding constant
+//!   `2^(shift-1) >= 2^(M+3)` dominates `|num * xr| <= xr < 2^(M+2)`
+//!   even for the one's-complement `num = -1` case, keeping the
+//!   pre-shift sum non-negative.
+//!
+//! `_mm256_mul_epi32` multiplies the sign-extended low 32 bits of each
+//! lane; the eligibility gate (`L, M <= 26`) bounds every factor below
+//! `2^28`, so the low-DWORD product equals the full i64 product.
+//!
+//! Saturated lanes are computed anyway (their gather addresses are
+//! formed bit-by-bit, so they stay in bounds for *any* input word) and
+//! the `±out_max` result is blended in at the end — branch-free, and
+//! identical to the scalar early return.
+
+use super::config::TanhConfig;
+use std::sync::OnceLock;
+
+/// Which batch kernel the process uses (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdMode {
+    /// Per-word scalar calls — no batch fast path at all.
+    Off,
+    /// Portable hoisted batch loops.
+    Scalar,
+    /// AVX2 intrinsics (x86-64 with runtime feature detection).
+    Avx2,
+}
+
+impl SimdMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SimdMode::Off => "off",
+            SimdMode::Scalar => "scalar",
+            SimdMode::Avx2 => "avx2",
+        }
+    }
+}
+
+/// Does this CPU support the AVX2 kernels?
+pub fn avx2_supported() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// The process-wide mode: `TANHVF_SIMD` if set (unsupported `avx2`
+/// degrades to `scalar`), else auto-detect. Read once and cached.
+pub fn active() -> SimdMode {
+    static MODE: OnceLock<SimdMode> = OnceLock::new();
+    *MODE.get_or_init(|| match std::env::var("TANHVF_SIMD").as_deref() {
+        Ok("off") => SimdMode::Off,
+        Ok("scalar") => SimdMode::Scalar,
+        _ => {
+            // "avx2" and auto both take the best the host offers.
+            if avx2_supported() {
+                SimdMode::Avx2
+            } else {
+                SimdMode::Scalar
+            }
+        }
+    })
+}
+
+/// Can the live datapath for `cfg` run in the AVX2 kernel bit-exactly?
+///
+/// * `nr_stages == 0` uses the float reference divider — not vectorized.
+/// * `lut_bits >= out_frac + 3` keeps the recompose rounding constant
+///   strictly above `|num * xr|`, so the final logical shift matches the
+///   scalar arithmetic shift (see module docs).
+/// * `lut_bits, mult_bits <= 26` bounds every `_mm256_mul_epi32` factor
+///   below `2^28` (low-32-bit multiply stays exact).
+///
+/// Both canonical presets and every `named_config`-derived point
+/// (`L = out_frac + 3` by construction) qualify. Ineligible configs
+/// silently use the scalar batch loop.
+pub(crate) fn datapath_eligible(cfg: &TanhConfig) -> bool {
+    cfg.nr_stages >= 1
+        && cfg.lut_bits >= cfg.out_frac + 3
+        && cfg.lut_bits <= 26
+        && cfg.mult_bits <= 26
+}
+
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod x86 {
+    use crate::tanh::config::Subtractor;
+    use crate::tanh::unit::{Group, TanhUnit};
+    use std::arch::x86_64::*;
+
+    /// Product of the sign-extended low 32 bits of each 64-bit lane.
+    /// Exact for the full i64 product whenever both lane values fit in
+    /// i32 — the eligibility gate guarantees that for every call site.
+    #[target_feature(enable = "avx2")]
+    #[inline]
+    unsafe fn mul_lo32(a: __m256i, b: __m256i) -> __m256i {
+        _mm256_mul_epi32(a, b)
+    }
+
+    /// Gather one LUT group's entries for 4 magnitude lanes: form each
+    /// lane's address bit-by-bit from the group's input-bit positions,
+    /// add the group's offset into the flat table, gather 64-bit
+    /// entries. Addresses are `< 2^positions.len()` by construction, so
+    /// the gather is in bounds for any lane value (even saturated
+    /// garbage that gets blended away later).
+    #[target_feature(enable = "avx2")]
+    #[inline]
+    unsafe fn gather_group(
+        tables: *const i64,
+        g: &Group,
+        n: __m256i,
+    ) -> __m256i {
+        let one = _mm256_set1_epi64x(1);
+        let mut addr = _mm256_setzero_si256();
+        for (j, &p) in g.positions.iter().enumerate() {
+            let bit = _mm256_and_si256(
+                _mm256_srl_epi64(n, _mm_cvtsi32_si128(p as i32)),
+                one,
+            );
+            addr = _mm256_or_si256(
+                addr,
+                _mm256_sll_epi64(bit, _mm_cvtsi32_si128(j as i32)),
+            );
+        }
+        // Offsets are not address-aligned: add, don't or.
+        let idx = _mm256_add_epi64(addr, _mm256_set1_epi64x(g.offset as i64));
+        _mm256_i64gather_epi64::<8>(tables, idx)
+    }
+
+    /// Memoized path: 4-lane table gather, i64 words.
+    ///
+    /// # Safety
+    /// AVX2 must be available and every `xs[i] - lo` must index into
+    /// `table` (the caller pre-scans).
+    #[target_feature(enable = "avx2")]
+    pub(crate) unsafe fn gather_memo_i64(
+        table: &[i32],
+        lo: i64,
+        xs: &[i64],
+        out: &mut [i64],
+    ) {
+        debug_assert_eq!(xs.len(), out.len());
+        let base = table.as_ptr();
+        let lo_v = _mm256_set1_epi64x(lo);
+        let vend = xs.len() / 4 * 4;
+        let mut i = 0;
+        while i < vend {
+            let x = _mm256_loadu_si256(xs.as_ptr().add(i).cast());
+            let idx = _mm256_sub_epi64(x, lo_v);
+            // Table entries can be negative: sign-extend the gathered
+            // 32-bit words.
+            let vals = _mm256_i64gather_epi32::<4>(base, idx);
+            let wide = _mm256_cvtepi32_epi64(vals);
+            _mm256_storeu_si256(out.as_mut_ptr().add(i).cast(), wide);
+            i += 4;
+        }
+        for j in vend..xs.len() {
+            out[j] = table[(xs[j] - lo) as usize] as i64;
+        }
+    }
+
+    /// Memoized path: 8-lane table gather, i32 words (the PJRT I/O
+    /// type — twice the lane density of the i64 path).
+    ///
+    /// # Safety
+    /// AVX2 must be available and every `xs[i] + bias` must index into
+    /// `table` (the caller pre-scans).
+    #[target_feature(enable = "avx2")]
+    pub(crate) unsafe fn gather_memo_i32(
+        table: &[i32],
+        bias: i32,
+        xs: &[i32],
+        out: &mut [i32],
+    ) {
+        debug_assert_eq!(xs.len(), out.len());
+        let base = table.as_ptr();
+        let bias_v = _mm256_set1_epi32(bias);
+        let vend = xs.len() / 8 * 8;
+        let mut i = 0;
+        while i < vend {
+            let x = _mm256_loadu_si256(xs.as_ptr().add(i).cast());
+            let idx = _mm256_add_epi32(x, bias_v);
+            let vals = _mm256_i32gather_epi32::<4>(base, idx);
+            _mm256_storeu_si256(out.as_mut_ptr().add(i).cast(), vals);
+            i += 8;
+        }
+        for j in vend..xs.len() {
+            out[j] = table[(xs[j] + bias) as usize];
+        }
+    }
+
+    /// The live velocity-factor datapath, 4 words per iteration.
+    /// Bit-exact vs [`TanhUnit::eval_datapath`] for any input words
+    /// (see the module-level shift/overflow proofs).
+    ///
+    /// # Safety
+    /// AVX2 must be available and `datapath_eligible(unit.config())`
+    /// must hold.
+    #[target_feature(enable = "avx2")]
+    pub(crate) unsafe fn datapath_avx2(
+        unit: &TanhUnit,
+        xs: &[i64],
+        out: &mut [i64],
+    ) {
+        debug_assert_eq!(xs.len(), out.len());
+        let cfg = unit.config();
+        let l = cfg.lut_bits;
+        let m = cfg.mult_bits;
+        let half_l = _mm256_set1_epi64x(1i64 << (l - 1));
+        let one_l = _mm256_set1_epi64x(1i64 << l);
+        let half_m = _mm256_set1_epi64x(1i64 << (m - 1));
+        let two_m = _mm256_set1_epi64x(2i64 << m);
+        let seed = _mm256_set1_epi64x(cfg.nr_seed_const());
+        let sat_m1 = _mm256_set1_epi64x(unit.sat_threshold - 1);
+        let out_max = _mm256_set1_epi64x(unit.out_max);
+        let zero = _mm256_setzero_si256();
+        let l_shift = _mm_cvtsi32_si128(l as i32);
+        let m_shift = _mm_cvtsi32_si128(m as i32);
+        let d_shift = _mm_cvtsi32_si128((l + 1 - m) as i32);
+        let o_amt = l + m + 1 - cfg.out_frac;
+        let o_shift = _mm_cvtsi32_si128(o_amt as i32);
+        let o_round = _mm256_set1_epi64x(1i64 << (o_amt - 1));
+        let num_base = _mm256_set1_epi64x(match cfg.subtractor {
+            Subtractor::Twos => 1i64 << l,
+            Subtractor::Ones => (1i64 << l) - 1,
+        });
+        let tables = unit.tables.as_ptr();
+
+        let vend = xs.len() / 4 * 4;
+        let mut i = 0;
+        while i < vend {
+            let x = _mm256_loadu_si256(xs.as_ptr().add(i).cast());
+            // |x| via two's complement: (x ^ m) - m, m = sign mask.
+            let negm = _mm256_cmpgt_epi64(zero, x);
+            let n = _mm256_sub_epi64(_mm256_xor_si256(x, negm), negm);
+            let satm = _mm256_cmpgt_epi64(n, sat_m1);
+
+            // LUT product chain: f = prod of group entries, u0.L.
+            let mut f = gather_group(tables, &unit.groups[0], n);
+            for g in &unit.groups[1..] {
+                let e = gather_group(tables, g, n);
+                let p = _mm256_add_epi64(mul_lo32(f, e), half_l);
+                f = _mm256_srl_epi64(p, l_shift);
+            }
+
+            // Output stage: num/den, NR reciprocal, recompose.
+            let num = _mm256_sub_epi64(num_base, f);
+            let den = _mm256_add_epi64(one_l, f);
+            let d = _mm256_srl_epi64(den, d_shift);
+            let mut xr = _mm256_sub_epi64(seed, _mm256_slli_epi64::<1>(d));
+            for _ in 0..cfg.nr_stages {
+                let t0 = _mm256_srl_epi64(
+                    _mm256_add_epi64(mul_lo32(d, xr), half_m),
+                    m_shift,
+                );
+                xr = _mm256_srl_epi64(
+                    _mm256_add_epi64(
+                        mul_lo32(xr, _mm256_sub_epi64(two_m, t0)),
+                        half_m,
+                    ),
+                    m_shift,
+                );
+            }
+            let t = _mm256_srl_epi64(
+                _mm256_add_epi64(mul_lo32(num, xr), o_round),
+                o_shift,
+            );
+
+            // clamp(0, out_max), saturation blend, conditional negate.
+            let t = _mm256_blendv_epi8(t, zero, _mm256_cmpgt_epi64(zero, t));
+            let t =
+                _mm256_blendv_epi8(t, out_max, _mm256_cmpgt_epi64(t, out_max));
+            let t = _mm256_blendv_epi8(t, out_max, satm);
+            let t = _mm256_sub_epi64(_mm256_xor_si256(t, negm), negm);
+            _mm256_storeu_si256(out.as_mut_ptr().add(i).cast(), t);
+            i += 4;
+        }
+        for j in vend..xs.len() {
+            out[j] = unit.eval_datapath(xs[j]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_are_datapath_eligible() {
+        assert!(datapath_eligible(&TanhConfig::s3_12()));
+        assert!(datapath_eligible(&TanhConfig::s3_5()));
+    }
+
+    #[test]
+    fn float_divider_and_fat_luts_fall_back() {
+        assert!(!datapath_eligible(&TanhConfig::s3_12().with_nr(0)));
+        let mut fat = TanhConfig::s3_5();
+        fat.lut_bits = 27;
+        assert!(!datapath_eligible(&fat));
+        let mut narrow = TanhConfig::s3_5();
+        narrow.lut_bits = narrow.out_frac + 2;
+        assert!(!datapath_eligible(&narrow));
+    }
+
+    #[test]
+    fn active_mode_is_cached_and_valid() {
+        let a = active();
+        assert_eq!(a, active());
+        if a == SimdMode::Avx2 {
+            assert!(avx2_supported());
+        }
+        assert!(!a.name().is_empty());
+    }
+}

@@ -10,26 +10,27 @@
 
 use super::config::{Subtractor, TanhConfig};
 use super::lut::lut_tables;
+use super::simd::{self, SimdMode};
 
 /// Precomputed per-group addressing: the bit positions each address bit
 /// gathers from, flattened for cache-friendly iteration.
 #[derive(Clone, Debug)]
-struct Group {
+pub(crate) struct Group {
     /// `positions[j]` = input bit feeding address bit `j`.
-    positions: Vec<u32>,
+    pub(crate) positions: Vec<u32>,
     /// Offset of this group's table in the flat `tables` vec.
-    offset: usize,
+    pub(crate) offset: usize,
 }
 
 /// A ready-to-serve tanh unit instance.
 #[derive(Clone, Debug)]
 pub struct TanhUnit {
     cfg: TanhConfig,
-    groups: Vec<Group>,
+    pub(crate) groups: Vec<Group>,
     /// All group tables, flattened.
-    tables: Vec<i64>,
-    sat_threshold: i64,
-    out_max: i64,
+    pub(crate) tables: Vec<i64>,
+    pub(crate) sat_threshold: i64,
+    pub(crate) out_max: i64,
     /// Optional full-domain memo (index = input word - min_word).
     full_table: Option<Vec<i32>>,
 }
@@ -154,9 +155,37 @@ impl TanhUnit {
         }
     }
 
-    /// Batch evaluation into a caller-provided buffer.
+    /// Batch evaluation into a caller-provided buffer. Dispatches to
+    /// the process-wide SIMD mode (see [`super::simd`]); every mode is
+    /// bit-exact.
     pub fn eval_batch_into(&self, xs: &[i64], out: &mut [i64]) {
+        self.eval_batch_mode(simd::active(), xs, out);
+    }
+
+    /// Batch evaluation pinned to an explicit mode (bench/test hook).
+    /// `Avx2` degrades to the scalar loop when the host lacks the
+    /// feature or the config is outside the vectorizable envelope, so
+    /// it is always safe to request.
+    pub fn eval_batch_mode(
+        &self,
+        mode: SimdMode,
+        xs: &[i64],
+        out: &mut [i64],
+    ) {
         assert_eq!(xs.len(), out.len());
+        match mode {
+            SimdMode::Off => {
+                for (o, &x) in out.iter_mut().zip(xs) {
+                    *o = self.eval(x);
+                }
+            }
+            SimdMode::Scalar => self.eval_batch_scalar(xs, out),
+            SimdMode::Avx2 => self.eval_batch_avx2(xs, out),
+        }
+    }
+
+    /// The portable batch loops (memo lookup hoisted / datapath).
+    fn eval_batch_scalar(&self, xs: &[i64], out: &mut [i64]) {
         if let Some(t) = &self.full_table {
             let lo = -(1i64 << (self.cfg.in_width() - 1));
             for (o, &x) in out.iter_mut().zip(xs) {
@@ -169,15 +198,99 @@ impl TanhUnit {
         }
     }
 
+    /// AVX2 batch: memo gather when the memo is built (and every word
+    /// is in-domain — an out-of-domain word falls back to the scalar
+    /// loop so the panic site stays identical), else the vectorized
+    /// datapath when the config qualifies, else scalar.
+    fn eval_batch_avx2(&self, xs: &[i64], out: &mut [i64]) {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if simd::avx2_supported() {
+                if let Some(t) = &self.full_table {
+                    let lo = -(1i64 << (self.cfg.in_width() - 1));
+                    let len = t.len() as u64;
+                    if xs.iter().all(|&x| (x.wrapping_sub(lo) as u64) < len)
+                    {
+                        // SAFETY: avx2 checked; indices pre-validated.
+                        unsafe { simd::x86::gather_memo_i64(t, lo, xs, out) };
+                        return;
+                    }
+                } else if simd::datapath_eligible(&self.cfg) {
+                    // SAFETY: avx2 checked; config eligible.
+                    unsafe { simd::x86::datapath_avx2(self, xs, out) };
+                    return;
+                }
+            }
+        }
+        self.eval_batch_scalar(xs, out);
+    }
+
     pub fn eval_batch(&self, xs: &[i64]) -> Vec<i64> {
         let mut out = vec![0i64; xs.len()];
         self.eval_batch_into(xs, &mut out);
         out
     }
 
+    /// In-place batch evaluation (stages through a stack buffer so the
+    /// vector kernels keep disjoint load/store slices).
+    pub fn eval_batch_in_place(&self, buf: &mut [i64]) {
+        let mut tmp = [0i64; 256];
+        let mut i = 0;
+        while i < buf.len() {
+            let k = (buf.len() - i).min(256);
+            tmp[..k].copy_from_slice(&buf[i..i + k]);
+            self.eval_batch_into(&tmp[..k], &mut buf[i..i + k]);
+            i += k;
+        }
+    }
+
     /// i32-word batch API (the PJRT artifact I/O type).
     pub fn eval_batch_i32(&self, xs: &[i32]) -> Vec<i32> {
-        xs.iter().map(|&x| self.eval(x as i64) as i32).collect()
+        let mut out = vec![0i32; xs.len()];
+        self.eval_batch_i32_into(xs, &mut out);
+        out
+    }
+
+    /// i32-word batch into a caller buffer. With the memo built and
+    /// AVX2 active this is a direct 8-lane gather; otherwise it stages
+    /// through the i64 batch path in stack-sized chunks (which is how
+    /// it picks up the memo/datapath fast paths it used to bypass).
+    pub fn eval_batch_i32_into(&self, xs: &[i32], out: &mut [i32]) {
+        assert_eq!(xs.len(), out.len());
+        #[cfg(target_arch = "x86_64")]
+        {
+            if simd::active() == SimdMode::Avx2 && simd::avx2_supported() {
+                if let Some(t) = &self.full_table {
+                    let w = self.cfg.in_width();
+                    if w <= 31 {
+                        let bias = 1i32 << (w - 1);
+                        let len = t.len() as u32;
+                        if xs
+                            .iter()
+                            .all(|&x| (x.wrapping_add(bias) as u32) < len)
+                        {
+                            // SAFETY: avx2 checked; indices validated.
+                            unsafe {
+                                simd::x86::gather_memo_i32(t, bias, xs, out)
+                            };
+                            return;
+                        }
+                    }
+                }
+            }
+        }
+        let mut xbuf = [0i64; 256];
+        let mut obuf = [0i64; 256];
+        for (xc, oc) in xs.chunks(256).zip(out.chunks_mut(256)) {
+            let k = xc.len();
+            for (b, &x) in xbuf[..k].iter_mut().zip(xc) {
+                *b = x as i64;
+            }
+            self.eval_batch_into(&xbuf[..k], &mut obuf[..k]);
+            for (o, &b) in oc.iter_mut().zip(&obuf[..k]) {
+                *o = b as i32;
+            }
+        }
     }
 
     /// Float convenience: quantize -> datapath -> dequantize.

@@ -106,6 +106,65 @@ pub fn parse(input: &str) -> Result<Json, ParseError> {
     Ok(v)
 }
 
+/// How the top-level `"words"` field of a request body parsed (see
+/// [`parse_request_words`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WordsField {
+    /// No top-level `"words"` key (or the document is not an object).
+    Absent,
+    /// `"words"` is present but not an array.
+    NotArray,
+    /// `"words"` is an array but some element is not an exact integer.
+    /// `len` is the total element count — the API layer checks batch
+    /// capacity before element types, so the count must survive.
+    NotInt { len: usize },
+    /// `"words"` is an array of exact integers, appended to the sink.
+    Ints { len: usize },
+}
+
+/// Parse a request document, streaming a top-level `"words"` integer
+/// array directly into `sink` (appended; never cleared) instead of
+/// building per-element [`Json`] nodes. The returned document carries
+/// an empty placeholder array under `"words"`; the real words live in
+/// the sink, described by the [`WordsField`]. Non-object documents and
+/// malformed input behave exactly like [`parse`] — byte positions and
+/// messages included — so the serving layer's error strings are
+/// unchanged. This is the zero-copy request path (`server/api.rs`):
+/// with a warm per-thread sink, decoding allocates nothing per word.
+pub fn parse_request_words(
+    input: &str,
+    sink: &mut Vec<i64>,
+) -> Result<(Json, WordsField), ParseError> {
+    let mut p = Parser { b: input.as_bytes(), i: 0, depth: 0 };
+    p.skip_ws();
+    let (v, field) = if p.peek() == Some(b'{') {
+        // Same depth bookkeeping as `value()`'s `nested(object)`
+        // (top level: 0 < MAX_DEPTH, no check needed).
+        p.depth += 1;
+        let r = p.object_intercept_words(sink);
+        p.depth -= 1;
+        r?
+    } else {
+        (p.value()?, WordsField::Absent)
+    };
+    p.skip_ws();
+    if p.i != p.b.len() {
+        return Err(p.err("trailing data"));
+    }
+    Ok((v, field))
+}
+
+/// The serving layer's exact-integer criterion: a `Num` that is
+/// integral and inside the window where f64 represents integers
+/// exactly. Shared by [`parse_request_words`] and the API layer's
+/// scalar fields so both agree on what counts as an integer.
+pub fn exact_i64(v: &Json) -> Option<i64> {
+    match v {
+        Json::Num(n) if n.fract() == 0.0 && n.abs() <= 9e15 => Some(*n as i64),
+        _ => None,
+    }
+}
+
 #[derive(Debug)]
 pub struct ParseError {
     pub pos: usize,
@@ -212,6 +271,114 @@ impl<'a> Parser<'a> {
                     return Ok(Json::Obj(map));
                 }
                 _ => return Err(self.err("expected ',' or '}'")),
+            }
+        }
+    }
+
+    /// `object()` with a top-level `"words"` interception (see
+    /// [`parse_request_words`]): key order, duplicate-key last-wins and
+    /// every error site match the plain parser.
+    fn object_intercept_words(
+        &mut self,
+        sink: &mut Vec<i64>,
+    ) -> Result<(Json, WordsField), ParseError> {
+        self.expect(b'{')?;
+        let mut map = BTreeMap::new();
+        let mut field = WordsField::Absent;
+        let words_start = sink.len();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok((Json::Obj(map), field));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let val = if key == "words" {
+                // Duplicate key: last one wins (like the BTreeMap
+                // insert below) — drop any earlier decode.
+                sink.truncate(words_start);
+                field = self.words_value(sink)?;
+                Json::Arr(Vec::new())
+            } else {
+                self.value()?
+            };
+            map.insert(key, val);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok((Json::Obj(map), field));
+                }
+                _ => return Err(self.err("expected ',' or '}'")),
+            }
+        }
+    }
+
+    /// The value of a `"words"` key: integer arrays stream into `sink`;
+    /// anything else is still fully consumed (so malformed documents
+    /// keep their exact parse errors) and reported by kind.
+    fn words_value(
+        &mut self,
+        sink: &mut Vec<i64>,
+    ) -> Result<WordsField, ParseError> {
+        if self.peek() != Some(b'[') {
+            self.value()?;
+            return Ok(WordsField::NotArray);
+        }
+        if self.depth >= MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
+        self.depth += 1;
+        let r = self.words_array(sink);
+        self.depth -= 1;
+        r
+    }
+
+    fn words_array(
+        &mut self,
+        sink: &mut Vec<i64>,
+    ) -> Result<WordsField, ParseError> {
+        self.expect(b'[')?;
+        let start = sink.len();
+        let mut ints = true;
+        let mut len = 0usize;
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(WordsField::Ints { len: 0 });
+        }
+        loop {
+            self.skip_ws();
+            // Number literals build a heap-free `Json::Num`; only the
+            // (error-path) non-number elements allocate.
+            let v = self.value()?;
+            len += 1;
+            if ints {
+                match exact_i64(&v) {
+                    Some(w) => sink.push(w),
+                    None => {
+                        ints = false;
+                        sink.truncate(start);
+                    }
+                }
+            }
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(if ints {
+                        WordsField::Ints { len }
+                    } else {
+                        WordsField::NotInt { len }
+                    });
+                }
+                _ => return Err(self.err("expected ',' or ']'")),
             }
         }
     }
@@ -430,6 +597,21 @@ fn write_into(v: &Json, out: &mut String) {
     }
 }
 
+/// Append a raw i64 slice as a JSON array — the response-side zero-copy
+/// helper (no per-element [`Json`] nodes). Byte-identical to writing
+/// `Json::Arr` of in-range `Num`s.
+pub fn write_i64_array(words: &[i64], out: &mut String) {
+    use std::fmt::Write as _;
+    out.push('[');
+    for (i, w) in words.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(out, "{w}");
+    }
+    out.push(']');
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -514,6 +696,78 @@ mod tests {
         assert!(parse("\"\\u+041\"").is_err()); // '+' is not a hex digit
         assert!(parse("\"\\u00 1\"").is_err());
         assert!(parse("\"\\u0041\"").is_ok());
+    }
+
+    #[test]
+    fn request_words_stream_into_sink() {
+        let mut sink = vec![7i64]; // pre-existing content must survive
+        let (v, f) = parse_request_words(
+            r#"{"model":"s3_12","words":[1, -2, 1e3]}"#,
+            &mut sink,
+        )
+        .unwrap();
+        assert_eq!(f, WordsField::Ints { len: 3 });
+        assert_eq!(sink, vec![7, 1, -2, 1000]);
+        assert_eq!(v.path("model").unwrap().as_str(), Some("s3_12"));
+        // The document carries a placeholder, not the words.
+        assert_eq!(v.get("words"), Some(&Json::Arr(Vec::new())));
+    }
+
+    #[test]
+    fn request_words_kinds() {
+        let mut s = Vec::new();
+        let (_, f) = parse_request_words(r#"{"words": 5}"#, &mut s).unwrap();
+        assert_eq!(f, WordsField::NotArray);
+        let (_, f) =
+            parse_request_words(r#"{"words": []}"#, &mut s).unwrap();
+        assert_eq!(f, WordsField::Ints { len: 0 });
+        let (_, f) =
+            parse_request_words(r#"{"words": [1, 2.5, "x"]}"#, &mut s)
+                .unwrap();
+        assert_eq!(f, WordsField::NotInt { len: 3 });
+        assert!(s.is_empty(), "non-integer arrays leave the sink clean");
+        let (_, f) = parse_request_words(r#"{"x": 1}"#, &mut s).unwrap();
+        assert_eq!(f, WordsField::Absent);
+        let (_, f) = parse_request_words("[1, 2]", &mut s).unwrap();
+        assert_eq!(f, WordsField::Absent);
+    }
+
+    #[test]
+    fn request_words_duplicate_key_last_wins() {
+        let mut s = Vec::new();
+        let (_, f) = parse_request_words(
+            r#"{"words":[1,2],"words":[9]}"#,
+            &mut s,
+        )
+        .unwrap();
+        assert_eq!(f, WordsField::Ints { len: 1 });
+        assert_eq!(s, vec![9]);
+    }
+
+    #[test]
+    fn request_words_errors_match_plain_parse() {
+        for src in [
+            r#"{"words":[1,}"#,
+            r#"{"words":[1] extra"#,
+            r#"{"words":"#,
+            "{",
+            "nope",
+        ] {
+            let mut s = Vec::new();
+            let a = parse_request_words(src, &mut s).unwrap_err();
+            let b = parse(src).unwrap_err();
+            assert_eq!((a.pos, a.msg), (b.pos, b.msg), "{src}");
+        }
+    }
+
+    #[test]
+    fn i64_array_writer_matches_tree_writer() {
+        let words = [0i64, 1, -1, 32767, -32768, 1 << 40];
+        let mut fast = String::new();
+        write_i64_array(&words, &mut fast);
+        let tree =
+            Json::Arr(words.iter().map(|&w| Json::Num(w as f64)).collect());
+        assert_eq!(fast, write(&tree));
     }
 
     #[test]

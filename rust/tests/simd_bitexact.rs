@@ -1,0 +1,205 @@
+//! SIMD vs scalar bit-exactness: the vectorized batch kernels must be
+//! indistinguishable from the golden model under every [`SimdMode`],
+//! on every precision preset and datapath variant, including boundary
+//! inputs (format extremes, saturation edges) and ragged batch lengths
+//! that leave partial vector lanes.
+//!
+//! On hosts without AVX2 the `Avx2` rows silently exercise the scalar
+//! fallback — still a valid run (the CI `simd` job pins the feature on
+//! one leg and `TANHVF_SIMD=off` on another, so all three paths get
+//! real coverage somewhere).
+
+use tanh_vf::analysis::TanhImpl;
+use tanh_vf::baselines::dctif::Dctif;
+use tanh_vf::baselines::fmt16;
+use tanh_vf::baselines::pwl::Pwl;
+use tanh_vf::baselines::ralut::RangeLut;
+use tanh_vf::tanh::golden::tanh_golden_batch;
+use tanh_vf::tanh::{SigmoidUnit, SimdMode, Subtractor, TanhConfig, TanhUnit};
+use tanh_vf::util::rng::Rng;
+
+const MODES: [SimdMode; 3] =
+    [SimdMode::Off, SimdMode::Scalar, SimdMode::Avx2];
+
+/// Presets plus datapath variants that steer the kernel down every
+/// branch: float divider (nr=0, SIMD-ineligible), each NR depth, both
+/// subtractors, odd LUT groupings, unshuffled addressing.
+fn variant_configs() -> Vec<TanhConfig> {
+    let v = vec![
+        TanhConfig::s3_12(),
+        TanhConfig::s3_5(),
+        TanhConfig::s3_12().with_nr(0),
+        TanhConfig::s3_12().with_nr(1),
+        TanhConfig::s3_12().with_nr(4),
+        TanhConfig::s3_12().with_subtractor(Subtractor::Ones),
+        TanhConfig::s3_12().with_group(2),
+        TanhConfig::s3_12().with_group(5),
+        TanhConfig::s3_12().with_shuffle(false),
+        TanhConfig::s3_5().with_subtractor(Subtractor::Ones),
+        TanhConfig::s3_5().with_shuffle(false),
+    ];
+    for c in &v {
+        c.validate().unwrap();
+    }
+    v
+}
+
+/// Format extremes, zero neighborhood, and both sides of the
+/// saturation threshold — the words most likely to expose a lane that
+/// rounds, clamps, or sign-extends differently from the scalar path.
+fn boundary_words(cfg: &TanhConfig) -> Vec<i64> {
+    let mag = 1i64 << cfg.mag_bits();
+    let sat = cfg.sat_threshold();
+    let mut v = vec![0, 1, -1, 2, -2, mag - 1, -mag, 1 - mag];
+    for d in -2..=2 {
+        v.push(sat + d);
+        v.push(-(sat + d));
+    }
+    v.retain(|&x| x >= -mag && x < mag);
+    v
+}
+
+/// First-mismatch assertion: a 64k-element `assert_eq!` dump is
+/// useless; the failing word is what matters.
+fn assert_words_eq(got: &[i64], want: &[i64], xs: &[i64], tag: &str) {
+    assert_eq!(got.len(), want.len(), "{tag}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(
+            g, w,
+            "{tag}: x={} (index {i}): got {g}, want {w}",
+            xs[i]
+        );
+    }
+}
+
+#[test]
+fn presets_bit_exact_over_full_domain_all_modes() {
+    for cfg in [TanhConfig::s3_12(), TanhConfig::s3_5()] {
+        let mag = 1i64 << cfg.mag_bits();
+        let xs: Vec<i64> = (-mag..mag).collect();
+        let want = tanh_golden_batch(&xs, &cfg);
+        let live = TanhUnit::new(cfg).unwrap();
+        let mut memo = TanhUnit::new(cfg).unwrap();
+        memo.precompute_all();
+        let mut out = vec![0i64; xs.len()];
+        for mode in MODES {
+            let tag = format!("live/{} {}", mode.name(), cfg.describe());
+            live.eval_batch_mode(mode, &xs, &mut out);
+            assert_words_eq(&out, &want, &xs, &tag);
+            let tag = format!("memo/{} {}", mode.name(), cfg.describe());
+            memo.eval_batch_mode(mode, &xs, &mut out);
+            assert_words_eq(&out, &want, &xs, &tag);
+        }
+    }
+}
+
+#[test]
+fn variants_bit_exact_with_ragged_tails() {
+    let mut rng = Rng::new(0x51_3d);
+    for cfg in variant_configs() {
+        let live = TanhUnit::new(cfg).unwrap();
+        let mag = 1i64 << cfg.mag_bits();
+        let mut pool = boundary_words(&cfg);
+        while pool.len() < 1200 {
+            pool.push(rng.range_i64(-mag, mag));
+        }
+        let want = tanh_golden_batch(&pool, &cfg);
+        // Lengths straddling the 4-lane vector width: empty, single,
+        // sub-vector, vector+tail, and long-with-odd-tail shapes.
+        for len in [0usize, 1, 3, 5, 7, 9, 17, 31, 33, 100, 1023] {
+            let len = len.min(pool.len());
+            let mut out = vec![0i64; len];
+            for mode in MODES {
+                live.eval_batch_mode(mode, &pool[..len], &mut out);
+                let tag = format!(
+                    "live/{}/len={len} {}",
+                    mode.name(),
+                    cfg.describe()
+                );
+                assert_words_eq(&out, &want[..len], &pool[..len], &tag);
+            }
+        }
+    }
+}
+
+#[test]
+fn memoized_variants_bit_exact_all_modes() {
+    // Memoization swaps the datapath for a gather; the SIMD gather
+    // must agree on variants too (grouping/shuffle change the tables
+    // the memo was built from, not the memo lookup itself).
+    for cfg in [
+        TanhConfig::s3_12().with_group(2),
+        TanhConfig::s3_12().with_shuffle(false),
+        TanhConfig::s3_5().with_subtractor(Subtractor::Ones),
+    ] {
+        let mut memo = TanhUnit::new(cfg).unwrap();
+        memo.precompute_all();
+        let mag = 1i64 << cfg.mag_bits();
+        let xs: Vec<i64> = (-mag..mag).step_by(3).collect();
+        let want = tanh_golden_batch(&xs, &cfg);
+        let mut out = vec![0i64; xs.len()];
+        for mode in MODES {
+            memo.eval_batch_mode(mode, &xs, &mut out);
+            let tag = format!("memo/{} {}", mode.name(), cfg.describe());
+            assert_words_eq(&out, &want, &xs, &tag);
+        }
+    }
+}
+
+#[test]
+fn i32_batch_matches_scalar_eval() {
+    // The coordinator's wire-type path (the PR fixes it to reuse the
+    // batch kernels instead of per-element `eval` calls).
+    for cfg in [TanhConfig::s3_12(), TanhConfig::s3_5()] {
+        let live = TanhUnit::new(cfg).unwrap();
+        let mut memo = TanhUnit::new(cfg).unwrap();
+        memo.precompute_all();
+        let mag = 1i64 << cfg.mag_bits();
+        let xs32: Vec<i32> = (-mag..mag).map(|x| x as i32).collect();
+        let mut out32 = vec![0i32; xs32.len()];
+        for (tag, unit) in [("live", &live), ("memo", &memo)] {
+            unit.eval_batch_i32_into(&xs32, &mut out32);
+            for (&x, &y) in xs32.iter().zip(&out32) {
+                assert_eq!(
+                    y as i64,
+                    unit.eval(x as i64),
+                    "{tag} i32 path at x={x} ({})",
+                    cfg.describe()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn sigmoid_batch_matches_per_word_across_presets() {
+    for cfg in [TanhConfig::s3_12(), TanhConfig::s3_5()] {
+        let sig = SigmoidUnit::new(cfg).unwrap();
+        let mag = 1i64 << cfg.mag_bits();
+        let xs: Vec<i64> = (-mag..mag).step_by(3).collect();
+        let mut out = vec![0i64; xs.len()];
+        sig.eval_batch_into(&xs, &mut out);
+        for (&x, &y) in xs.iter().zip(&out) {
+            assert_eq!(y, sig.eval(x), "sigmoid at x={x} ({})",
+                       cfg.describe());
+        }
+    }
+}
+
+#[test]
+fn baseline_batch_overrides_match_per_word() {
+    let (fi, fo) = fmt16();
+    let pwl = Pwl::new(fi, fo, 64);
+    let dctif = Dctif::new(fi, fo, 4, 64);
+    let ralut = RangeLut::new(fi, fo, 6);
+    let impls: [&dyn TanhImpl; 3] = [&pwl, &dctif, &ralut];
+    let mut xs: Vec<i64> = (-32768..32768).step_by(11).collect();
+    xs.extend([0, 1, -1, 32767, -32768, -32767]);
+    for imp in impls {
+        let mut out = vec![0i64; xs.len()];
+        imp.eval_batch_words(&xs, &mut out);
+        for (&x, &y) in xs.iter().zip(&out) {
+            assert_eq!(y, imp.eval_word(x), "{} at x={x}", imp.name());
+        }
+    }
+}

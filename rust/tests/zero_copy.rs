@@ -1,0 +1,115 @@
+//! Zero-copy request path e2e: drive keep-alive `/v1/batch` traffic
+//! through a real socket and prove, via the `tanhvf_word_arena_*`
+//! metric families, that the word buffers are checked out of the
+//! per-thread arena and *reused* — allocations happen while the arena
+//! warms up and then stop, while checkouts keep counting one per
+//! request. Responses stay bit-exact against the golden model the
+//! whole time, so the reuse is observably free.
+
+use std::net::TcpStream;
+use std::time::Duration;
+
+use tanh_vf::server::http::HttpConn;
+use tanh_vf::server::loadgen;
+use tanh_vf::server::{named_config, parse_routes, Server, ServerConfig};
+use tanh_vf::tanh::golden::tanh_golden_batch;
+use tanh_vf::util::json::{self, Json};
+
+/// Pull `name value` out of a Prometheus exposition body. `# HELP` /
+/// `# TYPE` lines start with '#', so the prefix match skips them.
+fn metric(body: &str, name: &str) -> u64 {
+    body.lines()
+        .find_map(|l| {
+            l.strip_prefix(name).and_then(|rest| rest.strip_prefix(' '))
+        })
+        .unwrap_or_else(|| panic!("metric {name} missing:\n{body}"))
+        .trim()
+        .parse::<u64>()
+        .unwrap_or_else(|e| panic!("metric {name}: {e}"))
+}
+
+// One #[test] on purpose: the arena counters are process-global, and
+// parallel test threads in this file would race the deltas. Other
+// integration-test files are separate processes, so they can't
+// interfere.
+#[test]
+fn batch_requests_reuse_word_arena() {
+    let routes = parse_routes("native:s3_12").unwrap();
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        // Threaded backend: a keep-alive connection owns one handler
+        // thread for its whole life, so every request below lands on
+        // the same arena slot and the warm-tail assertion can demand
+        // *zero* new allocations instead of a pool-sized bound.
+        event_loop: false,
+        ..Default::default()
+    };
+    let srv = Server::start(cfg, routes).unwrap();
+    let addr = srv.local_addr().to_string();
+
+    let tanh_cfg = named_config("s3_12").unwrap();
+    let words: Vec<i64> = (-32i64..32).map(|i| i * 777).collect();
+    let want = tanh_golden_batch(&words, &tanh_cfg);
+    let mut body = String::from("{\"model\":\"s3_12\",\"words\":");
+    json::write_i64_array(&words, &mut body);
+    body.push('}');
+
+    let (status, before) = loadgen::http_get(&addr, "/metrics").unwrap();
+    assert_eq!(status, 200);
+    let checkouts0 = metric(&before, "tanhvf_word_arena_checkouts_total");
+
+    let s = TcpStream::connect(addr.as_str()).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+    let mut conn = HttpConn::new(s);
+
+    const WARM: usize = 4;
+    const TOTAL: usize = 32;
+    let mut allocs_warm = 0u64;
+    for i in 0..TOTAL {
+        conn.write_request("POST", "/v1/batch", body.as_bytes()).unwrap();
+        let (status, _, resp) = conn.read_response(1 << 20).unwrap();
+        assert_eq!(status, 200, "{}", String::from_utf8_lossy(&resp));
+        let v = json::parse(std::str::from_utf8(&resp).unwrap()).unwrap();
+        let got: Vec<i64> = v
+            .get("words")
+            .and_then(Json::as_arr)
+            .expect("words array")
+            .iter()
+            .map(|w| w.as_i64().unwrap())
+            .collect();
+        assert_eq!(got, want, "request {i} must stay bit-exact");
+        if i + 1 == WARM {
+            let (_, m) = loadgen::http_get(&addr, "/metrics").unwrap();
+            allocs_warm = metric(&m, "tanhvf_word_arena_allocs_total");
+        }
+    }
+
+    let (_, after) = loadgen::http_get(&addr, "/metrics").unwrap();
+    let checkouts = metric(&after, "tanhvf_word_arena_checkouts_total");
+    let allocs = metric(&after, "tanhvf_word_arena_allocs_total");
+    let bytes = metric(&after, "tanhvf_word_arena_bytes");
+
+    // One checkout per batch request, nothing else runs in-process.
+    assert_eq!(
+        checkouts - checkouts0,
+        TOTAL as u64,
+        "one arena checkout per request"
+    );
+    // Growth is front-loaded: whatever the first few requests cost,
+    // the warm tail (requests WARM..TOTAL) must not allocate at all.
+    assert!(allocs >= 1, "first request must grow the fresh slot");
+    assert_eq!(
+        allocs, allocs_warm,
+        "warm tail allocated: {} -> {} over {} reuse requests",
+        allocs_warm,
+        allocs,
+        TOTAL - WARM
+    );
+    // The acceptance shape: allocations per request tend to zero.
+    assert!(
+        allocs < TOTAL as u64,
+        "allocs {allocs} must stay below {TOTAL} requests"
+    );
+    assert!(bytes > 0, "retained capacity must be accounted");
+    drop(srv);
+}
