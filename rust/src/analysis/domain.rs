@@ -1,0 +1,313 @@
+//! Abstract domain for the static datapath verifier: saturating i128
+//! intervals paired with known-low-zero-bit tracking.
+//!
+//! Every intermediate of the §5 fixed-point datapath is an `i64`; the
+//! verifier re-runs the datapath over *sets* of words instead of words,
+//! using [`Iv`] (an inclusive `[lo, hi]` interval carried in `i128`, so
+//! overflow of the concrete `i64` is representable rather than UB) and
+//! [`AbsWord`] (an interval plus the number of low bits proven zero —
+//! the component that shows a shift is an exact division, not a
+//! truncation).
+//!
+//! Soundness discipline: every transfer function returns a superset of
+//! the concrete results. Arithmetic that would overflow even the i128
+//! carrier saturates to `±SAT_LIMIT` (far outside the i64 range), so a
+//! mutated/absurd config degrades to "provably does not fit in i64" —
+//! a failed obligation — never to a silently wrapped bound.
+
+/// Saturation rail for the i128 carrier: big enough that any real
+/// datapath value is exact, small enough that sums of saturated values
+/// cannot wrap i128.
+pub const SAT_LIMIT: i128 = 1 << 120;
+
+fn sat(v: i128) -> i128 {
+    v.clamp(-SAT_LIMIT, SAT_LIMIT)
+}
+
+fn sat_add(a: i128, b: i128) -> i128 {
+    sat(a.saturating_add(b))
+}
+
+fn sat_mul(a: i128, b: i128) -> i128 {
+    match a.checked_mul(b) {
+        Some(p) => sat(p),
+        None => {
+            if (a < 0) == (b < 0) {
+                SAT_LIMIT
+            } else {
+                -SAT_LIMIT
+            }
+        }
+    }
+}
+
+/// Inclusive integer interval `[lo, hi]` over a saturating i128 carrier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Iv {
+    pub lo: i128,
+    pub hi: i128,
+}
+
+impl Iv {
+    pub fn new(lo: i128, hi: i128) -> Iv {
+        assert!(lo <= hi, "interval [{lo}, {hi}] is empty");
+        Iv { lo: sat(lo), hi: sat(hi) }
+    }
+
+    pub fn point(v: i128) -> Iv {
+        Iv::new(v, v)
+    }
+
+    pub fn add(self, o: Iv) -> Iv {
+        Iv { lo: sat_add(self.lo, o.lo), hi: sat_add(self.hi, o.hi) }
+    }
+
+    pub fn sub(self, o: Iv) -> Iv {
+        Iv { lo: sat_add(self.lo, -o.hi), hi: sat_add(self.hi, -o.lo) }
+    }
+
+    pub fn neg(self) -> Iv {
+        Iv { lo: -self.hi, hi: -self.lo }
+    }
+
+    /// Product interval: min/max over the four sign corners.
+    pub fn mul(self, o: Iv) -> Iv {
+        let c = [
+            sat_mul(self.lo, o.lo),
+            sat_mul(self.lo, o.hi),
+            sat_mul(self.hi, o.lo),
+            sat_mul(self.hi, o.hi),
+        ];
+        Iv {
+            lo: c.iter().copied().min().unwrap(),
+            hi: c.iter().copied().max().unwrap(),
+        }
+    }
+
+    /// Left shift (exact scaling by `2^s`, saturating).
+    pub fn shl(self, s: u32) -> Iv {
+        if s >= 120 {
+            // Any nonzero value saturates; zero stays zero.
+            return Iv {
+                lo: if self.lo < 0 { -SAT_LIMIT } else { 0 },
+                hi: if self.hi > 0 { SAT_LIMIT } else { 0 },
+            };
+        }
+        Iv {
+            lo: sat(self.lo.saturating_mul(1i128 << s)),
+            hi: sat(self.hi.saturating_mul(1i128 << s)),
+        }
+    }
+
+    /// Arithmetic right shift (floor division by `2^s`), the semantics
+    /// of `>>` on the concrete i64 datapath. Monotone, so the interval
+    /// maps endpoint-to-endpoint.
+    pub fn shr(self, s: u32) -> Iv {
+        let s = s.min(127);
+        Iv { lo: self.lo >> s, hi: self.hi >> s }
+    }
+
+    /// Smallest interval covering both.
+    pub fn join(self, o: Iv) -> Iv {
+        Iv { lo: self.lo.min(o.lo), hi: self.hi.max(o.hi) }
+    }
+
+    /// Intersection, if non-empty. Sound refinement: when two
+    /// independent analyses both bound the same concrete value, the
+    /// value lies in the overlap.
+    pub fn intersect(self, o: Iv) -> Option<Iv> {
+        let lo = self.lo.max(o.lo);
+        let hi = self.hi.min(o.hi);
+        if lo <= hi {
+            Some(Iv { lo, hi })
+        } else {
+            None
+        }
+    }
+
+    pub fn clamp_to(self, lo: i128, hi: i128) -> Iv {
+        Iv { lo: self.lo.clamp(lo, hi), hi: self.hi.clamp(lo, hi) }
+    }
+
+    /// Does every value fit in i64?
+    pub fn fits_i64(self) -> bool {
+        self.lo >= i64::MIN as i128 && self.hi <= i64::MAX as i128
+    }
+
+    /// Does every value fit in a signed `bits`-bit word (the low-32
+    /// exactness condition of `_mm256_mul_epi32` for `bits = 32`)?
+    pub fn fits_signed(self, bits: u32) -> bool {
+        if bits == 0 || bits > 127 {
+            return false;
+        }
+        let half = 1i128 << (bits - 1);
+        self.lo >= -half && self.hi < half
+    }
+
+    pub fn is_nonneg(self) -> bool {
+        self.lo >= 0
+    }
+
+    pub fn width(self) -> i128 {
+        self.hi - self.lo
+    }
+}
+
+/// An abstract datapath word: value interval plus the number of low
+/// bits known to be zero for *every* concrete value in the set.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AbsWord {
+    pub iv: Iv,
+    pub low_zeros: u32,
+}
+
+/// Cap on tracked low zeros (an i64 word has at most 63 value bits).
+const MAX_LZ: u32 = 63;
+
+impl AbsWord {
+    pub fn exact(v: i128) -> AbsWord {
+        let lz = if v == 0 { MAX_LZ } else { v.trailing_zeros().min(MAX_LZ) };
+        AbsWord { iv: Iv::point(v), low_zeros: lz }
+    }
+
+    /// A plain range: nothing known about low bits unless degenerate.
+    pub fn range(lo: i128, hi: i128) -> AbsWord {
+        if lo == hi {
+            AbsWord::exact(lo)
+        } else {
+            AbsWord { iv: Iv::new(lo, hi), low_zeros: 0 }
+        }
+    }
+
+    pub fn from_iv(iv: Iv) -> AbsWord {
+        AbsWord::range(iv.lo, iv.hi)
+    }
+
+    /// `a + b`: a sum keeps the common low-zero run.
+    pub fn add(self, o: AbsWord) -> AbsWord {
+        AbsWord {
+            iv: self.iv.add(o.iv),
+            low_zeros: self.low_zeros.min(o.low_zeros),
+        }
+    }
+
+    pub fn sub(self, o: AbsWord) -> AbsWord {
+        AbsWord {
+            iv: self.iv.sub(o.iv),
+            low_zeros: self.low_zeros.min(o.low_zeros),
+        }
+    }
+
+    /// `a * b`: low-zero runs add (2^i · 2^j divides the product).
+    pub fn mul(self, o: AbsWord) -> AbsWord {
+        AbsWord {
+            iv: self.iv.mul(o.iv),
+            low_zeros: (self.low_zeros + o.low_zeros).min(MAX_LZ),
+        }
+    }
+
+    pub fn shl(self, s: u32) -> AbsWord {
+        AbsWord {
+            iv: self.iv.shl(s),
+            low_zeros: (self.low_zeros + s).min(MAX_LZ),
+        }
+    }
+
+    /// Arithmetic right shift. If the operand has `s` known low zeros
+    /// the shift is an exact division (no information is destroyed and
+    /// `low_zeros` just drops by `s`); otherwise it is a floor and all
+    /// low-bit knowledge is lost.
+    pub fn shr(self, s: u32) -> AbsWord {
+        let low_zeros =
+            if self.low_zeros >= s { self.low_zeros - s } else { 0 };
+        AbsWord { iv: self.iv.shr(s), low_zeros }
+    }
+
+    /// Is `>> s` an exact division (not a truncation) for every value?
+    pub fn shr_exact(self, s: u32) -> bool {
+        self.low_zeros >= s
+    }
+
+    /// Refine the interval with an independent bound on the same value.
+    pub fn refine(self, iv: Iv) -> AbsWord {
+        match self.iv.intersect(iv) {
+            Some(t) => AbsWord { iv: t, low_zeros: self.low_zeros },
+            // Disjoint bounds can only come from slack mis-accounting
+            // upstream; keep the original (sound) interval.
+            None => self,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interval_arithmetic_covers_concrete() {
+        let a = Iv::new(-3, 5);
+        let b = Iv::new(2, 4);
+        let s = a.add(b);
+        let p = a.mul(b);
+        for x in -3i128..=5 {
+            for y in 2i128..=4 {
+                assert!(s.lo <= x + y && x + y <= s.hi);
+                assert!(p.lo <= x * y && x * y <= p.hi);
+            }
+        }
+    }
+
+    #[test]
+    fn shr_is_floor_like_the_datapath() {
+        let a = Iv::new(-7, 9);
+        let r = a.shr(1);
+        for x in -7i128..=9 {
+            let c = x >> 1;
+            assert!(r.lo <= c && c <= r.hi, "x={x} -> {c} not in {r:?}");
+        }
+        assert_eq!(r.lo, -4); // floor(-7/2), not trunc
+    }
+
+    #[test]
+    fn saturation_instead_of_wrap() {
+        let big = Iv::point(1 << 100);
+        let p = big.mul(big);
+        assert_eq!(p.hi, SAT_LIMIT);
+        assert!(!p.fits_i64());
+        let neg = big.neg().mul(big);
+        assert_eq!(neg.lo, -SAT_LIMIT);
+    }
+
+    #[test]
+    fn fits_checks() {
+        assert!(Iv::new(-(1 << 62), 1 << 62).fits_i64());
+        assert!(!Iv::point((1 << 63) + 1).fits_i64());
+        assert!(Iv::new(-(1 << 31), (1 << 31) - 1).fits_signed(32));
+        assert!(!Iv::point(1 << 31).fits_signed(32));
+    }
+
+    #[test]
+    fn low_zeros_through_ops() {
+        let a = AbsWord::exact(8); // 3 low zeros
+        assert_eq!(a.low_zeros, 3);
+        let b = AbsWord::exact(4);
+        assert_eq!(a.mul(b).low_zeros, 5);
+        assert_eq!(a.add(b).low_zeros, 2);
+        assert!(a.shr_exact(3));
+        assert!(!a.shr_exact(4));
+        assert_eq!(a.shl(2).low_zeros, 5);
+        let r = AbsWord::range(1, 10);
+        assert_eq!(r.low_zeros, 0);
+        assert_eq!(r.shr(2).low_zeros, 0);
+    }
+
+    #[test]
+    fn intersect_and_refine() {
+        let a = Iv::new(0, 100);
+        let b = Iv::new(50, 200);
+        assert_eq!(a.intersect(b), Some(Iv::new(50, 100)));
+        assert_eq!(a.intersect(Iv::new(200, 300)), None);
+        let w = AbsWord::range(0, 100).refine(Iv::new(50, 70));
+        assert_eq!(w.iv, Iv::new(50, 70));
+    }
+}

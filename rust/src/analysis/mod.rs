@@ -1,6 +1,11 @@
 //! Error-analysis harness: exhaustive/sampled accuracy sweeps over any
 //! fixed-point tanh implementation (the Table II engine, also used for
-//! baseline comparisons and ablations).
+//! baseline comparisons and ablations), plus the static datapath
+//! verifier ([`verify`]) that proves overflow-freedom, SIMD-gate
+//! soundness and worst-case error bounds without running a sweep.
+
+pub mod domain;
+pub mod verify;
 
 use crate::fixed::{ErrorStats, QFormat};
 

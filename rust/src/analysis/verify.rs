@@ -1,0 +1,768 @@
+//! Static datapath verifier: abstract interpretation of the §5
+//! fixed-point pipeline over the [`super::domain`] interval ×
+//! known-low-bits domain.
+//!
+//! For any [`TanhConfig`] (valid or deliberately broken) the verifier
+//! statically proves, without evaluating a single word:
+//!
+//! 1. **Overflow-freedom** — every intermediate of every stage (LUT
+//!    product chain, Newton–Raphson iterations, recompose) fits in
+//!    `i64`, for *all* `i64` input words (gather addresses are formed
+//!    bit-by-bit, so even garbage lanes read real table entries).
+//! 2. **SIMD-gate soundness** — every config the AVX2 eligibility gate
+//!    admits has provably exact low-32 multiplies and provably
+//!    non-negative operands at every logical-shift site, so the vector
+//!    kernel is bit-exact against the scalar datapath. The gate's
+//!    bounds ([`SIMD_MIN_LUT_MARGIN`] etc.) live here, next to the
+//!    proof that justifies them.
+//! 3. **Saturation coverage** — the clip threshold is high enough that
+//!    the saturated region contributes at most one output lsb of error.
+//! 4. **A static worst-case error bound** (in output lsb, vs real
+//!    `tanh`) that must dominate the empirically measured max error —
+//!    checked against the exhaustive sweep by `tests/verify_datapath.rs`
+//!    and the `verify-datapath` CLI subcommand.
+//!
+//! ## Newton–Raphson: residual recurrence, not interval iteration
+//!
+//! Naive interval propagation through NR diverges: interval arithmetic
+//! cannot see that NR *contracts* (the classic dependency problem), so
+//! three iterations inflate a few-ulp reciprocal into a thousands-wide
+//! interval. Instead the verifier tracks the residual
+//! `eps_k >= |1 - D*X_k|` (with `D = d/2^M in (1/2, 1]`,
+//! `X_k = xr_k/2^M`). The seed `X_0 = S - 2D` is exact, so `eps_0` is
+//! the max of the quadratic `|1 - S*D + 2*D^2|` over the `D` interval
+//! (endpoints + vertex). Each stage performs two `+2^(M-1)`-then-shift
+//! roundings (`|r| <= 2^(-M-1)` each), giving
+//!
+//! ```text
+//! 1 - D*X' = (1 - D*X)^2 + D*X*r1 - D*r2
+//! eps'    <= eps^2 + (2 + eps) * 2^(-M-1)
+//! ```
+//!
+//! which is pointwise in `D` — width-free, so it converges exactly like
+//! the hardware does. The integer `xr_k` then lies in
+//! `2^(2M) * [(1-eps)/d_hi, (1+eps)/d_lo]`, and that bound *refines*
+//! the naive interval (both are sound; the intersection is, too). The
+//! naive interval remains the fallback when the residual diverges
+//! (`eps >= 1`, e.g. a mutated seed constant), keeping overflow checks
+//! sound for arbitrarily broken datapaths.
+//!
+//! ## Error bound decomposition
+//!
+//! With `f^` the computed chain word and `r(f) = 2^out*(2^L-f)/(2^L+f)`
+//! the exact output of an error-free back end (`r(2^L e^(-2a)) =
+//! 2^out*tanh(a)` *identically* — the paper's eq. 9, so only rounding
+//! contributes):
+//!
+//! * **term2** (chain): `|f^ - 2^L e^(-2a)| <= (2G-1)/2` words (G
+//!   entries at <= 1/2 ulp each, G-1 chain roundings at <= 1/2, and
+//!   every propagation factor is a velocity factor <= 1), times
+//!   `max|r'| = 2^(out+1-L)`.
+//! * **term1** (back end): on each of ~1024 `f`-subintervals, with
+//!   `A = d*2^(L+1-M)` and truncation `tau = den - A in [0, 2^(L+1-M))`,
+//!   `|V - r(f^)| <= 2^out * num * (eps/A + tau/(A*den))` (+`2^out(1+eps)/A`
+//!   for the one's-complement numerator offset), plus the final 1/2 lsb
+//!   recompose rounding. Subdividing keeps `num` and `eps` correlated:
+//!   the residual is worst where `D -> 1`, which is exactly where
+//!   `num -> 0`.
+//! * **saturation**: `<= max(1, 2^out*(1 - tanh(th/2^in)) - 1)` lsb,
+//!   `<= 1` whenever the threshold obligation holds.
+
+use super::domain::{AbsWord, Iv};
+use crate::tanh::{Subtractor, TanhConfig};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+// ---------------------------------------------------------------------
+// Preset catalog (shared by tests, CLI, and CI)
+// ---------------------------------------------------------------------
+
+/// The paper's two published operating points.
+pub const SHIPPED_PRESETS: &[&str] = &["s3_12", "s3_5"];
+
+/// Derived presets beyond the paper's points, served by
+/// `server::named_config` and pinned by `tests/precision_presets.rs`.
+pub const DERIVED_PRESETS: &[&str] = &["s2_6", "s3_6", "s3_9", "s4_10"];
+
+/// Full catalog: shipped + derived preset names.
+pub fn all_preset_names() -> Vec<&'static str> {
+    let mut v = Vec::new();
+    v.extend_from_slice(SHIPPED_PRESETS);
+    v.extend_from_slice(DERIVED_PRESETS);
+    v
+}
+
+// ---------------------------------------------------------------------
+// The SIMD eligibility gate (single source of truth)
+// ---------------------------------------------------------------------
+
+/// The AVX2 kernel cannot vectorize the `nr = 0` float reference
+/// divider, so at least one NR stage is required.
+pub const SIMD_MIN_NR_STAGES: u32 = 1;
+
+/// Minimum `lut_bits - out_frac` margin. The verifier proves margin 2
+/// suffices even for the one's-complement `num = -1` corner
+/// (`2^(shift-1) = 2^(L+M-out) >= xr_hi ~ 2^(M+1)(1+eps)`); the shipped
+/// gate keeps one extra bit of slack.
+pub const SIMD_MIN_LUT_MARGIN: u32 = 3;
+
+/// Maximum LUT precision: keeps every `_mm256_mul_epi32` factor on the
+/// chain and recompose sites below `2^28` (provable ceiling is `2^31`;
+/// the gate leaves headroom).
+pub const SIMD_MAX_LUT_BITS: u32 = 26;
+
+/// Maximum multiplier precision: bounds `d` and the NR iterates below
+/// `2^28` (provable ceiling `xr < 2^(M+2) <= 2^31` at `M = 29`).
+pub const SIMD_MAX_MULT_BITS: u32 = 26;
+
+/// The eligibility predicate the runtime dispatch uses
+/// (`tanh::simd::datapath_eligible` delegates here, so gate and proof
+/// cannot drift). Soundness — "admitted implies verifier-provable" —
+/// is enforced by the grid sweep in `tests/verify_datapath.rs`.
+pub fn simd_gate(cfg: &TanhConfig) -> bool {
+    cfg.nr_stages >= SIMD_MIN_NR_STAGES
+        && cfg.lut_bits >= cfg.out_frac + SIMD_MIN_LUT_MARGIN
+        && cfg.lut_bits <= SIMD_MAX_LUT_BITS
+        && cfg.mult_bits <= SIMD_MAX_MULT_BITS
+}
+
+// ---------------------------------------------------------------------
+// Parameters under verification (the mutation surface)
+// ---------------------------------------------------------------------
+
+/// The constants the verifier reasons about. [`Self::from_config`]
+/// fills them exactly as the real datapath derives them; mutation
+/// tests override individual fields to prove each obligation can fail.
+#[derive(Clone, Debug)]
+pub struct DatapathParams {
+    pub cfg: TanhConfig,
+    /// Saturation compare threshold (input magnitude words).
+    pub sat_threshold: i64,
+    /// NR linear-seed constant (`2.75 * 2^M` in the real datapath).
+    pub seed_const: i64,
+    /// Signed width of the vector low-multiply (32 for
+    /// `_mm256_mul_epi32`; mutations truncate it further).
+    pub mul_keep_bits: u32,
+    /// Require the SIMD obligations even if the gate rejects the
+    /// config — models forcing an ineligible config down the AVX2 path.
+    pub force_simd: bool,
+}
+
+impl DatapathParams {
+    pub fn from_config(cfg: &TanhConfig) -> DatapathParams {
+        let seed_const = if cfg.nr_stages >= 1 && cfg.mult_bits >= 2 {
+            cfg.nr_seed_const()
+        } else {
+            0
+        };
+        DatapathParams {
+            cfg: *cfg,
+            sat_threshold: cfg.sat_threshold(),
+            seed_const,
+            mul_keep_bits: 32,
+            force_simd: false,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Report types
+// ---------------------------------------------------------------------
+
+/// One proof obligation: a named fact the verifier either proved or
+/// could not prove for this config.
+#[derive(Clone, Debug)]
+pub struct Obligation {
+    pub name: &'static str,
+    pub proved: bool,
+    pub detail: String,
+}
+
+/// One row of the per-stage interval table (for the CLI report).
+#[derive(Clone, Debug)]
+pub struct StageRange {
+    pub stage: String,
+    pub lo: i128,
+    pub hi: i128,
+    pub low_zeros: u32,
+}
+
+/// The verifier's verdict for one parameter set.
+#[derive(Clone, Debug)]
+pub struct VerifyReport {
+    pub config: TanhConfig,
+    /// Core obligations (overflow, shifts, saturation, convergence,
+    /// gate soundness). All must hold for [`Self::proven`].
+    pub obligations: Vec<Obligation>,
+    /// SIMD-specific obligations; required only when the gate admits
+    /// the config (or `force_simd` demands it).
+    pub simd_obligations: Vec<Obligation>,
+    pub stages: Vec<StageRange>,
+    /// Did the eligibility gate admit this config?
+    pub simd_admitted: bool,
+    /// Did every SIMD obligation hold?
+    pub simd_provable: bool,
+    /// Final NR residual bound `eps >= |1 - D*X|` (None for `nr = 0`).
+    pub nr_residual: Option<f64>,
+    /// Static worst-case error bound in output lsb vs real tanh
+    /// (None when not requested or when a prerequisite failed).
+    pub static_max_ulp: Option<f64>,
+}
+
+impl VerifyReport {
+    /// Every core obligation proved (gate soundness is itself a core
+    /// obligation, so an admitted-but-unprovable config is unproven).
+    pub fn proven(&self) -> bool {
+        self.obligations.iter().all(|o| o.proved)
+    }
+
+    pub fn failed(&self) -> Vec<&Obligation> {
+        self.obligations
+            .iter()
+            .chain(self.simd_obligations.iter())
+            .filter(|o| !o.proved)
+            .collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("config".into(), Json::Str(self.config.describe()));
+        m.insert("proven".into(), Json::Bool(self.proven()));
+        m.insert("simd_admitted".into(), Json::Bool(self.simd_admitted));
+        m.insert("simd_provable".into(), Json::Bool(self.simd_provable));
+        m.insert(
+            "nr_residual".into(),
+            self.nr_residual.map(Json::Num).unwrap_or(Json::Null),
+        );
+        m.insert(
+            "static_max_ulp".into(),
+            self.static_max_ulp.map(Json::Num).unwrap_or(Json::Null),
+        );
+        m.insert("obligations".into(), obligations_json(&self.obligations));
+        m.insert(
+            "simd_obligations".into(),
+            obligations_json(&self.simd_obligations),
+        );
+        let stages = self
+            .stages
+            .iter()
+            .map(|s| {
+                let mut sm = BTreeMap::new();
+                sm.insert("stage".into(), Json::Str(s.stage.clone()));
+                sm.insert("lo".into(), Json::Num(s.lo as f64));
+                sm.insert("hi".into(), Json::Num(s.hi as f64));
+                sm.insert(
+                    "low_zeros".into(),
+                    Json::Num(s.low_zeros as f64),
+                );
+                Json::Obj(sm)
+            })
+            .collect();
+        m.insert("stages".into(), Json::Arr(stages));
+        Json::Obj(m)
+    }
+}
+
+fn obligations_json(list: &[Obligation]) -> Json {
+    Json::Arr(
+        list.iter()
+            .map(|o| {
+                let mut m = BTreeMap::new();
+                m.insert("name".into(), Json::Str(o.name.into()));
+                m.insert("proved".into(), Json::Bool(o.proved));
+                m.insert("detail".into(), Json::Str(o.detail.clone()));
+                Json::Obj(m)
+            })
+            .collect(),
+    )
+}
+
+// ---------------------------------------------------------------------
+// Entry points
+// ---------------------------------------------------------------------
+
+/// Full verification of a config as the real datapath derives it,
+/// including the static error bound.
+pub fn verify(cfg: &TanhConfig) -> VerifyReport {
+    verify_params(&DatapathParams::from_config(cfg), true)
+}
+
+/// Cheap structural verification (no error-bound subdivision) — the
+/// construction-time check behind the `TanhUnit::new` /
+/// `SigmoidUnit::new` debug assertions. `O(groups + nr_stages)`.
+pub fn verify_safety(cfg: &TanhConfig) -> Result<(), String> {
+    let rep = verify_params(&DatapathParams::from_config(cfg), false);
+    if rep.proven() {
+        Ok(())
+    } else {
+        let fails: Vec<String> = rep
+            .failed()
+            .iter()
+            .map(|o| format!("{}: {}", o.name, o.detail))
+            .collect();
+        Err(format!(
+            "datapath verifier rejected {}: {}",
+            cfg.describe(),
+            fails.join("; ")
+        ))
+    }
+}
+
+fn push(
+    list: &mut Vec<Obligation>,
+    name: &'static str,
+    proved: bool,
+    detail: String,
+) -> bool {
+    list.push(Obligation { name, proved, detail });
+    proved
+}
+
+/// Max of `|1 - S*D + 2*D^2|` over `D in [d_lo, d_hi]` — the seed
+/// residual. The quadratic is convex, so the max is at an endpoint;
+/// the vertex is included for the absolute value of a negative dip
+/// (possible for mutated seeds).
+fn seed_residual(s: f64, d_lo: f64, d_hi: f64) -> f64 {
+    let r = |d: f64| (1.0 - s * d + 2.0 * d * d).abs();
+    let mut eps = r(d_lo).max(r(d_hi));
+    let vertex = s / 4.0;
+    if d_lo < vertex && vertex < d_hi {
+        eps = eps.max(r(vertex));
+    }
+    eps * (1.0 + 1e-12)
+}
+
+/// One residual-recurrence step: two `2^(-M-1)` roundings per stage.
+fn residual_step(eps: f64, m: u32) -> f64 {
+    let half_ulp = 0.5 * 2f64.powi(-(m as i32));
+    (eps * eps + (2.0 + eps) * half_ulp) * (1.0 + 1e-12)
+}
+
+/// Run the abstract interpreter over `p` and discharge every
+/// obligation. `with_error_bound` additionally computes the subdivided
+/// static worst-case ulp bound (the expensive part).
+pub fn verify_params(
+    p: &DatapathParams,
+    with_error_bound: bool,
+) -> VerifyReport {
+    let cfg = &p.cfg;
+    let l = cfg.lut_bits;
+    let m = cfg.mult_bits;
+    let out = cfg.out_frac;
+    let nr = cfg.nr_stages;
+    let kb = p.mul_keep_bits;
+
+    let mut obs: Vec<Obligation> = Vec::new();
+    let mut simd: Vec<Obligation> = Vec::new();
+    let mut stages: Vec<StageRange> = Vec::new();
+
+    let record = |stages: &mut Vec<StageRange>, name: &str, w: AbsWord| {
+        stages.push(StageRange {
+            stage: name.to_string(),
+            lo: w.iv.lo,
+            hi: w.iv.hi,
+            low_zeros: w.low_zeros,
+        });
+    };
+
+    // --- structural shift obligations (everything else depends on
+    // these, so a failure here ends the analysis) -------------------
+    let mut structural = push(
+        &mut obs,
+        "chain_shift_valid",
+        (1..=60).contains(&l),
+        format!("lut_bits L={l} must be in 1..=60 (chain rounds by 2^(L-1), entries are u0.L)"),
+    );
+    structural &= push(
+        &mut obs,
+        "lut_grouping_valid",
+        cfg.lut_group >= 1 && cfg.mag_bits() >= 1,
+        format!(
+            "lut_group = {} over {} magnitude bits",
+            cfg.lut_group,
+            cfg.mag_bits()
+        ),
+    );
+    if nr >= 1 {
+        structural &= push(
+            &mut obs,
+            "den_shift_valid",
+            l + 1 >= m,
+            format!("d = den >> (L+1-M) needs L+1 >= M (L={l}, M={m})"),
+        );
+        structural &= push(
+            &mut obs,
+            "seed_shift_valid",
+            m >= 2,
+            format!("seed constant 11 << (M-2) needs M >= 2 (M={m})"),
+        );
+        structural &= push(
+            &mut obs,
+            "recompose_shift_valid",
+            (l + m + 1) as i64 > out as i64,
+            format!(
+                "recompose shift L+M+1-out = {} must be >= 1",
+                l as i64 + m as i64 + 1 - out as i64
+            ),
+        );
+    }
+    if !structural {
+        return VerifyReport {
+            config: *cfg,
+            obligations: obs,
+            simd_obligations: simd,
+            stages,
+            simd_admitted: simd_gate(cfg),
+            simd_provable: false,
+            nr_residual: None,
+            static_max_ulp: None,
+        };
+    }
+
+    let groups = cfg.num_groups();
+
+    // --- LUT product chain -----------------------------------------
+    // Entries are `round(2^L * e^(-2a)).min(2^L)`, i.e. in [0, 2^L],
+    // and gather addresses are in range for ANY i64 input word (they
+    // are assembled bit-by-bit), so this covers saturated/garbage
+    // lanes the AVX2 kernel computes-then-blends as well.
+    let one_l = AbsWord::exact(1).shl(l);
+    let half_l = AbsWord::exact(1).shl(l - 1);
+    let entry = AbsWord::from_iv(Iv::new(0, one_l.iv.hi));
+    let mut f = entry;
+    let mut chain_fits = true;
+    let mut simd_chain_mul = true;
+    let mut simd_chain_nonneg = true;
+    for _ in 1..groups {
+        let prod = f.mul(entry).add(half_l);
+        chain_fits &= prod.iv.fits_i64();
+        simd_chain_mul &=
+            f.iv.fits_signed(kb) && entry.iv.fits_signed(kb);
+        simd_chain_nonneg &= prod.iv.is_nonneg();
+        f = prod.shr(l);
+    }
+    record(&mut stages, "f (lut chain, u0.L)", f);
+    push(
+        &mut obs,
+        "chain_fits_i64",
+        chain_fits,
+        format!(
+            "worst chain product ~2^{} with {} groups",
+            2 * l + 1,
+            groups
+        ),
+    );
+
+    let num = match cfg.subtractor {
+        Subtractor::Twos => one_l.sub(f),
+        Subtractor::Ones => one_l.sub(AbsWord::exact(1)).sub(f),
+    };
+    let den = one_l.add(f);
+    record(&mut stages, "num = 2^L - f", num);
+    record(&mut stages, "den = 2^L + f", den);
+    push(
+        &mut obs,
+        "front_end_fits_i64",
+        num.iv.fits_i64() && den.iv.fits_i64(),
+        format!("num in [{}, {}], den hi {}", num.iv.lo, num.iv.hi, den.iv.hi),
+    );
+
+    // --- back end --------------------------------------------------
+    let mut nr_residual = None;
+    let mut out_word;
+    let mut nr_fits = true;
+    let mut simd_nr_mul = true;
+    let mut simd_nr_nonneg = true;
+    let mut simd_rec_mul = true;
+    let mut simd_rec_nonneg = true;
+    let mut converges = true;
+    let mut xr_final = AbsWord::exact(0);
+    let mut d_saved = AbsWord::exact(0);
+
+    if nr == 0 {
+        // Float reference divider: rint(num/den * 2^out). num/den is
+        // in (-2^-L, 1], so the word lands in [-1, 2^out] before the
+        // clamp; no integer intermediate can overflow.
+        out_word = AbsWord::from_iv(Iv::new(-1, Iv::point(1).shl(out).hi));
+        record(&mut stages, "t = rint(num/den * 2^out)", out_word);
+        // The vector kernel has no float divider at all.
+        simd_nr_nonneg = false;
+        simd_rec_nonneg = false;
+    } else {
+        let s_d = l + 1 - m;
+        let d = den.shr(s_d);
+        d_saved = d;
+        record(&mut stages, "d = den >> (L+1-M), u1.M", d);
+
+        let seed = AbsWord::exact(p.seed_const as i128);
+        let mut xr = seed.sub(d.shl(1));
+        nr_fits &= xr.iv.fits_i64();
+        record(&mut stages, "xr0 = seed - 2d", xr);
+
+        let two_m = 2f64.powi(m as i32);
+        let d_lo_f = d.iv.lo as f64;
+        let d_hi_f = d.iv.hi as f64;
+        let mut eps = seed_residual(
+            p.seed_const as f64 / two_m,
+            d_lo_f / two_m,
+            d_hi_f / two_m,
+        );
+
+        let half_m = AbsWord::exact(1).shl(m - 1);
+        let two_m1 = AbsWord::exact(1).shl(m + 1);
+        for k in 0..nr {
+            let prod_t = d.mul(xr).add(half_m);
+            nr_fits &= prod_t.iv.fits_i64();
+            simd_nr_mul &=
+                d.iv.fits_signed(kb) && xr.iv.fits_signed(kb);
+            simd_nr_nonneg &= prod_t.iv.is_nonneg();
+            let mut t = prod_t.shr(m);
+            // Corner products see D_hi*X_hi ~ 2 although D*X ~ 1
+            // pointwise (the dependency problem); the residual bound
+            // D*X in [1-eps, 1+eps] plus the half-ulp rounding refines
+            // t soundly for ANY eps (casts saturate, Iv::new clamps).
+            t = t.refine(Iv::new(
+                (two_m * (1.0 - eps) - 1.0).floor() as i128,
+                (two_m * (1.0 + eps) + 1.0).ceil() as i128,
+            ));
+            let g = two_m1.sub(t);
+            simd_nr_nonneg &= g.iv.is_nonneg();
+            simd_nr_mul &= g.iv.fits_signed(kb);
+            let prod_x = xr.mul(g).add(half_m);
+            nr_fits &= prod_x.iv.fits_i64();
+            simd_nr_nonneg &= prod_x.iv.is_nonneg();
+            let mut next = prod_x.shr(m);
+
+            eps = residual_step(eps, m);
+            if eps < 1.0 && d.iv.lo > 0 {
+                // X = (1 ± eps)/D pointwise => the integer iterate is
+                // inside 2^(2M)*[(1-eps)/d_hi, (1+eps)/d_lo]; refine
+                // the (divergence-prone) naive interval with it.
+                let scale = two_m * two_m;
+                let lo = (scale * (1.0 - eps) / d_hi_f * (1.0 - 1e-9))
+                    .floor() as i128
+                    - 1;
+                let hi = (scale * (1.0 + eps) / d_lo_f * (1.0 + 1e-9))
+                    .ceil() as i128
+                    + 1;
+                next = next.refine(Iv::new(lo, hi));
+            }
+            xr = next;
+            record(&mut stages, &format!("xr{} (nr stage)", k + 1), xr);
+        }
+        converges = eps < 1.0;
+        nr_residual = Some(eps);
+        xr_final = xr;
+
+        let shift = l + m + 1 - out;
+        let o_round = AbsWord::exact(1).shl(shift - 1);
+        let pre = num.mul(xr).add(o_round);
+        nr_fits &= pre.iv.fits_i64();
+        simd_rec_mul &=
+            num.iv.fits_signed(kb) && xr.iv.fits_signed(kb);
+        simd_rec_nonneg &= pre.iv.is_nonneg();
+        record(&mut stages, "num*xr + 2^(shift-1)", pre);
+        out_word = pre.shr(shift);
+        record(&mut stages, "t = recompose >> shift", out_word);
+    }
+    out_word = AbsWord::from_iv(
+        out_word.iv.clamp_to(0, cfg.out_max() as i128),
+    );
+    record(&mut stages, "clamp(0, out_max)", out_word);
+
+    push(
+        &mut obs,
+        "back_end_fits_i64",
+        nr_fits,
+        format!(
+            "NR + recompose intermediates, xr in [{}, {}]",
+            xr_final.iv.lo, xr_final.iv.hi
+        ),
+    );
+    if nr >= 1 {
+        push(
+            &mut obs,
+            "nr_converges",
+            converges,
+            format!(
+                "residual |1 - D*X| <= {:.3e} after {} stages (seed {})",
+                nr_residual.unwrap_or(f64::NAN),
+                nr,
+                p.seed_const
+            ),
+        );
+    }
+
+    // --- saturation coverage ---------------------------------------
+    // For n >= threshold the unit emits out_max = 2^out - 1; the error
+    // vs 2^out*tanh(a) is |2^out*(1 - tanh(a)) - 1|, worst at the
+    // threshold itself. <= 2 there bounds the whole region by 1 lsb.
+    let mag = cfg.mag_bits().min(62);
+    let domain_hi = 1i64 << mag;
+    let sat_reachable = p.sat_threshold < domain_hi;
+    let a0 = p.sat_threshold as f64 / 2f64.powi(cfg.in_frac as i32);
+    let err_sat = 2f64.powi(out as i32) * (1.0 - a0.tanh());
+    let sat_term = if sat_reachable { err_sat.max(2.0) - 1.0 } else { 0.0 };
+    push(
+        &mut obs,
+        "saturation_covers_domain",
+        !sat_reachable || (p.sat_threshold >= 1 && err_sat <= 2.0),
+        format!(
+            "threshold {} => 2^out*(1 - tanh({a0:.4})) = {err_sat:.4} (need <= 2)",
+            p.sat_threshold
+        ),
+    );
+
+    // --- SIMD obligations ------------------------------------------
+    push(
+        &mut simd,
+        "simd_nr_stages",
+        nr >= SIMD_MIN_NR_STAGES,
+        format!("nr_stages = {nr}: the float divider is not vectorized"),
+    );
+    push(
+        &mut simd,
+        "simd_chain_mul_exact",
+        simd_chain_mul,
+        format!(
+            "chain factors f, e in [0, 2^{l}] must fit signed {kb}-bit"
+        ),
+    );
+    push(
+        &mut simd,
+        "simd_chain_shift_nonneg",
+        simd_chain_nonneg,
+        "f*e + 2^(L-1) >= 0 so the logical shift is arithmetic".into(),
+    );
+    push(
+        &mut simd,
+        "simd_nr_mul_exact",
+        simd_nr_mul,
+        format!(
+            "NR factors d in [{}, {}], xr in [{}, {}], 2^(M+1)-t must fit signed {kb}-bit",
+            d_saved.iv.lo, d_saved.iv.hi, xr_final.iv.lo, xr_final.iv.hi
+        ),
+    );
+    push(
+        &mut simd,
+        "simd_nr_shift_nonneg",
+        simd_nr_nonneg,
+        "d*xr + 2^(M-1), 2^(M+1) - t and xr*(2^(M+1)-t) + 2^(M-1) stay >= 0"
+            .into(),
+    );
+    push(
+        &mut simd,
+        "simd_recompose_mul_exact",
+        simd_rec_mul,
+        format!("num in [{}, {}] and xr must fit signed {kb}-bit",
+                num.iv.lo, num.iv.hi),
+    );
+    push(
+        &mut simd,
+        "simd_recompose_shift_nonneg",
+        simd_rec_nonneg,
+        "num*xr + 2^(shift-1) >= 0 (one's-complement num >= -1 corner)"
+            .into(),
+    );
+    let simd_provable = simd.iter().all(|o| o.proved);
+
+    let simd_admitted = simd_gate(cfg);
+    push(
+        &mut obs,
+        "simd_gate_sound",
+        !simd_admitted || simd_provable,
+        format!(
+            "gate {} this config; SIMD obligations {}",
+            if simd_admitted { "admits" } else { "rejects" },
+            if simd_provable { "all proved" } else { "FAILED" }
+        ),
+    );
+    if p.force_simd {
+        push(
+            &mut obs,
+            "forced_simd_provable",
+            simd_provable,
+            "config forced down the AVX2 path".into(),
+        );
+    }
+
+    // --- static error bound ----------------------------------------
+    let mut static_max_ulp = None;
+    if with_error_bound && chain_fits && nr_fits && converges {
+        let eps_f = (2 * groups - 1) as f64 * 0.5;
+        let term2 =
+            eps_f * 2f64.powi(out as i32 + 1 - l as i32) * (1.0 + 1e-9);
+        let term1 = if nr == 0 {
+            // rint on an f64 ratio: half an lsb plus negligible
+            // double-rounding slack.
+            0.5 + 1e-6
+        } else {
+            error_bound_term1(p) // None => divergent subinterval
+                .unwrap_or(f64::INFINITY)
+        };
+        if term1.is_finite() {
+            static_max_ulp =
+                Some((term1 + term2).max(sat_term) + 1e-6);
+        }
+        push(
+            &mut obs,
+            "error_bound_finite",
+            term1.is_finite(),
+            format!(
+                "term1 (back end) = {term1:.3}, term2 (chain) = {term2:.3}, saturation = {sat_term:.3} lsb"
+            ),
+        );
+    }
+
+    VerifyReport {
+        config: *cfg,
+        obligations: obs,
+        simd_obligations: simd,
+        stages,
+        simd_admitted,
+        simd_provable,
+        nr_residual,
+        static_max_ulp,
+    }
+}
+
+/// Back-end error bound (nr >= 1): max over ~1024 `f`-subintervals of
+/// the closed-form `|V - r(f^)|` bound (see module docs), plus the
+/// final recompose rounding.
+fn error_bound_term1(p: &DatapathParams) -> Option<f64> {
+    let cfg = &p.cfg;
+    let l = cfg.lut_bits;
+    let m = cfg.mult_bits;
+    let out = cfg.out_frac;
+    let s_d = l + 1 - m;
+    let full = 1i128 << l;
+    let two_m = 2f64.powi(m as i32);
+    let s_f = p.seed_const as f64 / two_m;
+    let pow_out = 2f64.powi(out as i32);
+    let tau = (1i128 << s_d) as f64 - 1.0;
+    let kdiv = 1024i128.min(full);
+    let mut worst = 0f64;
+    for k in 0..kdiv {
+        let fa = full * k / kdiv;
+        let fb = full * (k + 1) / kdiv;
+        let da = ((full + fa) >> s_d) as f64;
+        let db = ((full + fb) >> s_d) as f64;
+        let mut eps = seed_residual(s_f, da / two_m, db / two_m);
+        for _ in 0..cfg.nr_stages {
+            eps = residual_step(eps, m);
+        }
+        if eps >= 1.0 {
+            return None;
+        }
+        let num_hi = (full - fa) as f64;
+        let a_lo = (((full + fa) >> s_d) << s_d) as f64;
+        let den_lo = (full + fa) as f64;
+        let mut sub =
+            pow_out * num_hi * (eps / a_lo + tau / (a_lo * den_lo));
+        if cfg.subtractor == Subtractor::Ones {
+            sub += pow_out * (1.0 + eps) / a_lo;
+        }
+        worst = worst.max(sub);
+    }
+    Some(worst * (1.0 + 1e-9) + 0.5)
+}

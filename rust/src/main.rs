@@ -51,6 +51,13 @@ const SUBCOMMANDS: &[(&str, &str)] = &[
          [--trace-sample 0] (sample every Nth request's trace; the \
          report includes the slowest sampled span tree)",
     ),
+    (
+        "verify-datapath",
+        "static datapath verifier: prove overflow-freedom, SIMD-gate \
+         soundness, saturation coverage and an error bound. \
+         [--bits 8|16 | --config s3_12 | --all-presets] [--json] \
+         [--stages] [--no-empirical]",
+    ),
     ("info", "artifact manifest summary"),
 ];
 
@@ -77,6 +84,7 @@ fn main() {
         "serve-http" => cmd_serve_http(&args),
         "serve-cluster" => cmd_serve_cluster(&args),
         "loadgen" => cmd_loadgen(&args),
+        "verify-datapath" => cmd_verify_datapath(&args),
         "info" => cmd_info(),
         _ => {
             println!("{}", usage("tanh-vf", SUBCOMMANDS));
@@ -501,6 +509,151 @@ fn cmd_loadgen(args: &Args) -> R {
     let report = tanh_vf::server::loadgen::run(&cfg)?;
     println!("{}", report.render());
     println!("{}", tanh_vf::util::json::write(&report.to_json()));
+    Ok(())
+}
+
+/// Static datapath verification (`verify-datapath`): run the abstract
+/// interpreter over the selected configs, cross-check the static error
+/// bound against the exhaustive empirical sweep where the input domain
+/// is small enough, and fail loudly on any UNPROVEN obligation.
+fn cmd_verify_datapath(args: &Args) -> R {
+    use tanh_vf::analysis::verify::{all_preset_names, verify};
+    use tanh_vf::server::named_config;
+    use tanh_vf::util::json::{write as json_write, Json};
+
+    let as_json = args.bool("json");
+    let show_stages = args.bool("stages");
+    let skip_empirical = args.bool("no-empirical");
+
+    let names: Vec<String> = if args.bool("all-presets") {
+        all_preset_names().iter().map(|s| s.to_string()).collect()
+    } else if let Some(name) = args.str_opt("config") {
+        vec![name.to_string()]
+    } else if args.str_opt("bits").is_some() {
+        let cfg = cfg_for_bits(args)?;
+        vec![if cfg == TanhConfig::s3_5() { "s3_5" } else { "s3_12" }
+            .to_string()]
+    } else {
+        all_preset_names().iter().map(|s| s.to_string()).collect()
+    };
+
+    let mut items = Vec::new();
+    let mut all_proven = true;
+    let mut all_dominated = true;
+    for name in &names {
+        let cfg = named_config(name).map_err(usage_err)?;
+        let rep = verify(&cfg);
+        // Exhaustive empirical sweep (2^(mag+1) words) stays cheap up
+        // to 16 magnitude bits — every shipped preset qualifies.
+        let empirical = if !skip_empirical && cfg.mag_bits() <= 16 {
+            let unit = TanhUnit::new(cfg)?;
+            let stats = exhaustive_error(&unit);
+            Some(stats.max_lsb(cfg.out_format()))
+        } else {
+            None
+        };
+        let dominated = match (rep.static_max_ulp, empirical) {
+            (Some(s), Some(e)) => Some(s >= e),
+            _ => None,
+        };
+        all_proven &= rep.proven();
+        all_dominated &= dominated != Some(false);
+        items.push((name.clone(), cfg, rep, empirical, dominated));
+    }
+
+    if as_json {
+        let configs = items
+            .iter()
+            .map(|(name, _, rep, empirical, dominated)| {
+                let mut j = rep.to_json();
+                if let Json::Obj(m) = &mut j {
+                    m.insert("name".into(), Json::Str(name.clone()));
+                    m.insert(
+                        "empirical_max_ulp".into(),
+                        empirical.map(Json::Num).unwrap_or(Json::Null),
+                    );
+                    m.insert(
+                        "bound_dominates".into(),
+                        dominated.map(Json::Bool).unwrap_or(Json::Null),
+                    );
+                }
+                j
+            })
+            .collect();
+        let mut top = std::collections::BTreeMap::new();
+        top.insert(
+            "schema".into(),
+            Json::Str("tanhvf-verify-v1".into()),
+        );
+        top.insert("configs".into(), Json::Arr(configs));
+        top.insert("all_proven".into(), Json::Bool(all_proven));
+        top.insert(
+            "all_bounds_dominate".into(),
+            Json::Bool(all_dominated),
+        );
+        println!("{}", json_write(&Json::Obj(top)));
+    } else {
+        let mut t = Table::new(&[
+            "config", "proven", "simd", "nr residual", "static (lsb)",
+            "empirical", "dominates",
+        ]);
+        for (name, _, rep, empirical, dominated) in &items {
+            t.row(&[
+                format!("{name} [{}]", rep.config.describe()),
+                if rep.proven() { "PROVEN".into() } else { "UNPROVEN".into() },
+                match (rep.simd_admitted, rep.simd_provable) {
+                    (true, true) => "admitted+proved".into(),
+                    (true, false) => "ADMITTED UNPROVED".into(),
+                    (false, true) => "provable (gated off)".into(),
+                    (false, false) => "scalar only".into(),
+                },
+                rep.nr_residual
+                    .map(|e| format!("{e:.2e}"))
+                    .unwrap_or_else(|| "-".into()),
+                rep.static_max_ulp
+                    .map(|u| format!("{u:.3}"))
+                    .unwrap_or_else(|| "-".into()),
+                empirical
+                    .map(|u| format!("{u:.3}"))
+                    .unwrap_or_else(|| "-".into()),
+                match dominated {
+                    Some(true) => "yes".into(),
+                    Some(false) => "NO".into(),
+                    None => "-".into(),
+                },
+            ]);
+        }
+        println!("Static datapath verification\n");
+        println!("{}", t.render());
+        for (name, _, rep, _, _) in &items {
+            for o in rep.failed() {
+                println!("UNPROVEN {name}: {} — {}", o.name, o.detail);
+            }
+            if show_stages {
+                println!("\n{name} stage intervals:");
+                let mut st = Table::new(&["stage", "lo", "hi", "low zeros"]);
+                for s in &rep.stages {
+                    st.row(&[
+                        s.stage.clone(),
+                        format!("{}", s.lo),
+                        format!("{}", s.hi),
+                        format!("{}", s.low_zeros),
+                    ]);
+                }
+                println!("{}", st.render());
+            }
+        }
+    }
+
+    if !all_proven {
+        return Err("verification FAILED: unproven obligations".into());
+    }
+    if !all_dominated {
+        return Err(
+            "verification FAILED: static bound below empirical max error"
+                .into(),
+        );
+    }
     Ok(())
 }
 

@@ -80,12 +80,29 @@ mod epoll_sys {
         ) -> c_int;
     }
 
+    /// Miri has no epoll shims; every wrapper degrades to
+    /// `ErrorKind::Unsupported` so the interpreter never reaches the
+    /// FFI call (callers already handle epoll being unavailable by
+    /// falling back to the portable poller, which Miri skips too).
+    #[cfg(miri)]
+    fn miri_unsupported<T>() -> io::Result<T> {
+        Err(io::Error::new(
+            io::ErrorKind::Unsupported,
+            "epoll FFI is not available under miri",
+        ))
+    }
+
     pub fn create() -> io::Result<c_int> {
-        let fd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
-        if fd < 0 {
-            Err(io::Error::last_os_error())
-        } else {
-            Ok(fd)
+        #[cfg(miri)]
+        return miri_unsupported();
+        #[cfg(not(miri))]
+        {
+            let fd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+            if fd < 0 {
+                Err(io::Error::last_os_error())
+            } else {
+                Ok(fd)
+            }
         }
     }
 
@@ -96,12 +113,20 @@ mod epoll_sys {
         events: u32,
         token: u64,
     ) -> io::Result<()> {
-        let mut ev = EpollEvent { events, data: token };
-        let rc = unsafe { epoll_ctl(epfd, op, fd, &mut ev) };
-        if rc < 0 {
-            Err(io::Error::last_os_error())
-        } else {
-            Ok(())
+        #[cfg(miri)]
+        {
+            let _ = (epfd, op, fd, events, token);
+            return miri_unsupported();
+        }
+        #[cfg(not(miri))]
+        {
+            let mut ev = EpollEvent { events, data: token };
+            let rc = unsafe { epoll_ctl(epfd, op, fd, &mut ev) };
+            if rc < 0 {
+                Err(io::Error::last_os_error())
+            } else {
+                Ok(())
+            }
         }
     }
 
@@ -110,18 +135,26 @@ mod epoll_sys {
         events: &mut [EpollEvent],
         timeout_ms: c_int,
     ) -> io::Result<usize> {
-        let rc = unsafe {
-            epoll_wait(
-                epfd,
-                events.as_mut_ptr(),
-                events.len() as c_int,
-                timeout_ms,
-            )
-        };
-        if rc < 0 {
-            Err(io::Error::last_os_error())
-        } else {
-            Ok(rc as usize)
+        #[cfg(miri)]
+        {
+            let _ = (epfd, events, timeout_ms);
+            return miri_unsupported();
+        }
+        #[cfg(not(miri))]
+        {
+            let rc = unsafe {
+                epoll_wait(
+                    epfd,
+                    events.as_mut_ptr(),
+                    events.len() as c_int,
+                    timeout_ms,
+                )
+            };
+            if rc < 0 {
+                Err(io::Error::last_os_error())
+            } else {
+                Ok(rc as usize)
+            }
         }
     }
 }
@@ -394,32 +427,44 @@ impl PollPoller {
     }
 
     fn wait(&mut self, out: &mut Vec<Event>, timeout_ms: i32) -> io::Result<()> {
-        for p in self.fds.iter_mut() {
-            p.revents = 0;
+        // Like the epoll wrappers: no poll(2) shim under miri.
+        #[cfg(miri)]
+        {
+            let _ = (out, timeout_ms);
+            return Err(io::Error::new(
+                io::ErrorKind::Unsupported,
+                "poll FFI is not available under miri",
+            ));
         }
-        let rc = unsafe {
-            poll(self.fds.as_mut_ptr(), self.fds.len() as NfdsT, timeout_ms)
-        };
-        if rc < 0 {
-            let e = io::Error::last_os_error();
-            return if e.kind() == io::ErrorKind::Interrupted {
-                Ok(())
-            } else {
-                Err(e)
-            };
-        }
-        for (p, &token) in self.fds.iter().zip(self.tokens.iter()) {
-            if p.revents == 0 {
-                continue;
+        #[cfg(not(miri))]
+        {
+            for p in self.fds.iter_mut() {
+                p.revents = 0;
             }
-            out.push(Event {
-                token,
-                readable: p.revents & (POLLIN | POLLPRI) != 0,
-                writable: p.revents & POLLOUT != 0,
-                closed: p.revents & (POLLERR | POLLHUP | POLLNVAL) != 0,
-            });
+            let rc = unsafe {
+                poll(self.fds.as_mut_ptr(), self.fds.len() as NfdsT, timeout_ms)
+            };
+            if rc < 0 {
+                let e = io::Error::last_os_error();
+                return if e.kind() == io::ErrorKind::Interrupted {
+                    Ok(())
+                } else {
+                    Err(e)
+                };
+            }
+            for (p, &token) in self.fds.iter().zip(self.tokens.iter()) {
+                if p.revents == 0 {
+                    continue;
+                }
+                out.push(Event {
+                    token,
+                    readable: p.revents & (POLLIN | POLLPRI) != 0,
+                    writable: p.revents & POLLOUT != 0,
+                    closed: p.revents & (POLLERR | POLLHUP | POLLNVAL) != 0,
+                });
+            }
+            Ok(())
         }
-        Ok(())
     }
 }
 
@@ -478,21 +523,31 @@ impl Drop for WakeReader {
 /// full pipe or after the reader is gone are silently dropped (a wake
 /// is level-triggered; one pending byte is enough).
 pub(crate) fn self_pipe() -> io::Result<(WakeReader, Waker)> {
-    let mut fds: [c_int; 2] = [0; 2];
-    if unsafe { pipe(fds.as_mut_ptr()) } < 0 {
-        return Err(io::Error::last_os_error());
+    // No pipe(2)/fcntl(2) shims under miri; the reactor tests are
+    // excluded from the miri CI filter, but fail soft if reached.
+    #[cfg(miri)]
+    return Err(io::Error::new(
+        io::ErrorKind::Unsupported,
+        "self-pipe FFI is not available under miri",
+    ));
+    #[cfg(not(miri))]
+    {
+        let mut fds: [c_int; 2] = [0; 2];
+        if unsafe { pipe(fds.as_mut_ptr()) } < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        let reader = WakeReader(fds[0]);
+        let writer = Arc::new(PipeWriter(fds[1]));
+        set_nonblocking_fd(fds[0])?;
+        set_nonblocking_fd(fds[1])?;
+        let waker = Waker::new(move || {
+            let byte = 1u8;
+            let _ = unsafe {
+                write(writer.0, &byte as *const u8 as *const c_void, 1)
+            };
+        });
+        Ok((reader, waker))
     }
-    let reader = WakeReader(fds[0]);
-    let writer = Arc::new(PipeWriter(fds[1]));
-    set_nonblocking_fd(fds[0])?;
-    set_nonblocking_fd(fds[1])?;
-    let waker = Waker::new(move || {
-        let byte = 1u8;
-        let _ = unsafe {
-            write(writer.0, &byte as *const u8 as *const c_void, 1)
-        };
-    });
-    Ok((reader, waker))
 }
 
 // ---------------------------------------------------------------------

@@ -33,6 +33,15 @@ impl SigmoidUnit {
                 cfg.out_frac
             ));
         }
+        // The wrapped tanh core must pass the static datapath verifier
+        // (TanhUnit::new repeats this; asserting here names the sigmoid
+        // route in the failure, not the inner unit).
+        #[cfg(debug_assertions)]
+        if cfg.validate().is_ok() {
+            if let Err(e) = crate::analysis::verify::verify_safety(&cfg) {
+                panic!("{e}");
+            }
+        }
         Ok(SigmoidUnit { tanh: TanhUnit::new(cfg)? })
     }
 

@@ -99,21 +99,18 @@ pub fn active() -> SimdMode {
 
 /// Can the live datapath for `cfg` run in the AVX2 kernel bit-exactly?
 ///
-/// * `nr_stages == 0` uses the float reference divider — not vectorized.
-/// * `lut_bits >= out_frac + 3` keeps the recompose rounding constant
-///   strictly above `|num * xr|`, so the final logical shift matches the
-///   scalar arithmetic shift (see module docs).
-/// * `lut_bits, mult_bits <= 26` bounds every `_mm256_mul_epi32` factor
-///   below `2^28` (low-32-bit multiply stays exact).
+/// Delegates to [`crate::analysis::verify::simd_gate`]: the bounds
+/// (`SIMD_MIN_NR_STAGES`, `SIMD_MIN_LUT_MARGIN`, `SIMD_MAX_LUT_BITS`,
+/// `SIMD_MAX_MULT_BITS`) live next to the static verifier that proves
+/// them sound — every admitted config has verifier-proved exact low-32
+/// multiplies and non-negative shift operands (the grid sweep in
+/// `tests/verify_datapath.rs` enforces "admitted implies provable").
 ///
 /// Both canonical presets and every `named_config`-derived point
 /// (`L = out_frac + 3` by construction) qualify. Ineligible configs
 /// silently use the scalar batch loop.
 pub(crate) fn datapath_eligible(cfg: &TanhConfig) -> bool {
-    cfg.nr_stages >= 1
-        && cfg.lut_bits >= cfg.out_frac + 3
-        && cfg.lut_bits <= 26
-        && cfg.mult_bits <= 26
+    crate::analysis::verify::simd_gate(cfg)
 }
 
 #[cfg(target_arch = "x86_64")]

@@ -39,6 +39,15 @@ impl TanhUnit {
     /// Build the unit (tables + addressing) for `cfg`.
     pub fn new(cfg: TanhConfig) -> Result<TanhUnit, String> {
         cfg.validate()?;
+        // Every constructed unit must pass the static datapath verifier
+        // (overflow-freedom, shift validity, saturation coverage, SIMD
+        // gate soundness). validate() is the format-level check; this is
+        // the semantic one. Debug-only: the check is O(groups + nr) but
+        // construction sits on the serving path for lazy routes.
+        #[cfg(debug_assertions)]
+        if let Err(e) = crate::analysis::verify::verify_safety(&cfg) {
+            panic!("{e}");
+        }
         let mut tables = Vec::new();
         let mut groups = Vec::new();
         for (positions, table) in

@@ -8,13 +8,13 @@
 //! fractional precision grows.
 
 use tanh_vf::analysis::exhaustive_error;
+// The derived-preset catalog lives next to the static verifier so the
+// `verify-datapath --all-presets` CLI, the CI `verify` job, and these
+// accuracy-band tests all sweep the same list.
+use tanh_vf::analysis::verify::DERIVED_PRESETS;
 use tanh_vf::server::named_config;
 use tanh_vf::tanh::{tanh_golden, TanhUnit};
 use tanh_vf::util::rng::Rng;
-
-/// Presets beyond the paper's two operating points, chosen to vary both
-/// integer and fractional width (the issue's examples included).
-const DERIVED_PRESETS: &[&str] = &["s2_6", "s3_6", "s3_9", "s4_10"];
 
 #[test]
 fn derived_presets_are_bit_exact_against_golden() {

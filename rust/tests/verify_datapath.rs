@@ -1,0 +1,333 @@
+//! Static datapath verifier vs reality.
+//!
+//! Three directions of cross-checking:
+//!
+//! 1. **Soundness on shipped configs** — every preset (canonical +
+//!    derived) and every datapath variant the SIMD suite exercises must
+//!    be fully PROVEN, and the static worst-case error bound must
+//!    dominate the empirically measured max error from the exhaustive
+//!    sweep (while staying finite/non-vacuous).
+//! 2. **Gate soundness** — a grid sweep over the config space asserts
+//!    that every config `datapath_eligible` admits is verifier-provable
+//!    (exact low-32 multiplies, non-negative shift operands), i.e. the
+//!    gate constants really are re-derived, not wishful.
+//! 3. **Mutation coverage** — deliberately broken datapaths (oversized
+//!    LUT, truncated multiplier, divergent seed, halved saturation
+//!    threshold, ineligible config forced down the AVX2 path) must each
+//!    be REJECTED, and by the specific obligation that models the break.
+
+use tanh_vf::analysis::verify::{
+    all_preset_names, simd_gate, verify, verify_params, DatapathParams,
+    DERIVED_PRESETS, SHIPPED_PRESETS,
+};
+use tanh_vf::analysis::exhaustive_error;
+use tanh_vf::server::named_config;
+use tanh_vf::tanh::{SimdMode, Subtractor, TanhConfig, TanhUnit};
+use tanh_vf::util::json;
+
+/// The SIMD suite's datapath variants (kept in sync by hand; these are
+/// cheap to verify so drift just adds coverage, never loses it).
+fn variant_configs() -> Vec<TanhConfig> {
+    vec![
+        TanhConfig::s3_12(),
+        TanhConfig::s3_5(),
+        TanhConfig::s3_12().with_nr(0),
+        TanhConfig::s3_12().with_nr(1),
+        TanhConfig::s3_12().with_nr(4),
+        TanhConfig::s3_12().with_subtractor(Subtractor::Ones),
+        TanhConfig::s3_12().with_group(2),
+        TanhConfig::s3_12().with_group(5),
+        TanhConfig::s3_12().with_shuffle(false),
+        TanhConfig::s3_5().with_subtractor(Subtractor::Ones),
+        TanhConfig::s3_5().with_shuffle(false),
+    ]
+}
+
+fn check_proven_and_dominating(cfg: &TanhConfig, tag: &str) {
+    let rep = verify(cfg);
+    assert!(
+        rep.proven(),
+        "{tag}: expected PROVEN, failed: {:?}",
+        rep.failed()
+    );
+    let static_ulp = rep
+        .static_max_ulp
+        .unwrap_or_else(|| panic!("{tag}: no static bound"));
+    let unit = TanhUnit::new(*cfg).unwrap();
+    let emp = exhaustive_error(&unit).max_lsb(cfg.out_format());
+    assert!(
+        static_ulp >= emp,
+        "{tag}: static bound {static_ulp:.3} < empirical {emp:.3}"
+    );
+}
+
+#[test]
+fn every_preset_is_proven_and_bound_dominates_empirical() {
+    assert_eq!(all_preset_names().len(),
+               SHIPPED_PRESETS.len() + DERIVED_PRESETS.len());
+    for name in all_preset_names() {
+        let cfg = named_config(name).unwrap();
+        check_proven_and_dominating(&cfg, name);
+        // Non-vacuity: a bound of "anything under 2^out lsb" proves
+        // nothing. Shipped presets are all within a few lsb; 64 leaves
+        // generous analysis slack while still excluding junk bounds.
+        let rep = verify(&cfg);
+        assert!(
+            rep.static_max_ulp.unwrap() <= 64.0,
+            "{name}: static bound {:.3} is vacuous",
+            rep.static_max_ulp.unwrap()
+        );
+    }
+}
+
+#[test]
+fn every_simd_suite_variant_is_proven_and_dominated() {
+    for cfg in variant_configs() {
+        cfg.validate().unwrap();
+        check_proven_and_dominating(&cfg, &cfg.describe());
+    }
+}
+
+#[test]
+fn admitted_configs_are_bit_exact_under_avx2() {
+    // The gate-soundness claim, checked dynamically where it matters:
+    // for every *admitted* preset/variant, the Avx2 batch mode must be
+    // bit-exact against the plain per-word loop over the full domain.
+    // (On non-AVX2 hosts this degrades to scalar-vs-scalar — the CI
+    // `simd` job pins a leg with the feature enabled.)
+    for cfg in variant_configs() {
+        if !simd_gate(&cfg) {
+            continue;
+        }
+        let unit = TanhUnit::new(cfg).unwrap();
+        let mag = 1i64 << cfg.mag_bits();
+        let xs: Vec<i64> = (-mag..mag).collect();
+        let mut scalar = vec![0i64; xs.len()];
+        let mut vector = vec![0i64; xs.len()];
+        unit.eval_batch_mode(SimdMode::Off, &xs, &mut scalar);
+        unit.eval_batch_mode(SimdMode::Avx2, &xs, &mut vector);
+        for (i, (&s, &v)) in scalar.iter().zip(&vector).enumerate() {
+            assert_eq!(
+                s, v,
+                "{}: x={} scalar {s} vs avx2 {v}",
+                cfg.describe(),
+                xs[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn gate_admission_implies_verifier_proof_over_config_grid() {
+    // The constants in `simd_gate` were chosen inside the provable
+    // region with margin; this sweep pins that containment. Every
+    // gate-admitted point of the grid must discharge all SIMD
+    // obligations (the reverse is allowed: the verifier proves more
+    // than the gate admits).
+    let mut admitted = 0u32;
+    for out in 1u32..=16 {
+        for l in (out + 3)..=26 {
+            for m in 2..=(l + 1).min(26) {
+                for nr in 1u32..=4 {
+                    for sub in [Subtractor::Twos, Subtractor::Ones] {
+                        let cfg = TanhConfig {
+                            in_int: 1,
+                            in_frac: 1,
+                            out_frac: out,
+                            lut_bits: l,
+                            mult_bits: m,
+                            lut_group: 1,
+                            shuffle: false,
+                            nr_stages: nr,
+                            subtractor: sub,
+                        };
+                        if !simd_gate(&cfg) {
+                            continue;
+                        }
+                        admitted += 1;
+                        let rep = verify_params(
+                            &DatapathParams::from_config(&cfg),
+                            false,
+                        );
+                        assert!(
+                            rep.simd_provable,
+                            "gate admits unprovable {}: {:?}",
+                            cfg.describe(),
+                            rep.failed()
+                        );
+                        assert!(
+                            rep.proven(),
+                            "admitted config unproven {}: {:?}",
+                            cfg.describe(),
+                            rep.failed()
+                        );
+                    }
+                }
+            }
+        }
+    }
+    // The grid must actually exercise the admitted region.
+    assert!(admitted > 10_000, "grid too sparse: {admitted} admitted");
+}
+
+#[test]
+fn verifier_is_strictly_stronger_than_the_gate() {
+    // A config the gate rejects (one's-complement, margin 2 instead of
+    // the gate's 3) that the verifier can still prove — documents that
+    // the shipped constants are conservative, i.e. gate ⊂ provable.
+    let cfg = TanhConfig {
+        out_frac: 15,
+        lut_bits: 17, // margin 2
+        mult_bits: 16,
+        subtractor: Subtractor::Ones,
+        ..TanhConfig::s3_12()
+    };
+    assert!(!simd_gate(&cfg));
+    let rep = verify_params(&DatapathParams::from_config(&cfg), false);
+    assert!(rep.simd_provable, "{:?}", rep.failed());
+    assert!(rep.proven(), "{:?}", rep.failed());
+}
+
+// ---------------------------------------------------------------------
+// Mutation tests: each proof obligation must be able to FAIL, and on
+// the mutation that models exactly its failure mode.
+// ---------------------------------------------------------------------
+
+fn failed_names(p: &DatapathParams) -> Vec<&'static str> {
+    verify_params(p, true).failed().iter().map(|o| o.name).collect()
+}
+
+#[test]
+fn mutation_oversized_lut_overflows_chain() {
+    let mut p = DatapathParams::from_config(&TanhConfig::s3_12());
+    p.cfg.lut_bits = 40; // chain product ~2^81
+    let fails = failed_names(&p);
+    assert!(fails.contains(&"chain_fits_i64"), "{fails:?}");
+}
+
+#[test]
+fn mutation_truncated_multiplier_breaks_simd_exactness() {
+    // Model a 16-bit vector multiply: the 18-bit chain factors no
+    // longer fit, so the gate (which still admits s3_12) is unsound
+    // for this hardware — the simd_gate_sound obligation must trip.
+    let mut p = DatapathParams::from_config(&TanhConfig::s3_12());
+    p.mul_keep_bits = 16;
+    let rep = verify_params(&p, true);
+    assert!(rep.simd_admitted && !rep.simd_provable);
+    let fails: Vec<_> = rep.failed().iter().map(|o| o.name).collect();
+    assert!(fails.contains(&"simd_chain_mul_exact"), "{fails:?}");
+    assert!(fails.contains(&"simd_gate_sound"), "{fails:?}");
+}
+
+#[test]
+fn mutation_float_divider_forced_down_avx2_is_rejected() {
+    let mut p =
+        DatapathParams::from_config(&TanhConfig::s3_12().with_nr(0));
+    p.force_simd = true;
+    let fails = failed_names(&p);
+    assert!(fails.contains(&"simd_nr_stages"), "{fails:?}");
+    assert!(fails.contains(&"forced_simd_provable"), "{fails:?}");
+}
+
+#[test]
+fn mutation_ones_complement_margin_one_breaks_logical_shift() {
+    // With L = out + 1 the recompose rounding constant 2^(L+M-out)
+    // no longer clears the num = -1 corner times xr_hi ~ 2^(M+1): the
+    // pre-shift word can go negative, where a logical shift differs
+    // from the scalar arithmetic shift.
+    let cfg = TanhConfig {
+        out_frac: 15,
+        lut_bits: 16,
+        mult_bits: 16,
+        subtractor: Subtractor::Ones,
+        ..TanhConfig::s3_12()
+    };
+    assert!(!simd_gate(&cfg)); // the gate already refuses it...
+    let mut p = DatapathParams::from_config(&cfg);
+    p.force_simd = true; // ...and forcing it is provably unsafe
+    let fails = failed_names(&p);
+    assert!(
+        fails.contains(&"simd_recompose_shift_nonneg"),
+        "{fails:?}"
+    );
+}
+
+#[test]
+fn mutation_broken_seed_diverges() {
+    // Seed 1.0*2^M instead of 2.75*2^M: the NR residual at D=1 is
+    // |1 - 1 + 2| = 2 >= 1 and the iteration squares it — no proof.
+    let mut p = DatapathParams::from_config(&TanhConfig::s3_12());
+    p.seed_const = 1i64 << p.cfg.mult_bits;
+    let fails = failed_names(&p);
+    assert!(fails.contains(&"nr_converges"), "{fails:?}");
+}
+
+#[test]
+fn mutation_halved_saturation_threshold_uncovers_domain() {
+    let mut p = DatapathParams::from_config(&TanhConfig::s3_12());
+    p.sat_threshold /= 2;
+    let fails = failed_names(&p);
+    assert!(fails.contains(&"saturation_covers_domain"), "{fails:?}");
+}
+
+#[test]
+fn mutation_zero_lut_group_fails_structurally_without_panic() {
+    let mut p = DatapathParams::from_config(&TanhConfig::s3_12());
+    p.cfg.lut_group = 0;
+    let fails = failed_names(&p);
+    assert!(fails.contains(&"lut_grouping_valid"), "{fails:?}");
+}
+
+// ---------------------------------------------------------------------
+// Report plumbing
+// ---------------------------------------------------------------------
+
+#[test]
+fn report_json_round_trips_with_stable_schema() {
+    let rep = verify(&TanhConfig::s3_5());
+    let text = json::write(&rep.to_json());
+    let parsed = json::parse(&text).unwrap();
+    let obj = match parsed {
+        json::Json::Obj(m) => m,
+        other => panic!("expected object, got {other:?}"),
+    };
+    for key in [
+        "config",
+        "proven",
+        "simd_admitted",
+        "simd_provable",
+        "nr_residual",
+        "static_max_ulp",
+        "obligations",
+        "simd_obligations",
+        "stages",
+    ] {
+        assert!(obj.contains_key(key), "missing key {key}");
+    }
+    match &obj["obligations"] {
+        json::Json::Arr(a) => {
+            assert!(!a.is_empty());
+            for o in a {
+                let m = match o {
+                    json::Json::Obj(m) => m,
+                    other => panic!("obligation not object: {other:?}"),
+                };
+                assert!(m.contains_key("name"));
+                assert!(m.contains_key("proved"));
+                assert!(m.contains_key("detail"));
+            }
+        }
+        other => panic!("obligations not array: {other:?}"),
+    }
+}
+
+#[test]
+fn derived_presets_catalog_is_resolvable_and_disjoint() {
+    for name in DERIVED_PRESETS {
+        assert!(
+            !SHIPPED_PRESETS.contains(name),
+            "{name} listed in both catalogs"
+        );
+        named_config(name).unwrap().validate().unwrap();
+    }
+}

@@ -1,0 +1,174 @@
+#!/usr/bin/env python3
+"""Dependency-free source lints for the request-serving tier.
+
+Rules (scoped to ``rust/src/server/``, the code on the request path):
+
+  unwrap     ``.unwrap()`` / ``.expect(`` outside ``#[cfg(test)]``
+             modules. A panic on the serving path kills a worker and
+             drops every in-flight connection it owned; fallible paths
+             must surface errors to the connection state machine
+             instead. (Test modules may unwrap freely.)
+  systemtime ``SystemTime::now()`` outside the ``Clock`` /
+             ``now_millis``-style seams. Direct wall-clock reads in
+             request handling break the deterministic simulator
+             (``server/sim.rs``) — inject time through the existing
+             seam instead.
+
+Existing debt is pinned, not ignored: ``scripts/lint_allowlist.txt``
+holds per-file budgets (``<path> <rule> <max-count>``). A new violation
+over budget fails CI; paying debt down prints a reminder to ratchet
+the budget so it cannot regress.
+
+Usage:  python3 scripts/lint_sources.py [--repo-root DIR]
+Exits non-zero with one line per violation.
+"""
+
+import argparse
+import os
+import re
+import sys
+
+SERVER_DIR = os.path.join("rust", "src", "server")
+ALLOWLIST = os.path.join("scripts", "lint_allowlist.txt")
+
+UNWRAP_RE = re.compile(r"\.unwrap\(\)|\.expect\(")
+SYSTEMTIME_RE = re.compile(r"SystemTime::now\(\)")
+CFG_TEST_RE = re.compile(r"#\[cfg\((?:test|miri)\)\]")
+
+
+def strip_noncode(line):
+    """Drop line comments and (crudely) string literals so a lint token
+    inside a doc comment or log message doesn't count."""
+    # Strings first (so "// ..." inside a string doesn't start a
+    # comment), then comments. Raw strings are rare enough to ignore.
+    line = re.sub(r'"(?:[^"\\]|\\.)*"', '""', line)
+    return line.split("//", 1)[0]
+
+
+def test_mod_mask(lines):
+    """Boolean per line: is it inside a `#[cfg(test)] mod ... { }`
+    block? Brace counting on comment/string-stripped text — the repo
+    is rustfmt'd, so attribute and `mod` lines are well-formed."""
+    mask = [False] * len(lines)
+    i = 0
+    while i < len(lines):
+        if CFG_TEST_RE.search(strip_noncode(lines[i])):
+            # Attributes may stack; find the item the cfg applies to.
+            j = i + 1
+            while j < len(lines) and strip_noncode(lines[j]).strip().startswith("#["):
+                j += 1
+            item = strip_noncode(lines[j]).strip() if j < len(lines) else ""
+            if item.startswith(("mod ", "pub mod ", "pub(crate) mod ")):
+                depth = 0
+                k = j
+                while k < len(lines):
+                    code = strip_noncode(lines[k])
+                    depth += code.count("{") - code.count("}")
+                    mask[k] = True
+                    if depth <= 0 and "{" in code.replace("{}", ""):
+                        # degenerate one-line mod
+                        break
+                    if depth <= 0 and k > j:
+                        break
+                    k += 1
+                i = k + 1
+                continue
+            # cfg(test) on a non-mod item (fn, use): mark through the
+            # item's block, or just that line for braceless items.
+            depth = 0
+            k = j
+            while k < len(lines):
+                code = strip_noncode(lines[k])
+                depth += code.count("{") - code.count("}")
+                mask[k] = True
+                if depth <= 0 and ("{" in code or code.rstrip().endswith(";")):
+                    break
+                k += 1
+            i = k + 1
+            continue
+        i += 1
+    return mask
+
+
+def load_allowlist(root):
+    budgets = {}
+    path = os.path.join(root, ALLOWLIST)
+    if not os.path.exists(path):
+        return budgets
+    with open(path, encoding="utf-8") as fh:
+        for raw in fh:
+            line = raw.split("#", 1)[0].strip()
+            if not line:
+                continue
+            parts = line.split()
+            if len(parts) != 3:
+                print(f"{ALLOWLIST}: malformed line: {raw.rstrip()}")
+                sys.exit(2)
+            rel, rule, budget = parts
+            budgets[(rel.replace("\\", "/"), rule)] = int(budget)
+    return budgets
+
+
+def lint_file(root, rel):
+    with open(os.path.join(root, rel), encoding="utf-8") as fh:
+        lines = fh.read().splitlines()
+    in_test = test_mod_mask(lines)
+    hits = {"unwrap": [], "systemtime": []}
+    for idx, line in enumerate(lines):
+        code = strip_noncode(line)
+        if not in_test[idx] and UNWRAP_RE.search(code):
+            hits["unwrap"].append(idx + 1)
+        if not in_test[idx] and SYSTEMTIME_RE.search(code):
+            hits["systemtime"].append(idx + 1)
+    return hits
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--repo-root", default=".")
+    ap.add_argument(
+        "--print-counts",
+        action="store_true",
+        help="dump per-file counts (for regenerating the allowlist)",
+    )
+    args = ap.parse_args()
+    root = args.repo_root
+
+    budgets = load_allowlist(root)
+    server = os.path.join(root, SERVER_DIR)
+    if not os.path.isdir(server):
+        print(f"missing {SERVER_DIR} (run from the repo root)")
+        return 2
+
+    failures = 0
+    for name in sorted(os.listdir(server)):
+        if not name.endswith(".rs"):
+            continue
+        rel = "/".join([SERVER_DIR.replace(os.sep, "/"), name])
+        hits = lint_file(root, name and os.path.join(SERVER_DIR, name))
+        for rule, linenos in sorted(hits.items()):
+            budget = budgets.get((rel, rule), 0)
+            if args.print_counts and linenos:
+                print(f"{rel} {rule} {len(linenos)}")
+                continue
+            if len(linenos) > budget:
+                failures += 1
+                where = ", ".join(str(n) for n in linenos)
+                print(
+                    f"{rel}: {len(linenos)} {rule} violation(s) "
+                    f"(budget {budget}) at line(s) {where}"
+                )
+            elif linenos and len(linenos) < budget:
+                print(
+                    f"note: {rel} {rule} count {len(linenos)} is under "
+                    f"budget {budget} — ratchet {ALLOWLIST} down"
+                )
+    if failures:
+        print(f"\nlint_sources: {failures} rule failure(s). Either fix "
+              f"the code or (for deliberate debt) raise {ALLOWLIST}.")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
