@@ -243,6 +243,31 @@ fn main() {
     let cluster_report = loadgen::run(&ccfg).expect("cluster loadgen");
     assert_eq!(cluster_report.failures, 0, "{}", cluster_report.render());
     println!("cluster     {}", cluster_report.render());
+
+    // -- skewed popularity: the same cluster under zipf(1.1) ----------
+    // The uniform run above cycles models evenly; this one concentrates
+    // demand on the first model (the hot-route controller's target
+    // workload). Both rows persist so the trajectory records what skew
+    // costs/buys; the assertions are monotone-sanity, not a ranking —
+    // relative throughput under skew is hardware- and load-dependent.
+    const ZIPF_S: f64 = 1.1;
+    let mut zcfg = ccfg.clone();
+    zcfg.zipf_s = ZIPF_S;
+    zcfg.seed = 43;
+    let zipf_report = loadgen::run(&zcfg).expect("zipf loadgen");
+    assert_eq!(zipf_report.failures, 0, "{}", zipf_report.render());
+    println!("zipf({ZIPF_S}) {}", zipf_report.render());
+    for (label, r) in
+        [("uniform", &cluster_report), ("zipf", &zipf_report)]
+    {
+        assert!(r.req_per_s() > 0.0, "{label}: no throughput measured");
+        assert!(
+            r.p50_us <= r.p95_us && r.p95_us <= r.max_us,
+            "{label}: latency quantiles out of order ({})",
+            r.render()
+        );
+    }
+
     let (mut proxied, mut local_hits) = (0u64, 0u64);
     for f in &fronts {
         let st = &f.cluster().expect("cluster mode").stats;
@@ -361,6 +386,14 @@ fn main() {
                 ("rps_ratio", Json::Num(scaling_ratio)),
                 ("proxied_requests", Json::Num(proxied as f64)),
                 ("local_requests", Json::Num(local_hits as f64)),
+            ]),
+        ),
+        (
+            "skewed_profile",
+            obj(vec![
+                ("zipf_s", Json::Num(ZIPF_S)),
+                ("uniform", cluster_report.to_json()),
+                ("zipf", zipf_report.to_json()),
             ]),
         ),
         (

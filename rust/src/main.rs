@@ -41,13 +41,16 @@ const SUBCOMMANDS: &[(&str, &str)] = &[
          --join host:port,... (gossip seeds; neither = seed node). \
          [--advertise host:port] [--replicas 1] [--pool-idle 4] \
          [--virtual-nodes 64] [--probe-interval-ms 500] \
-         [--failure-threshold 3] [--recovery-threshold 2]",
+         [--failure-threshold 3] [--recovery-threshold 2] \
+         [--load-adaptive on|off] (p2c reads + hot-route autoscaling)",
     ),
     (
         "loadgen",
         "closed-loop load generator: --addrs host:port,... \
          [--connections 4] [--requests 100] [--words 64] \
          [--models s3_12,s3_5] [--word-range 128] [--seed 42] \
+         [--zipf 0] (Zipf exponent for skewed model popularity; first \
+         model hottest; 0 = uniform cycling) \
          [--trace-sample 0] (sample every Nth request's trace; the \
          report includes the slowest sampled span tree)",
     ),
@@ -481,6 +484,15 @@ fn cmd_serve_cluster(args: &Args) -> R {
         ),
         failure_threshold: args.u64_or("failure-threshold", 3)? as u32,
         recovery_threshold: args.u64_or("recovery-threshold", 2)? as u32,
+        load_adaptive: match args.str_or("load-adaptive", "on") {
+            "on" => true,
+            "off" => false,
+            v => {
+                return Err(usage_err(format!(
+                    "--load-adaptive: expected on|off, got {v}"
+                )))
+            }
+        },
         ..Default::default()
     };
     let event_loop = cfg.event_loop;
@@ -505,6 +517,7 @@ fn cmd_loadgen(args: &Args) -> R {
         word_range: args.i64_or("word-range", 128)?,
         seed: args.u64_or("seed", 42)?,
         trace_sample: args.usize_or("trace-sample", 0)?,
+        zipf_s: args.f64_or("zipf", 0.0)?,
     };
     let report = tanh_vf::server::loadgen::run(&cfg)?;
     println!("{}", report.render());

@@ -33,7 +33,9 @@
 //! * `POST /v1/gossip` — the membership exchange endpoint
 //!   ([`super::gossip`]): merge the sender's member table, answer with
 //!   ours. 404 outside cluster mode.
-//! * **Batch read fan-out** — with `--replicas N > 1`, a `/v1/batch`
+//! * **Batch read fan-out** — when a route's effective replica count
+//!   exceeds one (base `--replicas`, or a hot-route expansion gossiped
+//!   by the load-adaptive controller), a `/v1/batch`
 //!   whose words outnumber the live replica set splits into contiguous
 //!   shards, evaluates one shard per replica concurrently (the local
 //!   shard on this thread), and merges in order. Bit-exactness makes
@@ -181,6 +183,27 @@ fn clustered(
     resp
 }
 
+/// Serve a request through the local router while feeding the node's
+/// load gauges: queue depth is the number of requests currently inside
+/// this wrapper, and the measured wall time folds into the EWMA
+/// latency that gossip advertises to peers (see
+/// [`cluster::NodeLoad`]). Every local serving decision in [`routed`]
+/// funnels through here so the advertised load can't silently drift
+/// from reality.
+fn serve_local(
+    state: &AppState,
+    cl: &cluster::Cluster,
+    local: fn(&AppState, &ReqBody) -> Response,
+    body: &ReqBody,
+) -> Response {
+    cl.load().begin_request();
+    let start = state.clock.now_us();
+    let resp = local(state, body);
+    let end = state.clock.now_us();
+    cl.load().end_request(end.saturating_sub(start));
+    resp
+}
+
 /// The routing decision proper: serve locally when the ring says so
 /// (or when not clustered), else forward to the owning peer, failing
 /// over along the ring on transport errors.
@@ -200,19 +223,26 @@ fn routed(
     // cycle.
     if req.header(cluster::PROXIED_HEADER).is_some() {
         cl.stats.proxied_in.fetch_add(1, Ordering::Relaxed);
-        return local(state, body);
+        return serve_local(state, cl, local, body);
     }
     // The ring keys on the model name; bodies without one fall through
     // to the local handler, whose 400 is exact.
     let model = match body.json.get("model").and_then(Json::as_str) {
         Some(m) => m.to_string(),
-        None => return local(state, body),
+        None => return serve_local(state, cl, local, body),
     };
+    // Hot-route accounting: only client-facing requests count (the
+    // proxied-in branch above returns before reaching here), so the
+    // demand signal survives replica expansion instead of diluting
+    // across the nodes the expansion recruited.
+    cl.note_route_request(&model);
     // Replicated routes: a large-enough batch splits across the live
     // replica set instead of going to one owner. Returns None when the
     // fan-out doesn't apply (or can't complete) — the plain walk below
-    // is the universal fallback.
-    if req.path() == "/v1/batch" && cl.config().replicas > 1 {
+    // is the universal fallback. The gate reads the *effective*
+    // replica count, so a hot-route expansion turns fan-out on for a
+    // route even when the cluster started with `--replicas 1`.
+    if req.path() == "/v1/batch" && cl.effective_replicas(&model) > 1 {
         if let Some(resp) = fanout_batch(state, cl, ctx, &model, body) {
             return resp;
         }
@@ -225,7 +255,7 @@ fn routed(
                 if failed_hops > 0 {
                     cl.stats.failovers.fetch_add(1, Ordering::Relaxed);
                 }
-                return local(state, body);
+                return serve_local(state, cl, local, body);
             }
             Node::Peer(addr) => {
                 // Bounded outbound-proxy concurrency: a forward blocks
@@ -240,7 +270,7 @@ fn routed(
                     if state.router.route_info(&model).is_some() {
                         cl.stats.local.fetch_add(1, Ordering::Relaxed);
                         cl.stats.failovers.fetch_add(1, Ordering::Relaxed);
-                        return local(state, body);
+                        return serve_local(state, cl, local, body);
                     }
                     return error_resp(
                         503,
@@ -307,7 +337,7 @@ fn routed(
     // so the walk above always returns from inside the loop; this tail
     // is a defensive fallback, not a reachable error path.
     cl.stats.local.fetch_add(1, Ordering::Relaxed);
-    local(state, body)
+    serve_local(state, cl, local, body)
 }
 
 /// Split a `/v1/batch` across the live replica set and merge in order.
@@ -579,9 +609,14 @@ fn gossip_exchange(state: &AppState, req: &Request) -> Response {
     };
     cl.stats.gossip_in.fetch_add(1, Ordering::Relaxed);
     cl.apply_remote_members(&msg.members);
+    cl.apply_remote_routes(&msg.routes);
     Response::json(
         200,
-        &gossip::encode(cl.self_name(), &cl.member_entries()),
+        &gossip::encode(
+            cl.self_name(),
+            &cl.member_entries(),
+            &cl.route_overrides_wire(),
+        ),
     )
 }
 
@@ -1300,6 +1335,98 @@ pub(crate) fn render_metrics(state: &AppState) -> Response {
                 "tanhvf_cluster_membership_events_total{{event=\"{event}\"}} {}",
                 v.load(Ordering::Relaxed)
             );
+        }
+        // Load-adaptive routing: effective per-route replica counts
+        // (base `--replicas` plus any hot-route expansion), the p2c
+        // selection split, the queue depth p2c observed on its chosen
+        // replicas, and this node's own advertised load stanza.
+        family(
+            &mut s,
+            "tanhvf_route_replicas",
+            "gauge",
+            "Effective replica count per route (base + hot-route expansion).",
+        );
+        for info in state.router.route_infos() {
+            let _ = writeln!(
+                s,
+                "tanhvf_route_replicas{{route=\"{}\"}} {}",
+                info.name,
+                cl.effective_replicas(&info.name)
+            );
+        }
+        family(
+            &mut s,
+            "tanhvf_p2c_selections_total",
+            "counter",
+            "Read-routing decisions by mode (local-first, p2c, rotation).",
+        );
+        for (mode, v) in [
+            ("local", &st.p2c_local_picks),
+            ("load", &st.p2c_load_picks),
+            ("rotation", &st.p2c_rotation_picks),
+        ] {
+            let _ = writeln!(
+                s,
+                "tanhvf_p2c_selections_total{{mode=\"{mode}\"}} {}",
+                v.load(Ordering::Relaxed)
+            );
+        }
+        family(
+            &mut s,
+            "tanhvf_p2c_chosen_queue_depth",
+            "histogram",
+            "Advertised queue depth of the replica p2c selected.",
+        );
+        {
+            let (cum, count, sum) = st.p2c_depth_hist.snapshot();
+            for (i, b) in cluster::DEPTH_BOUNDS.iter().enumerate() {
+                let _ = writeln!(
+                    s,
+                    "tanhvf_p2c_chosen_queue_depth_bucket{{le=\"{b}\"}} {}",
+                    cum[i]
+                );
+            }
+            let _ = writeln!(
+                s,
+                "tanhvf_p2c_chosen_queue_depth_bucket{{le=\"+Inf\"}} {count}"
+            );
+            let _ = writeln!(s, "tanhvf_p2c_chosen_queue_depth_sum {sum}");
+            let _ = writeln!(s, "tanhvf_p2c_chosen_queue_depth_count {count}");
+        }
+        family(
+            &mut s,
+            "tanhvf_cluster_route_transitions_total",
+            "counter",
+            "Hot-route replica-count transitions by direction.",
+        );
+        for (kind, v) in [
+            ("expand", &st.route_expansions),
+            ("shrink", &st.route_shrinks),
+        ] {
+            let _ = writeln!(
+                s,
+                "tanhvf_cluster_route_transitions_total{{kind=\"{kind}\"}} {}",
+                v.load(Ordering::Relaxed)
+            );
+        }
+        family(
+            &mut s,
+            "tanhvf_cluster_node_load",
+            "gauge",
+            "This node's advertised load stanza (what gossip carries).",
+        );
+        {
+            let l = cl.load().peek();
+            for (kind, v) in [
+                ("queue_depth", l.queue_depth),
+                ("ewma_latency_us", l.ewma_latency_us),
+                ("arena_bytes", l.arena_bytes),
+            ] {
+                let _ = writeln!(
+                    s,
+                    "tanhvf_cluster_node_load{{kind=\"{kind}\"}} {v}"
+                );
+            }
         }
         let ps = &cl.pool.stats;
         family(

@@ -51,6 +51,24 @@
 //!   hop is a plain `Content-Length` POST) tagged with
 //!   [`PROXIED_HEADER`]; tagged requests are always answered locally,
 //!   which bounds any transient ring disagreement to one hop.
+//! * **Load-adaptive routing (PR 10).** Every gossip exchange
+//!   piggybacks this node's load ([`NodeLoad`]: run-queue depth, EWMA
+//!   request latency, arena bytes) on its member entry, so each node
+//!   holds a freshness-versioned load view of its peers. Reads whose
+//!   replica set excludes the local node pick their first candidate by
+//!   *power of two choices* over that view — two replicas drawn from
+//!   the known-load set, lower queue depth wins (EWMA latency, then
+//!   ring order, break ties) — which bounds herd effects without
+//!   global coordination; peers with unknown load (pre-PR-10 nodes,
+//!   or nothing learned yet) fall back to the rotation cursor. A
+//!   hot-route controller, run by each route's ring owner once per
+//!   membership round, raises the route's *effective replica count*
+//!   when its request-rate EWMA crosses [`HOT_EXPAND_PER_ROUND`] and
+//!   lowers it below [`HOT_SHRINK_PER_ROUND`], with a
+//!   [`HOT_COOLDOWN_ROUNDS`] hysteresis window; each change is a
+//!   monotone-epoch [`gossip::RouteClaim`] disseminated with the
+//!   member table, so all nodes converge on one replica set even when
+//!   both sides of a partition raised the same route.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{
@@ -62,8 +80,11 @@ use std::time::{Duration, Instant};
 use crate::coordinator::metrics::Histogram;
 use crate::util::json;
 use crate::util::log;
+use crate::util::rng::SplitMix64;
 
-use super::gossip::{self, Member, MemberEntry};
+use super::gossip::{
+    self, LoadInfo, Member, MemberEntry, RouteClaim, RouteOverride,
+};
 use super::http::Response;
 use super::pool::ConnPool;
 use super::transport::{Deadlines, TcpTransport, Transport};
@@ -77,6 +98,34 @@ const MAX_PROXY_BODY: usize = 1 << 22;
 
 /// Response-size bound for probe/gossip control traffic.
 const MAX_CONTROL_BODY: usize = 1 << 20;
+
+/// Hot-route controller: request-rate EWMA (client-facing requests per
+/// membership round, as seen by the route's owner) at or above this
+/// adds one effective replica.
+pub const HOT_EXPAND_PER_ROUND: u64 = 32;
+
+/// …and at or below this drops one (never below the configured base).
+/// The wide gap between the two thresholds is the hysteresis band: a
+/// route whose EWMA flaps inside `(8, 32)` never transitions at all.
+pub const HOT_SHRINK_PER_ROUND: u64 = 8;
+
+/// Minimum membership rounds between two replica-count transitions of
+/// the same route — the second hysteresis stage, bounding transition
+/// frequency even for loads that swing across both thresholds.
+pub const HOT_COOLDOWN_ROUNDS: u64 = 3;
+
+/// Route-traffic EWMA smoothing: `alpha = 1/2^ROUTE_EWMA_SHIFT` (1/4),
+/// in x16 fixed point so small per-round counts don't truncate to 0.
+pub const ROUTE_EWMA_SHIFT: u32 = 2;
+
+/// Bound on distinct route names tracked for the hot-route controller;
+/// requests for names past the cap are routed normally but never
+/// tracked (crafted model names must not grow the table unboundedly).
+pub const MAX_TRACKED_ROUTES: usize = 256;
+
+/// `le` bounds of the p2c chosen-queue-depth histogram (requests, not
+/// time — rendered by hand in [`super::api`], same exposition rules).
+pub const DEPTH_BOUNDS: [u64; 10] = [0, 1, 2, 4, 8, 16, 32, 64, 128, 256];
 
 /// FNV-1a 64-bit: the dependency-free byte hash.
 pub fn fnv1a64(bytes: &[u8]) -> u64 {
@@ -228,6 +277,116 @@ impl PeerSlot {
     }
 }
 
+/// Fixed-bucket histogram over small counts (queue depths), bounds in
+/// [`DEPTH_BOUNDS`]. The latency [`Histogram`] is hard-wired to
+/// microsecond bounds, so depth samples get their own shape; buckets
+/// are stored per-bin and cumulated at snapshot time.
+#[derive(Default)]
+pub struct DepthHist {
+    bins: [AtomicU64; DEPTH_BOUNDS.len()],
+    overflow: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl DepthHist {
+    pub fn observe(&self, depth: u64) {
+        match DEPTH_BOUNDS.iter().position(|&b| depth <= b) {
+            Some(i) => self.bins[i].fetch_add(1, Ordering::Relaxed),
+            None => self.overflow.fetch_add(1, Ordering::Relaxed),
+        };
+        self.sum.fetch_add(depth, Ordering::Relaxed);
+    }
+
+    /// Cumulative counts per bound, then (total count, sum).
+    pub fn snapshot(&self) -> ([u64; DEPTH_BOUNDS.len()], u64, u64) {
+        let mut cum = [0u64; DEPTH_BOUNDS.len()];
+        let mut total = 0u64;
+        for (i, b) in self.bins.iter().enumerate() {
+            total += b.load(Ordering::Relaxed);
+            cum[i] = total;
+        }
+        total += self.overflow.load(Ordering::Relaxed);
+        (cum, total, self.sum.load(Ordering::Relaxed))
+    }
+}
+
+/// This node's self-reported load gauges — the source of the gossip
+/// load stanza and the local side of every p2c comparison. All plain
+/// atomics: the request path touches two per request and never a lock.
+#[derive(Default)]
+pub struct NodeLoad {
+    /// Freshness stamp bumped once per outgoing gossip sample.
+    version: AtomicU64,
+    queue_depth: AtomicU64,
+    ewma_latency_us: AtomicU64,
+    arena_bytes: AtomicU64,
+}
+
+impl NodeLoad {
+    /// A local request entered service (run-queue depth +1).
+    pub fn begin_request(&self) {
+        self.queue_depth.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// …and finished after `latency_us`. EWMA `alpha = 1/8`, integer:
+    /// `new = (7*old + sample) / 8` (the multiply-first form keeps
+    /// sub-8µs samples from vanishing into shift truncation).
+    pub fn end_request(&self, latency_us: u64) {
+        let _ = self.queue_depth.fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |q| Some(q.saturating_sub(1)),
+        );
+        let old = self.ewma_latency_us.load(Ordering::Relaxed);
+        let new = old.saturating_mul(7).saturating_add(latency_us) / 8;
+        self.ewma_latency_us.store(new, Ordering::Relaxed);
+    }
+
+    /// Override the queue-depth gauge directly — the deterministic
+    /// sim drivers model queues in virtual time and publish them here.
+    pub fn set_queue_depth(&self, depth: u64) {
+        self.queue_depth.store(depth, Ordering::Relaxed);
+    }
+
+    pub fn queue_depth(&self) -> u64 {
+        self.queue_depth.load(Ordering::Relaxed)
+    }
+
+    /// Stamp a fresh report: bump the freshness version and snapshot
+    /// every gauge.
+    fn stamp(&self) -> LoadInfo {
+        let version = self.version.fetch_add(1, Ordering::Relaxed) + 1;
+        LoadInfo {
+            version,
+            queue_depth: self.queue_depth.load(Ordering::Relaxed),
+            ewma_latency_us: self.ewma_latency_us.load(Ordering::Relaxed),
+            arena_bytes: self.arena_bytes.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Current gauges without a version bump (metrics display).
+    pub fn peek(&self) -> LoadInfo {
+        LoadInfo {
+            version: self.version.load(Ordering::Relaxed),
+            queue_depth: self.queue_depth.load(Ordering::Relaxed),
+            ewma_latency_us: self.ewma_latency_us.load(Ordering::Relaxed),
+            arena_bytes: self.arena_bytes.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Per-route traffic accounting for the hot-route controller.
+#[derive(Default)]
+struct RouteTraffic {
+    /// Client-facing requests seen since the last controller round.
+    count: u64,
+    /// Request-rate EWMA in x16 fixed point (see [`ROUTE_EWMA_SHIFT`]).
+    ewma_x16: u64,
+    /// Controller round of the last replica-count transition (the
+    /// cooldown clock).
+    last_transition_round: u64,
+}
+
 /// Cluster-wide counters surfaced on `/metrics`.
 #[derive(Default)]
 pub struct ClusterStats {
@@ -276,6 +435,21 @@ pub struct ClusterStats {
     pub shard_hist: Histogram,
     /// Wall time of one whole gossip round (all targets).
     pub gossip_round_hist: Histogram,
+    /// First candidates resolved to the local node (a replica here
+    /// always serves in place — no hop beats any queue).
+    pub p2c_local_picks: AtomicU64,
+    /// First candidates chosen by power-of-two-choices over known
+    /// peer loads.
+    pub p2c_load_picks: AtomicU64,
+    /// First candidates that fell back to the rotation cursor (fewer
+    /// than two replicas with known load, or `load_adaptive` off).
+    pub p2c_rotation_picks: AtomicU64,
+    /// Queue depth of the replica each p2c pick selected.
+    pub p2c_depth_hist: DepthHist,
+    /// Hot-route controller transitions raising a replica count.
+    pub route_expansions: AtomicU64,
+    /// …and lowering one (back toward the configured base).
+    pub route_shrinks: AtomicU64,
 }
 
 /// Where a key's next candidate lives.
@@ -336,6 +510,11 @@ pub struct ClusterConfig {
     /// driver (the [`super::sim`] harness) calls
     /// [`Cluster::membership_round`] itself, under virtual time.
     pub manual_rounds: bool,
+    /// Load-adaptive routing master switch: p2c read selection and the
+    /// hot-route controller. Off, reads use the fixed rotation cursor
+    /// and replica counts never move — the frozen-ring baseline the
+    /// sim scenarios compare against.
+    pub load_adaptive: bool,
 }
 
 impl Default for ClusterConfig {
@@ -355,6 +534,7 @@ impl Default for ClusterConfig {
             pool_idle_per_peer: 4,
             incarnation: None,
             manual_rounds: false,
+            load_adaptive: true,
         }
     }
 }
@@ -393,6 +573,27 @@ pub struct Cluster {
     seed_backoff: Mutex<BTreeMap<String, (u32, u64)>>,
     /// Rotation cursor spreading replica reads.
     replica_cursor: AtomicUsize,
+    /// This node's load gauges (the gossip load stanza's source).
+    load: NodeLoad,
+    /// Optional sampler refreshing the arena-bytes gauge right before
+    /// each outgoing load report (installed by
+    /// [`super::Server::start_cluster`]; absent in sims so load stays
+    /// a pure function of what the driver injected).
+    arena_sampler: Mutex<Option<Arc<dyn Fn() -> u64 + Send + Sync>>>,
+    /// Last known load per peer, learned from gossip stanzas. The map
+    /// is an immutable snapshot swapped on change: the per-request p2c
+    /// read is an `Arc` clone, never a rebuild.
+    peer_loads: RwLock<Arc<BTreeMap<String, LoadInfo>>>,
+    /// Hot-route replica claims (gossiped join-semilattice state).
+    route_claims: Mutex<BTreeMap<String, RouteClaim>>,
+    /// Per-route traffic counters feeding the hot-route controller.
+    route_traffic: Mutex<BTreeMap<String, RouteTraffic>>,
+    /// Controller rounds completed (the cooldown clock).
+    controller_rounds: AtomicU64,
+    /// Deterministic p2c draw sequence (splitmix over a ticket
+    /// counter — no wall-clock or OS randomness on the request path,
+    /// so sim schedules replay bit-identically).
+    p2c_ticket: AtomicU64,
     shutdown: Arc<AtomicBool>,
     prober: Mutex<Option<std::thread::JoinHandle<()>>>,
 }
@@ -480,6 +681,13 @@ impl Cluster {
             gossip_rounds: AtomicU64::new(0),
             seed_backoff: Mutex::new(BTreeMap::new()),
             replica_cursor: AtomicUsize::new(0),
+            load: NodeLoad::default(),
+            arena_sampler: Mutex::new(None),
+            peer_loads: RwLock::new(Arc::new(BTreeMap::new())),
+            route_claims: Mutex::new(BTreeMap::new()),
+            route_traffic: Mutex::new(BTreeMap::new()),
+            controller_rounds: AtomicU64::new(0),
+            p2c_ticket: AtomicU64::new(0),
             shutdown: Arc::new(AtomicBool::new(false)),
             prober: Mutex::new(None),
             cfg,
@@ -588,8 +796,13 @@ impl Cluster {
         self.membership.lock().unwrap().table.clone()
     }
 
-    /// The member table as wire entries (what we gossip out).
+    /// The member table as wire entries (what we gossip out). The
+    /// local entry carries a freshly stamped load stanza; peer entries
+    /// relay the freshest report we hold for them, so load spreads
+    /// epidemic-style even between nodes that never exchange directly.
     pub fn member_entries(&self) -> Vec<MemberEntry> {
+        let self_load = self.sample_self_load();
+        let loads = self.peer_loads.read().unwrap().clone();
         self.membership
             .lock()
             .unwrap()
@@ -599,8 +812,40 @@ impl Cluster {
                 addr: a.clone(),
                 incarnation: m.incarnation,
                 alive: m.alive,
+                load: if a == &self.cfg.advertise {
+                    Some(self_load)
+                } else {
+                    loads.get(a).copied()
+                },
             })
             .collect()
+    }
+
+    /// Refresh the arena gauge through the installed sampler (if any)
+    /// and stamp a fresh self-load report.
+    fn sample_self_load(&self) -> LoadInfo {
+        let sampler = self.arena_sampler.lock().unwrap().clone();
+        if let Some(f) = sampler {
+            self.load.arena_bytes.store(f(), Ordering::Relaxed);
+        }
+        self.load.stamp()
+    }
+
+    /// Install the arena-bytes sampler (called once at server start;
+    /// sims leave it unset so load signals stay driver-controlled).
+    pub fn set_arena_sampler(&self, f: Arc<dyn Fn() -> u64 + Send + Sync>) {
+        *self.arena_sampler.lock().unwrap() = Some(f);
+    }
+
+    /// This node's load gauges (the request path and sim drivers feed
+    /// them; gossip samples them).
+    pub fn load(&self) -> &NodeLoad {
+        &self.load
+    }
+
+    /// Snapshot of the gossip-learned peer load view.
+    pub fn peer_loads(&self) -> Arc<BTreeMap<String, LoadInfo>> {
+        self.peer_loads.read().unwrap().clone()
     }
 
     /// Alive members (ring size).
@@ -722,6 +967,56 @@ impl Cluster {
                 &[("peer", d.clone()), ("node", self.cfg.advertise.clone())],
             );
         }
+        self.merge_peer_loads(remote, &outcome.died);
+    }
+
+    /// Fold the load stanzas riding on a merged member list into the
+    /// peer-load view (freshest version wins, see
+    /// [`gossip::merge_loads`]), dropping reports for members that just
+    /// died. The snapshot `Arc` is swapped only when something actually
+    /// changed, so the p2c read path never sees churn from idle gossip.
+    fn merge_peer_loads(&self, remote: &[MemberEntry], died: &[String]) {
+        if died.is_empty() && remote.iter().all(|e| e.load.is_none()) {
+            return;
+        }
+        let mut view = (**self.peer_loads.read().unwrap()).clone();
+        let mut changed =
+            gossip::merge_loads(&mut view, &self.cfg.advertise, remote);
+        for d in died {
+            changed |= view.remove(d).is_some();
+        }
+        if changed {
+            *self.peer_loads.write().unwrap() = Arc::new(view);
+        }
+    }
+
+    /// Merge remote hot-route replica claims (the other half of a
+    /// gossip exchange). Lexicographic `(epoch, replicas)` max per
+    /// route — see [`gossip::merge_route_claims`].
+    pub fn apply_remote_routes(&self, remote: &[RouteOverride]) {
+        if remote.is_empty() {
+            return;
+        }
+        gossip::merge_route_claims(
+            &mut self.route_claims.lock().unwrap(),
+            remote,
+        );
+    }
+
+    /// Current hot-route claims as wire entries (what we gossip out).
+    pub fn route_overrides_wire(&self) -> Vec<RouteOverride> {
+        self.route_claims
+            .lock()
+            .unwrap()
+            .iter()
+            .take(gossip::MAX_ROUTE_OVERRIDES)
+            .map(|(r, c)| RouteOverride { route: r.clone(), claim: *c })
+            .collect()
+    }
+
+    /// Snapshot of the hot-route claim table (metrics display).
+    pub fn route_claims(&self) -> BTreeMap<String, RouteClaim> {
+        self.route_claims.lock().unwrap().clone()
     }
 
     /// Rebuild the ring from the current alive-member set and swap it
@@ -985,21 +1280,50 @@ impl Cluster {
         }
     }
 
+    /// A key's effective replica count for a ring walk of `walk_len`
+    /// nodes: the configured base, raised by any gossiped hot-route
+    /// claim (claims never shrink below the base — a stale low claim
+    /// must not undercut `--replicas`), clamped to the ring.
+    fn effective_replicas_for(&self, key: &str, walk_len: usize) -> usize {
+        let base = self.cfg.replicas;
+        let claimed = self
+            .route_claims
+            .lock()
+            .unwrap()
+            .get(key)
+            .map(|c| c.replicas as usize)
+            .unwrap_or(base);
+        claimed.max(base).min(walk_len)
+    }
+
+    /// The key's current effective replica count (base `--replicas`
+    /// plus any hot-route expansion), clamped to the ring size.
+    pub fn effective_replicas(&self, key: &str) -> usize {
+        let n = self.ring().nodes().len();
+        self.effective_replicas_for(key, n)
+    }
+
     /// Candidate nodes for a key, in serving order, unroutable peers
-    /// skipped. The first `replicas` ring successors form the replica
-    /// set: if this node is among them it serves locally (no hop);
-    /// otherwise the live replicas are rotated so reads spread across
-    /// them. The remaining ring walk follows as the failover tail, so
-    /// the list always ends in workable fallbacks (and always contains
-    /// `Local` — this node is an alive ring member).
+    /// skipped. The first `effective_replicas` ring successors form
+    /// the replica set: if this node is among them it serves locally
+    /// (no hop beats any queue); otherwise the first candidate is
+    /// picked by power-of-two-choices over the replicas whose load is
+    /// known from gossip — two drawn deterministically from a splitmix
+    /// ticket sequence, lower `(queue_depth, ewma_latency, ring
+    /// order)` wins — falling back to the rotation cursor when fewer
+    /// than two replicas have known load (mixed-version clusters, cold
+    /// start) or `load_adaptive` is off. The remaining ring walk
+    /// follows as the failover tail, so the list always ends in
+    /// workable fallbacks (and always contains `Local` — this node is
+    /// an alive ring member).
     pub fn candidates(&self, key: &str) -> Vec<Node> {
         let ring = self.ring();
         let walk = ring.successors(key);
         if walk.is_empty() {
             return vec![Node::Local];
         }
+        let r = self.effective_replicas_for(key, walk.len());
         let peers = self.peers.lock().unwrap();
-        let r = self.cfg.replicas.min(walk.len());
         let mut reps: Vec<Node> = walk[..r]
             .iter()
             .filter_map(|&n| self.routable(n, &peers))
@@ -1008,12 +1332,15 @@ impl Cluster {
             .iter()
             .filter_map(|&n| self.routable(n, &peers))
             .collect();
+        drop(peers);
         if let Some(pos) = reps.iter().position(|n| *n == Node::Local) {
             reps.rotate_left(pos);
-        } else if reps.len() > 1 {
+            self.stats.p2c_local_picks.fetch_add(1, Ordering::Relaxed);
+        } else if reps.len() > 1 && !self.p2c_select(&mut reps) {
             let i = self.replica_cursor.fetch_add(1, Ordering::Relaxed)
                 % reps.len();
             reps.rotate_left(i);
+            self.stats.p2c_rotation_picks.fetch_add(1, Ordering::Relaxed);
         }
         reps.extend(tail);
         if reps.is_empty() {
@@ -1022,14 +1349,57 @@ impl Cluster {
         reps
     }
 
-    /// The live replica set for a key (first `replicas` ring
-    /// successors, unroutable ones dropped, `Local` first when
-    /// present). The `/v1/batch` fan-out splits across exactly this.
+    /// Power-of-two-choices over the all-remote replica list: draw two
+    /// distinct replicas from those with gossip-known load and move
+    /// the less loaded one to the front. Returns `false` (caller
+    /// rotates instead) when fewer than two loads are known — peers
+    /// with unknown load are *excluded from the draw*, never guessed
+    /// at. The draw runs off an atomic ticket through splitmix, so a
+    /// single-threaded sim driver replays the exact choice sequence.
+    fn p2c_select(&self, reps: &mut Vec<Node>) -> bool {
+        if !self.cfg.load_adaptive {
+            return false;
+        }
+        let loads = self.peer_loads.read().unwrap().clone();
+        let known: Vec<(usize, LoadInfo)> = reps
+            .iter()
+            .enumerate()
+            .filter_map(|(i, n)| match n {
+                Node::Peer(p) => loads.get(p).map(|l| (i, *l)),
+                Node::Local => None,
+            })
+            .collect();
+        if known.len() < 2 {
+            return false;
+        }
+        let ticket = self.p2c_ticket.fetch_add(1, Ordering::Relaxed);
+        let mut draw = SplitMix64::new(ticket);
+        let a = draw.below(known.len() as u64) as usize;
+        let mut b = draw.below(known.len() as u64 - 1) as usize;
+        if b >= a {
+            b += 1;
+        }
+        let rank = |(i, l): &(usize, LoadInfo)| {
+            (l.queue_depth, l.ewma_latency_us, *i)
+        };
+        let chosen = if rank(&known[a]) <= rank(&known[b]) { a } else { b };
+        let (rep_idx, load) = known[chosen];
+        self.stats.p2c_depth_hist.observe(load.queue_depth);
+        self.stats.p2c_load_picks.fetch_add(1, Ordering::Relaxed);
+        let node = reps.remove(rep_idx);
+        reps.insert(0, node);
+        true
+    }
+
+    /// The live replica set for a key (first `effective_replicas`
+    /// ring successors, unroutable ones dropped, `Local` first when
+    /// present). The `/v1/batch` fan-out splits across exactly this —
+    /// a hot-route expansion widens the fan-out automatically.
     pub fn live_replicas(&self, key: &str) -> Vec<Node> {
         let ring = self.ring();
         let walk = ring.successors(key);
+        let r = self.effective_replicas_for(key, walk.len());
         let peers = self.peers.lock().unwrap();
-        let r = self.cfg.replicas.min(walk.len());
         let mut reps: Vec<Node> = walk[..r]
             .iter()
             .filter_map(|&n| self.routable(n, &peers))
@@ -1041,11 +1411,11 @@ impl Cluster {
     }
 
     /// The key's primary replica set ignoring liveness (`/v1/models`
-    /// display).
+    /// display). Reflects hot-route expansions.
     pub fn replica_set(&self, key: &str) -> Vec<String> {
         let ring = self.ring();
         let walk = ring.successors(key);
-        let r = self.cfg.replicas.min(walk.len());
+        let r = self.effective_replicas_for(key, walk.len());
         walk[..r].iter().map(|n| n.to_string()).collect()
     }
 
@@ -1061,6 +1431,123 @@ impl Cluster {
                 Node::Local => self.cfg.advertise.clone(),
                 Node::Peer(p) => p,
             })
+    }
+
+    // -- hot-route controller -----------------------------------------
+
+    /// Count one client-facing request for `route` toward the
+    /// hot-route controller. Proxied-in requests are *not* counted:
+    /// client arrivals at a front are a replica-layout-independent
+    /// popularity signal (loadgen and real clients spread connections
+    /// across fronts), whereas counting forwarded traffic would make
+    /// the signal collapse as soon as an expansion spreads the load —
+    /// a feedback loop that re-shrinks hot routes. Bounded by
+    /// [`MAX_TRACKED_ROUTES`]; untracked names still route normally.
+    pub fn note_route_request(&self, route: &str) {
+        let mut traffic = self.route_traffic.lock().unwrap();
+        match traffic.get_mut(route) {
+            Some(rt) => rt.count += 1,
+            None if traffic.len() < MAX_TRACKED_ROUTES => {
+                traffic.insert(
+                    route.to_string(),
+                    RouteTraffic { count: 1, ..RouteTraffic::default() },
+                );
+            }
+            None => {}
+        }
+    }
+
+    /// One hot-route controller round: fold each tracked route's
+    /// request count into its rate EWMA, then — only for routes this
+    /// node currently owns (one steward per route; concurrent
+    /// partition-side stewards still converge via the claim
+    /// semilattice) — raise the effective replica count when the EWMA
+    /// is at/above [`HOT_EXPAND_PER_ROUND`] and lower it back toward
+    /// the base at/below [`HOT_SHRINK_PER_ROUND`], at most one
+    /// transition per [`HOT_COOLDOWN_ROUNDS`] per route. Runs as part
+    /// of [`Cluster::membership_round`] so new claims ride the very
+    /// next gossip exchange.
+    pub fn hot_route_round(&self) {
+        let round = self.controller_rounds.fetch_add(1, Ordering::Relaxed) + 1;
+        let ring_size = self.ring().nodes().len();
+        let base = self.cfg.replicas;
+        let mut transitions: Vec<(String, RouteClaim, bool)> = Vec::new();
+        {
+            let mut traffic = self.route_traffic.lock().unwrap();
+            for (route, rt) in traffic.iter_mut() {
+                let sample_x16 = rt.count << 4;
+                rt.count = 0;
+                rt.ewma_x16 = rt.ewma_x16 - (rt.ewma_x16 >> ROUTE_EWMA_SHIFT)
+                    + (sample_x16 >> ROUTE_EWMA_SHIFT);
+                if !self.cfg.load_adaptive {
+                    continue;
+                }
+                if round.saturating_sub(rt.last_transition_round)
+                    < HOT_COOLDOWN_ROUNDS
+                {
+                    continue;
+                }
+                if self.owner_name(route).as_deref()
+                    != Some(self.cfg.advertise.as_str())
+                {
+                    continue;
+                }
+                let claim = self
+                    .route_claims
+                    .lock()
+                    .unwrap()
+                    .get(route)
+                    .copied()
+                    .unwrap_or_default();
+                let cur =
+                    (claim.replicas as usize).max(base).min(ring_size.max(1));
+                let ewma = rt.ewma_x16 >> 4;
+                let next = if ewma >= HOT_EXPAND_PER_ROUND && cur < ring_size
+                {
+                    Some((cur + 1, true))
+                } else if ewma <= HOT_SHRINK_PER_ROUND && cur > base {
+                    Some((cur - 1, false))
+                } else {
+                    None
+                };
+                if let Some((replicas, expand)) = next {
+                    rt.last_transition_round = round;
+                    transitions.push((
+                        route.clone(),
+                        RouteClaim {
+                            epoch: claim
+                                .epoch
+                                .saturating_add(1)
+                                .min(gossip::MAX_INCARNATION),
+                            replicas: replicas as u64,
+                        },
+                        expand,
+                    ));
+                }
+            }
+        }
+        for (route, claim, expand) in transitions {
+            gossip::merge_route_claims(
+                &mut self.route_claims.lock().unwrap(),
+                &[RouteOverride { route: route.clone(), claim }],
+            );
+            let counter = if expand {
+                &self.stats.route_expansions
+            } else {
+                &self.stats.route_shrinks
+            };
+            counter.fetch_add(1, Ordering::Relaxed);
+            log::info(
+                "cluster",
+                if expand { "hot route expanded" } else { "hot route shrunk" },
+                &[
+                    ("route", route),
+                    ("replicas", claim.replicas.to_string()),
+                    ("epoch", claim.epoch.to_string()),
+                    ("node", self.cfg.advertise.clone()),
+                ],
+            );
+        }
     }
 
     // -- client legs (pooled) -----------------------------------------
@@ -1190,11 +1677,15 @@ impl Cluster {
         Deadlines::split(leg, leg, leg)
     }
 
-    /// One gossip exchange with `addr`: send the local table, merge
-    /// whatever comes back.
+    /// One gossip exchange with `addr`: send the local table (load
+    /// stanzas and hot-route claims riding along), merge whatever
+    /// comes back.
     pub fn gossip_with(&self, addr: &str) -> bool {
-        let body =
-            json::write(&gossip::encode(self.self_name(), &self.member_entries()));
+        let body = json::write(&gossip::encode(
+            self.self_name(),
+            &self.member_entries(),
+            &self.route_overrides_wire(),
+        ));
         let resp = self.request(
             addr,
             "POST",
@@ -1212,6 +1703,7 @@ impl Cluster {
                 ) {
                     Ok(msg) => {
                         self.apply_remote_members(&msg.members);
+                        self.apply_remote_routes(&msg.routes);
                         true
                     }
                     Err(_) => false,
@@ -1319,15 +1811,17 @@ impl Cluster {
         }
     }
 
-    /// One full membership round: probe health, then gossip. The
-    /// membership thread calls this every `probe_interval`; with
-    /// [`ClusterConfig::manual_rounds`] a deterministic driver calls it
-    /// instead.
+    /// One full membership round: probe health, run the hot-route
+    /// controller (so a fresh claim rides this round's gossip), then
+    /// gossip. The membership thread calls this every
+    /// `probe_interval`; with [`ClusterConfig::manual_rounds`] a
+    /// deterministic driver calls it instead.
     pub fn membership_round(&self) {
         self.probe_round();
         if self.shutdown.load(Ordering::SeqCst) {
             return;
         }
+        self.hot_route_round();
         self.gossip_round();
     }
 }
@@ -1569,6 +2063,7 @@ mod tests {
             addr: "127.0.0.1:77".into(),
             incarnation: 9,
             alive: true,
+            load: None,
         }]);
         assert_eq!(c.alive_members(), 3);
         assert_eq!(c.ring().nodes().len(), 3);
@@ -1583,6 +2078,7 @@ mod tests {
             addr: "127.0.0.1:77".into(),
             incarnation: 9,
             alive: false,
+            load: None,
         }]);
         assert_eq!(c.alive_members(), 2);
         assert!(!c.peer_health().contains_key("127.0.0.1:77"));
@@ -1592,6 +2088,7 @@ mod tests {
             addr: "127.0.0.1:77".into(),
             incarnation: 10,
             alive: true,
+            load: None,
         }]);
         assert_eq!(c.alive_members(), 3);
         assert!(c.peer_health().contains_key("127.0.0.1:77"));
@@ -1606,6 +2103,7 @@ mod tests {
             addr: "127.0.0.1:1".into(),
             incarnation: 500,
             alive: false,
+            load: None,
         }]);
         let m = c.members();
         assert!(m["127.0.0.1:1"].alive, "self must refute its own death");
@@ -1766,6 +2264,254 @@ mod tests {
         c.record_failure("127.0.0.1:999");
         c.record_success("127.0.0.1:999");
         assert_eq!(c.peer_health().len(), 1);
+        c.stop();
+    }
+
+    fn loaded_entry(addr: &str, version: u64, queue: u64) -> MemberEntry {
+        MemberEntry {
+            addr: addr.into(),
+            incarnation: 50,
+            alive: true,
+            load: Some(LoadInfo {
+                version,
+                queue_depth: queue,
+                ewma_latency_us: queue,
+                arena_bytes: 0,
+            }),
+        }
+    }
+
+    /// A 4-node view (self + 3 peers) where some keys have fully
+    /// remote replica sets — the p2c arena.
+    fn p2c_cluster() -> Arc<Cluster> {
+        Cluster::start(ClusterConfig {
+            advertise: "127.0.0.1:1".into(),
+            peers: vec![
+                "127.0.0.1:2".into(),
+                "127.0.0.1:3".into(),
+                "127.0.0.1:4".into(),
+            ],
+            replicas: 2,
+            probe_interval: Duration::from_secs(3600),
+            incarnation: Some(100),
+            ..Default::default()
+        })
+        .unwrap()
+    }
+
+    fn remote_key(c: &Cluster) -> String {
+        (0..500)
+            .map(|i| format!("k{i}"))
+            .find(|k| !c.replica_set(k).contains(&"127.0.0.1:1".to_string()))
+            .expect("some key has a fully remote replica set")
+    }
+
+    #[test]
+    fn p2c_prefers_the_less_loaded_replica() {
+        let c = p2c_cluster();
+        let key = remote_key(&c);
+        let reps = c.replica_set(&key);
+        // Load the first replica heavily, keep the second idle.
+        c.apply_remote_members(&[
+            loaded_entry(&reps[0], 1, 50),
+            loaded_entry(&reps[1], 1, 0),
+        ]);
+        for _ in 0..32 {
+            let first = c.candidates(&key)[0].clone();
+            assert_eq!(
+                first,
+                Node::Peer(reps[1].clone()),
+                "p2c must always land on the idle replica"
+            );
+        }
+        assert!(c.stats.p2c_load_picks.load(Ordering::Relaxed) >= 32);
+        assert_eq!(c.stats.p2c_rotation_picks.load(Ordering::Relaxed), 0);
+        // Flip the load: the pick follows.
+        c.apply_remote_members(&[
+            loaded_entry(&reps[0], 2, 0),
+            loaded_entry(&reps[1], 2, 50),
+        ]);
+        assert_eq!(c.candidates(&key)[0], Node::Peer(reps[0].clone()));
+        c.stop();
+    }
+
+    #[test]
+    fn p2c_excludes_unknown_load_and_falls_back_to_rotation() {
+        let c = p2c_cluster();
+        let key = remote_key(&c);
+        let reps = c.replica_set(&key);
+        // Only one replica has known load: below the two-candidate
+        // minimum, so selection must fall back to rotation (the known
+        // load must NOT dogpile the one reporting peer).
+        c.apply_remote_members(&[loaded_entry(&reps[0], 1, 0)]);
+        let firsts: std::collections::BTreeSet<String> = (0..8)
+            .filter_map(|_| match c.candidates(&key).first() {
+                Some(Node::Peer(p)) => Some(p.clone()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(firsts.len(), 2, "rotation must still alternate");
+        assert_eq!(c.stats.p2c_load_picks.load(Ordering::Relaxed), 0);
+        assert!(c.stats.p2c_rotation_picks.load(Ordering::Relaxed) >= 8);
+        c.stop();
+    }
+
+    #[test]
+    fn load_adaptive_off_is_the_frozen_baseline() {
+        let c = Cluster::start(ClusterConfig {
+            advertise: "127.0.0.1:1".into(),
+            peers: vec![
+                "127.0.0.1:2".into(),
+                "127.0.0.1:3".into(),
+                "127.0.0.1:4".into(),
+            ],
+            replicas: 2,
+            probe_interval: Duration::from_secs(3600),
+            incarnation: Some(100),
+            load_adaptive: false,
+            ..Default::default()
+        })
+        .unwrap();
+        let key = remote_key(&c);
+        let reps = c.replica_set(&key);
+        c.apply_remote_members(&[
+            loaded_entry(&reps[0], 1, 50),
+            loaded_entry(&reps[1], 1, 0),
+        ]);
+        for _ in 0..8 {
+            c.candidates(&key);
+        }
+        assert_eq!(c.stats.p2c_load_picks.load(Ordering::Relaxed), 0);
+        // And the controller never moves replica counts.
+        for _ in 0..10 {
+            for _ in 0..100 {
+                c.note_route_request(&key);
+            }
+            c.hot_route_round();
+        }
+        assert_eq!(c.effective_replicas(&key), 2);
+        assert_eq!(c.stats.route_expansions.load(Ordering::Relaxed), 0);
+        c.stop();
+    }
+
+    #[test]
+    fn hot_route_controller_expands_and_shrinks_with_hysteresis() {
+        let c = p2c_cluster();
+        // Find a key this node owns (the controller only steers owned
+        // routes).
+        let key = (0..500)
+            .map(|i| format!("own{i}"))
+            .find(|k| c.owner_name(k).as_deref() == Some("127.0.0.1:1"))
+            .expect("some key is owned locally");
+        assert_eq!(c.effective_replicas(&key), 2);
+        // Sustained heat: EWMA climbs past the expand threshold, then
+        // one expansion per cooldown window.
+        let mut rounds_to_first = None;
+        for round in 1..=20u64 {
+            for _ in 0..(2 * HOT_EXPAND_PER_ROUND) {
+                c.note_route_request(&key);
+            }
+            c.hot_route_round();
+            if rounds_to_first.is_none()
+                && c.stats.route_expansions.load(Ordering::Relaxed) > 0
+            {
+                rounds_to_first = Some(round);
+            }
+        }
+        // 4-node ring, base 2: expansion caps at 4.
+        assert_eq!(c.effective_replicas(&key), 4);
+        let expansions = c.stats.route_expansions.load(Ordering::Relaxed);
+        assert_eq!(expansions, 2, "base 2 -> 4 is exactly two transitions");
+        let claim = c.route_claims()[&key];
+        assert_eq!(claim.replicas, 4);
+        assert!(claim.epoch >= 2);
+        // Cooldown: transitions must be spread at least
+        // HOT_COOLDOWN_ROUNDS apart, so the first one alone can't have
+        // finished the climb.
+        assert!(rounds_to_first.unwrap() < 20);
+        // Cold rounds: EWMA decays below the shrink threshold and the
+        // route steps back down to base — and no further.
+        for _ in 0..40 {
+            c.hot_route_round();
+        }
+        assert_eq!(c.effective_replicas(&key), 2);
+        assert_eq!(c.stats.route_shrinks.load(Ordering::Relaxed), 2);
+        // The claim table remembers the base with a newer epoch (the
+        // shrink must win merges against the old expansion claim).
+        assert!(c.route_claims()[&key].epoch > claim.epoch);
+        c.stop();
+    }
+
+    #[test]
+    fn flapping_load_inside_the_band_never_transitions() {
+        let c = p2c_cluster();
+        let key = (0..500)
+            .map(|i| format!("own{i}"))
+            .find(|k| c.owner_name(k).as_deref() == Some("127.0.0.1:1"))
+            .unwrap();
+        // Alternate 24 and 8 requests per round: the EWMA settles
+        // inside the (HOT_SHRINK, HOT_EXPAND) hysteresis band.
+        for round in 0..40 {
+            let n = if round % 2 == 0 { 24 } else { 8 };
+            for _ in 0..n {
+                c.note_route_request(&key);
+            }
+            c.hot_route_round();
+        }
+        assert_eq!(c.stats.route_expansions.load(Ordering::Relaxed), 0);
+        assert_eq!(c.stats.route_shrinks.load(Ordering::Relaxed), 0);
+        assert_eq!(c.effective_replicas(&key), 2);
+        c.stop();
+    }
+
+    #[test]
+    fn remote_route_claims_only_ever_raise_above_base() {
+        let c = p2c_cluster();
+        let key = remote_key(&c);
+        c.apply_remote_routes(&[RouteOverride {
+            route: key.clone(),
+            claim: RouteClaim { epoch: 3, replicas: 3 },
+        }]);
+        assert_eq!(c.effective_replicas(&key), 3);
+        assert_eq!(c.replica_set(&key).len(), 3);
+        assert_eq!(c.live_replicas(&key).len(), 3);
+        // A claim below the configured base is clamped to the base.
+        c.apply_remote_routes(&[RouteOverride {
+            route: key.clone(),
+            claim: RouteClaim { epoch: 4, replicas: 1 },
+        }]);
+        assert_eq!(c.effective_replicas(&key), 2);
+        // And a claim above the ring clamps to the ring.
+        c.apply_remote_routes(&[RouteOverride {
+            route: key.clone(),
+            claim: RouteClaim { epoch: 5, replicas: 200 },
+        }]);
+        assert_eq!(c.effective_replicas(&key), 4);
+        c.stop();
+    }
+
+    #[test]
+    fn node_load_gauges_feed_the_stamped_stanza() {
+        let c = test_cluster(1);
+        c.load().begin_request();
+        c.load().begin_request();
+        c.load().end_request(800);
+        let entries = c.member_entries();
+        let me = entries
+            .iter()
+            .find(|e| e.addr == "127.0.0.1:1")
+            .expect("self entry");
+        let l = me.load.expect("self entry must carry a load stanza");
+        assert_eq!(l.queue_depth, 1);
+        assert_eq!(l.ewma_latency_us, 100, "EWMA alpha 1/8 of 800");
+        assert!(l.version >= 1);
+        // Peers we know nothing about carry no stanza.
+        let peer = entries.iter().find(|e| e.addr != "127.0.0.1:1").unwrap();
+        assert!(peer.load.is_none());
+        // A second sample bumps the freshness version.
+        let me2 = c.member_entries();
+        let l2 = me2.iter().find(|e| e.addr == "127.0.0.1:1").unwrap();
+        assert!(l2.load.unwrap().version > l.version);
         c.stop();
     }
 

@@ -39,6 +39,22 @@
 //! decides *who is in the ring*, health decides *who is routable right
 //! now*. Ring rebuilds happen only on membership changes, so routing
 //! stays a pure function of the alive-member set.
+//!
+//! **Load piggybacking (PR 10).** Member entries optionally carry a
+//! versioned load stanza (`load: {v, q, lat_us, arena_b}`) so every
+//! gossip exchange doubles as a load report: run-queue depth, EWMA
+//! request latency, and arena bytes, stamped with a per-origin monotone
+//! version so relayed third-party reports keep freshness order. The
+//! stanza is *advisory*: it never changes membership outcomes, a
+//! malformed stanza is ignored rather than rejected, and a missing one
+//! means "load unknown" (pre-PR-10 nodes) — such peers are excluded
+//! from power-of-two-choices routing but remain fully routable.
+//! Messages may also carry a `routes` list of hot-route replica claims
+//! (`{route, replicas, epoch}`); claims merge by lexicographic
+//! `(epoch, replicas)` max, a join-semilattice, so partitioned nodes
+//! that both raised a route converge to one winner after heal. Both
+//! additions ride protocol v1 as optional keys: old decoders read only
+//! the keys they know and round-trip cleanly.
 
 use std::collections::BTreeMap;
 
@@ -87,6 +103,16 @@ pub const MAX_GOSSIP_BODY: usize = 256 * 1024;
 /// magnitude later.
 pub const DEATH_FACTOR: u32 = 10;
 
+/// Wire cap on hot-route replica claims per message. Routes come from
+/// the `--routes` flag (a handful), so the cap is an order of
+/// magnitude above any real deployment; excess claims are dropped, not
+/// fatal — membership must merge even from a node abusing the stanza.
+pub const MAX_ROUTE_OVERRIDES: usize = 64;
+
+/// Longest accepted route name in a replica claim (matches the route
+/// table's own sanity bound; longer names are crafted, skip them).
+pub const MAX_ROUTE_NAME: usize = 128;
+
 /// One row of the membership table.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Member {
@@ -98,12 +124,49 @@ pub struct Member {
     pub alive: bool,
 }
 
+/// A node's self-reported load, piggybacked on its member entry.
+///
+/// `version` is a per-origin monotone counter bumped at every local
+/// sample; merges keep the higher version, so a report relayed through
+/// a third node can never roll a fresher direct report back.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LoadInfo {
+    /// Freshness stamp (per-origin monotone counter, not wall clock).
+    pub version: u64,
+    /// In-flight local requests (run-queue depth proxy).
+    pub queue_depth: u64,
+    /// EWMA of local request service latency, microseconds.
+    pub ewma_latency_us: u64,
+    /// Bytes parked in the node's word arenas.
+    pub arena_bytes: u64,
+}
+
 /// One member as carried on the wire.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct MemberEntry {
     pub addr: String,
     pub incarnation: u64,
     pub alive: bool,
+    /// `None` = load unknown (pre-PR-10 sender, or nothing learned
+    /// yet). Unknown-load peers are excluded from p2c selection.
+    pub load: Option<LoadInfo>,
+}
+
+/// A hot-route replica-count claim: "route X runs at `replicas`
+/// effective replicas as of `epoch`". Ordered lexicographically by
+/// `(epoch, replicas)`; merges keep the max, so concurrent claims from
+/// a partitioned cluster converge to one winner deterministically.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub struct RouteClaim {
+    pub epoch: u64,
+    pub replicas: u64,
+}
+
+/// One route claim as carried on the wire.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RouteOverride {
+    pub route: String,
+    pub claim: RouteClaim,
 }
 
 /// A decoded gossip message (request and response share the shape).
@@ -112,6 +175,8 @@ pub struct GossipMsg {
     /// Sender's advertised identity (it also appears in `members`).
     pub from: String,
     pub members: Vec<MemberEntry>,
+    /// Hot-route replica claims (empty from pre-PR-10 senders).
+    pub routes: Vec<RouteOverride>,
 }
 
 /// What a merge changed — the caller rebuilds the ring iff
@@ -233,34 +298,200 @@ pub fn merge(
     out
 }
 
+/// Merge relayed load reports into the local load view. Pure freshness
+/// logic: a report wins iff its version is strictly higher than what
+/// we hold. The local node's own entry is skipped (we are the origin
+/// of our load; a relay can only be stale). Returns `true` if any
+/// entry changed — callers refresh their read-path snapshot then.
+///
+/// Load never touches membership: dead members keep their last report
+/// here until the caller prunes it, and a report about an address we
+/// have never heard of is still stored (the member entry that carried
+/// it merges in the same message).
+pub fn merge_loads(
+    loads: &mut BTreeMap<String, LoadInfo>,
+    self_addr: &str,
+    remote: &[MemberEntry],
+) -> bool {
+    let mut changed = false;
+    for e in remote {
+        if e.addr == self_addr {
+            continue;
+        }
+        let Some(load) = e.load else { continue };
+        match loads.get_mut(&e.addr) {
+            Some(cur) if cur.version >= load.version => {}
+            Some(cur) => {
+                *cur = load;
+                changed = true;
+            }
+            None => {
+                loads.insert(e.addr.clone(), load);
+                changed = true;
+            }
+        }
+    }
+    changed
+}
+
+/// Merge remote hot-route claims into the local claim table: keep the
+/// lexicographic `(epoch, replicas)` max per route. Join-semilattice
+/// merge — commutative, associative, idempotent — so any gossip order
+/// (including claims raised on both sides of a partition) converges
+/// every node to the same winner. Returns `true` if any claim changed.
+pub fn merge_route_claims(
+    claims: &mut BTreeMap<String, RouteClaim>,
+    remote: &[RouteOverride],
+) -> bool {
+    let mut changed = false;
+    for r in remote.iter().take(MAX_ROUTE_OVERRIDES) {
+        match claims.get_mut(&r.route) {
+            Some(cur) if *cur >= r.claim => {}
+            Some(cur) => {
+                *cur = r.claim;
+                changed = true;
+            }
+            None => {
+                claims.insert(r.route.clone(), r.claim);
+                changed = true;
+            }
+        }
+    }
+    changed
+}
+
 /// Serialize a membership snapshot as the gossip wire message.
-pub fn encode(from: &str, members: &[MemberEntry]) -> Json {
+///
+/// Load stanzas and route claims are emitted only where present, as
+/// optional v1 keys: a pre-PR-10 decoder reads `addr`/`incarnation`/
+/// `alive` and ignores the rest, so mixed-version clusters keep
+/// converging on membership.
+pub fn encode(
+    from: &str,
+    members: &[MemberEntry],
+    routes: &[RouteOverride],
+) -> Json {
     let members = members
         .iter()
         .map(|e| {
-            Json::Obj(
-                [
-                    ("addr".to_string(), Json::Str(e.addr.clone())),
-                    (
-                        "incarnation".to_string(),
-                        Json::Num(e.incarnation as f64),
+            let mut fields = vec![
+                ("addr".to_string(), Json::Str(e.addr.clone())),
+                ("incarnation".to_string(), Json::Num(e.incarnation as f64)),
+                ("alive".to_string(), Json::Bool(e.alive)),
+            ];
+            if let Some(l) = &e.load {
+                fields.push((
+                    "load".to_string(),
+                    Json::Obj(
+                        [
+                            ("v".to_string(), Json::Num(l.version as f64)),
+                            ("q".to_string(), Json::Num(l.queue_depth as f64)),
+                            (
+                                "lat_us".to_string(),
+                                Json::Num(l.ewma_latency_us as f64),
+                            ),
+                            (
+                                "arena_b".to_string(),
+                                Json::Num(l.arena_bytes as f64),
+                            ),
+                        ]
+                        .into_iter()
+                        .collect(),
                     ),
-                    ("alive".to_string(), Json::Bool(e.alive)),
-                ]
-                .into_iter()
-                .collect(),
-            )
+                ));
+            }
+            Json::Obj(fields.into_iter().collect())
         })
         .collect();
-    Json::Obj(
-        [
-            ("v".to_string(), Json::Num(GOSSIP_VERSION as f64)),
-            ("from".to_string(), Json::Str(from.to_string())),
-            ("members".to_string(), Json::Arr(members)),
-        ]
-        .into_iter()
-        .collect(),
-    )
+    let mut top = vec![
+        ("v".to_string(), Json::Num(GOSSIP_VERSION as f64)),
+        ("from".to_string(), Json::Str(from.to_string())),
+        ("members".to_string(), Json::Arr(members)),
+    ];
+    if !routes.is_empty() {
+        let routes = routes
+            .iter()
+            .take(MAX_ROUTE_OVERRIDES)
+            .map(|r| {
+                Json::Obj(
+                    [
+                        ("route".to_string(), Json::Str(r.route.clone())),
+                        (
+                            "replicas".to_string(),
+                            Json::Num(r.claim.replicas as f64),
+                        ),
+                        ("epoch".to_string(), Json::Num(r.claim.epoch as f64)),
+                    ]
+                    .into_iter()
+                    .collect(),
+                )
+            })
+            .collect();
+        top.push(("routes".to_string(), Json::Arr(routes)));
+    }
+    Json::Obj(top.into_iter().collect())
+}
+
+/// Read one non-negative f64-exact integer field out of an advisory
+/// stanza. `None` on absence or anything out of bounds — advisory
+/// data is dropped, never fatal.
+fn advisory_u64(obj: &Json, key: &str) -> Option<u64> {
+    obj.get(key)
+        .and_then(Json::as_f64)
+        .filter(|n| {
+            *n >= 0.0 && *n <= MAX_INCARNATION as f64 && n.fract() == 0.0
+        })
+        .map(|n| n as u64)
+}
+
+/// Parse a member's optional load stanza. Missing or malformed both
+/// yield `None` ("load unknown"): the stanza is advisory, so a crafted
+/// or future-shaped stanza must not reject the membership data riding
+/// in the same message.
+fn decode_load(m: &Json) -> Option<LoadInfo> {
+    let l = m.get("load")?;
+    Some(LoadInfo {
+        version: advisory_u64(l, "v")?,
+        queue_depth: advisory_u64(l, "q")?,
+        ewma_latency_us: advisory_u64(l, "lat_us")?,
+        arena_bytes: advisory_u64(l, "arena_b")?,
+    })
+}
+
+/// Parse the optional top-level route-claim list. Same advisory
+/// posture as the load stanza: malformed entries are skipped, the list
+/// is capped at [`MAX_ROUTE_OVERRIDES`], and a replica count outside
+/// `1..=MAX_MEMBERS` is crafted (no ring can satisfy it) so the entry
+/// is dropped.
+fn decode_routes(body: &Json) -> Vec<RouteOverride> {
+    let Some(arr) = body.get("routes").and_then(Json::as_arr) else {
+        return Vec::new();
+    };
+    let mut out = Vec::new();
+    for r in arr {
+        if out.len() >= MAX_ROUTE_OVERRIDES {
+            break;
+        }
+        let Some(route) = r.get("route").and_then(Json::as_str) else {
+            continue;
+        };
+        if route.is_empty() || route.len() > MAX_ROUTE_NAME {
+            continue;
+        }
+        let (Some(replicas), Some(epoch)) =
+            (advisory_u64(r, "replicas"), advisory_u64(r, "epoch"))
+        else {
+            continue;
+        };
+        if replicas == 0 || replicas > MAX_MEMBERS as u64 {
+            continue;
+        }
+        out.push(RouteOverride {
+            route: route.to_string(),
+            claim: RouteClaim { epoch, replicas },
+        });
+    }
+    out
 }
 
 /// Parse and validate a gossip wire message.
@@ -319,9 +550,11 @@ pub fn decode(body: &Json) -> Result<GossipMsg, String> {
         } else {
             incarnation.min(MAX_INCARNATION - 1)
         };
-        members.push(MemberEntry { addr, incarnation, alive });
+        let load = decode_load(m);
+        members.push(MemberEntry { addr, incarnation, alive, load });
     }
-    Ok(GossipMsg { from, members })
+    let routes = decode_routes(body);
+    Ok(GossipMsg { from, members, routes })
 }
 
 #[cfg(test)]
@@ -340,7 +573,25 @@ mod tests {
     }
 
     fn entry(addr: &str, incarnation: u64, alive: bool) -> MemberEntry {
-        MemberEntry { addr: addr.to_string(), incarnation, alive }
+        MemberEntry { addr: addr.to_string(), incarnation, alive, load: None }
+    }
+
+    fn load(version: u64, queue_depth: u64) -> LoadInfo {
+        LoadInfo {
+            version,
+            queue_depth,
+            ewma_latency_us: 10 * queue_depth,
+            arena_bytes: 100 * queue_depth,
+        }
+    }
+
+    fn loaded(addr: &str, incarnation: u64, l: LoadInfo) -> MemberEntry {
+        MemberEntry {
+            addr: addr.to_string(),
+            incarnation,
+            alive: true,
+            load: Some(l),
+        }
     }
 
     #[test]
@@ -449,7 +700,9 @@ mod tests {
                 addr: ME.to_string(),
                 incarnation: MAX_INCARNATION,
                 alive: false,
+                load: None,
             }],
+            &[],
         );
         let msg = decode(&json).unwrap();
         assert_eq!(msg.members[0].incarnation, MAX_INCARNATION - 1);
@@ -499,12 +752,149 @@ mod tests {
         let entries = vec![
             entry("a:1", 17, true),
             entry("b:2", 99, false),
-            entry("c:3", 3, true),
+            loaded("c:3", 3, load(7, 42)),
         ];
-        let json = encode("a:1", &entries);
+        let routes = vec![RouteOverride {
+            route: "s3_12".to_string(),
+            claim: RouteClaim { epoch: 4, replicas: 3 },
+        }];
+        let json = encode("a:1", &entries, &routes);
         let msg = decode(&json).unwrap();
         assert_eq!(msg.from, "a:1");
         assert_eq!(msg.members, entries);
+        assert_eq!(msg.routes, routes);
+    }
+
+    #[test]
+    fn pre_load_stanza_messages_decode_with_unknown_load() {
+        // A PR-9-era sender emits only addr/incarnation/alive and no
+        // routes key. The new decoder must accept it verbatim: load is
+        // "unknown" (None) and the claim list empty — never an error.
+        let old = obj(vec![
+            ("v", Json::Num(1.0)),
+            ("from", Json::Str("old:1".into())),
+            (
+                "members",
+                Json::Arr(vec![obj(vec![
+                    ("addr", Json::Str("old:1".into())),
+                    ("incarnation", Json::Num(44.0)),
+                    ("alive", Json::Bool(true)),
+                ])]),
+            ),
+        ]);
+        let msg = decode(&old).unwrap();
+        assert_eq!(msg.members, vec![entry("old:1", 44, true)]);
+        assert!(msg.routes.is_empty());
+    }
+
+    #[test]
+    fn malformed_advisory_stanzas_are_dropped_not_fatal() {
+        // Garbage load stanzas and route claims must not reject the
+        // membership data in the same message.
+        let body = obj(vec![
+            ("v", Json::Num(1.0)),
+            ("from", Json::Str("a:1".into())),
+            (
+                "members",
+                Json::Arr(vec![obj(vec![
+                    ("addr", Json::Str("a:1".into())),
+                    ("incarnation", Json::Num(5.0)),
+                    ("alive", Json::Bool(true)),
+                    // fractional queue depth: stanza dropped
+                    (
+                        "load",
+                        obj(vec![
+                            ("v", Json::Num(1.0)),
+                            ("q", Json::Num(2.5)),
+                            ("lat_us", Json::Num(1.0)),
+                            ("arena_b", Json::Num(0.0)),
+                        ]),
+                    ),
+                ])]),
+            ),
+            (
+                "routes",
+                Json::Arr(vec![
+                    // replicas out of ring range: skipped
+                    obj(vec![
+                        ("route", Json::Str("a".into())),
+                        ("replicas", Json::Num(0.0)),
+                        ("epoch", Json::Num(1.0)),
+                    ]),
+                    obj(vec![
+                        ("route", Json::Str("b".into())),
+                        ("replicas", Json::Num(9000.0)),
+                        ("epoch", Json::Num(1.0)),
+                    ]),
+                    // missing epoch: skipped
+                    obj(vec![
+                        ("route", Json::Str("c".into())),
+                        ("replicas", Json::Num(2.0)),
+                    ]),
+                    // well-formed survivor
+                    obj(vec![
+                        ("route", Json::Str("keep".into())),
+                        ("replicas", Json::Num(2.0)),
+                        ("epoch", Json::Num(3.0)),
+                    ]),
+                ]),
+            ),
+        ]);
+        let msg = decode(&body).unwrap();
+        assert_eq!(msg.members.len(), 1);
+        assert_eq!(msg.members[0].load, None, "bad stanza must drop to None");
+        assert_eq!(
+            msg.routes,
+            vec![RouteOverride {
+                route: "keep".to_string(),
+                claim: RouteClaim { epoch: 3, replicas: 2 },
+            }]
+        );
+    }
+
+    #[test]
+    fn load_merge_keeps_the_freshest_version_and_skips_self() {
+        let mut loads = BTreeMap::new();
+        assert!(merge_loads(
+            &mut loads,
+            ME,
+            &[loaded("b:1", 1, load(3, 9)), loaded(ME, 1, load(99, 99))],
+        ));
+        assert_eq!(loads.get("b:1"), Some(&load(3, 9)));
+        assert!(!loads.contains_key(ME), "own load is never imported");
+        // A stale relay (lower version) must not roll the view back.
+        assert!(!merge_loads(&mut loads, ME, &[loaded("b:1", 1, load(2, 0))]));
+        assert_eq!(loads["b:1"].queue_depth, 9);
+        // Equal version: no churn either.
+        assert!(!merge_loads(&mut loads, ME, &[loaded("b:1", 1, load(3, 0))]));
+        // Fresher wins.
+        assert!(merge_loads(&mut loads, ME, &[loaded("b:1", 1, load(4, 1))]));
+        assert_eq!(loads["b:1"].queue_depth, 1);
+    }
+
+    #[test]
+    fn route_claim_merge_is_a_join_semilattice() {
+        let claim = |route: &str, epoch, replicas| RouteOverride {
+            route: route.to_string(),
+            claim: RouteClaim { epoch, replicas },
+        };
+        let mut a = BTreeMap::new();
+        assert!(merge_route_claims(&mut a, &[claim("m", 2, 3)]));
+        // Older epoch loses even with more replicas.
+        assert!(!merge_route_claims(&mut a, &[claim("m", 1, 7)]));
+        assert_eq!(a["m"], RouteClaim { epoch: 2, replicas: 3 });
+        // Same epoch: more replicas wins the tie deterministically.
+        assert!(merge_route_claims(&mut a, &[claim("m", 2, 4)]));
+        // Idempotent.
+        assert!(!merge_route_claims(&mut a, &[claim("m", 2, 4)]));
+        // Commutative: both sides of a partition raised the route;
+        // merging in either order lands on the same winner.
+        let mut b = BTreeMap::new();
+        merge_route_claims(&mut b, &[claim("m", 3, 2)]);
+        merge_route_claims(&mut b, &[claim("m", 2, 4)]);
+        merge_route_claims(&mut a, &[claim("m", 3, 2)]);
+        assert_eq!(a["m"], b["m"]);
+        assert_eq!(a["m"], RouteClaim { epoch: 3, replicas: 2 });
     }
 
     fn obj(pairs: Vec<(&str, Json)>) -> Json {

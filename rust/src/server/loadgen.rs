@@ -16,7 +16,10 @@
 //! * [`LoadgenConfig::models`] is cycled per request (offset by the
 //!   connection index), so a two-route server sees genuinely
 //!   mixed-precision traffic and a cluster front sees keys that hash
-//!   to different owners.
+//!   to different owners. With [`LoadgenConfig::zipf_s`] `> 0` the
+//!   cycle is replaced by a seeded Zipf rank draw (`models[0]`
+//!   hottest) — the skewed-popularity profile that drives hot-route
+//!   replica expansion.
 //! * [`LoadgenConfig::addrs`] may list several fronts: connections are
 //!   dealt round-robin across them, so one run drives a whole cluster
 //!   through every entry point at once.
@@ -70,6 +73,13 @@ pub struct LoadgenConfig {
     /// connection (0 disables sampling). The report then fetches the
     /// slowest sampled request's span tree from `/debug/trace/{id}`.
     pub trace_sample: usize,
+    /// Zipf exponent for model selection. `0.0` (the default) keeps
+    /// the legacy behavior: models cycled per request, offset by the
+    /// connection index. Positive values draw the model *rank* from a
+    /// Zipf(s) distribution over `models` (rank 0 = `models[0]` is the
+    /// hottest), the skewed-popularity profile that exercises the
+    /// hot-route replica controller.
+    pub zipf_s: f64,
 }
 
 impl LoadgenConfig {
@@ -83,7 +93,37 @@ impl LoadgenConfig {
             word_range: 128,
             seed: 42,
             trace_sample: 0,
+            zipf_s: 0.0,
         }
+    }
+}
+
+/// Precomputed Zipf(s) CDF over `n` ranks: rank `k` (0-based) carries
+/// probability proportional to `1/(k+1)^s`. Sampling is one uniform
+/// draw plus a binary search, so the per-request cost is independent
+/// of the model count.
+struct ZipfCdf {
+    cdf: Vec<f64>,
+}
+
+impl ZipfCdf {
+    fn new(n: usize, s: f64) -> ZipfCdf {
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for k in 0..n {
+            acc += 1.0 / ((k + 1) as f64).powf(s);
+            cdf.push(acc);
+        }
+        let total = acc.max(f64::MIN_POSITIVE);
+        for c in &mut cdf {
+            *c /= total;
+        }
+        ZipfCdf { cdf }
+    }
+
+    /// Draw a rank in `[0, n)` from one uniform sample.
+    fn draw(&self, u: f64) -> usize {
+        self.cdf.partition_point(|&c| c < u).min(self.cdf.len() - 1)
     }
 }
 
@@ -235,8 +275,15 @@ fn connection_loop(
     let mut sampled: Vec<(u64, String)> = Vec::new();
     let mut failures = 0u64;
     let mut words_done = 0u64;
+    let zipf = (cfg.zipf_s > 0.0)
+        .then(|| ZipfCdf::new(cfg.models.len(), cfg.zipf_s));
     for r in 0..cfg.requests_per_connection {
-        let model = &cfg.models[(ci + r) % cfg.models.len()];
+        let model = match &zipf {
+            // Skewed profile: models[0] is the hot key. The rank draw
+            // shares the connection's seeded RNG, so runs replay.
+            Some(z) => &cfg.models[z.draw(rng.f64())],
+            None => &cfg.models[(ci + r) % cfg.models.len()],
+        };
         let words: Vec<Json> = (0..cfg.words_per_request)
             .map(|_| {
                 Json::Num(rng.range_i64(-cfg.word_range, cfg.word_range) as f64)

@@ -289,7 +289,14 @@ impl Server {
                     // deadlock both pools.
                     c.max_inflight_forwards = (cfg.workers / 2).max(1);
                 }
-                Some(cluster::Cluster::start(c)?)
+                let cl = cluster::Cluster::start(c)?;
+                // Real servers advertise live arena bytes in their
+                // gossip load stanza. Sim-driven clusters skip the
+                // sampler: the arena counters are process-global, so
+                // reading them would leak nondeterminism between
+                // concurrently replayed schedules.
+                cl.set_arena_sampler(Arc::new(|| arena::stats().2));
+                Some(cl)
             }
         };
         let state = Arc::new(AppState {

@@ -181,9 +181,11 @@ impl SimNet {
                         match parsed {
                             Ok(msg) => {
                                 cl.apply_remote_members(&msg.members);
+                                cl.apply_remote_routes(&msg.routes);
                                 let reply = json::write(&gossip::encode(
                                     cl.self_name(),
                                     &cl.member_entries(),
+                                    &cl.route_overrides_wire(),
                                 ));
                                 (200, reply.into_bytes())
                             }

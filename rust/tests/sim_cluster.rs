@@ -11,24 +11,34 @@
 //! * incarnation monotonicity and death-certificate refutation,
 //! * the retry contract of the pooled client leg (never retry a
 //!   timeout, never lose an acknowledged request),
-//! * bounded virtual cost of gossiping with a stalled `--join` seed.
+//! * bounded virtual cost of gossiping with a stalled `--join` seed,
+//! * load-adaptive routing (PR 10): hot-route expansion under zipfian
+//!   skew beats the frozen-ring baseline's owner queue on the same
+//!   seeded schedule, hysteresis keeps a flapping load from flapping
+//!   the replica count, replica claims raised on both sides of a
+//!   partition converge to one set after heal, p2c picks stay inside
+//!   the replica set, and a stanza-less pre-PR-10 peer still
+//!   interoperates.
 //!
 //! Any violation panics with the offending seed;
 //! `TANHVF_SIM_SEED=<seed> cargo test -q sim_<name>` replays that one
 //! schedule deterministically. `TANHVF_SIM_BASE_SEED` shifts a whole
 //! suite (the CI randomized pass logs the base it used).
 
-use std::collections::BTreeSet;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use tanh_vf::server::cluster::{Cluster, ClusterConfig};
+use tanh_vf::server::cluster::{
+    Cluster, ClusterConfig, Node, HOT_COOLDOWN_ROUNDS,
+};
 use tanh_vf::server::gossip;
 use tanh_vf::server::sim::{
     assert_converged, converged, scenario_rng, schedule_seeds, Handler,
     IncarnationMonitor, SimNet,
 };
+use tanh_vf::util::json::{self, Json};
 use tanh_vf::util::rng::SplitMix64;
 
 fn ms(n: u64) -> Duration {
@@ -573,6 +583,606 @@ fn sim_pool_redial_request_invariants() {
     }
 }
 
+/// Zipf CDF over `n` ranks with exponent `s` (rank 0 hottest) — the
+/// same shape `loadgen --zipf` draws from.
+fn zipf_cdf(n: usize, s: f64) -> Vec<f64> {
+    let mut cdf = Vec::with_capacity(n);
+    let mut acc = 0.0;
+    for k in 0..n {
+        acc += 1.0 / ((k + 1) as f64).powf(s);
+        cdf.push(acc);
+    }
+    for c in &mut cdf {
+        *c /= acc;
+    }
+    cdf
+}
+
+fn zipf_draw(cdf: &[f64], rng: &mut SplitMix64) -> usize {
+    let u = (rng.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+    cdf.partition_point(|&c| c < u).min(cdf.len() - 1)
+}
+
+/// Outcome of one seeded zipf-skew schedule. The adaptive and frozen
+/// runs replay the exact same workload draws against the same ring
+/// and service model — only `load_adaptive` differs.
+struct SkewOutcome {
+    /// Highest modeled queue depth the hot route's (pre-expansion)
+    /// owner reached across all rounds.
+    peak_owner_queue: u64,
+    /// 95th-percentile per-round owner queue depth.
+    p95_owner_queue: u64,
+    /// Hot-route controller expansions, summed over all nodes.
+    expansions: u64,
+    /// Final `effective_replicas` for the hot route, per node.
+    effective: Vec<usize>,
+    /// First candidates chosen by p2c over gossiped loads.
+    load_picks: u64,
+}
+
+/// Drive a 4-node cluster through a zipf-skewed request schedule under
+/// a modeled queue: every request is noted at a round-robin ingress
+/// front, routed via `candidates()`, and enqueued at the target; each
+/// node then drains a fixed service rate per round and publishes its
+/// modeled run-queue depth into the gossip load stanza.
+fn run_zipf_schedule(seed: u64, load_adaptive: bool) -> SkewOutcome {
+    const ROUNDS: usize = 46;
+    const SERVICE_PER_ROUND: u64 = 100;
+    let mut rng = scenario_rng(seed);
+    let net = SimNet::new();
+    let names = addrs(4, "z");
+    let clusters: Vec<Arc<Cluster>> = names
+        .iter()
+        .enumerate()
+        .map(|(i, a)| {
+            let cfg = ClusterConfig {
+                peers: names.iter().filter(|p| *p != a).cloned().collect(),
+                load_adaptive,
+                ..node_config(a, 100 + i as u64)
+            };
+            Cluster::start_with_transport(cfg, net.transport(a)).unwrap()
+        })
+        .collect();
+    for (a, c) in names.iter().zip(&clusters) {
+        net.register_cluster(a, c);
+    }
+    let none = BTreeSet::new();
+    let routes: Vec<String> = (0..4).map(|i| format!("zr{i}")).collect();
+    let hot = routes[0].clone();
+    // s=3 concentrates ~85% of draws on rank 0 — a hot route, not
+    // just a warm one.
+    let cdf = zipf_cdf(routes.len(), 3.0);
+    // The hot route's pre-expansion owner: the node the frozen ring
+    // piles every hot request onto.
+    let owner = clusters[0].owner_name(&hot).unwrap();
+    let mut queue: BTreeMap<String, u64> =
+        names.iter().map(|n| (n.clone(), 0)).collect();
+    let mut owner_series = Vec::with_capacity(ROUNDS);
+    for round in 0..ROUNDS {
+        let total = 224 + rng.below(64);
+        for k in 0..total {
+            let route = &routes[zipf_draw(&cdf, &mut rng)];
+            let ing = (k as usize + round) % names.len();
+            clusters[ing].note_route_request(route);
+            let target =
+                match clusters[ing].candidates(route).into_iter().next() {
+                    Some(Node::Peer(p)) => p,
+                    _ => names[ing].clone(),
+                };
+            *queue.get_mut(&target).unwrap() += 1;
+        }
+        for q in queue.values_mut() {
+            *q = q.saturating_sub(SERVICE_PER_ROUND);
+        }
+        for (n, c) in names.iter().zip(&clusters) {
+            c.load().set_queue_depth(queue[n]);
+        }
+        drive_round(&net, &clusters, &none);
+        owner_series.push(queue[&owner]);
+    }
+    let peak_owner_queue = *owner_series.iter().max().unwrap();
+    let mut sorted = owner_series;
+    sorted.sort_unstable();
+    let p95_owner_queue = sorted[(sorted.len() * 95) / 100];
+    let expansions: u64 = clusters
+        .iter()
+        .map(|c| c.stats.route_expansions.load(Ordering::Relaxed))
+        .sum();
+    let load_picks: u64 = clusters
+        .iter()
+        .map(|c| c.stats.p2c_load_picks.load(Ordering::Relaxed))
+        .sum();
+    let effective: Vec<usize> =
+        clusters.iter().map(|c| c.effective_replicas(&hot)).collect();
+    for c in &clusters {
+        c.stop();
+    }
+    SkewOutcome {
+        peak_owner_queue,
+        p95_owner_queue,
+        expansions,
+        effective,
+        load_picks,
+    }
+}
+
+/// The tentpole acceptance scenario: under a seeded zipfian workload
+/// the adaptive cluster must expand the hot route, engage p2c, and
+/// beat the frozen-ring baseline's owner queue by >= 1.3x — peak and
+/// p95 both — on the SAME seeded schedule.
+#[test]
+fn sim_zipf_skew_expands_hot_route_and_drops_owner_queue() {
+    for seed in schedule_seeds(0x21F, 40) {
+        let adaptive = run_zipf_schedule(seed, true);
+        let frozen = run_zipf_schedule(seed, false);
+        let ctx = format!(
+            "[seed {seed}] adaptive peak {} p95 {} expansions {} \
+             effective {:?} load picks {}; frozen peak {} p95 {} \
+             (replay: TANHVF_SIM_SEED={seed} cargo test -q sim_zipf)",
+            adaptive.peak_owner_queue,
+            adaptive.p95_owner_queue,
+            adaptive.expansions,
+            adaptive.effective,
+            adaptive.load_picks,
+            frozen.peak_owner_queue,
+            frozen.p95_owner_queue,
+        );
+        assert_eq!(
+            frozen.expansions, 0,
+            "frozen ring must never expand: {ctx}"
+        );
+        assert!(
+            frozen.peak_owner_queue > 0,
+            "baseline never overloaded its owner: {ctx}"
+        );
+        assert!(adaptive.expansions >= 1, "hot route never expanded: {ctx}");
+        assert!(adaptive.load_picks >= 1, "p2c never engaged: {ctx}");
+        assert!(
+            adaptive.effective.iter().all(|&e| e > 1),
+            "expansion did not reach every node: {ctx}"
+        );
+        assert!(
+            frozen.peak_owner_queue as f64
+                >= 1.3 * adaptive.peak_owner_queue as f64,
+            "peak owner queue not >= 1.3x lower than frozen: {ctx}"
+        );
+        assert!(
+            frozen.p95_owner_queue as f64
+                >= 1.3 * adaptive.p95_owner_queue as f64,
+            "p95 owner queue not >= 1.3x lower than frozen: {ctx}"
+        );
+    }
+}
+
+/// Hysteresis: a request rate that flaps every round must not flap
+/// the replica count. A mid-band profile (EWMA settles strictly
+/// inside the expand/shrink band) makes zero transitions; a hot
+/// profile (EWMA settles above the expand threshold — exactly the
+/// shape a controller reacting to instantaneous rates would ping-pong
+/// on ~24 times here) expands monotonically to the ring, never
+/// shrinks, and spaces transitions at least one cooldown apart.
+#[test]
+fn sim_flapping_load_hysteresis_prevents_oscillation() {
+    for seed in schedule_seeds(0xF1A, 60) {
+        let mut rng = scenario_rng(seed);
+        let net = SimNet::new();
+        let names = addrs(4, "f");
+        let clusters = start_mesh(&net, &names, 100);
+        let none = BTreeSet::new();
+        let route = "flappy";
+        for _ in 0..2 {
+            drive_round(&net, &clusters, &none);
+        }
+        let owner = clusters[0].owner_name(route).unwrap();
+        let owner_cl = clusters
+            .iter()
+            .find(|c| c.self_name() == owner)
+            .unwrap()
+            .clone();
+        let hot_profile = rng.chance(1, 2);
+        let (high, low) = if hot_profile {
+            (96 + rng.below(32), 0)
+        } else {
+            (30 + rng.below(8), 2 + rng.below(4))
+        };
+        let mut transition_rounds: Vec<usize> = Vec::new();
+        let mut last = 0;
+        for round in 0..48 {
+            let n = if round % 2 == 0 { high } else { low };
+            for _ in 0..n {
+                owner_cl.note_route_request(route);
+            }
+            drive_round(&net, &clusters, &none);
+            let now = owner_cl
+                .stats
+                .route_expansions
+                .load(Ordering::Relaxed)
+                + owner_cl.stats.route_shrinks.load(Ordering::Relaxed);
+            if now != last {
+                transition_rounds.push(round);
+                last = now;
+            }
+        }
+        let ctx = format!(
+            "[seed {seed}] {} profile high {high} low {low} transitions \
+             at rounds {transition_rounds:?} \
+             (replay: TANHVF_SIM_SEED={seed} cargo test -q sim_flapping)",
+            if hot_profile { "hot" } else { "mid-band" },
+        );
+        for w in transition_rounds.windows(2) {
+            assert!(
+                w[1] - w[0] >= HOT_COOLDOWN_ROUNDS as usize,
+                "two transitions inside one cooldown window: {ctx}"
+            );
+        }
+        assert_eq!(
+            owner_cl.stats.route_shrinks.load(Ordering::Relaxed),
+            0,
+            "a flapping-but-hot load shrank its route: {ctx}"
+        );
+        if hot_profile {
+            // Ring 4, base 1: exactly the three monotone expansions.
+            assert_eq!(
+                owner_cl.stats.route_expansions.load(Ordering::Relaxed),
+                3,
+                "{ctx}"
+            );
+            assert!(
+                clusters.iter().all(|c| c.effective_replicas(route) == 4),
+                "hot flapping must settle at full fan-out: {ctx}"
+            );
+        } else {
+            assert!(
+                transition_rounds.is_empty(),
+                "mid-band flapping must make zero transitions: {ctx}"
+            );
+        }
+        for c in &clusters {
+            c.stop();
+        }
+    }
+}
+
+/// A partition that interrupts a hot-route expansion must not leave
+/// the cluster with two replica sets. Both sides keep their own
+/// steward (the heated side keeps raising, the cold side decays and
+/// shrinks — each bumping epochs independently), so the halves hold
+/// genuinely conflicting claims; after the heal the `(epoch,
+/// replicas)` semilattice must converge every node to one winner, and
+/// sustained heat must then carry the route to full fan-out
+/// everywhere.
+#[test]
+fn sim_partition_during_expansion_heals_to_one_replica_set() {
+    for seed in schedule_seeds(0x9EA1, 60) {
+        let mut rng = scenario_rng(seed);
+        let net = SimNet::new();
+        let names = addrs(4, "h");
+        let clusters = start_mesh(&net, &names, 100);
+        let mut monitor = IncarnationMonitor::new();
+        let none = BTreeSet::new();
+        let route = "hotspot";
+        let heat_round = |heated: &[usize]| {
+            for &i in heated {
+                for _ in 0..64 {
+                    clusters[i].note_route_request(route);
+                }
+            }
+            drive_round(&net, &clusters, &none);
+        };
+        let all: Vec<usize> = (0..names.len()).collect();
+
+        for _ in 0..2 {
+            drive_round(&net, &clusters, &none);
+        }
+        // Heat every front until the first expansion is in flight.
+        let mut expanded = false;
+        for _ in 0..10 {
+            heat_round(&all);
+            let n: u64 = clusters
+                .iter()
+                .map(|c| c.stats.route_expansions.load(Ordering::Relaxed))
+                .sum();
+            if n > 0 {
+                expanded = true;
+                break;
+            }
+        }
+        assert!(
+            expanded,
+            "[seed {seed}] no expansion to interrupt (replay: \
+             TANHVF_SIM_SEED={seed} cargo test -q sim_partition)"
+        );
+
+        // Cut the cluster into seed-chosen halves mid-expansion. Only
+        // side A stays heated: past the death threshold each side runs
+        // its own steward, so the claims diverge for real.
+        let a0 = rng.below(4) as usize;
+        let a1 = (a0 + 1 + rng.below(3) as usize) % 4;
+        for x in [a0, a1] {
+            for (y, other) in names.iter().enumerate() {
+                if y != a0 && y != a1 {
+                    net.partition_pair(&names[x], other);
+                }
+            }
+        }
+        let cut_rounds = 14 + rng.below(6);
+        for _ in 0..cut_rounds {
+            heat_round(&[a0, a1]);
+        }
+
+        net.heal_all();
+        let up: BTreeSet<String> = names.iter().cloned().collect();
+        converge(&net, &clusters, &up, &mut monitor, seed, "claim heal");
+        // Keep the route hot while claims re-spread, so a shrink can't
+        // race the convergence this asserts; once every node holds the
+        // same claim at full fan-out, the route has exactly one
+        // replica set again.
+        let mut agreed = false;
+        for _ in 0..30 {
+            heat_round(&all);
+            let claim = clusters[0].route_claims().get(route).copied();
+            if claim.is_some()
+                && clusters.iter().all(|c| {
+                    c.route_claims().get(route).copied() == claim
+                        && c.effective_replicas(route) == names.len()
+                })
+            {
+                agreed = true;
+                break;
+            }
+        }
+        let views: Vec<_> = clusters
+            .iter()
+            .map(|c| {
+                (
+                    c.self_name().to_string(),
+                    c.route_claims().get(route).copied(),
+                    c.effective_replicas(route),
+                )
+            })
+            .collect();
+        assert!(
+            agreed,
+            "[seed {seed}] nodes did not converge to one replica set \
+             after heal: {views:?} (replay: TANHVF_SIM_SEED={seed} \
+             cargo test -q sim_partition)"
+        );
+        for c in &clusters {
+            c.stop();
+        }
+    }
+}
+
+/// p2c safety and balance properties, against a modeled queue and a
+/// round-robin baseline fed the exact same draw sequence: the chosen
+/// peer is always inside the key's replica set, a tombstoned member
+/// is never offered as any candidate, and a heterogeneous starting
+/// queue ends strictly less imbalanced than round-robin leaves it.
+#[test]
+fn sim_p2c_picks_stay_in_replica_set_and_beat_round_robin() {
+    fn publish(cl: &Cluster, addr: &str, queue_depth: u64, version: u64) {
+        cl.apply_remote_members(&[gossip::MemberEntry {
+            addr: addr.to_string(),
+            incarnation: 50,
+            alive: true,
+            load: Some(gossip::LoadInfo {
+                version,
+                queue_depth,
+                ewma_latency_us: 10,
+                arena_bytes: 0,
+            }),
+        }]);
+    }
+    for seed in schedule_seeds(0x2C5, 100) {
+        let mut rng = scenario_rng(seed);
+        let net = SimNet::new();
+        let names = addrs(6, "q");
+        let cfg = ClusterConfig {
+            peers: names[1..].to_vec(),
+            replicas: 3,
+            ..node_config(&names[0], 100)
+        };
+        let cl = Cluster::start_with_transport(cfg, net.transport(&names[0]))
+            .unwrap();
+        // Tombstone one peer: it leaves the ring and must never be
+        // offered again.
+        let dead = names[5].clone();
+        cl.apply_remote_members(&[gossip::MemberEntry {
+            addr: dead.clone(),
+            incarnation: 1,
+            alive: false,
+            load: None,
+        }]);
+        // An all-remote replica set isolates the p2c path (a Local
+        // replica always short-circuits to serving in place).
+        let key = (0..64)
+            .map(|i| format!("k{i}"))
+            .find(|k| {
+                let reps = cl.replica_set(k);
+                reps.len() == 3 && !reps.contains(&names[0])
+            })
+            .expect("no all-remote key among 64");
+        let reps = cl.replica_set(&key);
+        let mut version = 0u64;
+        let mut queues: BTreeMap<String, u64> = BTreeMap::new();
+        queues.insert(reps[0].clone(), 50 + rng.below(30));
+        queues.insert(reps[1].clone(), rng.below(10));
+        queues.insert(reps[2].clone(), 0);
+        let mut rr = queues.clone();
+        for r in &reps {
+            version += 1;
+            publish(&cl, r, queues[r], version);
+        }
+        const DRAWS: usize = 120;
+        for i in 0..DRAWS {
+            let cands = cl.candidates(&key);
+            for c in &cands {
+                if let Node::Peer(p) = c {
+                    assert_ne!(
+                        *p, dead,
+                        "[seed {seed}] tombstoned peer offered as a \
+                         candidate (replay: TANHVF_SIM_SEED={seed} \
+                         cargo test -q sim_p2c)"
+                    );
+                }
+            }
+            let chosen = match &cands[0] {
+                Node::Peer(p) => p.clone(),
+                Node::Local => panic!(
+                    "[seed {seed}] p2c chose Local for an all-remote key"
+                ),
+            };
+            assert!(
+                reps.contains(&chosen),
+                "[seed {seed}] pick {chosen} outside the replica set \
+                 {reps:?} (replay: TANHVF_SIM_SEED={seed} cargo test \
+                 -q sim_p2c)"
+            );
+            *queues.get_mut(&chosen).unwrap() += 1;
+            version += 1;
+            publish(&cl, &chosen, queues[&chosen], version);
+            *rr.get_mut(&reps[i % reps.len()]).unwrap() += 1;
+        }
+        assert_eq!(
+            cl.stats.p2c_load_picks.load(Ordering::Relaxed),
+            DRAWS as u64,
+            "[seed {seed}] every draw had three known loads, so every \
+             pick must be a p2c pick"
+        );
+        let spread = |m: &BTreeMap<String, u64>| {
+            let max = *m.values().max().unwrap();
+            let min = *m.values().min().unwrap();
+            (max, max - min)
+        };
+        let (p2c_max, p2c_spread) = spread(&queues);
+        let (rr_max, rr_spread) = spread(&rr);
+        assert!(
+            p2c_max < rr_max,
+            "[seed {seed}] p2c max queue {p2c_max} not below \
+             round-robin's {rr_max} ({queues:?} vs {rr:?})"
+        );
+        assert!(
+            p2c_spread * 2 <= rr_spread,
+            "[seed {seed}] p2c spread {p2c_spread} vs round-robin \
+             {rr_spread}: p2c is not equalizing ({queues:?} vs {rr:?})"
+        );
+        cl.stop();
+    }
+}
+
+fn jobj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+/// Wire compatibility with a pre-PR-10 node: a peer that emits only
+/// `addr`/`incarnation`/`alive` (no load stanza, no routes key) and
+/// parses incoming gossip with the old decoder must neither crash nor
+/// stall convergence in either direction. Its load stays "unknown":
+/// excluded from p2c, but fully routable.
+#[test]
+fn sim_legacy_peer_without_load_stanza_interops() {
+    let net = SimNet::new();
+    let legacy = "old0:7";
+    let table: Arc<Mutex<BTreeMap<String, (u64, bool)>>> =
+        Arc::new(Mutex::new(BTreeMap::new()));
+    table.lock().unwrap().insert(legacy.to_string(), (44, true));
+    let t2 = table.clone();
+    let handler: Handler = Arc::new(move |_m, path, _h, body: &[u8]| {
+        if path != gossip::GOSSIP_PATH {
+            // Probes (`GET /health`) and anything else: plain 200.
+            return (200, Vec::new());
+        }
+        // A PR-9-era decoder: reads v/from/addr/incarnation/alive and
+        // nothing else — unknown keys (load stanzas, route claims)
+        // must fall off the parse without breaking the exchange.
+        let parsed = std::str::from_utf8(body)
+            .ok()
+            .and_then(|s| json::parse(s).ok());
+        let Some(msg) = parsed else {
+            return (400, Vec::new());
+        };
+        let Some(members) = msg.get("members").and_then(Json::as_arr) else {
+            return (400, Vec::new());
+        };
+        let mut t = t2.lock().unwrap();
+        for m in members {
+            let (Some(addr), Some(inc), Some(&Json::Bool(alive))) = (
+                m.get("addr").and_then(Json::as_str),
+                m.get("incarnation").and_then(Json::as_f64),
+                m.get("alive"),
+            ) else {
+                return (400, Vec::new());
+            };
+            let e = t.entry(addr.to_string()).or_insert((0, alive));
+            if inc as u64 >= e.0 {
+                *e = (inc as u64, alive);
+            }
+        }
+        let wire: Vec<Json> = t
+            .iter()
+            .map(|(a, &(inc, alive))| {
+                jobj(vec![
+                    ("addr", Json::Str(a.clone())),
+                    ("incarnation", Json::Num(inc as f64)),
+                    ("alive", Json::Bool(alive)),
+                ])
+            })
+            .collect();
+        let reply = jobj(vec![
+            ("v", Json::Num(1.0)),
+            ("from", Json::Str(legacy.to_string())),
+            ("members", Json::Arr(wire)),
+        ]);
+        (200, json::write(&reply).into_bytes())
+    });
+    net.register(legacy, handler);
+    let joiner = Cluster::start_with_transport(
+        ClusterConfig {
+            join: vec![legacy.to_string()],
+            ..node_config("new0:7", 9)
+        },
+        net.transport("new0:7"),
+    )
+    .unwrap();
+    for _ in 0..8 {
+        joiner.membership_round();
+        net.advance(PROBE_INTERVAL_MS);
+    }
+    let members = joiner.members();
+    assert_eq!(
+        members.get(legacy).map(|m| m.alive),
+        Some(true),
+        "legacy peer must be an alive ring member: {members:?}"
+    );
+    assert!(
+        !joiner.peer_loads().contains_key(legacy),
+        "a stanza-less peer's load must stay unknown"
+    );
+    assert!(
+        joiner.stats.gossip_ok.load(Ordering::Relaxed) >= 1,
+        "no gossip exchange succeeded against the legacy peer"
+    );
+    // The legacy node's own (old-decoder) table converged on the new
+    // node too: the stanza-bearing message parsed cleanly over there.
+    assert_eq!(
+        table.lock().unwrap().get("new0:7").map(|e| e.1),
+        Some(true),
+        "legacy peer never learned the new node"
+    );
+    // Unknown load keeps the peer fully routable, just outside p2c.
+    let key = (0..64)
+        .map(|i| format!("k{i}"))
+        .find(|k| joiner.owner_name(k).as_deref() == Some(legacy))
+        .expect("no legacy-owned key among 64");
+    assert_eq!(joiner.candidates(&key)[0], Node::Peer(legacy.to_string()));
+    assert_eq!(
+        joiner.stats.p2c_load_picks.load(Ordering::Relaxed),
+        0,
+        "p2c must never draw an unknown-load peer"
+    );
+    joiner.stop();
+}
+
 /// Forcing an invariant violation must (a) panic with the seed in the
 /// message and a one-command replay line, and (b) reproduce the exact
 /// same failure when run again with the same seed.
@@ -635,6 +1245,10 @@ fn sim_schedule_matrix_covers_1000_seeds() {
         + schedule_seeds(1, 200).len()
         + schedule_seeds(1, 150).len()
         + schedule_seeds(1, 200).len()
+        + schedule_seeds(1, 40).len() // zipf skew, adaptive vs frozen
+        + schedule_seeds(1, 60).len() // flapping-load hysteresis
+        + schedule_seeds(1, 60).len() // partition-during-expansion heal
+        + schedule_seeds(1, 100).len() // p2c replica-set/balance property
         + 64; // in-crate fan-out bit-exactness schedules
     assert!(total >= 1000, "sim matrix shrank to {total} schedules");
 }
